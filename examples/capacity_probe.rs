@@ -1,0 +1,74 @@
+//! The paper's §1 vision, automated: "outsource the performance
+//! evaluation of a service".  Runs a DiPerF experiment against a target
+//! service, fits the empirical performance model (RT(load),
+//! TPut(load)), finds the capacity knee, and answers a scheduler's QoS
+//! question — all without knowing anything about the service's
+//! internals.
+//!
+//!     cargo run --release --offline --example capacity_probe
+
+use diperf::experiment::presets;
+use diperf::experiments::run_with_analysis;
+use diperf::predict::PerfModel;
+
+fn main() -> anyhow::Result<()> {
+    // probe the pre-WS GRAM service with a medium ramp
+    let mut cfg = presets::prews_fig3(7);
+    cfg.testbed.num_testers = 60;
+    cfg.controller.desc.duration_s = 1800.0;
+    eprintln!("[capacity_probe] probing gt3.2-prews-gram with a 60-tester ramp");
+    let run = run_with_analysis(&cfg);
+
+    let model = PerfModel::fit(&run.out);
+    println!("== automated capacity probe: {} ==\n", cfg.service.label());
+    println!(
+        "observed load range [{:.1}, {:.1}] concurrent requests",
+        model.load_range.0, model.load_range.1
+    );
+    println!("rt-model rms error: {:.3} s", model.rt_rms);
+    match model.knee {
+        Some(k) => println!("capacity knee: ~{k:.0} concurrent clients"),
+        None => println!("capacity knee: not reached"),
+    }
+
+    println!("\nempirical model (what the paper's scheduler would consume):");
+    println!("  load    predicted rt    predicted tput");
+    for load in [2.0, 10.0, 20.0, 33.0, 45.0, 60.0] {
+        if load <= model.load_range.1 {
+            println!(
+                "  {load:>5.0}   {:>9.2} s   {:>10.2} jobs/quantum",
+                model.predict_rt(load),
+                model.predict_tput(load)
+            );
+        }
+    }
+
+    // the QoS query a resource scheduler would ask
+    for target in [2.0, 10.0, 30.0] {
+        match model.max_load_for_rt(target) {
+            Some(l) => println!(
+                "QoS: to keep rt <= {target:>4.0} s, admit at most {l:.0} \
+                 concurrent clients"
+            ),
+            None => println!("QoS: rt <= {target} s is unattainable"),
+        }
+    }
+
+    // validate on a second, differently-seeded run (the §5 "validate the
+    // models" future work, done)
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 1234;
+    let run2 = run_with_analysis(&cfg2);
+    let w: Vec<f64> = run2.out.tput.clone();
+    let err = model.validation_error(&run2.out.load, &run2.out.rt_mean, &w);
+    println!(
+        "\ncross-run validation: mean relative rt error {:.1}% on an \
+         unseen seed",
+        err * 100.0
+    );
+    anyhow::ensure!(err < 0.35, "model should transfer across runs");
+    anyhow::ensure!(model.predict_rt(40.0) > model.predict_rt(5.0),
+        "rt model must grow with load");
+    println!("capacity probe OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver (DESIGN.md deliverable): the full §4.1 pre-WS GRAM
+//! study — 89 WAN testers, 25 s stagger, one hour each (5800+ s of
+//! virtual time), with the AOT-compiled XLA analysis pipeline, figure
+//! CSVs for Figures 3/4/5, and the paper-vs-measured headline table.
+//! The run is recorded in EXPERIMENTS.md (E1–E3).
+//!
+//!     make artifacts && cargo run --release --offline --example gram_study
+
+use diperf::experiment::presets;
+use diperf::experiments::{
+    self, e1_headlines, fairness_cv, md_header, run_with_analysis,
+};
+use diperf::report::{ascii_chart, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = presets::prews_fig3(42);
+    eprintln!(
+        "[gram_study] running E1: {} testers x {:.0}s (this is ~100k DES \
+         events; sub-second)",
+        cfg.testbed.num_testers, cfg.controller.desc.duration_s
+    );
+    let run = run_with_analysis(&cfg);
+    let d = &run.result.data;
+
+    println!("== GT3.2 pre-WS GRAM study (paper §4.1, Figures 3-5) ==\n");
+    println!(
+        "simulated {:.0} s of experiment in {:.0} ms ({} events); \
+         analysis path: {}",
+        d.duration_s, run.result.wall_ms, run.result.events, run.path
+    );
+    println!(
+        "{} samples from {} testers; {} completions, {} failures\n",
+        d.samples.len(),
+        d.testers.len(),
+        d.completed(),
+        d.failed()
+    );
+
+    // Figure 3: the three series
+    print!("{}", ascii_chart(&run.out.load_ma, 76, 6, "Fig 3 — offered load"));
+    print!(
+        "{}",
+        ascii_chart(&run.out.tput_ma, 76, 6, "Fig 3 — throughput (jobs/quantum)")
+    );
+    print!(
+        "{}",
+        ascii_chart(&run.out.rt_ma, 76, 7, "Fig 3 — service response time (s)")
+    );
+
+    // headline comparison
+    println!("\n{}", md_header());
+    let mut all_ok = true;
+    for h in e1_headlines(&run) {
+        all_ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+    println!(
+        "| fairness flatness (CV; paper: 'relatively equal share') | ~0 | {:.3} | [0.00, 0.35] | {} |",
+        fairness_cv(&run),
+        if fairness_cv(&run) <= 0.35 { "✓" } else { "✗" }
+    );
+
+    // per-client view (Figures 4 & 5)
+    let actives = run.out.completed.iter().filter(|&&c| c > 0.0).count();
+    println!(
+        "\nFig 4/5: {} clients completed work in the peak window; \
+         completions per client: first {:?} ... (bubble sizes)",
+        actives,
+        &run.out.completed[..6.min(run.out.completed.len())]
+            .iter()
+            .map(|c| *c as u64)
+            .collect::<Vec<_>>()
+    );
+
+    // write the figure data
+    let dir = RunDir::create("runs", "gram_study")?;
+    dir.write("samples.csv", &diperf::report::samples_csv(d))?;
+    dir.write_figures("fig3", &run.out, d, run.inp.t0 as f64, run.inp.quantum as f64)?;
+    println!("\nfigure CSVs written to {}", dir.path.display());
+
+    // sync accuracy sanity (the paper's premise that sync error << rt)
+    let es = run.result.sync.error_summary();
+    println!(
+        "clock-sync error mean {:.1} ms — {}x below the mean response time",
+        es.mean * 1e3,
+        (d.mean_rt() / es.mean.max(1e-9)) as u64
+    );
+
+    anyhow::ensure!(all_ok, "E1 headline comparison failed");
+    println!("\nE1–E3 OK");
+    Ok(())
+}

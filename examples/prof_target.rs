@@ -1,0 +1,8 @@
+//! Profiling target: repeated scalability experiments (L3 hot path).
+fn main() {
+    let cfg = diperf::experiment::presets::scalability(1000, 42);
+    for _ in 0..6 {
+        let r = diperf::experiment::run_experiment(&cfg);
+        std::hint::black_box(r.events);
+    }
+}

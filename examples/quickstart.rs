@@ -1,0 +1,62 @@
+//! Quickstart: a 10-tester DiPerF run against the simulated Apache/CGI
+//! service, with the controller's aggregate view (the paper's Figure 2)
+//! printed at the end.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use diperf::experiment::presets;
+use diperf::experiments::{run_with_analysis, NUM_QUANTA};
+use diperf::report::ascii_chart;
+
+fn main() {
+    // 10 testers, 2 s stagger, 120 s each, on a quiet LAN testbed
+    let cfg = presets::quick_http(10, 120.0, 42);
+    println!(
+        "DiPerF quickstart: {} testers x {:.0}s against {}",
+        cfg.testbed.num_testers,
+        cfg.controller.desc.duration_s,
+        cfg.service.label()
+    );
+
+    let run = run_with_analysis(&cfg);
+    let d = &run.result.data;
+    println!(
+        "\n{} events in {:.0} ms of wall clock ({} samples, {} ok, {} failed)",
+        run.result.events,
+        run.result.wall_ms,
+        d.samples.len(),
+        d.completed(),
+        d.failed()
+    );
+    println!("analysis path: {}", run.path);
+
+    // the aggregate view of the controller (paper Figure 2)
+    let active_quanta = run
+        .out
+        .load
+        .iter()
+        .filter(|&&l| l > 0.0)
+        .count()
+        .max(1);
+    println!(
+        "\nmean offered load {:.1}, peak {:.1}; mean rt {:.1} ms",
+        run.out.load.iter().sum::<f64>() / active_quanta as f64,
+        run.out.totals[3],
+        run.out.totals[2] * 1e3,
+    );
+    print!("{}", ascii_chart(&run.out.load_ma, 72, 6, "offered load"));
+    print!(
+        "{}",
+        ascii_chart(&run.out.tput_ma, 72, 6, "throughput (jobs/quantum)")
+    );
+    print!(
+        "{}",
+        ascii_chart(&run.out.rt_ma, 72, 6, "service response time (s)")
+    );
+    let quantum = run.inp.quantum as f64;
+    println!(
+        "\n(one quantum = {quantum:.1} s; {NUM_QUANTA} quanta; ramp-up \
+         stagger {} s)",
+        cfg.controller.stagger_s
+    );
+}

@@ -1,0 +1,47 @@
+//! The §5 scalability claim, measured: "DiPerF could scale to 1000s of
+//! nodes."  Sweeps the tester-pool size from 50 to 2000 against a fast
+//! service and reports framework-side costs: DES events, wall time,
+//! controller sample-ingest rate, and sync-error stability.
+//!
+//!     cargo run --release --offline --example scalability
+
+use diperf::experiment::{presets, run_experiment};
+
+fn main() -> anyhow::Result<()> {
+    println!("== framework scalability (paper §5 claim) ==\n");
+    println!(
+        "{:>8} {:>12} {:>10} {:>14} {:>12} {:>12}",
+        "testers", "samples", "wall ms", "events/s", "samples/s", "sync err ms"
+    );
+    let mut last_rate = 0.0;
+    for &n in &[50usize, 100, 250, 500, 1000, 2000] {
+        let cfg = presets::scalability(n, 42);
+        let r = run_experiment(&cfg);
+        let wall_s = (r.wall_ms / 1e3).max(1e-9);
+        let ev_rate = r.events as f64 / wall_s;
+        let smp_rate = r.data.samples.len() as f64 / wall_s;
+        let es = r.sync.error_summary();
+        println!(
+            "{n:>8} {:>12} {:>10.0} {:>14.0} {:>12.0} {:>12.1}",
+            r.data.samples.len(),
+            r.wall_ms,
+            ev_rate,
+            smp_rate,
+            es.mean * 1e3
+        );
+        last_rate = ev_rate;
+        // correctness under scale: nothing dropped, clocks still mapped
+        anyhow::ensure!(r.data.dropped_unsynced == 0, "unsynced samples at n={n}");
+        anyhow::ensure!(
+            r.data.samples.len() > n * 50,
+            "sample volume should scale with the pool"
+        );
+    }
+    println!(
+        "\n2000 testers simulated at {:.1} M events/s — the framework \
+         (controller + engine), not the testbed, is the limit, and it is \
+         orders of magnitude above the paper's 100-node deployments.",
+        last_rate / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! The §4.2 WS GRAM study (Figures 6-8): 26 testers with the shed-to-
+//! capacity recovery, plus the aborted 89-client first attempt where
+//! the service "did not fail gracefully".
+//!
+//!     cargo run --release --offline --example ws_gram_study
+
+use diperf::experiment::presets;
+use diperf::experiments::{
+    e4_headlines, fairness_cv, md_header, run_with_analysis,
+};
+use diperf::report::{ascii_chart, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    // --- the successful 26-client run (Figures 6-8) ---------------------
+    let cfg = presets::ws_fig6(42);
+    eprintln!("[ws_gram_study] E4: 26 testers against WS GRAM");
+    let run = run_with_analysis(&cfg);
+    let d = &run.result.data;
+
+    println!("== GT3.2 WS GRAM study (paper §4.2, Figures 6-8) ==\n");
+    println!(
+        "{} samples; {} ok / {} failed; {} service sheds+stalls; \
+         analysis: {}",
+        d.samples.len(),
+        d.completed(),
+        d.failed(),
+        run.result.stalls,
+        run.path
+    );
+    print!("{}", ascii_chart(&run.out.load_ma, 76, 6, "Fig 6 — offered load"));
+    print!(
+        "{}",
+        ascii_chart(&run.out.tput_ma, 76, 6, "Fig 6 — throughput (jobs/quantum)")
+    );
+    print!(
+        "{}",
+        ascii_chart(&run.out.rt_ma, 76, 6, "Fig 6 — response time (s)")
+    );
+
+    println!("\n{}", md_header());
+    let mut all_ok = true;
+    for h in e4_headlines(&run) {
+        all_ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+
+    // Figures 7/8: fairness varies more than pre-WS GRAM (paper: "only a
+    // few clients are not given equal share")
+    let cv = fairness_cv(&run);
+    println!(
+        "| fairness CV (paper: 'varies significantly more') | >pre-WS | {cv:.3} | — | — |"
+    );
+    let evicted = d.testers.iter().filter(|t| t.evicted).count();
+    println!(
+        "\n{evicted} testers were evicted by the controller (the paper's \
+         'few clients start failing' shedding to ~20)"
+    );
+
+    let dir = RunDir::create("runs", "ws_gram_study")?;
+    dir.write("samples.csv", &diperf::report::samples_csv(d))?;
+    dir.write_figures("fig6", &run.out, d, run.inp.t0 as f64, run.inp.quantum as f64)?;
+
+    // --- the aborted 89-client attempt ------------------------------------
+    eprintln!("[ws_gram_study] E4b: the aborted 89-client overload");
+    let over = run_with_analysis(&presets::ws_overload(42));
+    let od = &over.result.data;
+    println!(
+        "\n89-client attempt: {} ok / {} failed; {} hard stalls — the \
+         service did not fail gracefully (paper had to fall back to 26)",
+        od.completed(),
+        od.failed(),
+        over.result.stalls
+    );
+    anyhow::ensure!(
+        over.result.stalls >= 1,
+        "89-client run must hard-stall the service"
+    );
+    anyhow::ensure!(
+        od.failed() * 2 > od.completed(),
+        "failures should be rampant in the overload run"
+    );
+    anyhow::ensure!(all_ok, "E4 headline comparison failed");
+    println!("\nE4–E6 OK; figure CSVs in {}", dir.path.display());
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT lowering: JAX analysis model -> HLO *text* artifacts for rust/PJRT.
+
+Run once at build time (``make artifacts``); the rust coordinator loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and Python
+never runs on the measurement path.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (AnalyzeConfig, NUM_PARAMS, OUTPUT_NAMES, analyze_flat,
+                    output_shapes)
+
+# Sample-capacity variants.  The rust runtime picks the smallest variant
+# that holds the run's sample count (padding the rest with valid = 0).
+VARIANTS = [
+    AnalyzeConfig(num_samples=16384),
+    AnalyzeConfig(num_samples=65536),
+    AnalyzeConfig(num_samples=262144),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: AnalyzeConfig) -> str:
+    s = cfg.num_samples
+    col = jax.ShapeDtypeStruct((s,), jnp.float32)
+    par = jax.ShapeDtypeStruct((NUM_PARAMS,), jnp.float32)
+    fn = analyze_flat(cfg)
+    lowered = jax.jit(fn).lower(col, col, col, col, col, col, par)
+    return to_hlo_text(lowered)
+
+
+def write_manifest(out_dir: str) -> None:
+    """Plain key=value manifest the dependency-light rust side can parse."""
+    lines = ["format=1"]
+    for cfg in VARIANTS:
+        shapes = output_shapes(cfg)
+        outs = ";".join(
+            f"{name}:{','.join(str(d) for d in shapes[name])}"
+            for name in OUTPUT_NAMES)
+        lines.append(
+            f"variant name={cfg.name} file={cfg.name}.hlo.txt "
+            f"samples={cfg.num_samples} quanta={cfg.num_quanta} "
+            f"clients={cfg.num_clients} degree={cfg.degree} "
+            f"params={NUM_PARAMS} outputs={outs}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower a single variant by name (e.g. analyze_s16384)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for cfg in VARIANTS:
+        if args.only and cfg.name != args.only:
+            continue
+        path = os.path.join(args.out_dir, f"{cfg.name}.hlo.txt")
+        text = lower_variant(cfg)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path}: {len(text)} chars "
+              f"(S={cfg.num_samples}, Q={cfg.num_quanta}, "
+              f"C={cfg.num_clients}, D={cfg.degree})")
+    write_manifest(args.out_dir)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernels for the DiPerF automated-analysis pipeline.
+
+Each kernel is written for TPU-style tiling (samples streamed HBM->VMEM in
+blocks, per-quantum accumulators resident in VMEM, MXU-shaped matmuls for
+the binning/Gram contractions) but is lowered with ``interpret=True`` so
+the resulting HLO runs on any PJRT backend, including the rust CPU client.
+
+Kernels:
+  * :mod:`binning`        — sample -> time-quantum aggregation (throughput,
+                            response-time sums, offered-load integral) and
+                            per-client aggregation (completions, activity
+                            spans).
+  * :mod:`moving_average` — banded moving-average smoothing of binned
+                            series (the paper's 160 s window).
+  * :mod:`polyfit`        — weighted Vandermonde/Gram accumulation for the
+                            polynomial trend models.
+
+Pure-jnp oracles for everything live in :mod:`ref` and are enforced by
+``python/tests``.
+"""
+
+from .binning import bin_samples, bin_clients, BLOCK_S
+from .moving_average import moving_average
+from .polyfit import gram, cholesky_solve, polyfit
+
+__all__ = [
+    "bin_samples",
+    "bin_clients",
+    "moving_average",
+    "gram",
+    "cholesky_solve",
+    "polyfit",
+    "BLOCK_S",
+]

@@ -1,0 +1,202 @@
+"""Sample -> time-quantum / per-client aggregation Pallas kernels.
+
+This is the hot spot of DiPerF's automated analysis (paper §3.1.3): every
+per-call sample collected by the testers must be folded into
+
+  * per-quantum series  — throughput, response-time sum, offered-load
+    integral (the series behind Figures 3 and 6), and
+  * per-client aggregates — completions inside the peak window and each
+    client's activity span (behind Figures 4, 5, 7, 8).
+
+TPU shaping
+-----------
+Samples are streamed in ``(BLOCK_S,)`` tiles (grid dim 0); the per-quantum
+accumulators are a single ``(R, Q)`` VMEM-resident block whose index map is
+invariant in the streaming dimension — the canonical Pallas reduction
+idiom.  The bin scatter is expressed as an MXU-shaped contraction:
+
+    contrib[R, BLOCK_S] @ onehot[BLOCK_S, Q]  ->  acc[R, Q]
+
+so the TPU does the scatter as a matmul instead of a serial scatter-add.
+The offered-load integral uses an interval-coverage matrix in place of the
+one-hot.  Everything is lowered with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); the same structure compiles for real TPUs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples per grid step.  2^12 f32 lanes * (Q=512) coverage matrix is the
+# VMEM high-water mark: 4096*512*4 B = 8 MiB, within the ~16 MiB budget.
+BLOCK_S = 4096
+
+_BIG = 3.0e38  # plain float: jnp constants would be captured as consts
+
+
+def _bin_kernel(ts_ref, te_ref, rt_ref, ok_ref, valid_ref, scal_ref,
+                tput_ref, rtsum_ref, load_ref):
+    """One streaming step: fold BLOCK_S samples into the (Q,) accumulators."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        tput_ref[...] = jnp.zeros_like(tput_ref)
+        rtsum_ref[...] = jnp.zeros_like(rtsum_ref)
+        load_ref[...] = jnp.zeros_like(load_ref)
+
+    ts = ts_ref[...]          # (BLOCK_S,) request issue time (global s)
+    te = te_ref[...]          # (BLOCK_S,) completion time (global s)
+    rt = rt_ref[...]          # (BLOCK_S,) service response time (s)
+    ok = ok_ref[...]          # (BLOCK_S,) 1.0 iff served successfully
+    valid = valid_ref[...]    # (BLOCK_S,) 1.0 iff a real (non-pad) sample
+    t0 = scal_ref[0]          # series origin (global s)
+    quantum = scal_ref[1]     # quantum width (s)
+
+    q = tput_ref.shape[-1]
+    # Column j covers global time [t0 + j*quantum, t0 + (j+1)*quantum).
+    col = jax.lax.broadcasted_iota(jnp.float32, (ts.shape[0], q), 1)
+    left = t0 + col * quantum
+    right = left + quantum
+
+    # --- completion scatter (throughput + response-time sum) ------------
+    # bin index of each completion; one-hot against the column iota.  Bin
+    # values are small integers (< Q <= 2^24) so f32 equality is exact.
+    bin_idx = jnp.floor((te - t0) / quantum)
+    onehot = ((bin_idx[:, None] == col)
+              & (bin_idx[:, None] >= 0.0)
+              & (bin_idx[:, None] < q)).astype(jnp.float32)
+    served = ok * valid
+    contrib = jnp.stack([served, served * rt])          # (2, BLOCK_S)
+    acc = jax.lax.dot_general(
+        contrib, onehot,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (2, Q)
+    tput_ref[...] += acc[0]
+    rtsum_ref[...] += acc[1]
+
+    # --- offered-load integral ------------------------------------------
+    # A request in flight over [ts, te] contributes its fractional overlap
+    # with each quantum; summing overlaps and dividing by the quantum gives
+    # the time-averaged number of concurrent requests (paper's "load").
+    ov = jnp.clip(jnp.minimum(te[:, None], right)
+                  - jnp.maximum(ts[:, None], left),
+                  0.0, quantum)
+    ov = ov * valid[:, None] / quantum
+    load_ref[...] += jnp.sum(ov, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_quanta",))
+def bin_samples(t_start, t_end, rt, ok, valid, t0, quantum, *, num_quanta):
+    """Aggregate per-call samples into per-quantum series.
+
+    Args:
+      t_start, t_end, rt, ok, valid: ``f32[S]`` sample columns (``S`` must
+        be a multiple of :data:`BLOCK_S`; pad with ``valid = 0``).
+      t0: ``f32[]`` global time of quantum 0's left edge.
+      quantum: ``f32[]`` quantum width in seconds (> 0).
+      num_quanta: static number of quanta ``Q``.
+
+    Returns:
+      ``(throughput, rt_sum, load)`` — each ``f32[Q]``.  ``throughput[q]``
+      counts successful completions in quantum ``q`` (it is also the
+      response-time sample count, since both are binned by completion
+      time); ``rt_sum[q]`` sums their response times; ``load[q]`` is the
+      time-averaged number of in-flight requests.
+    """
+    s = t_start.shape[0]
+    if s % BLOCK_S != 0:
+        raise ValueError(f"sample capacity {s} not a multiple of {BLOCK_S}")
+    scalars = jnp.stack([jnp.asarray(t0, jnp.float32),
+                         jnp.asarray(quantum, jnp.float32)])
+    grid = (s // BLOCK_S,)
+    sample_spec = pl.BlockSpec((BLOCK_S,), lambda i: (i,))
+    acc_spec = pl.BlockSpec((num_quanta,), lambda i: (0,))
+    return pl.pallas_call(
+        _bin_kernel,
+        grid=grid,
+        in_specs=[sample_spec] * 5 + [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[acc_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((num_quanta,), jnp.float32)] * 3,
+        interpret=True,
+    )(t_start.astype(jnp.float32), t_end.astype(jnp.float32),
+      rt.astype(jnp.float32), ok.astype(jnp.float32),
+      valid.astype(jnp.float32), scalars)
+
+
+def _client_kernel(ts_ref, te_ref, ok_ref, valid_ref, cid_ref, scal_ref,
+                   done_ref, amin_ref, amax_ref):
+    """Fold BLOCK_S samples into per-client aggregates."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        done_ref[...] = jnp.zeros_like(done_ref)
+        amin_ref[...] = jnp.full_like(amin_ref, _BIG)
+        amax_ref[...] = jnp.full_like(amax_ref, -_BIG)
+
+    ts = ts_ref[...]
+    te = te_ref[...]
+    ok = ok_ref[...]
+    valid = valid_ref[...]
+    cid = cid_ref[...]        # client id as f32 (exact for id < 2^24)
+    w0 = scal_ref[0]          # peak-window left edge (global s)
+    w1 = scal_ref[1]          # peak-window right edge
+
+    c = done_ref.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.float32, (ts.shape[0], c), 1)
+    member = (cid[:, None] == col)                       # (BLOCK_S, C) bool
+
+    # Completions inside the peak window, scattered by client: MXU matvec.
+    inwin = ((te >= w0) & (te <= w1)).astype(jnp.float32) * ok * valid
+    done_ref[...] += jax.lax.dot_general(
+        inwin[None, :], member.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0]
+
+    # Activity span: masked min of issue times / max of completion times.
+    vmask = member & (valid[:, None] > 0.0)
+    amin_ref[...] = jnp.minimum(
+        amin_ref[...], jnp.min(jnp.where(vmask, ts[:, None], _BIG), axis=0))
+    amax_ref[...] = jnp.maximum(
+        amax_ref[...], jnp.max(jnp.where(vmask, te[:, None], -_BIG), axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_clients",))
+def bin_clients(t_start, t_end, ok, valid, client_id, w0, w1, *, num_clients):
+    """Aggregate samples per client (for utilization / fairness figures).
+
+    Args:
+      t_start, t_end, ok, valid: ``f32[S]`` sample columns.
+      client_id: ``f32[S]`` integral client ids in ``[0, num_clients)``.
+      w0, w1: ``f32[]`` peak-window bounds (global seconds).
+      num_clients: static client capacity ``C``.
+
+    Returns:
+      ``(completed, active_min, active_max)`` — each ``f32[C]``.
+      ``completed[c]`` counts client ``c``'s successful completions inside
+      the window; ``active_min``/``active_max`` bound the client's
+      activity span over the whole run (±3e38 when the client never ran).
+    """
+    s = t_start.shape[0]
+    if s % BLOCK_S != 0:
+        raise ValueError(f"sample capacity {s} not a multiple of {BLOCK_S}")
+    scalars = jnp.stack([jnp.asarray(w0, jnp.float32),
+                         jnp.asarray(w1, jnp.float32)])
+    grid = (s // BLOCK_S,)
+    sample_spec = pl.BlockSpec((BLOCK_S,), lambda i: (i,))
+    acc_spec = pl.BlockSpec((num_clients,), lambda i: (0,))
+    return pl.pallas_call(
+        _client_kernel,
+        grid=grid,
+        in_specs=[sample_spec] * 5 + [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[acc_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((num_clients,), jnp.float32)] * 3,
+        interpret=True,
+    )(t_start.astype(jnp.float32), t_end.astype(jnp.float32),
+      ok.astype(jnp.float32), valid.astype(jnp.float32),
+      client_id.astype(jnp.float32), scalars)

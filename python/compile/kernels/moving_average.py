@@ -1,0 +1,72 @@
+"""Banded moving-average smoothing kernel.
+
+The paper smooths the per-quantum response-time and throughput series with
+a moving average (a 160 s window in Figure 3).  Over a ``Q``-point series
+this is a banded weighted average:
+
+    ma[i] = (sum_{|i-j| <= h} num[j]) / (sum_{|i-j| <= h} den[j])
+
+with ``h`` the half-window in quanta.  For count-weighted series (response
+times) ``num = rt_sum`` and ``den = completions``; for plain smoothing
+``den = ones``.
+
+TPU shaping: ``Q`` is small (512 here), so the whole band matrix fits in
+VMEM (512*512*4 B = 1 MiB) and both band contractions are a single MXU
+matmul each — far cheaper than a gather-based sliding window.  The window
+width is a *runtime* scalar: the band matrix is built from an iota
+comparison, so no re-lowering is needed to change the window.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ma_kernel(num_ref, den_ref, scal_ref, ma_ref):
+    num = num_ref[...]        # (Q,)
+    den = den_ref[...]        # (Q,)
+    half = scal_ref[0]        # half-window, in quanta (f32, >= 0)
+
+    q = num.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.float32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (q, q), 1)
+    band = (jnp.abs(row - col) <= half).astype(jnp.float32)
+
+    snum = jax.lax.dot_general(
+        band, num[:, None],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    sden = jax.lax.dot_general(
+        band, den[:, None],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    ma_ref[...] = snum / jnp.maximum(sden, 1.0)
+
+
+@jax.jit
+def moving_average(num, den, half_window):
+    """Weighted moving average of a binned series.
+
+    Args:
+      num: ``f32[Q]`` numerator series (e.g. per-quantum rt sums).
+      den: ``f32[Q]`` denominator series (e.g. per-quantum counts); pass
+        ones for an unweighted moving average.
+      half_window: ``f32[]`` half-window size in quanta.
+
+    Returns:
+      ``f32[Q]`` smoothed series; quanta whose window holds no weight
+      (``sum den == 0``) return ``num``-window-sum / 1 (i.e. 0 when the
+      numerator is empty too).
+    """
+    q = num.shape[0]
+    scal = jnp.stack([jnp.asarray(half_window, jnp.float32)])
+    spec = pl.BlockSpec((q,), lambda: (0,))
+    return pl.pallas_call(
+        _ma_kernel,
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(num.astype(jnp.float32), den.astype(jnp.float32), scal)

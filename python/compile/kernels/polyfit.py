@@ -1,0 +1,133 @@
+"""Weighted polynomial least-squares: Gram kernel + tiny Cholesky solve.
+
+The paper fits a polynomial to every reported series ("the polynomial
+approximations have been computed for all the data in all experiments")
+and proposes them as empirical performance models.  A degree-``D``
+weighted fit over ``Q`` points is
+
+    A = V^T diag(w) V          (D+1 x D+1 Gram matrix)
+    b = V^T (w * y)
+    coef = solve(A, b)
+
+with ``V`` the Vandermonde matrix of the (normalized) abscissae.
+
+TPU shaping: the Gram accumulation is the compute — a ``(D+1, Q) x
+(Q, D+1)`` MXU contraction done in one VMEM-resident block (Q = 512,
+D+1 <= 8: V is 16 KiB).  The ``(D+1)^2`` solve is negligible and is done
+as an *unrolled* jnp Cholesky (plain HLO arithmetic — deliberately NOT
+``jnp.linalg.solve``, whose CPU lowering emits a LAPACK custom-call the
+rust PJRT client may not resolve).
+
+Abscissae must be pre-normalized to ~[-1, 1] by the caller for f32
+conditioning; :func:`polyfit` handles that plus ridge damping.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, w_ref, a_ref, b_ref, *, degree):
+    x = x_ref[...]            # (Q,) normalized abscissae
+    y = y_ref[...]            # (Q,) ordinates
+    w = w_ref[...]            # (Q,) non-negative weights
+
+    # Vandermonde columns x^0 .. x^degree, built by cumulative products so
+    # each power is one multiply (degree is static).
+    cols = [jnp.ones_like(x)]
+    for _ in range(degree):
+        cols.append(cols[-1] * x)
+    v = jnp.stack(cols, axis=1)                     # (Q, D+1)
+
+    wv = v * w[:, None]
+    a_ref[...] = jax.lax.dot_general(
+        v, wv, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (D+1, D+1)
+    b_ref[...] = jax.lax.dot_general(
+        v, (w * y)[:, None],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]   # (D+1,)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def gram(x, y, w, *, degree):
+    """Accumulate the weighted normal equations ``(A, b)`` on the MXU.
+
+    Args:
+      x: ``f32[Q]`` abscissae, pre-normalized to roughly ``[-1, 1]``.
+      y: ``f32[Q]`` ordinates.
+      w: ``f32[Q]`` weights (0 masks a point out).
+      degree: static polynomial degree ``D``.
+
+    Returns:
+      ``(A, b)``: ``f32[D+1, D+1]`` Gram matrix and ``f32[D+1]`` moment
+      vector of the weighted normal equations.
+    """
+    q = x.shape[0]
+    n = degree + 1
+    spec = pl.BlockSpec((q,), lambda: (0,))
+    kernel = functools.partial(_gram_kernel, degree=degree)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[spec, spec, spec],
+        out_specs=[pl.BlockSpec((n, n), lambda: (0, 0)),
+                   pl.BlockSpec((n,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n, n), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def cholesky_solve(a, b):
+    """Solve ``a @ coef = b`` for SPD ``a`` via an unrolled Cholesky.
+
+    ``a`` is ``f32[N, N]`` with static, small ``N`` (the loops unroll at
+    trace time into plain HLO arithmetic — no LAPACK custom-calls, so the
+    lowered module runs on the rust CPU PJRT client).
+
+    Returns ``f32[N]``.
+    """
+    n = a.shape[0]
+    # L is built row by row as a list-of-rows to keep everything functional.
+    l = [[jnp.float32(0.0)] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1):
+            s = a[i, j]
+            for k in range(j):
+                s = s - l[i][k] * l[j][k]
+            if i == j:
+                l[i][j] = jnp.sqrt(jnp.maximum(s, 1e-30))
+            else:
+                l[i][j] = s / l[j][j]
+    # Forward substitution: L z = b.
+    z = [jnp.float32(0.0)] * n
+    for i in range(n):
+        s = b[i]
+        for k in range(i):
+            s = s - l[i][k] * z[k]
+        z[i] = s / l[i][i]
+    # Back substitution: L^T coef = z.
+    c = [jnp.float32(0.0)] * n
+    for i in reversed(range(n)):
+        s = z[i]
+        for k in range(i + 1, n):
+            s = s - l[k][i] * c[k]
+        c[i] = s / l[i][i]
+    return jnp.stack(c)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def polyfit(x, y, w, *, degree, ridge=1e-4):
+    """Weighted ridge-damped polynomial fit; returns ``f32[D+1]`` coefs.
+
+    Coefficients are in increasing-power order over the *given* (already
+    normalized) abscissae.  ``ridge`` scales with ``trace(A)`` so the
+    damping is shape-independent; it keeps the solve finite when fewer
+    than ``D+1`` points carry weight.
+    """
+    a, b = gram(x, y, w, degree=degree)
+    n = degree + 1
+    damp = ridge * (jnp.trace(a) / n + 1e-6)
+    return cholesky_solve(a + damp * jnp.eye(n, dtype=jnp.float32), b)

@@ -1,0 +1,100 @@
+"""Pure-jnp/numpy oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: deliberately written in the most
+obvious (loop/vectorized-numpy) style, with no Pallas, no tiling, and no
+clever contractions.  ``python/tests`` asserts the kernels match these
+within f32 tolerance across randomized shapes (hypothesis sweeps).
+"""
+
+import numpy as np
+
+
+def bin_samples_ref(t_start, t_end, rt, ok, valid, t0, quantum, num_quanta):
+    """Reference for :func:`binning.bin_samples`."""
+    t_start = np.asarray(t_start, np.float64)
+    t_end = np.asarray(t_end, np.float64)
+    rt = np.asarray(rt, np.float64)
+    ok = np.asarray(ok, np.float64)
+    valid = np.asarray(valid, np.float64)
+    tput = np.zeros(num_quanta)
+    rtsum = np.zeros(num_quanta)
+    load = np.zeros(num_quanta)
+    for s in range(len(t_start)):
+        if valid[s] == 0.0:
+            continue
+        if ok[s] > 0.0:
+            b = int(np.floor((t_end[s] - t0) / quantum))
+            if 0 <= b < num_quanta:
+                tput[b] += 1.0
+                rtsum[b] += rt[s]
+        for q in range(num_quanta):
+            left = t0 + q * quantum
+            right = left + quantum
+            ov = min(t_end[s], right) - max(t_start[s], left)
+            if ov > 0:
+                load[q] += min(ov, quantum) / quantum
+    return tput, rtsum, load
+
+
+def bin_clients_ref(t_start, t_end, ok, valid, client_id, w0, w1,
+                    num_clients):
+    """Reference for :func:`binning.bin_clients`."""
+    big = float(np.float32(3.0e38))  # match the kernel's f32 sentinel
+    done = np.zeros(num_clients)
+    amin = np.full(num_clients, big)
+    amax = np.full(num_clients, -big)
+    for s in range(len(t_start)):
+        if valid[s] == 0.0:
+            continue
+        c = int(client_id[s])
+        if not 0 <= c < num_clients:
+            continue
+        if ok[s] > 0.0 and w0 <= t_end[s] <= w1:
+            done[c] += 1.0
+        amin[c] = min(amin[c], t_start[s])
+        amax[c] = max(amax[c], t_end[s])
+    return done, amin, amax
+
+
+def moving_average_ref(num, den, half_window):
+    """Reference for :func:`moving_average.moving_average`."""
+    num = np.asarray(num, np.float64)
+    den = np.asarray(den, np.float64)
+    q = len(num)
+    out = np.zeros(q)
+    h = float(half_window)
+    for i in range(q):
+        sn = 0.0
+        sd = 0.0
+        for j in range(q):
+            if abs(i - j) <= h:
+                sn += num[j]
+                sd += den[j]
+        out[i] = sn / max(sd, 1.0)
+    return out
+
+
+def gram_ref(x, y, w, degree):
+    """Reference for :func:`polyfit.gram`."""
+    x = np.asarray(x, np.float64)
+    v = np.stack([x ** k for k in range(degree + 1)], axis=1)
+    a = v.T @ (v * np.asarray(w, np.float64)[:, None])
+    b = v.T @ (np.asarray(w, np.float64) * np.asarray(y, np.float64))
+    return a, b
+
+
+def polyfit_ref(x, y, w, degree, ridge=1e-4):
+    """Reference for :func:`polyfit.polyfit` (same ridge damping)."""
+    a, b = gram_ref(x, y, w, degree)
+    n = degree + 1
+    damp = ridge * (np.trace(a) / n + 1e-6)
+    return np.linalg.solve(a + damp * np.eye(n), b)
+
+
+def polyval_ref(coef, x):
+    """Evaluate increasing-power coefficients at ``x``."""
+    x = np.asarray(x, np.float64)
+    out = np.zeros_like(x)
+    for k, c in enumerate(np.asarray(coef, np.float64)):
+        out = out + c * x ** k
+    return out

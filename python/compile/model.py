@@ -1,0 +1,196 @@
+"""Layer-2 JAX model: DiPerF's automated analysis pipeline (paper §3.1.3).
+
+``analyze`` composes the Layer-1 Pallas kernels into the full controller-
+side computation: per-quantum series (offered load, throughput, response
+time), moving-average and polynomial trend approximations, and per-client
+utilization / fairness — i.e. everything behind Figures 3–8 plus the
+§1/§5 empirical performance models.
+
+The function is pure and fixed-shape so ``aot.py`` can lower it once per
+sample-capacity variant to HLO text; the rust coordinator then runs it
+via PJRT with Python entirely off the measurement path.
+
+Metric definitions (paper §4):
+  * throughput[q]  — successful completions per quantum.
+  * load[q]        — time-averaged number of in-flight requests.
+  * rt_mean[q]     — mean response time of completions in the quantum.
+  * util[c]        — client c's completions inside the peak window divided
+                     by ALL completions that occurred while c was active
+                     (activity span clipped to the window).
+  * fairness[c]    — completions / utilization (the paper's ratio; for a
+                     perfectly fair service it is flat across clients).
+
+Polynomial coefficients are in increasing powers of the *normalized* time
+x = 2*(t - t0)/duration - 1; the rust side evaluates with the same
+normalization (see rust/src/analysis/).
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bin_samples, bin_clients, moving_average, polyfit
+
+# Layout of the packed scalar-parameter vector (f32[NUM_PARAMS]).
+P_T0 = 0          # global time of quantum 0's left edge (s)
+P_QUANTUM = 1     # quantum width (s)
+P_HALFWIN = 2     # moving-average half-window, in quanta
+P_W0 = 3          # peak-window left edge (global s)
+P_W1 = 4          # peak-window right edge (global s)
+P_DURATION = 5    # experiment duration (s) — for fit normalization
+NUM_PARAMS = 8    # padded for forward compatibility
+
+
+@dataclass(frozen=True)
+class AnalyzeConfig:
+    """Static shape configuration for one AOT variant."""
+    num_samples: int      # padded sample capacity S (multiple of BLOCK_S)
+    num_quanta: int = 512
+    num_clients: int = 128
+    degree: int = 6
+
+    @property
+    def name(self):
+        return f"analyze_s{self.num_samples}"
+
+
+def _window_totals(tput, pos_lo, pos_hi):
+    """Completions between fractional quantum positions, via cumsum+interp.
+
+    ``pos`` is in quantum units, clipped to ``[0, Q]``; within a quantum
+    the count is interpolated linearly (completions are dense at the
+    paper's granularity, so this is the natural continuous estimate).
+    """
+    q = tput.shape[0]
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                           jnp.cumsum(tput)])          # (Q+1,) exclusive
+
+    def at(pos):
+        pos = jnp.clip(pos, 0.0, float(q))
+        idx = jnp.clip(jnp.floor(pos), 0.0, float(q - 1))
+        frac = pos - idx
+        idx = idx.astype(jnp.int32)
+        return jnp.take(cum, idx) + frac * jnp.take(tput, idx)
+
+    return jnp.maximum(at(pos_hi) - at(pos_lo), 0.0)
+
+
+def analyze(cfg: AnalyzeConfig, t_start, t_end, rt, ok, valid, client_id,
+            params):
+    """Full automated analysis over one experiment's samples.
+
+    Args:
+      cfg: static shapes (see :class:`AnalyzeConfig`).
+      t_start, t_end, rt, ok, valid, client_id: ``f32[S]`` sample columns;
+        pad unused capacity with ``valid = 0``.
+      params: ``f32[NUM_PARAMS]`` packed runtime scalars (see P_* indices).
+
+    Returns a dict of named arrays (flattened to a tuple by the AOT
+    wrapper, in sorted-key order — see ``aot.py``).
+    """
+    t0 = params[P_T0]
+    quantum = params[P_QUANTUM]
+    halfwin = params[P_HALFWIN]
+    w0 = params[P_W0]
+    w1 = params[P_W1]
+    duration = params[P_DURATION]
+
+    # --- L1: per-quantum binning (MXU scatter) ---------------------------
+    tput, rt_sum, load = bin_samples(
+        t_start, t_end, rt, ok, valid, t0, quantum,
+        num_quanta=cfg.num_quanta)
+    rt_mean = rt_sum / jnp.maximum(tput, 1.0)
+
+    # --- L1: moving-average trends (the paper's 160 s window) -----------
+    ones = jnp.ones_like(tput)
+    rt_ma = moving_average(rt_sum, tput, halfwin)     # count-weighted
+    tput_ma = moving_average(tput, ones, halfwin)
+    load_ma = moving_average(load, ones, halfwin)
+
+    # --- L1: polynomial trend models -------------------------------------
+    centers = t0 + (jnp.arange(cfg.num_quanta, dtype=jnp.float32) + 0.5) \
+        * quantum
+    xn = 2.0 * (centers - t0) / jnp.maximum(duration, 1e-6) - 1.0
+    in_run = (centers - t0 <= duration).astype(jnp.float32)
+    poly_rt = polyfit(xn, rt_mean, tput, degree=cfg.degree)
+    poly_tput = polyfit(xn, tput, in_run, degree=cfg.degree)
+    poly_load = polyfit(xn, load, in_run, degree=cfg.degree)
+
+    # --- L1: per-client aggregation --------------------------------------
+    completed, amin, amax = bin_clients(
+        t_start, t_end, ok, valid, client_id, w0, w1,
+        num_clients=cfg.num_clients)
+    ran = (amin <= amax).astype(jnp.float32)
+    # Activity span clipped to the peak window.
+    a0 = jnp.maximum(amin, w0)
+    a1 = jnp.minimum(amax, w1)
+    active_time = jnp.maximum(a1 - a0, 0.0) * ran
+    # Completions (by anyone) during each client's active span.
+    tot_active = _window_totals(tput, (a0 - t0) / quantum,
+                                (a1 - t0) / quantum)
+    util = jnp.where(tot_active > 0.0, completed / tot_active, 0.0)
+    fairness = jnp.where(util > 0.0, completed / jnp.maximum(util, 1e-9),
+                         0.0)
+
+    # --- scalar summary ---------------------------------------------------
+    served = ok * valid
+    total_ok = jnp.sum(served)
+    totals = jnp.stack([
+        total_ok,                                        # 0 completions
+        jnp.sum(valid) - total_ok,                       # 1 failures
+        jnp.sum(rt * served) / jnp.maximum(total_ok, 1.0),  # 2 mean rt (s)
+        jnp.max(load),                                   # 3 peak load
+        jnp.max(tput),                                   # 4 peak tput/quantum
+        jnp.max(rt * served),                            # 5 max rt (s)
+        jnp.sum(load) * quantum,                         # 6 busy req-seconds
+        jnp.float32(0.0),                                # 7 reserved
+    ])
+
+    return {
+        "active_time": active_time,
+        "completed": completed,
+        "fairness": fairness,
+        "load": load,
+        "load_ma": load_ma,
+        "poly_load": poly_load,
+        "poly_rt": poly_rt,
+        "poly_tput": poly_tput,
+        "rt_ma": rt_ma,
+        "rt_mean": rt_mean,
+        "totals": totals,
+        "tput": tput,
+        "tput_ma": tput_ma,
+        "util": util,
+    }
+
+
+# Canonical output ordering for the AOT tuple (and the rust unpacker).
+OUTPUT_NAMES = sorted([
+    "active_time", "completed", "fairness", "load", "load_ma", "poly_load",
+    "poly_rt", "poly_tput", "rt_ma", "rt_mean", "totals", "tput", "tput_ma",
+    "util",
+])
+
+
+def analyze_flat(cfg: AnalyzeConfig):
+    """Return a fixed-arity function emitting outputs as a sorted tuple."""
+
+    def fn(t_start, t_end, rt, ok, valid, client_id, params):
+        out = analyze(cfg, t_start, t_end, rt, ok, valid, client_id, params)
+        assert sorted(out.keys()) == OUTPUT_NAMES
+        return tuple(out[k] for k in OUTPUT_NAMES)
+
+    return fn
+
+
+def output_shapes(cfg: AnalyzeConfig):
+    """Shape (as a tuple) of each named output, keyed by name."""
+    q, c, n = cfg.num_quanta, cfg.num_clients, cfg.degree + 1
+    return {
+        "active_time": (c,), "completed": (c,), "fairness": (c,),
+        "load": (q,), "load_ma": (q,), "poly_load": (n,), "poly_rt": (n,),
+        "poly_tput": (n,), "rt_ma": (q,), "rt_mean": (q,), "totals": (8,),
+        "tput": (q,), "tput_ma": (q,), "util": (c,),
+    }

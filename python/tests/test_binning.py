@@ -1,0 +1,173 @@
+"""Pallas binning kernels vs the pure-numpy oracle (the CORE L1 signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bin_samples, bin_clients, BLOCK_S
+from compile.kernels.ref import bin_samples_ref, bin_clients_ref
+
+
+def make_samples(rng, s, n_real, t_max=500.0, rt_max=30.0, n_clients=20):
+    ts = rng.uniform(0, t_max, s).astype(np.float32)
+    rt = rng.uniform(0.05, rt_max, s).astype(np.float32)
+    te = (ts + rt).astype(np.float32)
+    ok = (rng.random(s) < 0.9).astype(np.float32)
+    valid = np.zeros(s, np.float32)
+    valid[:n_real] = 1.0
+    cid = rng.integers(0, n_clients, s).astype(np.float32)
+    return ts, te, rt, ok, valid, cid
+
+
+class TestBinSamples:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        ts, te, rt, ok, valid, _ = make_samples(rng, 2 * BLOCK_S, 3000)
+        q = 64
+        got = bin_samples(ts, te, rt, ok, valid, 0.0, 10.0, num_quanta=q)
+        want = bin_samples_ref(ts, te, rt, ok, valid, 0.0, 10.0, q)
+        np.testing.assert_allclose(np.array(got[0]), want[0], atol=1e-5)
+        np.testing.assert_allclose(np.array(got[1]), want[1], rtol=1e-5,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.array(got[2]), want[2], rtol=1e-4,
+                                   atol=1e-3)
+
+    def test_all_padding(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        tput, rtsum, load = bin_samples(z, z, z, z, z, 0.0, 1.0,
+                                        num_quanta=32)
+        assert np.array(tput).sum() == 0.0
+        assert np.array(rtsum).sum() == 0.0
+        assert np.array(load).sum() == 0.0
+
+    def test_single_sample(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        ts, te, rt = z.copy(), z.copy(), z.copy()
+        ok, valid = z.copy(), z.copy()
+        ts[0], rt[0], te[0] = 5.0, 2.0, 7.0
+        ok[0] = valid[0] = 1.0
+        tput, rtsum, load = bin_samples(ts, te, rt, ok, valid, 0.0, 1.0,
+                                        num_quanta=16)
+        tput = np.array(tput)
+        # completion lands in quantum 7 (te = 7.0 -> bin 7)
+        assert tput[7] == 1.0 and tput.sum() == 1.0
+        assert abs(np.array(rtsum)[7] - 2.0) < 1e-6
+        # in flight exactly over quanta 5 and 6
+        load = np.array(load)
+        np.testing.assert_allclose(load[5:7], [1.0, 1.0], atol=1e-5)
+        assert load.sum() == pytest.approx(2.0, abs=1e-4)
+
+    def test_failures_count_in_load_not_tput(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        ts, te, rt = z.copy(), z.copy(), z.copy()
+        ok, valid = z.copy(), z.copy()
+        ts[0], te[0], rt[0] = 0.0, 4.0, 4.0
+        valid[0] = 1.0  # ok stays 0: a failed call
+        tput, rtsum, load = bin_samples(ts, te, rt, ok, valid, 0.0, 1.0,
+                                        num_quanta=8)
+        assert np.array(tput).sum() == 0.0
+        assert np.array(load).sum() == pytest.approx(4.0, abs=1e-4)
+
+    def test_out_of_range_completions_dropped(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        ts, te, rt = z.copy(), z.copy(), z.copy()
+        ok, valid = z.copy(), z.copy()
+        # completes after the last quantum; starts before the first
+        ts[0], te[0], rt[0] = -10.0, 100.0, 110.0
+        ok[0] = valid[0] = 1.0
+        tput, _, load = bin_samples(ts, te, rt, ok, valid, 0.0, 1.0,
+                                    num_quanta=8)
+        assert np.array(tput).sum() == 0.0
+        # but it is in flight across all 8 quanta
+        np.testing.assert_allclose(np.array(load), np.ones(8), atol=1e-5)
+
+    def test_conservation(self):
+        """Every successful in-range completion lands in exactly one bin."""
+        rng = np.random.default_rng(7)
+        ts, te, rt, ok, valid, _ = make_samples(rng, BLOCK_S, 1500,
+                                                t_max=600.0)
+        q, quantum = 128, 8.0
+        tput, _, _ = bin_samples(ts, te, rt, ok, valid, 0.0, quantum,
+                                 num_quanta=q)
+        in_range = ((te >= 0) & (te < q * quantum) & (ok > 0)
+                    & (valid > 0)).sum()
+        assert np.array(tput).sum() == pytest.approx(float(in_range))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_real=st.integers(0, 2 * BLOCK_S),
+           quantum=st.floats(0.5, 50.0),
+           t0=st.floats(-100.0, 100.0),
+           num_quanta=st.sampled_from([16, 64, 128]))
+    def test_hypothesis_sweep(self, seed, n_real, quantum, t0, num_quanta):
+        rng = np.random.default_rng(seed)
+        ts, te, rt, ok, valid, _ = make_samples(rng, 2 * BLOCK_S, n_real)
+        got = bin_samples(ts, te, rt, ok, valid, t0, quantum,
+                          num_quanta=num_quanta)
+        want = bin_samples_ref(ts, te, rt, ok, valid, t0, quantum,
+                               num_quanta)
+        np.testing.assert_allclose(np.array(got[0]), want[0], atol=1e-4)
+        np.testing.assert_allclose(np.array(got[1]), want[1], rtol=1e-4,
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.array(got[2]), want[2], rtol=1e-3,
+                                   atol=2e-3)
+
+    def test_rejects_unaligned_capacity(self):
+        z = np.zeros(100, np.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            bin_samples(z, z, z, z, z, 0.0, 1.0, num_quanta=8)
+
+
+class TestBinClients:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        ts, te, rt, ok, valid, cid = make_samples(rng, 2 * BLOCK_S, 3500,
+                                                  n_clients=40)
+        got = bin_clients(ts, te, ok, valid, cid, 100.0, 400.0,
+                          num_clients=64)
+        want = bin_clients_ref(ts, te, ok, valid, cid, 100.0, 400.0, 64)
+        np.testing.assert_allclose(np.array(got[0]), want[0], atol=1e-5)
+        np.testing.assert_allclose(np.array(got[1]), want[1], rtol=1e-5)
+        np.testing.assert_allclose(np.array(got[2]), want[2], rtol=1e-5)
+
+    def test_never_ran_client_sentinels(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        done, amin, amax = bin_clients(z, z, z, z, z, 0.0, 1.0,
+                                       num_clients=8)
+        assert np.array(done).sum() == 0.0
+        assert (np.array(amin) > 1e38).all()
+        assert (np.array(amax) < -1e38).all()
+
+    def test_window_filtering(self):
+        z = np.zeros(BLOCK_S, np.float32)
+        ts, te = z.copy(), z.copy()
+        ok, valid, cid = z.copy(), z.copy(), z.copy()
+        # two completions for client 3: one inside [10, 20], one outside
+        for i, end in enumerate([15.0, 25.0]):
+            ts[i], te[i] = end - 1.0, end
+            ok[i] = valid[i] = 1.0
+            cid[i] = 3.0
+        done, amin, amax = bin_clients(ts, te, ok, valid, cid, 10.0, 20.0,
+                                       num_clients=8)
+        assert np.array(done)[3] == 1.0
+        # activity span covers BOTH samples (span is window-independent)
+        assert np.array(amin)[3] == pytest.approx(14.0)
+        assert np.array(amax)[3] == pytest.approx(25.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_real=st.integers(0, 2 * BLOCK_S),
+           w0=st.floats(0.0, 200.0),
+           wlen=st.floats(0.0, 300.0),
+           num_clients=st.sampled_from([16, 64, 128]))
+    def test_hypothesis_sweep(self, seed, n_real, w0, wlen, num_clients):
+        rng = np.random.default_rng(seed)
+        ts, te, rt, ok, valid, cid = make_samples(
+            rng, 2 * BLOCK_S, n_real, n_clients=num_clients)
+        got = bin_clients(ts, te, ok, valid, cid, w0, w0 + wlen,
+                          num_clients=num_clients)
+        want = bin_clients_ref(ts, te, ok, valid, cid, w0, w0 + wlen,
+                               num_clients)
+        np.testing.assert_allclose(np.array(got[0]), want[0], atol=1e-5)
+        np.testing.assert_allclose(np.array(got[1]), want[1], rtol=1e-5)
+        np.testing.assert_allclose(np.array(got[2]), want[2], rtol=1e-5)

@@ -1,0 +1,165 @@
+"""End-to-end tests of the L2 ``analyze`` pipeline (vs a numpy oracle),
+plus AOT lowering invariants the rust runtime depends on."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.ref import (bin_samples_ref, bin_clients_ref,
+                                 moving_average_ref)
+from compile.model import (AnalyzeConfig, NUM_PARAMS, OUTPUT_NAMES,
+                           P_DURATION, P_HALFWIN, P_QUANTUM, P_T0, P_W0,
+                           P_W1, analyze, analyze_flat, output_shapes)
+
+CFG = AnalyzeConfig(num_samples=4096, num_quanta=64, num_clients=32,
+                    degree=4)
+
+
+def make_run(seed=0, s=4096, n_real=3000, n_clients=20, t_max=500.0):
+    rng = np.random.default_rng(seed)
+    ts = rng.uniform(0, t_max, s).astype(np.float32)
+    rt = rng.uniform(0.1, 30.0, s).astype(np.float32)
+    te = (ts + rt).astype(np.float32)
+    ok = (rng.random(s) < 0.9).astype(np.float32)
+    valid = np.zeros(s, np.float32)
+    valid[:n_real] = 1.0
+    cid = rng.integers(0, n_clients, s).astype(np.float32)
+    params = np.zeros(NUM_PARAMS, np.float32)
+    params[P_T0] = 0.0
+    params[P_QUANTUM] = 10.0
+    params[P_HALFWIN] = 8.0
+    params[P_W0] = 100.0
+    params[P_W1] = 400.0
+    params[P_DURATION] = t_max + 30.0
+    return ts, te, rt, ok, valid, cid, params
+
+
+class TestAnalyze:
+    def setup_method(self):
+        self.data = make_run()
+        ts, te, rt, ok, valid, cid, params = self.data
+        self.out = {k: np.array(v) for k, v in
+                    analyze(CFG, ts, te, rt, ok, valid, cid, params).items()}
+
+    def test_series_match_ref(self):
+        ts, te, rt, ok, valid, cid, params = self.data
+        tput, rtsum, load = bin_samples_ref(ts, te, rt, ok, valid, 0.0,
+                                            10.0, CFG.num_quanta)
+        np.testing.assert_allclose(self.out["tput"], tput, atol=1e-4)
+        np.testing.assert_allclose(self.out["load"], load, rtol=1e-3,
+                                   atol=2e-3)
+        rt_mean = rtsum / np.maximum(tput, 1.0)
+        np.testing.assert_allclose(self.out["rt_mean"], rt_mean, rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(
+            self.out["rt_ma"], moving_average_ref(rtsum, tput, 8.0),
+            rtol=1e-4, atol=1e-4)
+
+    def test_totals(self):
+        ts, te, rt, ok, valid, cid, params = self.data
+        served = (ok * valid) > 0
+        t = self.out["totals"]
+        assert t[0] == served.sum()
+        assert t[1] == valid.sum() - served.sum()
+        assert t[2] == pytest.approx(rt[served].mean(), rel=1e-4)
+        assert t[3] == pytest.approx(self.out["load"].max(), rel=1e-6)
+        assert t[5] == pytest.approx(rt[served].max(), rel=1e-6)
+
+    def test_per_client_completions(self):
+        ts, te, rt, ok, valid, cid, params = self.data
+        done, _, _ = bin_clients_ref(ts, te, ok, valid, cid, 100.0, 400.0,
+                                     CFG.num_clients)
+        np.testing.assert_allclose(self.out["completed"], done, atol=1e-5)
+
+    def test_utilization_bounds(self):
+        """util in [0, 1]: a client cannot complete more than everyone."""
+        u = self.out["util"]
+        assert (u >= 0).all() and (u <= 1.0 + 1e-5).all()
+
+    def test_fairness_consistency(self):
+        """fairness = completed / util wherever util > 0."""
+        f, u, c = (self.out["fairness"], self.out["util"],
+                   self.out["completed"])
+        mask = u > 1e-6
+        np.testing.assert_allclose(f[mask], c[mask] / u[mask], rtol=1e-4)
+        assert (f[~mask] == 0).all()
+
+    def test_active_time_bounds(self):
+        a = self.out["active_time"]
+        assert (a >= 0).all() and (a <= 300.0 + 1e-3).all()  # w1 - w0
+
+    def test_outputs_finite(self):
+        for k, v in self.out.items():
+            assert np.isfinite(v).all(), k
+
+    def test_output_shapes_contract(self):
+        shapes = output_shapes(CFG)
+        assert set(shapes) == set(OUTPUT_NAMES)
+        for k, v in self.out.items():
+            assert v.shape == shapes[k], k
+
+
+class TestFairServiceScenario:
+    """A synthetic perfectly-fair service: equal utilization, flat
+    fairness — the paper's Figure-4 signature."""
+
+    def test_flat_fairness(self):
+        n_clients, per_client = 8, 40
+        s = 4096
+        ts = np.zeros(s, np.float32)
+        te = np.zeros(s, np.float32)
+        rt = np.zeros(s, np.float32)
+        ok = np.zeros(s, np.float32)
+        valid = np.zeros(s, np.float32)
+        cid = np.zeros(s, np.float32)
+        i = 0
+        # round-robin completions, 1 s apart, all clients active throughout
+        for k in range(per_client):
+            for c in range(n_clients):
+                ts[i] = k * n_clients + c
+                te[i] = ts[i] + 1.0
+                rt[i] = 1.0
+                ok[i] = valid[i] = 1.0
+                cid[i] = c
+                i += 1
+        params = np.zeros(NUM_PARAMS, np.float32)
+        params[P_QUANTUM] = 10.0
+        params[P_HALFWIN] = 2.0
+        params[P_W0] = 0.0
+        params[P_W1] = float(per_client * n_clients + 2)
+        params[P_DURATION] = float(per_client * n_clients + 2)
+        out = analyze(CFG, ts, te, rt, ok, valid, cid, params)
+        u = np.array(out["util"])[:n_clients]
+        f = np.array(out["fairness"])[:n_clients]
+        # equal utilization across clients (within discretization)
+        assert u.std() / u.mean() < 0.1
+        assert f.std() / f.mean() < 0.1
+
+
+class TestAotContract:
+    def test_flat_order_is_sorted(self):
+        assert OUTPUT_NAMES == sorted(OUTPUT_NAMES)
+
+    def test_flat_wrapper_matches_dict(self):
+        ts, te, rt, ok, valid, cid, params = make_run(seed=5)
+        d = analyze(CFG, ts, te, rt, ok, valid, cid, params)
+        flat = analyze_flat(CFG)(ts, te, rt, ok, valid, cid, params)
+        for name, arr in zip(OUTPUT_NAMES, flat):
+            np.testing.assert_array_equal(np.array(d[name]), np.array(arr))
+
+    def test_lowered_hlo_has_no_custom_calls(self):
+        """The rust CPU PJRT client cannot resolve LAPACK/Mosaic
+        custom-calls; the lowered module must be pure HLO."""
+        from compile.aot import lower_variant
+        cfg = AnalyzeConfig(num_samples=16384)
+        text = lower_variant(cfg)
+        assert "custom-call" not in text, "non-portable HLO emitted"
+
+    def test_manifest_roundtrip(self, tmp_path):
+        from compile.aot import write_manifest, VARIANTS
+        write_manifest(str(tmp_path))
+        lines = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+        assert lines[0] == "format=1"
+        assert len(lines) == 1 + len(VARIANTS)
+        for line in lines[1:]:
+            assert line.startswith("variant name=analyze_s")
+            assert "outputs=" in line

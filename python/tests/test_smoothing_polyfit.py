@@ -1,0 +1,127 @@
+"""Moving-average and polyfit kernels vs oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moving_average, gram, cholesky_solve, polyfit
+from compile.kernels.ref import (moving_average_ref, gram_ref, polyfit_ref,
+                                 polyval_ref)
+
+
+class TestMovingAverage:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        q = 128
+        num = rng.uniform(0, 100, q).astype(np.float32)
+        den = rng.integers(0, 10, q).astype(np.float32)
+        got = moving_average(num, den, 8.0)
+        want = moving_average_ref(num, den, 8.0)
+        np.testing.assert_allclose(np.array(got), want, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_zero_window_is_pointwise(self):
+        rng = np.random.default_rng(1)
+        q = 64
+        num = rng.uniform(0, 10, q).astype(np.float32)
+        den = np.ones(q, np.float32)
+        got = np.array(moving_average(num, den, 0.0))
+        np.testing.assert_allclose(got, num, rtol=1e-6)
+
+    def test_full_window_is_global_mean(self):
+        rng = np.random.default_rng(2)
+        q = 64
+        num = rng.uniform(0, 10, q).astype(np.float32)
+        den = np.ones(q, np.float32)
+        got = np.array(moving_average(num, den, float(q)))
+        np.testing.assert_allclose(got, np.full(q, num.mean()), rtol=1e-5)
+
+    def test_empty_denominator_guard(self):
+        q = 32
+        num = np.zeros(q, np.float32)
+        den = np.zeros(q, np.float32)
+        got = np.array(moving_average(num, den, 4.0))
+        assert np.isfinite(got).all() and (got == 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           q=st.sampled_from([32, 128, 512]),
+           half=st.floats(0.0, 64.0))
+    def test_hypothesis_sweep(self, seed, q, half):
+        rng = np.random.default_rng(seed)
+        num = rng.uniform(0, 100, q).astype(np.float32)
+        den = rng.integers(0, 5, q).astype(np.float32)
+        got = np.array(moving_average(num, den, half))
+        want = moving_average_ref(num, den, half)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestPolyfit:
+    def test_gram_matches_ref(self):
+        rng = np.random.default_rng(0)
+        q = 256
+        x = rng.uniform(-1, 1, q).astype(np.float32)
+        y = rng.uniform(-5, 5, q).astype(np.float32)
+        w = rng.uniform(0, 3, q).astype(np.float32)
+        a, b = gram(x, y, w, degree=6)
+        ar, br = gram_ref(x, y, w, 6)
+        np.testing.assert_allclose(np.array(a), ar, rtol=2e-4, atol=1e-3)
+        np.testing.assert_allclose(np.array(b), br, rtol=2e-4, atol=1e-3)
+
+    def test_cholesky_solve_vs_numpy(self):
+        rng = np.random.default_rng(4)
+        for n in (2, 4, 7, 8):
+            m = rng.normal(size=(n, n))
+            a = (m @ m.T + n * np.eye(n)).astype(np.float32)
+            b = rng.normal(size=n).astype(np.float32)
+            got = np.array(cholesky_solve(a, b))
+            want = np.linalg.solve(a.astype(np.float64), b)
+            np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_recovers_exact_polynomial(self):
+        q = 512
+        x = np.linspace(-1, 1, q).astype(np.float32)
+        coef_true = np.array([3.0, -1.0, 2.0, 0.5], np.float32)
+        y = polyval_ref(coef_true, x).astype(np.float32)
+        got = np.array(polyfit(x, y, np.ones(q, np.float32), degree=3))
+        # check fit quality in value space (f32 normal equations)
+        err = np.abs(polyval_ref(got, x) - y).max()
+        assert err < 1e-2
+
+    def test_weights_mask_outliers(self):
+        q = 256
+        x = np.linspace(-1, 1, q).astype(np.float32)
+        y = (2.0 + x).astype(np.float32)
+        y_corrupt = y.copy()
+        y_corrupt[::10] = 1e3
+        w = np.ones(q, np.float32)
+        w[::10] = 0.0
+        got = np.array(polyfit(x, y_corrupt, w, degree=1))
+        assert abs(got[0] - 2.0) < 1e-2 and abs(got[1] - 1.0) < 1e-2
+
+    def test_degenerate_few_points_finite(self):
+        # fewer weighted points than coefficients: ridge keeps it finite
+        q = 64
+        x = np.linspace(-1, 1, q).astype(np.float32)
+        y = np.ones(q, np.float32)
+        w = np.zeros(q, np.float32)
+        w[3] = 1.0
+        got = np.array(polyfit(x, y, w, degree=6))
+        assert np.isfinite(got).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           degree=st.integers(1, 6),
+           q=st.sampled_from([64, 256, 512]))
+    def test_hypothesis_fit_quality(self, seed, degree, q):
+        """Kernel fit is as good as the f64 reference fit (in value space)."""
+        rng = np.random.default_rng(seed)
+        x = np.linspace(-1, 1, q).astype(np.float32)
+        coef = rng.uniform(-2, 2, degree + 1)
+        y = polyval_ref(coef, x).astype(np.float32)
+        w = np.ones(q, np.float32)
+        got = np.array(polyfit(x, y, w, degree=degree))
+        ref = polyfit_ref(x, y, w, degree)
+        err_got = np.abs(polyval_ref(got, x) - y).max()
+        err_ref = np.abs(polyval_ref(ref, x) - y).max()
+        assert err_got <= max(5 * err_ref, 5e-2)

@@ -1,0 +1,68 @@
+//! E13 — the analysis-offload bench: the AOT-compiled XLA pipeline vs
+//! the native rust pipeline on identical inputs.  Checks numerical
+//! equivalence and compares wall time per analysis call (the online
+//! view re-analyzes every few minutes, so this must be far below the
+//! 5-minute budget).
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::bench_util::{md_header, Bench};
+use diperf::experiment::presets;
+use diperf::experiment::run_experiment;
+use diperf::experiments::{NUM_CLIENTS, NUM_QUANTA, WINDOW_S};
+use diperf::runtime::XlaAnalyzer;
+
+fn main() -> anyhow::Result<()> {
+    println!("# E13 — XLA vs native automated analysis\n");
+    let r = run_experiment(&presets::prews_fig3(42));
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    println!(
+        "input: {} samples -> padded variant selection from artifacts/\n",
+        inp.len()
+    );
+
+    let mut xla = XlaAnalyzer::load("artifacts")?;
+    let x_out = xla.analyze(&inp)?;
+    let n_out = analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS);
+
+    // equivalence
+    let d = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    };
+    let d_tput = d(&x_out.tput, &n_out.tput);
+    let d_load = d(&x_out.load, &n_out.load);
+    let d_rt = d(&x_out.rt_ma, &n_out.rt_ma);
+    let d_util = d(&x_out.util, &n_out.util);
+    println!(
+        "max deltas: tput {d_tput:.2e}  load {d_load:.2e}  rt_ma \
+         {d_rt:.2e}  util {d_util:.2e}\n"
+    );
+    anyhow::ensure!(d_tput < 1e-3 && d_load < 0.05 && d_rt < 0.05,
+        "XLA and native analyses diverged");
+
+    // timing
+    println!("{}", md_header());
+    let bx = Bench::new("xla analyze (compiled, cached)")
+        .warmup(2)
+        .iters(10)
+        .run_with_units(inp.len() as f64, || xla.analyze(&inp).unwrap());
+    println!("{}", bx.md_row());
+    let bn = Bench::new("native analyze")
+        .warmup(2)
+        .iters(10)
+        .run_with_units(inp.len() as f64, || {
+            analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS)
+        });
+    println!("{}", bn.md_row());
+    println!(
+        "\nxla/native wall ratio: {:.2}x; online-view budget (300 s) \
+         used: {:.4}%",
+        bx.times.median / bn.times.median,
+        100.0 * bx.times.median / 300.0
+    );
+    anyhow::ensure!(
+        bx.times.median < 30.0,
+        "analysis must fit far inside the online-view period"
+    );
+    println!("E13 OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! L3 microbenchmarks: the DES engine and the PS queue — the two hot
+//! paths under every experiment.  Targets (DESIGN.md §7): >= 1 M
+//! events/s through the engine.
+
+use diperf::bench_util::{md_header, Bench};
+use diperf::ids::RequestId;
+use diperf::services::ps::PsQueue;
+use diperf::sim::{Engine, SimTime};
+use diperf::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("# L3 hot paths\n\n{}", md_header());
+
+    // raw engine: schedule + drain N events with random times
+    let n = 1_000_000u64;
+    let b = Bench::new("engine schedule+drain 1M events")
+        .warmup(1)
+        .iters(5)
+        .run_with_units(n as f64, || {
+            let mut eng: Engine<u64> = Engine::new();
+            let mut rng = Pcg64::seed_from(1);
+            for i in 0..n {
+                eng.schedule(SimTime(rng.next_below(1 << 30)), i);
+            }
+            let mut acc = 0u64;
+            while let Some((_, e)) = eng.next() {
+                acc = acc.wrapping_add(e);
+            }
+            acc
+        });
+    println!("{}", b.md_row());
+    let engine_rate = b.rate().unwrap_or(0.0);
+
+    // cascading pattern (each event schedules a successor — the tester
+    // launch loop's shape)
+    let b2 = Bench::new("engine event cascade 1M")
+        .warmup(1)
+        .iters(5)
+        .run_with_units(1e6, || {
+            let mut eng: Engine<u32> = Engine::new();
+            eng.schedule(SimTime(0), 0);
+            let mut count = 0u64;
+            eng.run_until(SimTime::MAX, |eng, t, e| {
+                count += 1;
+                if count < 1_000_000 {
+                    eng.schedule(SimTime(t.0 + 3), e);
+                }
+            });
+            count
+        });
+    println!("{}", b2.md_row());
+
+    // PS queue churn at GRAM-like concurrency (90 jobs resident)
+    let b3 = Bench::new("ps queue 100k ops at n=90")
+        .warmup(1)
+        .iters(5)
+        .run_with_units(1e5, || {
+            let mut q = PsQueue::new(1.0);
+            let mut now = 0.0f64;
+            for i in 0..90u32 {
+                q.push(SimTime::from_secs_f64(now), RequestId(i), 1.0);
+            }
+            let mut next = 90u32;
+            for _ in 0..100_000 {
+                now += 0.01;
+                for (done, _) in q.advance(SimTime::from_secs_f64(now)) {
+                    let _ = done;
+                    q.push(SimTime::from_secs_f64(now), RequestId(next), 1.0);
+                    next += 1;
+                }
+            }
+            q.len()
+        });
+    println!("{}", b3.md_row());
+
+    println!(
+        "\nengine rate {:.2} M events/s (target >= 1 M/s)",
+        engine_rate / 1e6
+    );
+    anyhow::ensure!(engine_rate >= 1e6, "engine below the 1M events/s target");
+    Ok(())
+}

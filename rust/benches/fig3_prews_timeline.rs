@@ -1,0 +1,32 @@
+//! E1 — regenerates Figure 3 (pre-WS GRAM response time, throughput and
+//! load vs time) and checks the §4.1 headline shape.
+
+use diperf::experiment::presets;
+use diperf::experiments::{e1_headlines, md_header, run_with_analysis};
+use diperf::report::{timeline_csv, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E1 / Figure 3 — GT3.2 pre-WS GRAM timeline\n");
+    let t = std::time::Instant::now();
+    let run = run_with_analysis(&presets::prews_fig3(42));
+    println!(
+        "experiment+analysis in {:.0} ms ({} events, analysis={})\n",
+        t.elapsed().as_secs_f64() * 1e3,
+        run.result.events,
+        run.path
+    );
+    println!("{}", md_header());
+    let mut ok = true;
+    for h in e1_headlines(&run) {
+        ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+    let dir = RunDir::create("bench_out", "fig3")?;
+    dir.write(
+        "fig3_timeline.csv",
+        &timeline_csv(&run.out, run.inp.t0 as f64, run.inp.quantum as f64),
+    )?;
+    println!("\nseries -> bench_out/fig3/fig3_timeline.csv");
+    anyhow::ensure!(ok, "figure 3 shape check failed");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! E2 — regenerates Figure 4 (pre-WS GRAM per-machine service
+//! utilization and fairness over the peak window).  The paper's claim:
+//! "the service gives a relatively equal share of resources to the
+//! clients" — fairness is flat across machine ids.
+
+use diperf::experiment::presets;
+use diperf::experiments::{fairness_cv, run_with_analysis};
+use diperf::report::{per_client_csv, RunDir};
+use diperf::util::Summary;
+
+fn main() -> anyhow::Result<()> {
+    println!("# E2 / Figure 4 — pre-WS GRAM utilization & fairness per machine\n");
+    let run = run_with_analysis(&presets::prews_fig3(42));
+
+    let active: Vec<usize> = (0..run.out.completed.len())
+        .filter(|&i| run.out.completed[i] > 0.0)
+        .collect();
+    let utils: Vec<f64> = active.iter().map(|&i| run.out.util[i]).collect();
+    let fair: Vec<f64> = active.iter().map(|&i| run.out.fairness[i]).collect();
+    let us = Summary::of(&utils);
+    let fs = Summary::of(&fair);
+    println!("machines with completions in peak window: {}", active.len());
+    println!(
+        "utilization: mean {:.4}  min {:.4}  max {:.4}  (ideal 1/{} = {:.4})",
+        us.mean,
+        us.min,
+        us.max,
+        active.len(),
+        1.0 / active.len() as f64
+    );
+    println!(
+        "fairness:    mean {:.1}  σ {:.1}  CV {:.3} (paper: 'relatively equal share')",
+        fs.mean,
+        fs.std,
+        fairness_cv(&run)
+    );
+
+    let dir = RunDir::create("bench_out", "fig4")?;
+    dir.write("fig4_per_client.csv", &per_client_csv(&run.out, &run.result.data))?;
+    println!("\nseries -> bench_out/fig4/fig4_per_client.csv");
+
+    // shape checks: ~89 active machines, near-uniform utilization
+    anyhow::ensure!(active.len() >= 80, "most machines should be active");
+    anyhow::ensure!(
+        fairness_cv(&run) < 0.35,
+        "pre-WS fairness must be flat (CV {})",
+        fairness_cv(&run)
+    );
+    anyhow::ensure!(
+        us.max / us.min.max(1e-9) < 3.0,
+        "utilization spread too wide"
+    );
+    println!("figure 4 shape OK");
+    Ok(())
+}

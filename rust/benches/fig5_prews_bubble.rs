@@ -1,0 +1,55 @@
+//! E3 — regenerates Figure 5 (pre-WS GRAM: average aggregate load vs
+//! jobs completed per machine; bubble area = completions).  The paper's
+//! signature: "the first few machines (as well as the last few) have a
+//! lower average aggregate load ... and hence had more jobs completed."
+
+use diperf::experiment::presets;
+use diperf::experiments::run_with_analysis;
+use diperf::report::{per_client_csv, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E3 / Figure 5 — pre-WS GRAM load vs completions per machine\n");
+    // completions across the WHOLE run (not just the peak window) expose
+    // the ramp-edge advantage the paper describes
+    let mut cfg = presets::prews_fig3(42);
+    cfg.controller.desc.duration_s = 3600.0;
+    let run = run_with_analysis(&cfg);
+    let d = &run.result.data;
+
+    // per-tester totals over the whole run, from the raw samples
+    let n = d.testers.len();
+    let mut done = vec![0u64; n];
+    for s in &d.samples {
+        if s.outcome.ok() {
+            done[s.tester.index()] += 1;
+        }
+    }
+    // edge machines (first/last 10 by start order) vs core machines
+    let edge: Vec<u64> = done[..10]
+        .iter()
+        .chain(&done[n - 10..])
+        .cloned()
+        .collect();
+    let core: Vec<u64> = done[n / 2 - 10..n / 2 + 10].to_vec();
+    let edge_mean = edge.iter().sum::<u64>() as f64 / edge.len() as f64;
+    let core_mean = core.iter().sum::<u64>() as f64 / core.len() as f64;
+    println!("mean completions, ramp-edge machines: {edge_mean:.0}");
+    println!("mean completions, mid-ramp machines:  {core_mean:.0}");
+    println!(
+        "edge advantage: {:.2}x (paper: edge machines 'had more jobs \
+         completed')",
+        edge_mean / core_mean.max(1.0)
+    );
+
+    let dir = RunDir::create("bench_out", "fig5")?;
+    dir.write("fig5_bubble.csv", &per_client_csv(&run.out, d))?;
+    println!("\nseries -> bench_out/fig5/fig5_bubble.csv");
+
+    anyhow::ensure!(
+        edge_mean > core_mean * 1.1,
+        "ramp-edge machines must complete more jobs (edge {edge_mean:.0} \
+         vs core {core_mean:.0})"
+    );
+    println!("figure 5 shape OK");
+    Ok(())
+}

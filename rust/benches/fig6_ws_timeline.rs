@@ -1,0 +1,51 @@
+//! E4 — regenerates Figure 6 (WS GRAM response time, throughput and
+//! load vs time) including the §4.2 overload signature: throughput
+//! collapse past ~20 clients, client failures shedding load back to
+//! capacity, and recovery to ~10 jobs/min.
+
+use diperf::experiment::presets;
+use diperf::experiments::{e4_headlines, md_header, run_with_analysis};
+use diperf::report::{timeline_csv, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E4 / Figure 6 — GT3.2 WS GRAM timeline\n");
+    let run = run_with_analysis(&presets::ws_fig6(42));
+    println!("{}", md_header());
+    let mut ok = true;
+    for h in e4_headlines(&run) {
+        ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+    let evicted = run.result.data.testers.iter().filter(|t| t.evicted).count();
+    println!(
+        "\ntesters evicted after service shedding: {evicted} \
+         (paper: 26 -> ~20 machines)"
+    );
+
+    // the aborted 89-client attempt (same figure's narrative)
+    let over = run_with_analysis(&presets::ws_overload(42));
+    println!(
+        "89-client attempt: {} ok / {} failed, {} hard stalls (paper: \
+         'service stalled and all clients failed')",
+        over.result.data.completed(),
+        over.result.data.failed(),
+        over.result.stalls
+    );
+
+    let dir = RunDir::create("bench_out", "fig6")?;
+    dir.write(
+        "fig6_timeline.csv",
+        &timeline_csv(&run.out, run.inp.t0 as f64, run.inp.quantum as f64),
+    )?;
+    println!("\nseries -> bench_out/fig6/fig6_timeline.csv");
+
+    anyhow::ensure!(ok, "figure 6 shape check failed");
+    anyhow::ensure!(evicted >= 2, "shedding must evict testers");
+    anyhow::ensure!(over.result.stalls >= 1, "overload must hard-stall");
+    anyhow::ensure!(
+        over.result.data.failed() * 2 > over.result.data.completed(),
+        "overload failures must dominate"
+    );
+    println!("figure 6 shape OK");
+    Ok(())
+}

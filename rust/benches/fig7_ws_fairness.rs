@@ -1,0 +1,51 @@
+//! E5 — regenerates Figure 7 (WS GRAM per-machine utilization and
+//! fairness).  The paper: "service fairness varies significantly more
+//! than it did for pre-WS GRAM."
+
+use diperf::experiment::presets;
+use diperf::experiments::{fairness_cv, run_with_analysis};
+use diperf::report::{per_client_csv, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E5 / Figure 7 — WS GRAM utilization & fairness per machine\n");
+    let ws = run_with_analysis(&presets::ws_fig6(42));
+    let prews = run_with_analysis(&presets::prews_fig3(42));
+
+    let cv_ws = fairness_cv(&ws);
+    let cv_prews = fairness_cv(&prews);
+    println!("fairness CV, WS GRAM:     {cv_ws:.4}");
+    println!("fairness CV, pre-WS GRAM: {cv_prews:.4}");
+    println!(
+        "ratio {:.1}x (paper: WS GRAM 'varies significantly more')",
+        cv_ws / cv_prews.max(1e-9)
+    );
+
+    // dispersion of per-client completions (the visible signal in Fig 7)
+    let spread = |run: &diperf::experiments::FigureRun| {
+        let v: Vec<f64> = run
+            .out
+            .completed
+            .iter()
+            .cloned()
+            .filter(|&c| c > 0.0)
+            .collect();
+        let s = diperf::util::Summary::of(&v);
+        s.std / s.mean.max(1e-9)
+    };
+    println!(
+        "completion-count CV: WS {:.3} vs pre-WS {:.3}",
+        spread(&ws),
+        spread(&prews)
+    );
+
+    let dir = RunDir::create("bench_out", "fig7")?;
+    dir.write("fig7_per_client.csv", &per_client_csv(&ws.out, &ws.result.data))?;
+    println!("\nseries -> bench_out/fig7/fig7_per_client.csv");
+
+    anyhow::ensure!(
+        spread(&ws) > spread(&prews),
+        "WS GRAM per-client dispersion must exceed pre-WS GRAM"
+    );
+    println!("figure 7 shape OK");
+    Ok(())
+}

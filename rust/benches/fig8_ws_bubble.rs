@@ -1,0 +1,64 @@
+//! E6 — regenerates Figure 8 (WS GRAM: average aggregate load and jobs
+//! completed per machine).  The paper: "only a few clients are not
+//! given equal share, which is evident from the few bubbles that have a
+//! significantly smaller surface area" — the shed victims.
+
+use diperf::experiment::presets;
+use diperf::experiments::run_with_analysis;
+use diperf::report::{per_client_csv, RunDir};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E6 / Figure 8 — WS GRAM load vs completions per machine\n");
+    let run = run_with_analysis(&presets::ws_fig6(42));
+    let d = &run.result.data;
+
+    let n = d.testers.len();
+    let mut done = vec![0u64; n];
+    for s in &d.samples {
+        if s.outcome.ok() {
+            done[s.tester.index()] += 1;
+        }
+    }
+    let survivors: Vec<u64> = (0..n)
+        .filter(|&i| !d.testers[i].evicted)
+        .map(|i| done[i])
+        .collect();
+    let victims: Vec<u64> = (0..n)
+        .filter(|&i| d.testers[i].evicted)
+        .map(|i| done[i])
+        .collect();
+    let mean = |v: &[u64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<u64>() as f64 / v.len() as f64
+        }
+    };
+    println!(
+        "survivor machines: {} (mean {:.1} jobs each)",
+        survivors.len(),
+        mean(&survivors)
+    );
+    println!(
+        "shed/evicted machines: {} (mean {:.1} jobs each) — the small \
+         bubbles",
+        victims.len(),
+        mean(&victims)
+    );
+
+    let dir = RunDir::create("bench_out", "fig8")?;
+    dir.write("fig8_bubble.csv", &per_client_csv(&run.out, d))?;
+    println!("\nseries -> bench_out/fig8/fig8_bubble.csv");
+
+    anyhow::ensure!(
+        !victims.is_empty() && victims.len() < n / 2,
+        "'a few' machines should be shed, got {}/{n}",
+        victims.len()
+    );
+    anyhow::ensure!(
+        mean(&victims) < mean(&survivors) * 0.6,
+        "victims' bubbles must be markedly smaller"
+    );
+    println!("figure 8 shape OK");
+    Ok(())
+}

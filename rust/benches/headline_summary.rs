@@ -1,0 +1,45 @@
+//! E9 — the §5 summary table: every headline number the paper quotes
+//! for both GRAM services, side by side with our reproduction.
+
+use diperf::experiment::presets;
+use diperf::experiments::{
+    e1_headlines, e4_headlines, md_header, run_with_analysis,
+};
+
+fn main() -> anyhow::Result<()> {
+    println!("# E9 / §5 — headline summary, paper vs reproduction\n");
+    let prews = run_with_analysis(&presets::prews_fig3(42));
+    let ws = run_with_analysis(&presets::ws_fig6(42));
+
+    println!("## pre-WS GRAM\n\n{}", md_header());
+    let mut ok = true;
+    for h in e1_headlines(&prews) {
+        ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+    println!("\n## WS GRAM\n\n{}", md_header());
+    for h in e4_headlines(&ws) {
+        ok &= h.ok();
+        println!("{}", h.md_row());
+    }
+
+    // the paper's comparative claims
+    let ratio = diperf::experiments::peak_tput_per_min(&prews)
+        / diperf::experiments::peak_tput_per_min(&ws).max(1e-9);
+    println!(
+        "\npre-WS vs WS throughput ratio: {ratio:.1}x (paper: ~20x — \
+         200 vs 10 jobs/min)"
+    );
+    let cv_ratio = diperf::experiments::fairness_cv(&ws)
+        / diperf::experiments::fairness_cv(&prews).max(1e-9);
+    println!(
+        "WS/pre-WS fairness-variability ratio: {cv_ratio:.1}x (paper: \
+         pre-WS 'allocates resources more evenly')"
+    );
+
+    anyhow::ensure!(ok, "headline table failed");
+    anyhow::ensure!(ratio > 5.0, "pre-WS must dominate WS throughput");
+    anyhow::ensure!(cv_ratio > 1.0, "WS must be less fair than pre-WS");
+    println!("\n§5 summary shape OK");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! E12 — the §1/§5 empirical performance models: fit RT(load) and
+//! TPut(load) from one run, validate on unseen seeds, and answer the
+//! scheduler's QoS query.
+
+use diperf::experiment::presets;
+use diperf::experiments::run_with_analysis;
+use diperf::predict::PerfModel;
+
+fn main() -> anyhow::Result<()> {
+    println!("# E12 / §1 — empirical performance model\n");
+    let train = run_with_analysis(&presets::prews_fig3(42));
+    let model = PerfModel::fit(&train.out);
+
+    println!(
+        "fitted over load [{:.1}, {:.1}]; rt rms {:.3} s; knee {:?}",
+        model.load_range.0, model.load_range.1, model.rt_rms, model.knee
+    );
+    println!("\nload -> predicted rt / tput:");
+    for load in [5.0, 15.0, 33.0, 60.0, 88.0] {
+        println!(
+            "  {load:>5.0}  {:>8.2} s  {:>7.2} jobs/quantum",
+            model.predict_rt(load),
+            model.predict_tput(load)
+        );
+    }
+
+    // cross-seed validation (the paper's §5 'validate them' future work)
+    println!("\ncross-seed validation (mean relative rt error):");
+    let mut worst: f64 = 0.0;
+    for seed in [7u64, 1234, 999] {
+        let test = run_with_analysis(&presets::prews_fig3(seed));
+        let err = model.validation_error(
+            &test.out.load,
+            &test.out.rt_mean,
+            &test.out.tput,
+        );
+        worst = worst.max(err);
+        println!("  seed {seed:>6}: {:.1}%", err * 100.0);
+    }
+
+    // monotonicity + QoS sanity
+    anyhow::ensure!(
+        model.predict_rt(60.0) > model.predict_rt(10.0),
+        "rt model must grow with load"
+    );
+    let qos = model.max_load_for_rt(10.0);
+    println!("\nQoS: rt <= 10 s admits up to {qos:?} concurrent clients");
+    anyhow::ensure!(qos.is_some(), "QoS query must be answerable");
+    anyhow::ensure!(
+        worst < 0.35,
+        "model must transfer across seeds (worst {:.1}%)",
+        worst * 100.0
+    );
+    println!("\n§1 predictive-model claim holds (worst error {:.1}%)",
+        worst * 100.0);
+    Ok(())
+}

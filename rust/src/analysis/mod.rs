@@ -1,0 +1,490 @@
+//! The automated analysis pipeline (paper §3.1.3 / §4), native edition.
+//!
+//! Computes exactly what the AOT-compiled XLA pipeline computes (see
+//! `python/compile/model.py`): per-quantum offered load, throughput and
+//! response-time series; moving-average and polynomial trend models; and
+//! per-client utilization/fairness over the peak window.  The two paths
+//! share [`AnalysisInput`]/[`AnalysisOutput`], are cross-checked against
+//! each other in `rust/tests/`, and the native path doubles as the
+//! fallback when `artifacts/` has not been built.
+
+use crate::metrics::RunData;
+use crate::util::linalg;
+
+/// Degree of the polynomial trend models (matches the AOT variants).
+pub const POLY_DEGREE: usize = 6;
+
+/// Flat sample columns — the exact input layout of the AOT artifact.
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisInput {
+    /// Request issue times (global s).
+    pub t_start: Vec<f32>,
+    /// Completion times (global s).
+    pub t_end: Vec<f32>,
+    /// Response times (s).
+    pub rt: Vec<f32>,
+    /// 1.0 when served successfully.
+    pub ok: Vec<f32>,
+    /// 1.0 for real samples (0 pads).
+    pub valid: Vec<f32>,
+    /// Client (tester) index as f32.
+    pub client_id: Vec<f32>,
+    /// Quantum 0 left edge (global s).
+    pub t0: f32,
+    /// Quantum width (s).
+    pub quantum: f32,
+    /// Moving-average half window, in quanta.
+    pub half_window: f32,
+    /// Peak-window bounds (global s).
+    pub w0: f32,
+    /// Peak-window right edge.
+    pub w1: f32,
+    /// Experiment duration (s) — normalizes the polynomial abscissa.
+    pub duration: f32,
+}
+
+impl AnalysisInput {
+    /// Build the analysis input from a finished run.
+    ///
+    /// `num_quanta` fixes the series resolution: `quantum` is chosen as
+    /// `duration / num_quanta` (the paper's user-specified granularity).
+    /// `window_s` is the moving-average window in seconds (the paper
+    /// uses 160 s in Figure 3).
+    pub fn from_run(rd: &RunData, num_quanta: usize, window_s: f64) -> AnalysisInput {
+        let duration = rd.duration_s.max(1.0);
+        let quantum = duration / num_quanta as f64;
+        let (w0, w1) = rd.peak_window();
+        let mut inp = AnalysisInput {
+            t0: 0.0,
+            quantum: quantum as f32,
+            half_window: (window_s / 2.0 / quantum) as f32,
+            w0: w0 as f32,
+            w1: w1 as f32,
+            duration: duration as f32,
+            ..Default::default()
+        };
+        for s in &rd.samples {
+            inp.t_start.push(s.t_start as f32);
+            inp.t_end.push(s.t_end as f32);
+            inp.rt.push(s.rt as f32);
+            inp.ok.push(if s.outcome.ok() { 1.0 } else { 0.0 });
+            inp.valid.push(1.0);
+            inp.client_id.push(s.tester.0 as f32);
+        }
+        inp
+    }
+
+    /// Number of (valid) samples.
+    pub fn len(&self) -> usize {
+        self.t_start.len()
+    }
+
+    /// True when no samples are present.
+    pub fn is_empty(&self) -> bool {
+        self.t_start.is_empty()
+    }
+
+    /// Pad all columns with invalid samples up to `capacity` (the AOT
+    /// variants have fixed shapes).
+    pub fn pad_to(&mut self, capacity: usize) {
+        assert!(capacity >= self.len(), "capacity below sample count");
+        let pad = capacity - self.len();
+        for col in [
+            &mut self.t_start,
+            &mut self.t_end,
+            &mut self.rt,
+            &mut self.ok,
+            &mut self.valid,
+            &mut self.client_id,
+        ] {
+            col.extend(std::iter::repeat(0.0).take(pad));
+        }
+    }
+}
+
+/// Analysis results — mirrors the AOT artifact's output tuple.
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisOutput {
+    /// Offered load per quantum (time-averaged in-flight requests).
+    pub load: Vec<f64>,
+    /// Successful completions per quantum.
+    pub tput: Vec<f64>,
+    /// Mean response time per quantum (s).
+    pub rt_mean: Vec<f64>,
+    /// Count-weighted moving average of response time.
+    pub rt_ma: Vec<f64>,
+    /// Moving average of throughput.
+    pub tput_ma: Vec<f64>,
+    /// Moving average of load.
+    pub load_ma: Vec<f64>,
+    /// Polynomial coefficients (increasing powers over normalized time)
+    /// for the response-time trend.
+    pub poly_rt: Vec<f64>,
+    /// Same for throughput.
+    pub poly_tput: Vec<f64>,
+    /// Same for load.
+    pub poly_load: Vec<f64>,
+    /// Per-client completions inside the peak window.
+    pub completed: Vec<f64>,
+    /// Per-client service utilization (§4 definition).
+    pub util: Vec<f64>,
+    /// Per-client service fairness (§4 definition).
+    pub fairness: Vec<f64>,
+    /// Per-client activity span clipped to the window (s).
+    pub active_time: Vec<f64>,
+    /// Summary scalars: [completions, failures, mean rt, peak load,
+    /// peak tput/quantum, max rt, busy req-seconds, reserved].
+    pub totals: [f64; 8],
+}
+
+impl AnalysisOutput {
+    /// Evaluate the rt polynomial at global time `t` (seconds).
+    pub fn poly_rt_at(&self, t: f64, t0: f64, duration: f64) -> f64 {
+        let x = 2.0 * (t - t0) / duration.max(1e-9) - 1.0;
+        linalg::polyval(&self.poly_rt, x)
+    }
+}
+
+/// Run the full analysis natively (f64).
+///
+/// Semantics match `python/compile/model.py` exactly — see that file for
+/// the metric definitions; divergences beyond f32/f64 rounding are bugs
+/// (and `rust/tests/xla_native_equivalence.rs` enforces that).
+pub fn analyze(
+    inp: &AnalysisInput,
+    num_quanta: usize,
+    num_clients: usize,
+) -> AnalysisOutput {
+    let q = num_quanta;
+    let t0 = inp.t0 as f64;
+    let quantum = (inp.quantum as f64).max(1e-9);
+    let mut out = AnalysisOutput {
+        load: vec![0.0; q],
+        tput: vec![0.0; q],
+        rt_mean: vec![0.0; q],
+        completed: vec![0.0; num_clients],
+        util: vec![0.0; num_clients],
+        fairness: vec![0.0; num_clients],
+        active_time: vec![0.0; num_clients],
+        ..Default::default()
+    };
+    let mut rt_sum = vec![0.0; q];
+    let mut amin = vec![f64::INFINITY; num_clients];
+    let mut amax = vec![f64::NEG_INFINITY; num_clients];
+    let w0 = inp.w0 as f64;
+    let w1 = inp.w1 as f64;
+
+    // --- binning pass (the Pallas bin_samples/bin_clients twin) --------
+    let mut total_ok = 0.0;
+    let mut total_valid = 0.0;
+    let mut rt_total = 0.0;
+    let mut rt_max = 0.0f64;
+    for i in 0..inp.len() {
+        if inp.valid[i] == 0.0 {
+            continue;
+        }
+        total_valid += 1.0;
+        let ts = inp.t_start[i] as f64;
+        let te = inp.t_end[i] as f64;
+        let rt = inp.rt[i] as f64;
+        let ok = inp.ok[i] > 0.0;
+        if ok {
+            total_ok += 1.0;
+            rt_total += rt;
+            rt_max = rt_max.max(rt);
+            let b = ((te - t0) / quantum).floor();
+            if b >= 0.0 && (b as usize) < q {
+                out.tput[b as usize] += 1.0;
+                rt_sum[b as usize] += rt;
+            }
+        }
+        // offered-load overlap integral
+        let b_lo = (((ts - t0) / quantum).floor().max(0.0)) as usize;
+        let b_hi = ((((te - t0) / quantum).ceil()) as usize).min(q);
+        for b in b_lo..b_hi {
+            let left = t0 + b as f64 * quantum;
+            let right = left + quantum;
+            let ov = (te.min(right) - ts.max(left)).clamp(0.0, quantum);
+            out.load[b] += ov / quantum;
+        }
+        // per-client aggregation
+        let c = inp.client_id[i] as usize;
+        if c < num_clients {
+            if ok && (w0..=w1).contains(&te) {
+                out.completed[c] += 1.0;
+            }
+            amin[c] = amin[c].min(ts);
+            amax[c] = amax[c].max(te);
+        }
+    }
+    for b in 0..q {
+        out.rt_mean[b] = rt_sum[b] / out.tput[b].max(1.0);
+    }
+
+    // --- moving averages ------------------------------------------------
+    let h = inp.half_window as f64;
+    out.rt_ma = moving_average(&rt_sum, &out.tput, h);
+    let ones = vec![1.0; q];
+    out.tput_ma = moving_average(&out.tput, &ones, h);
+    out.load_ma = moving_average(&out.load, &ones, h);
+
+    // --- polynomial trends ------------------------------------------------
+    let duration = inp.duration as f64;
+    let xs: Vec<f64> = (0..q)
+        .map(|b| 2.0 * ((b as f64 + 0.5) * quantum) / duration.max(1e-9) - 1.0)
+        .collect();
+    let in_run: Vec<f64> = (0..q)
+        .map(|b| if (b as f64 + 0.5) * quantum <= duration { 1.0 } else { 0.0 })
+        .collect();
+    out.poly_rt = linalg::polyfit(&xs, &out.rt_mean, &out.tput, POLY_DEGREE);
+    out.poly_tput = linalg::polyfit(&xs, &out.tput, &in_run, POLY_DEGREE);
+    out.poly_load = linalg::polyfit(&xs, &out.load, &in_run, POLY_DEGREE);
+
+    // --- per-client utilization / fairness -------------------------------
+    // completions (by anyone) during each client's clipped active span,
+    // interpolated on the cumulative-throughput curve
+    let mut cum = vec![0.0; q + 1];
+    for b in 0..q {
+        cum[b + 1] = cum[b] + out.tput[b];
+    }
+    let total_at = |t: f64| -> f64 {
+        let pos = ((t - t0) / quantum).clamp(0.0, q as f64);
+        let idx = (pos.floor() as usize).min(q - 1);
+        cum[idx] + (pos - idx as f64) * out.tput[idx]
+    };
+    for c in 0..num_clients {
+        if amin[c] > amax[c] {
+            continue; // never ran
+        }
+        let a0 = amin[c].max(w0);
+        let a1 = amax[c].min(w1);
+        out.active_time[c] = (a1 - a0).max(0.0);
+        let tot = (total_at(a1) - total_at(a0)).max(0.0);
+        if tot > 0.0 {
+            out.util[c] = out.completed[c] / tot;
+        }
+        if out.util[c] > 0.0 {
+            out.fairness[c] = out.completed[c] / out.util[c];
+        }
+    }
+
+    out.totals = [
+        total_ok,
+        total_valid - total_ok,
+        rt_total / total_ok.max(1.0),
+        out.load.iter().cloned().fold(0.0, f64::max),
+        out.tput.iter().cloned().fold(0.0, f64::max),
+        rt_max,
+        out.load.iter().sum::<f64>() * quantum,
+        0.0,
+    ];
+    out
+}
+
+/// Banded weighted moving average (the Pallas `moving_average` twin).
+pub fn moving_average(num: &[f64], den: &[f64], half: f64) -> Vec<f64> {
+    let q = num.len();
+    let mut out = vec![0.0; q];
+    for i in 0..q {
+        let lo = ((i as f64 - half).ceil().max(0.0)) as usize;
+        let hi = ((i as f64 + half).floor() as usize).min(q - 1);
+        let (mut sn, mut sd) = (0.0, 0.0);
+        for j in lo..=hi {
+            sn += num[j];
+            sd += den[j];
+        }
+        out[i] = sn / sd.max(1.0);
+    }
+    out
+}
+
+/// Detect the service's capacity knee from load/throughput series: the
+/// offered load beyond which throughput stops improving (± `tol`).
+/// This is the §4.1 "service capacity is reached with around 33
+/// concurrent clients" determination, automated.
+pub fn capacity_knee(load: &[f64], tput: &[f64], tol: f64) -> Option<f64> {
+    // Mean throughput per load-value bin.  Binning by load (not by
+    // sorted index) is essential: long plateaus of identical load values
+    // would otherwise let index-windows invent structure inside ties.
+    let pairs: Vec<(f64, f64)> = load
+        .iter()
+        .zip(tput)
+        .filter(|&(&l, _)| l > 0.0)
+        .map(|(&l, &t)| (l, t))
+        .collect();
+    if pairs.len() < 8 {
+        return None;
+    }
+    let max_load = pairs.iter().map(|p| p.0).fold(0.0, f64::max);
+    let bins = 24usize;
+    let mut sum = vec![0.0; bins];
+    let mut cnt = vec![0u32; bins];
+    for &(l, t) in &pairs {
+        let b = ((l / max_load) * bins as f64).min(bins as f64 - 1.0) as usize;
+        sum[b] += t;
+        cnt[b] += 1;
+    }
+    let mean: Vec<Option<f64>> = (0..bins)
+        .map(|b| (cnt[b] >= 3).then(|| sum[b] / cnt[b] as f64))
+        .collect();
+    let peak = mean
+        .iter()
+        .flatten()
+        .cloned()
+        .fold(0.0, f64::max);
+    if peak <= 0.0 {
+        return None;
+    }
+    // lowest load bin whose mean throughput reaches (1 - tol) of peak
+    for b in 0..bins {
+        if let Some(m) = mean[b] {
+            if m >= (1.0 - tol) * peak {
+                return Some((b as f64 + 0.5) * max_load / bins as f64);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::TesterId;
+    use crate::metrics::{GlobalSample, SampleOutcome};
+
+    fn mk_run(n_clients: usize, per_client: usize) -> RunData {
+        // deterministic round-robin completions, 1 s apart, rt = 1
+        let mut rd = RunData::default();
+        let mut t = 0.0;
+        for k in 0..per_client {
+            for c in 0..n_clients {
+                rd.samples.push(GlobalSample {
+                    tester: TesterId(c as u32),
+                    seq: k as u32,
+                    t_start: t,
+                    t_end: t + 1.0,
+                    rt: 1.0,
+                    outcome: SampleOutcome::Success,
+                    t_end_true: t + 1.0,
+                });
+                t += 1.0;
+            }
+        }
+        rd.duration_s = t + 1.0;
+        rd
+    }
+
+    #[test]
+    fn conservation_of_completions() {
+        let rd = mk_run(4, 25);
+        let inp = AnalysisInput::from_run(&rd, 64, 10.0);
+        let out = analyze(&inp, 64, 8);
+        let binned: f64 = out.tput.iter().sum();
+        assert_eq!(binned, 100.0);
+        assert_eq!(out.totals[0], 100.0);
+        assert_eq!(out.totals[1], 0.0);
+    }
+
+    #[test]
+    fn rt_series_flat_when_rt_constant() {
+        let rd = mk_run(4, 25);
+        let inp = AnalysisInput::from_run(&rd, 32, 10.0);
+        let out = analyze(&inp, 32, 8);
+        for (b, &m) in out.rt_mean.iter().enumerate() {
+            if out.tput[b] > 0.0 {
+                assert!((m - 1.0).abs() < 1e-9, "bin {b}: {m}");
+            }
+        }
+        assert!((out.totals[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_integral_matches_busy_time() {
+        // each request in flight 1 s; 100 requests -> 100 req·s
+        let rd = mk_run(4, 25);
+        let inp = AnalysisInput::from_run(&rd, 64, 10.0);
+        let out = analyze(&inp, 64, 8);
+        assert!((out.totals[6] - 100.0).abs() < 1.0, "{}", out.totals[6]);
+    }
+
+    #[test]
+    fn fair_service_has_flat_fairness() {
+        let rd = mk_run(8, 40);
+        let inp = AnalysisInput::from_run(&rd, 64, 10.0);
+        let out = analyze(&inp, 64, 8);
+        let u: Vec<f64> = out.util.iter().cloned().filter(|&x| x > 0.0).collect();
+        assert_eq!(u.len(), 8);
+        let mean = u.iter().sum::<f64>() / 8.0;
+        for &x in &u {
+            assert!((x / mean - 1.0).abs() < 0.15, "util {x} vs mean {mean}");
+        }
+    }
+
+    #[test]
+    fn utilization_bounded_by_one() {
+        let rd = mk_run(3, 30);
+        let inp = AnalysisInput::from_run(&rd, 32, 5.0);
+        let out = analyze(&inp, 32, 8);
+        for &u in &out.util {
+            assert!((0.0..=1.0 + 1e-9).contains(&u));
+        }
+    }
+
+    #[test]
+    fn empty_run_is_all_zeros() {
+        let rd = RunData {
+            duration_s: 100.0,
+            ..Default::default()
+        };
+        let inp = AnalysisInput::from_run(&rd, 16, 10.0);
+        let out = analyze(&inp, 16, 4);
+        assert!(out.tput.iter().all(|&x| x == 0.0));
+        assert!(out.load.iter().all(|&x| x == 0.0));
+        assert_eq!(out.totals[0], 0.0);
+    }
+
+    #[test]
+    fn padding_changes_nothing() {
+        let rd = mk_run(4, 10);
+        let mut a = AnalysisInput::from_run(&rd, 32, 10.0);
+        let b = a.clone();
+        a.pad_to(1024);
+        let oa = analyze(&a, 32, 8);
+        let ob = analyze(&b, 32, 8);
+        assert_eq!(oa.tput, ob.tput);
+        assert_eq!(oa.totals, ob.totals);
+    }
+
+    #[test]
+    fn knee_detection_on_synthetic_saturation() {
+        // tput = min(load, 33): knee at 33
+        let load: Vec<f64> = (0..200).map(|i| i as f64 * 0.5).collect();
+        let tput: Vec<f64> = load.iter().map(|&l| l.min(33.0)).collect();
+        let knee = capacity_knee(&load, &tput, 0.05).unwrap();
+        assert!((knee - 33.0).abs() < 4.0, "knee {knee}");
+    }
+
+    #[test]
+    fn poly_trend_tracks_rising_rt() {
+        // rt grows linearly with time: polynomial must rise too
+        let mut rd = RunData::default();
+        for i in 0..200 {
+            let t = i as f64;
+            rd.samples.push(GlobalSample {
+                tester: TesterId(0),
+                seq: i as u32,
+                t_start: t,
+                t_end: t + 1.0,
+                rt: 0.1 + t * 0.01,
+                outcome: SampleOutcome::Success,
+                t_end_true: t + 1.0,
+            });
+        }
+        rd.duration_s = 201.0;
+        let inp = AnalysisInput::from_run(&rd, 64, 20.0);
+        let out = analyze(&inp, 64, 4);
+        let early = out.poly_rt_at(20.0, 0.0, 201.0);
+        let late = out.poly_rt_at(180.0, 0.0, 201.0);
+        assert!(late > early + 1.0, "early {early} late {late}");
+    }
+}

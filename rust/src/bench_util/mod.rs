@@ -1,0 +1,181 @@
+//! Miniature benchmarking harness (the environment ships no criterion).
+//!
+//! Two modes:
+//! * [`Bench`] — classic timed microbenchmark (warmup + N timed
+//!   iterations, summary statistics, markdown rows) for the DES engine /
+//!   analysis hot paths;
+//! * the figure benches under `rust/benches/` use it for timing but
+//!   mostly report *domain* numbers (throughput, response times) next to
+//!   the paper's values.
+
+use std::time::Instant;
+
+use crate::util::Summary;
+
+/// A configured microbenchmark.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+/// Timing results for one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall times (seconds).
+    pub times: Summary,
+    /// Optional units-per-iteration for derived throughput.
+    pub units: Option<f64>,
+}
+
+impl Bench {
+    /// A benchmark with default 3 warmup + 10 timed iterations.
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: 3,
+            iters: 10,
+        }
+    }
+
+    /// Set warmup iterations.
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    /// Set timed iterations.
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Run the closure; returns timing stats.  The closure's return
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name.clone(),
+            times: Summary::of(&times),
+            units: None,
+        }
+    }
+
+    /// As [`run`](Self::run), attaching a units-per-iteration count so
+    /// the report can print a rate (e.g. events/s).
+    pub fn run_with_units<T, F: FnMut() -> T>(
+        &self,
+        units: f64,
+        f: F,
+    ) -> BenchResult {
+        let mut r = self.run(f);
+        r.units = Some(units);
+        r
+    }
+}
+
+impl BenchResult {
+    /// Units per second (when units were attached).
+    pub fn rate(&self) -> Option<f64> {
+        self.units.map(|u| u / self.times.median.max(1e-12))
+    }
+
+    /// One human-readable line.
+    pub fn line(&self) -> String {
+        let base = format!(
+            "{:<40} median {:>10}  mean {:>10}  σ {:>9}",
+            self.name,
+            fmt_t(self.times.median),
+            fmt_t(self.times.mean),
+            fmt_t(self.times.std),
+        );
+        match self.rate() {
+            Some(r) => format!("{base}  ({})", fmt_rate(r)),
+            None => base,
+        }
+    }
+
+    /// Markdown table row: `| name | median | mean | σ | rate |`.
+    pub fn md_row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} |",
+            self.name,
+            fmt_t(self.times.median),
+            fmt_t(self.times.mean),
+            fmt_t(self.times.std),
+            self.rate().map_or("-".into(), fmt_rate),
+        )
+    }
+}
+
+/// Markdown table header matching [`BenchResult::md_row`].
+pub fn md_header() -> String {
+    "| bench | median | mean | σ | rate |\n|---|---|---|---|---|".into()
+}
+
+fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_requested_iterations() {
+        let mut count = 0;
+        let r = Bench::new("t").warmup(2).iters(5).run(|| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.times.n, 5);
+    }
+
+    #[test]
+    fn rate_derives_from_units() {
+        let r = Bench::new("t")
+            .warmup(0)
+            .iters(3)
+            .run_with_units(1000.0, || {
+                std::thread::sleep(std::time::Duration::from_millis(1))
+            });
+        let rate = r.rate().unwrap();
+        assert!(rate > 100_000.0 && rate < 1_500_000.0, "rate {rate}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_t(0.5e-9 * 1000.0), "500.0ns");
+        assert!(fmt_t(0.002).ends_with("ms"));
+        assert!(fmt_rate(2.5e6).contains("M/s"));
+        let r = Bench::new("x").warmup(0).iters(1).run(|| ());
+        assert!(r.line().contains('x'));
+        assert!(r.md_row().starts_with("| x |"));
+    }
+}

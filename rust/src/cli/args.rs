@@ -1,0 +1,150 @@
+//! Hand-rolled argument parser (no `clap` in the environment).
+//!
+//! Grammar: `diperf <command> [--flag value]... [--switch]...`.
+//! Flags may appear in any order; unknown flags are an error so typos
+//! fail loudly.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// `--key value` pairs.
+    flags: HashMap<String, String>,
+    /// Bare `--switch` flags.
+    switches: Vec<String>,
+}
+
+/// Flag specification: name, takes-value, help.
+pub struct Spec {
+    /// Flag name without the `--`.
+    pub name: &'static str,
+    /// Whether the flag consumes a value.
+    pub takes_value: bool,
+    /// One-line help.
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse argv against a spec (argv excludes the program name).
+    pub fn parse(argv: &[String], spec: &[Spec]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                bail!("expected a command before flags, got {cmd}");
+            }
+            out.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument: {tok}");
+            };
+            let s = spec
+                .iter()
+                .find(|s| s.name == name)
+                .with_context(|| format!("unknown flag --{name}"))?;
+            if s.takes_value {
+                let val = it
+                    .next()
+                    .with_context(|| format!("--{name} needs a value"))?;
+                out.flags.insert(name.to_string(), val.clone());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Value of `--name`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Parse `--name` as any `FromStr` type.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Was `--name` passed as a switch?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Render a help block from specs.
+pub fn help(commands: &[(&str, &str)], spec: &[Spec]) -> String {
+    let mut s = String::from("DiPerF — distributed performance-testing framework\n\nCOMMANDS\n");
+    for (c, h) in commands {
+        s.push_str(&format!("  {c:<12} {h}\n"));
+    }
+    s.push_str("\nFLAGS\n");
+    for f in spec {
+        let val = if f.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{val:<10} {}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<Spec> {
+        vec![
+            Spec { name: "seed", takes_value: true, help: "" },
+            Spec { name: "xla", takes_value: false, help: "" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(&sv(&["run", "--seed", "7", "--xla"]), &spec())
+            .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get_parsed::<u64>("seed").unwrap(), Some(7));
+        assert!(a.has("xla"));
+        assert!(!a.has("native"));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(Args::parse(&sv(&["run", "--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(&sv(&["run", "--seed"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_typed_value() {
+        let a = Args::parse(&sv(&["run", "--seed", "abc"]), &spec()).unwrap();
+        assert!(a.get_parsed::<u64>("seed").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = help(&[("run", "run an experiment")], &spec());
+        assert!(h.contains("run an experiment"));
+        assert!(h.contains("--seed"));
+    }
+}

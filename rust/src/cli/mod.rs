@@ -1,0 +1,333 @@
+//! Command-line interface: `diperf run|analyze|predict|selftest|presets`.
+//!
+//! `run` is the paper's workflow end to end: deploy → staggered ramp →
+//! collection → reconciliation → automated analysis (XLA artifacts when
+//! present, native fallback otherwise) → figure CSVs + terminal charts.
+
+pub mod args;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{self, AnalysisInput, AnalysisOutput};
+use crate::config;
+use crate::experiment::{run_experiment, ExperimentConfig, ExperimentResult};
+use crate::metrics::RunData;
+use crate::predict::PerfModel;
+use crate::report::{self, RunDir};
+use crate::runtime::XlaAnalyzer;
+use args::{Args, Spec};
+
+/// Analysis resolution used by the CLI (matches the AOT variants).
+pub const NUM_QUANTA: usize = 512;
+/// Client capacity of the AOT variants.
+pub const NUM_CLIENTS: usize = 128;
+/// The paper's Figure-3 moving-average window (seconds).
+pub const WINDOW_S: f64 = 160.0;
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("run", "run a DiPerF experiment and its automated analysis"),
+    ("analyze", "re-run the analysis over a saved run directory"),
+    ("predict", "fit an empirical performance model from a run"),
+    ("selftest", "quick experiment + XLA-vs-native analysis check"),
+    ("presets", "list shipped experiment presets"),
+    ("help", "this message"),
+];
+
+fn spec() -> Vec<Spec> {
+    vec![
+        Spec { name: "preset", takes_value: true, help: "experiment preset name" },
+        Spec { name: "config", takes_value: true, help: "TOML config file (overrides preset)" },
+        Spec { name: "seed", takes_value: true, help: "master seed (default 42)" },
+        Spec { name: "testers", takes_value: true, help: "override tester count" },
+        Spec { name: "duration", takes_value: true, help: "override per-tester duration (s)" },
+        Spec { name: "out", takes_value: true, help: "run directory (default runs/<preset>-<seed>)" },
+        Spec { name: "run", takes_value: true, help: "existing run directory (analyze/predict)" },
+        Spec { name: "rt-target", takes_value: true, help: "QoS target for predict (s)" },
+        Spec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
+        Spec { name: "native", takes_value: false, help: "force the native analysis path" },
+        Spec { name: "xla", takes_value: false, help: "require the XLA analysis path" },
+        Spec { name: "quiet", takes_value: false, help: "suppress charts" },
+    ]
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn main(argv: &[String]) -> Result<i32> {
+    let a = Args::parse(argv, &spec())?;
+    match a.command.as_str() {
+        "" | "help" => {
+            println!("{}", args::help(COMMANDS, &spec()));
+            Ok(0)
+        }
+        "presets" => {
+            for name in [
+                "prews_fig3", "ws_fig6", "ws_overload", "http_sec43",
+                "quick_http", "scalability",
+            ] {
+                println!("{name}");
+            }
+            Ok(0)
+        }
+        "run" => cmd_run(&a),
+        "analyze" => cmd_analyze(&a),
+        "predict" => cmd_predict(&a),
+        "selftest" => cmd_selftest(&a),
+        other => anyhow::bail!("unknown command {other:?}; try `diperf help`"),
+    }
+}
+
+fn build_config(a: &Args) -> Result<(ExperimentConfig, String)> {
+    let seed = a.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let (mut cfg, name) = if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        (config::experiment_from_toml(&text)?, "config".to_string())
+    } else {
+        let preset = a.get("preset").unwrap_or("quick_http");
+        (config::preset_by_name(preset, seed)?, preset.to_string())
+    };
+    if a.get("seed").is_some() {
+        cfg.seed = seed;
+    }
+    if let Some(n) = a.get_parsed::<usize>("testers")? {
+        cfg.testbed.num_testers = n;
+    }
+    if let Some(d) = a.get_parsed::<f64>("duration")? {
+        cfg.controller.desc.duration_s = d;
+    }
+    config::validate(&cfg)?;
+    Ok((cfg, name))
+}
+
+/// Run the analysis on the preferred path.  Returns the output plus a
+/// label saying which path ran.
+pub fn run_analysis(
+    inp: &AnalysisInput,
+    a: &Args,
+) -> Result<(AnalysisOutput, &'static str)> {
+    let force_native = a.has("native");
+    let require_xla = a.has("xla");
+    let dir = a.get("artifacts").unwrap_or("artifacts");
+    if !force_native {
+        match XlaAnalyzer::load(dir).and_then(|mut x| x.analyze(inp)) {
+            Ok(out) => return Ok((out, "xla")),
+            Err(e) if require_xla => return Err(e),
+            Err(e) => {
+                eprintln!("[diperf] XLA path unavailable ({e:#}); using native analysis");
+            }
+        }
+    }
+    Ok((analysis::analyze(inp, NUM_QUANTA, NUM_CLIENTS), "native"))
+}
+
+fn summarize(r: &ExperimentResult) -> String {
+    let d = &r.data;
+    let es = r.sync.error_summary();
+    format!(
+        "service           {}\n\
+         events            {}\n\
+         sim wall time     {:.0} ms\n\
+         samples           {} ({} ok / {} failed, {} unsynced dropped)\n\
+         experiment span   {:.0} s\n\
+         mean rt           {:.3} s\n\
+         service stalls    {}\n\
+         sync error        mean {:.1} ms / median {:.1} ms / σ {:.1} ms\n",
+        r.service_name,
+        r.events,
+        r.wall_ms,
+        d.samples.len(),
+        d.completed(),
+        d.failed(),
+        d.dropped_unsynced,
+        d.duration_s,
+        d.mean_rt(),
+        r.stalls,
+        es.mean * 1e3,
+        es.median * 1e3,
+        es.std * 1e3,
+    )
+}
+
+fn write_run_dir(
+    a: &Args,
+    name: &str,
+    cfg: &ExperimentConfig,
+    r: &ExperimentResult,
+    out: &AnalysisOutput,
+    inp: &AnalysisInput,
+) -> Result<std::path::PathBuf> {
+    let default = format!("runs/{}-{}", name, cfg.seed);
+    let dir_name = a.get("out").unwrap_or(&default);
+    let rd = RunDir::create(".", dir_name)?;
+    rd.write("samples.csv", &report::samples_csv(&r.data))?;
+    rd.write("summary.txt", &summarize(r))?;
+    rd.write_figures("fig", out, &r.data, inp.t0 as f64, inp.quantum as f64)?;
+    Ok(rd.path)
+}
+
+fn cmd_run(a: &Args) -> Result<i32> {
+    let (cfg, name) = build_config(a)?;
+    eprintln!(
+        "[diperf] running preset {name:?}: {} testers x {:.0}s (seed {})",
+        cfg.testbed.num_testers, cfg.controller.desc.duration_s, cfg.seed
+    );
+    let r = run_experiment(&cfg);
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    let (out, path_label) = run_analysis(&inp, a)?;
+    let dir = write_run_dir(a, &name, &cfg, &r, &out, &inp)?;
+    print!("{}", summarize(&r));
+    println!("analysis path     {path_label}");
+    println!("run directory     {}", dir.display());
+    if !a.has("quiet") {
+        print!(
+            "{}",
+            report::ascii_chart(&out.load_ma, 72, 6, "offered load")
+        );
+        print!(
+            "{}",
+            report::ascii_chart(&out.tput_ma, 72, 6, "throughput (jobs/quantum)")
+        );
+        print!(
+            "{}",
+            report::ascii_chart(&out.rt_ma, 72, 6, "response time (s)")
+        );
+    }
+    Ok(0)
+}
+
+fn load_run(a: &Args) -> Result<RunData> {
+    let dir = a.get("run").context("--run <dir> is required")?;
+    let text = std::fs::read_to_string(format!("{dir}/samples.csv"))
+        .with_context(|| format!("reading {dir}/samples.csv"))?;
+    report::parse_samples_csv(&text)
+}
+
+fn cmd_analyze(a: &Args) -> Result<i32> {
+    let rd = load_run(a)?;
+    let inp = AnalysisInput::from_run(&rd, NUM_QUANTA, WINDOW_S);
+    let (out, path_label) = run_analysis(&inp, a)?;
+    println!(
+        "analyzed {} samples on the {path_label} path",
+        rd.samples.len()
+    );
+    println!(
+        "completions {} failures {} mean rt {:.3}s peak load {:.1}",
+        out.totals[0], out.totals[1], out.totals[2], out.totals[3]
+    );
+    if !a.has("quiet") {
+        print!("{}", report::ascii_chart(&out.rt_ma, 72, 6, "response time (s)"));
+    }
+    // refresh the figure files in place
+    let dir = a.get("run").expect("checked in load_run");
+    let run_dir = RunDir::create(".", dir)?;
+    run_dir.write_figures("fig", &out, &rd, inp.t0 as f64, inp.quantum as f64)?;
+    Ok(0)
+}
+
+fn cmd_predict(a: &Args) -> Result<i32> {
+    let rd = load_run(a)?;
+    let inp = AnalysisInput::from_run(&rd, NUM_QUANTA, WINDOW_S);
+    let (out, _) = run_analysis(&inp, a)?;
+    let model = PerfModel::fit(&out);
+    println!("empirical performance model over load [{:.1}, {:.1}]:",
+        model.load_range.0, model.load_range.1);
+    println!("  rt fit rms        {:.3} s", model.rt_rms);
+    match model.knee {
+        Some(k) => println!("  capacity knee     {k:.1} concurrent requests"),
+        None => println!("  capacity knee     not reached in this run"),
+    }
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let l = model.load_range.0
+            + frac * (model.load_range.1 - model.load_range.0);
+        println!(
+            "  at load {l:>6.1}:  rt ≈ {:>8.3} s   tput ≈ {:>7.2}/quantum",
+            model.predict_rt(l),
+            model.predict_tput(l)
+        );
+    }
+    if let Some(target) = a.get_parsed::<f64>("rt-target")? {
+        match model.max_load_for_rt(target) {
+            Some(l) => println!(
+                "  QoS: rt <= {target}s holds up to offered load {l:.1}"
+            ),
+            None => println!("  QoS: rt <= {target}s is never met in range"),
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_selftest(a: &Args) -> Result<i32> {
+    use crate::experiment::presets;
+    eprintln!("[diperf] selftest: 6-tester LAN experiment + analysis equivalence");
+    let cfg = presets::quick_http(6, 90.0, 7);
+    let r = run_experiment(&cfg);
+    anyhow::ensure!(r.data.completed() > 100, "experiment produced too little");
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    let native = analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS);
+    let dir = a.get("artifacts").unwrap_or("artifacts");
+    match XlaAnalyzer::load(dir).and_then(|mut x| x.analyze(&inp)) {
+        Ok(xla) => {
+            let d_tput = max_abs_diff(&native.tput, &xla.tput);
+            let d_load = max_abs_diff(&native.load, &xla.load);
+            let d_rt = max_abs_diff(&native.rt_ma, &xla.rt_ma);
+            println!("native-vs-xla max deltas: tput {d_tput:.2e}  load {d_load:.2e}  rt_ma {d_rt:.2e}");
+            anyhow::ensure!(d_tput < 1e-3, "throughput series diverged");
+            anyhow::ensure!(d_load < 1e-2, "load series diverged");
+            anyhow::ensure!(d_rt < 1e-2, "rt series diverged");
+            println!("selftest OK (xla + native agree)");
+        }
+        Err(e) => {
+            println!("XLA path unavailable ({e:#}); native-only selftest");
+            anyhow::ensure!(native.totals[0] > 100.0);
+            println!("selftest OK (native only)");
+        }
+    }
+    Ok(0)
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_and_presets_commands() {
+        assert_eq!(main(&sv(&["help"])).unwrap(), 0);
+        assert_eq!(main(&sv(&["presets"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(main(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn build_config_applies_overrides() {
+        let a = Args::parse(
+            &sv(&["run", "--preset", "prews_fig3", "--testers", "5",
+                  "--duration", "60", "--seed", "3"]),
+            &spec(),
+        )
+        .unwrap();
+        let (cfg, name) = build_config(&a).unwrap();
+        assert_eq!(name, "prews_fig3");
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.testbed.num_testers, 5);
+        assert_eq!(cfg.controller.desc.duration_s, 60.0);
+    }
+
+    #[test]
+    fn build_config_rejects_bad_preset() {
+        let a = Args::parse(&sv(&["run", "--preset", "zzz"]), &spec()).unwrap();
+        assert!(build_config(&a).is_err());
+    }
+}

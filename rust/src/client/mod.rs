@@ -1,0 +1,94 @@
+//! Client-invocation model.
+//!
+//! In DiPerF "clients are full blown executables that make one RPC-like
+//! call to the service" (§3) — the most generic tester/client interface.
+//! This module models one such invocation: its local start (which can
+//! fail, §3 failure #2), the RPC round trip (timed by the tester), and
+//! the response-time adjustment the paper applies (§4: response time is
+//! the wall span "minus the network latency and minus the execution time
+//! of the client code").
+
+use crate::ids::RequestId;
+use crate::metrics::SampleOutcome;
+use crate::services::Outcome;
+use crate::util::Pcg64;
+
+/// One in-flight client invocation, tracked by its tester.
+#[derive(Clone, Copy, Debug)]
+pub struct Invocation {
+    /// The request this client issued.
+    pub req: RequestId,
+    /// Per-tester sequence number.
+    pub seq: u32,
+    /// Tester-local launch time (s).
+    pub launched_local: f64,
+    /// Token matching the timeout event armed for this invocation
+    /// (stale timeouts are ignored by comparing tokens).
+    pub timeout_token: u64,
+}
+
+/// Local client start: fails with the node's start-failure probability
+/// (out-of-memory class problems on the client machine).
+pub fn try_start(start_failure_prob: f64, rng: &mut Pcg64) -> bool {
+    !rng.chance(start_failure_prob)
+}
+
+/// Client-code execution overhead around the RPC (fork/exec, parsing),
+/// in local seconds — scaled by the node's CPU speed.
+pub fn exec_overhead_s(cpu_speed: f64, rng: &mut Pcg64) -> f64 {
+    debug_assert!(cpu_speed > 0.0);
+    crate::util::dist::lognormal_median(rng, 0.008, 1.3) / cpu_speed
+}
+
+/// The paper's response-time adjustment: wall span minus the tester's
+/// network-latency estimate minus client execution time, floored at 0.
+pub fn adjusted_rt(span_s: f64, latency_estimate_s: f64, exec_s: f64) -> f64 {
+    (span_s - latency_estimate_s - exec_s).max(0.0)
+}
+
+/// Map a service outcome (carried back in the RPC response) to the
+/// sample taxonomy.
+pub fn classify(service_outcome: Outcome) -> SampleOutcome {
+    match service_outcome {
+        Outcome::Success => SampleOutcome::Success,
+        Outcome::Denied => SampleOutcome::Denied,
+        Outcome::Error => SampleOutcome::ServiceError,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_failure_probability() {
+        let mut rng = Pcg64::seed_from(1);
+        let fails = (0..10_000)
+            .filter(|_| !try_start(0.1, &mut rng))
+            .count();
+        assert!((800..1200).contains(&fails), "fails {fails}");
+        assert!(try_start(0.0, &mut rng));
+    }
+
+    #[test]
+    fn adjusted_rt_subtracts_and_floors() {
+        assert!((adjusted_rt(1.0, 0.2, 0.05) - 0.75).abs() < 1e-12);
+        assert_eq!(adjusted_rt(0.1, 0.2, 0.05), 0.0);
+    }
+
+    #[test]
+    fn classification() {
+        assert_eq!(classify(Outcome::Success), SampleOutcome::Success);
+        assert_eq!(classify(Outcome::Denied), SampleOutcome::Denied);
+        assert_eq!(classify(Outcome::Error), SampleOutcome::ServiceError);
+    }
+
+    #[test]
+    fn exec_overhead_scales_with_cpu() {
+        let mut rng = Pcg64::seed_from(2);
+        let fast: f64 = (0..2000).map(|_| exec_overhead_s(2.0, &mut rng)).sum();
+        let mut rng = Pcg64::seed_from(2);
+        let slow: f64 = (0..2000).map(|_| exec_overhead_s(0.5, &mut rng)).sum();
+        assert!((slow / fast - 4.0).abs() < 1e-9);
+    }
+}

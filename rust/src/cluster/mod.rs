@@ -1,0 +1,363 @@
+//! Testbed model: machines, local clocks, failure behaviour.
+//!
+//! Substitutes for PlanetLab + the UofC cluster (DESIGN.md §1).  A
+//! [`Testbed`] is a set of [`Node`]s plus a [`NetModel`]; four roles are
+//! distinguished: the controller host, the target-service host, the
+//! time-stamp-server host (all LAN-co-located at "UofC", as in §4), and
+//! the tester pool (WAN).
+//!
+//! Each node owns a [`LocalClock`] with skew and drift: the paper found
+//! PlanetLab nodes "with synchronization differences in the thousands of
+//! seconds", so DiPerF assumes the worst — no usable platform clock —
+//! and that is exactly what we model (timesync/ recovers global time).
+
+use crate::ids::NodeId;
+use crate::net::{NetModel, NetProfile, WanParams};
+use crate::sim::{SimDuration, SimTime};
+use crate::util::dist::{lognormal_median, normal_min};
+use crate::util::Pcg64;
+
+/// A node's local clock: `local = global * (1 + drift) + skew`.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalClock {
+    /// Constant offset, seconds (can be huge on PlanetLab).
+    pub skew_s: f64,
+    /// Fractional frequency error (e.g. 40e-6 = 40 ppm).
+    pub drift: f64,
+}
+
+impl LocalClock {
+    /// A perfect clock (no skew, no drift).
+    pub fn ideal() -> LocalClock {
+        LocalClock {
+            skew_s: 0.0,
+            drift: 0.0,
+        }
+    }
+
+    /// Read this clock at true (global) time `t` -> local seconds.
+    #[inline]
+    pub fn local_secs(&self, t: SimTime) -> f64 {
+        t.as_secs_f64() * (1.0 + self.drift) + self.skew_s
+    }
+
+    /// Invert a local reading back to true seconds (for test oracles).
+    #[inline]
+    pub fn global_secs(&self, local: f64) -> f64 {
+        (local - self.skew_s) / (1.0 + self.drift)
+    }
+}
+
+/// Hardware + reliability description of one machine.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Stable identity within the testbed.
+    pub id: NodeId,
+    /// Relative CPU speed (1.0 = the paper's service host, an AMD K7
+    /// 2.16 GHz).  Client-side work scales by 1/speed.
+    pub cpu_speed: f64,
+    /// The node's (possibly wildly wrong) local clock.
+    pub clock: LocalClock,
+    /// Probability the node dies during a multi-hour run (testers only;
+    /// the controller detects this and evicts the tester — §3).
+    pub failure_rate_per_hour: f64,
+    /// Probability a client invocation fails to start locally (OS/
+    /// out-of-memory class failures, §3 failure taxonomy #2).
+    pub client_start_failure: f64,
+}
+
+/// Node roles within a testbed.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum Role {
+    /// Runs the DiPerF controller.
+    Controller,
+    /// Hosts the target service.
+    Service,
+    /// Hosts the central time-stamp server.
+    TimeServer,
+    /// Runs a tester agent.
+    Tester,
+}
+
+/// The full deployment: nodes + network + role assignment.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    /// All machines, indexed by [`NodeId`].
+    pub nodes: Vec<Node>,
+    /// The network connecting them.
+    pub net: NetModel,
+    /// The controller host (UofC LAN).
+    pub controller: NodeId,
+    /// The target-service host (UofC LAN).
+    pub service: NodeId,
+    /// The time-stamp server host (UofC LAN).
+    pub time_server: NodeId,
+    /// The wide-area tester pool.
+    pub testers: Vec<NodeId>,
+}
+
+/// Knobs for synthesizing a PlanetLab-like testbed.
+#[derive(Clone, Debug)]
+pub struct TestbedParams {
+    /// Size of the tester pool.
+    pub num_testers: usize,
+    /// WAN population parameters.
+    pub wan: WanParams,
+    /// Fraction of nodes with an essentially-correct clock (< 100 ms).
+    pub clock_good: f64,
+    /// Fraction with moderate skew (seconds); the rest are wild
+    /// (hundreds..thousands of seconds, as observed on PlanetLab).
+    pub clock_moderate: f64,
+    /// Max |drift| in ppm.
+    pub drift_ppm: f64,
+    /// Mean CPU speed of the tester pool.
+    pub cpu_mean: f64,
+    /// CPU-speed spread (truncated normal).
+    pub cpu_std: f64,
+    /// Per-node failure rate (per hour of virtual time).
+    pub failure_rate_per_hour: f64,
+    /// Per-invocation local client start-failure probability.
+    pub client_start_failure: f64,
+}
+
+impl Default for TestbedParams {
+    fn default() -> TestbedParams {
+        TestbedParams {
+            num_testers: 89,
+            wan: WanParams::default(),
+            clock_good: 0.55,
+            clock_moderate: 0.30,
+            drift_ppm: 50.0,
+            cpu_mean: 0.8,
+            cpu_std: 0.35,
+            failure_rate_per_hour: 0.02,
+            client_start_failure: 0.002,
+        }
+    }
+}
+
+impl TestbedParams {
+    /// A small LAN testbed (for the §2 baseline and unit tests).
+    pub fn lan(num_testers: usize) -> TestbedParams {
+        TestbedParams {
+            num_testers,
+            wan: WanParams {
+                bands: vec![(1.0, 0.1, 1.0)],
+                asymmetry_sigma: 0.02,
+                jitter: 1.01,
+                bandwidth: (12.5e6, 12.5e6),
+                loss: (0.0, 0.0),
+            },
+            clock_good: 1.0,
+            clock_moderate: 0.0,
+            drift_ppm: 1.0,
+            cpu_mean: 1.0,
+            cpu_std: 0.0,
+            failure_rate_per_hour: 0.0,
+            client_start_failure: 0.0,
+        }
+    }
+}
+
+impl Testbed {
+    /// Synthesize a testbed: 3 LAN infrastructure nodes (controller,
+    /// service, time server — "UofC") + `num_testers` WAN testers.
+    pub fn generate(params: &TestbedParams, rng: &mut Pcg64) -> Testbed {
+        let mut nodes = Vec::new();
+        let mut profiles = Vec::new();
+
+        // infrastructure trio on the quiet LAN with good clocks
+        for i in 0..3u32 {
+            nodes.push(Node {
+                id: NodeId(i),
+                cpu_speed: 1.0,
+                clock: LocalClock {
+                    // NTP-disciplined UofC machines: sub-10 ms
+                    skew_s: rng.uniform(-0.01, 0.01),
+                    drift: rng.uniform(-2e-6, 2e-6),
+                },
+                failure_rate_per_hour: 0.0,
+                client_start_failure: 0.0,
+            });
+            profiles.push(NetProfile::lan());
+        }
+
+        let mut testers = Vec::with_capacity(params.num_testers);
+        for i in 0..params.num_testers {
+            let id = NodeId(3 + i as u32);
+            let u = rng.next_f64();
+            let skew_s = if u < params.clock_good {
+                rng.uniform(-0.1, 0.1)
+            } else if u < params.clock_good + params.clock_moderate {
+                rng.uniform(-30.0, 30.0)
+            } else {
+                // the paper's "thousands of seconds" pathologies
+                let mag = lognormal_median(rng, 800.0, 2.5);
+                if rng.chance(0.5) {
+                    mag
+                } else {
+                    -mag
+                }
+            };
+            let drift = rng.uniform(-params.drift_ppm, params.drift_ppm) * 1e-6;
+            nodes.push(Node {
+                id,
+                cpu_speed: normal_min(rng, params.cpu_mean, params.cpu_std, 0.2),
+                clock: LocalClock { skew_s, drift },
+                failure_rate_per_hour: params.failure_rate_per_hour,
+                client_start_failure: params.client_start_failure,
+            });
+            profiles.push(params.wan.sample(rng));
+            testers.push(id);
+        }
+
+        Testbed {
+            nodes,
+            net: NetModel::new(profiles),
+            controller: NodeId(0),
+            service: NodeId(1),
+            time_server: NodeId(2),
+            testers,
+        }
+    }
+
+    /// Look up a node.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    /// A node's role in the deployment.
+    pub fn role(&self, id: NodeId) -> Role {
+        if id == self.controller {
+            Role::Controller
+        } else if id == self.service {
+            Role::Service
+        } else if id == self.time_server {
+            Role::TimeServer
+        } else {
+            Role::Tester
+        }
+    }
+
+    /// Sample the time until a node's next failure, if it ever fails.
+    pub fn sample_failure_time(
+        &self,
+        id: NodeId,
+        horizon: SimDuration,
+        rng: &mut Pcg64,
+    ) -> Option<SimTime> {
+        let rate = self.node(id).failure_rate_per_hour;
+        if rate <= 0.0 {
+            return None;
+        }
+        let t = crate::util::dist::exponential(rng, rate / 3600.0);
+        if t < horizon.as_secs_f64() {
+            Some(SimTime::from_secs_f64(t))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bed(seed: u64) -> Testbed {
+        let mut rng = Pcg64::seed_from(seed);
+        Testbed::generate(&TestbedParams::default(), &mut rng)
+    }
+
+    #[test]
+    fn generates_requested_shape() {
+        let tb = bed(1);
+        assert_eq!(tb.nodes.len(), 3 + 89);
+        assert_eq!(tb.testers.len(), 89);
+        assert_eq!(tb.net.len(), tb.nodes.len());
+        assert_eq!(tb.role(tb.controller), Role::Controller);
+        assert_eq!(tb.role(tb.service), Role::Service);
+        assert_eq!(tb.role(tb.time_server), Role::TimeServer);
+        assert_eq!(tb.role(tb.testers[5]), Role::Tester);
+    }
+
+    #[test]
+    fn infrastructure_clocks_are_good() {
+        let tb = bed(2);
+        for id in [tb.controller, tb.service, tb.time_server] {
+            assert!(tb.node(id).clock.skew_s.abs() < 0.011);
+        }
+    }
+
+    #[test]
+    fn tester_clock_population_has_pathologies() {
+        let tb = bed(3);
+        let skews: Vec<f64> = tb
+            .testers
+            .iter()
+            .map(|&t| tb.node(t).clock.skew_s.abs())
+            .collect();
+        let good = skews.iter().filter(|&&s| s < 0.2).count();
+        let wild = skews.iter().filter(|&&s| s > 100.0).count();
+        assert!(good >= 30, "good clocks: {good}");
+        assert!(wild >= 2, "wild clocks: {wild}"); // thousands-of-seconds class
+    }
+
+    #[test]
+    fn clock_roundtrip() {
+        let c = LocalClock {
+            skew_s: 1234.5,
+            drift: 40e-6,
+        };
+        let t = SimTime::from_secs_f64(5000.0);
+        let local = c.local_secs(t);
+        assert!((c.global_secs(local) - 5000.0).abs() < 1e-9);
+        // drift accumulates: 40 ppm over 5000 s = 200 ms
+        assert!((local - 5000.0 - 1234.5 - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = bed(7);
+        let b = bed(7);
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.cpu_speed, y.cpu_speed);
+            assert_eq!(x.clock.skew_s, y.clock.skew_s);
+        }
+    }
+
+    #[test]
+    fn cpu_speeds_positive_and_heterogeneous() {
+        let tb = bed(8);
+        let speeds: Vec<f64> =
+            tb.testers.iter().map(|&t| tb.node(t).cpu_speed).collect();
+        assert!(speeds.iter().all(|&s| s >= 0.2));
+        let s = crate::util::Summary::of(&speeds);
+        assert!(s.std > 0.1, "expected heterogeneity, std {}", s.std);
+    }
+
+    #[test]
+    fn failure_sampling_respects_rate() {
+        let tb = bed(9);
+        let mut rng = Pcg64::seed_from(10);
+        let horizon = SimDuration::from_secs(3600);
+        let n = 2000;
+        let fails = (0..n)
+            .filter(|_| {
+                tb.sample_failure_time(tb.testers[0], horizon, &mut rng)
+                    .is_some()
+            })
+            .count();
+        // rate = 0.02/hour -> ~2% fail within the hour
+        assert!((10..=80).contains(&fails), "fails {fails}");
+    }
+
+    #[test]
+    fn lan_testbed_is_tame() {
+        let mut rng = Pcg64::seed_from(11);
+        let tb = Testbed::generate(&TestbedParams::lan(5), &mut rng);
+        for &t in &tb.testers {
+            assert!(tb.node(t).clock.skew_s.abs() < 0.2);
+            assert!(tb.net.profile(t).up.as_millis_f64() < 2.0);
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Experiment configuration files.
+//!
+//! The environment ships no `serde`/`toml`, so this module implements a
+//! TOML subset from scratch — sections, `key = value` with integers,
+//! floats, booleans and quoted strings, `#` comments — and maps it onto
+//! [`ExperimentConfig`].  A file names a preset and overrides fields:
+//!
+//! ```toml
+//! preset = "prews_fig3"      # any preset from experiment::presets
+//! seed = 7
+//!
+//! [testbed]
+//! num_testers = 42
+//!
+//! [test]
+//! duration_s = 600.0
+//! client_interval_s = 1.0
+//!
+//! [controller]
+//! stagger_s = 10.0
+//! eviction_failures = 3
+//!
+//! [service]                  # service-specific calibration overrides
+//! cpu_demand_s = 0.5
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiment::{presets, ExperimentConfig, ServiceKind};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Boolean literal.
+    Bool(bool),
+    /// Quoted string.
+    Str(String),
+}
+
+impl Value {
+    /// Coerce to f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Coerce to usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// Coerce to u64.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// String contents, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `sections[""]` holds top-level keys.
+pub type Doc = HashMap<String, HashMap<String, Value>>;
+
+/// Parse the TOML subset.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = HashMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", ln + 1))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+        let value = parse_value(val.trim())
+            .with_context(|| format!("line {}: bad value {:?}", ln + 1, val.trim()))?;
+        doc.get_mut(&section)
+            .expect("section exists")
+            .insert(key.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        "inf" => return Ok(Value::Float(f64::INFINITY)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unrecognized value: {s}")
+}
+
+/// Instantiate a preset by name.
+pub fn preset_by_name(name: &str, seed: u64) -> Result<ExperimentConfig> {
+    Ok(match name {
+        "prews_fig3" => presets::prews_fig3(seed),
+        "ws_fig6" => presets::ws_fig6(seed),
+        "ws_overload" => presets::ws_overload(seed),
+        "http_sec43" => presets::http_sec43(seed),
+        "quick_http" => presets::quick_http(8, 120.0, seed),
+        "scalability" => presets::scalability(200, seed),
+        other => bail!(
+            "unknown preset {other:?} (try prews_fig3, ws_fig6, \
+             ws_overload, http_sec43, quick_http, scalability)"
+        ),
+    })
+}
+
+/// Build an [`ExperimentConfig`] from a config file's text.
+pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig> {
+    let doc = parse(text)?;
+    let top = doc.get("").expect("top-level section always present");
+    let seed = top
+        .get("seed")
+        .map(|v| v.as_u64().context("seed must be a non-negative int"))
+        .transpose()?
+        .unwrap_or(42);
+    let preset = top
+        .get("preset")
+        .map(|v| v.as_str().context("preset must be a string"))
+        .transpose()?
+        .unwrap_or("quick_http");
+    let mut cfg = preset_by_name(preset, seed)?;
+    cfg.seed = seed;
+
+    if let Some(tb) = doc.get("testbed") {
+        set_usize(tb, "num_testers", &mut cfg.testbed.num_testers)?;
+        set_f64(tb, "clock_good", &mut cfg.testbed.clock_good)?;
+        set_f64(tb, "clock_moderate", &mut cfg.testbed.clock_moderate)?;
+        set_f64(tb, "drift_ppm", &mut cfg.testbed.drift_ppm)?;
+        set_f64(tb, "cpu_mean", &mut cfg.testbed.cpu_mean)?;
+        set_f64(tb, "cpu_std", &mut cfg.testbed.cpu_std)?;
+        set_f64(
+            tb,
+            "failure_rate_per_hour",
+            &mut cfg.testbed.failure_rate_per_hour,
+        )?;
+    }
+    if let Some(t) = doc.get("test") {
+        let d = &mut cfg.controller.desc;
+        set_f64(t, "duration_s", &mut d.duration_s)?;
+        set_f64(t, "client_interval_s", &mut d.client_interval_s)?;
+        set_f64(t, "sync_interval_s", &mut d.sync_interval_s)?;
+        set_f64(t, "rate_cap_per_s", &mut d.rate_cap_per_s)?;
+        set_f64(t, "timeout_s", &mut d.timeout_s)?;
+        set_u32(t, "give_up_failures", &mut d.give_up_failures)?;
+    }
+    if let Some(c) = doc.get("controller") {
+        set_f64(c, "stagger_s", &mut cfg.controller.stagger_s)?;
+        set_u32(c, "eviction_failures", &mut cfg.controller.eviction_failures)?;
+        set_f64(c, "silence_timeout_s", &mut cfg.controller.silence_timeout_s)?;
+    }
+    if let Some(s) = doc.get("service") {
+        apply_service_overrides(s, &mut cfg.service)?;
+    }
+    validate(&cfg)?;
+    Ok(cfg)
+}
+
+fn apply_service_overrides(
+    s: &HashMap<String, Value>,
+    kind: &mut ServiceKind,
+) -> Result<()> {
+    match kind {
+        ServiceKind::GramPrews(p) => {
+            set_f64(s, "cpu_demand_s", &mut p.cpu_demand_s)?;
+            set_f64(s, "demand_spread", &mut p.demand_spread)?;
+            set_f64(s, "protocol_delay_s", &mut p.protocol_delay_s)?;
+            set_usize(s, "thrash_threshold", &mut p.thrash_threshold)?;
+            set_f64(s, "thrash_factor", &mut p.thrash_factor)?;
+        }
+        ServiceKind::GramWs(p) => {
+            set_f64(s, "job_demand_s", &mut p.job_demand_s)?;
+            set_f64(s, "uhe_launch_s", &mut p.uhe_launch_s)?;
+            set_usize(s, "stall_threshold", &mut p.stall_threshold)?;
+            set_usize(s, "resume_threshold", &mut p.resume_threshold)?;
+            set_usize(s, "hard_client_limit", &mut p.hard_client_limit)?;
+        }
+        ServiceKind::Http(p) => {
+            set_f64(s, "cgi_demand_s", &mut p.cgi_demand_s)?;
+            set_usize(s, "max_concurrent", &mut p.max_concurrent)?;
+        }
+    }
+    Ok(())
+}
+
+fn set_f64(m: &HashMap<String, Value>, k: &str, dst: &mut f64) -> Result<()> {
+    if let Some(v) = m.get(k) {
+        *dst = v.as_f64().with_context(|| format!("{k} must be numeric"))?;
+    }
+    Ok(())
+}
+
+fn set_usize(m: &HashMap<String, Value>, k: &str, dst: &mut usize) -> Result<()> {
+    if let Some(v) = m.get(k) {
+        *dst = v
+            .as_usize()
+            .with_context(|| format!("{k} must be a non-negative int"))?;
+    }
+    Ok(())
+}
+
+fn set_u32(m: &HashMap<String, Value>, k: &str, dst: &mut u32) -> Result<()> {
+    if let Some(v) = m.get(k) {
+        *dst = v
+            .as_usize()
+            .with_context(|| format!("{k} must be a non-negative int"))?
+            as u32;
+    }
+    Ok(())
+}
+
+/// Reject configurations that cannot run.
+pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
+    if cfg.testbed.num_testers == 0 {
+        bail!("num_testers must be >= 1");
+    }
+    if cfg.controller.desc.duration_s <= 0.0 {
+        bail!("duration_s must be positive");
+    }
+    if cfg.controller.stagger_s < 0.0 {
+        bail!("stagger_s must be non-negative");
+    }
+    if cfg.controller.desc.sync_interval_s <= 0.0 {
+        bail!("sync_interval_s must be positive");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_values() {
+        let doc = parse(
+            "a = 1\nb = 2.5\nc = \"hi # not a comment\"\nd = true\n\
+             e = inf # trailing comment\n[sec]\nf = -3\n",
+        )
+        .unwrap();
+        let top = &doc[""];
+        assert_eq!(top["a"], Value::Int(1));
+        assert_eq!(top["b"], Value::Float(2.5));
+        assert_eq!(top["c"], Value::Str("hi # not a comment".into()));
+        assert_eq!(top["d"], Value::Bool(true));
+        assert_eq!(top["e"], Value::Float(f64::INFINITY));
+        assert_eq!(doc["sec"]["f"], Value::Int(-3));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("what is this").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn preset_with_overrides() {
+        let cfg = experiment_from_toml(
+            "preset = \"prews_fig3\"\nseed = 9\n\
+             [testbed]\nnum_testers = 12\n\
+             [test]\nduration_s = 300.0\n\
+             [controller]\nstagger_s = 5.0\n\
+             [service]\ncpu_demand_s = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.testbed.num_testers, 12);
+        assert_eq!(cfg.controller.desc.duration_s, 300.0);
+        assert_eq!(cfg.controller.stagger_s, 5.0);
+        match cfg.service {
+            ServiceKind::GramPrews(p) => assert_eq!(p.cpu_demand_s, 0.5),
+            _ => panic!("wrong service"),
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_an_error() {
+        assert!(experiment_from_toml("preset = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn validation_catches_zero_testers() {
+        let e = experiment_from_toml(
+            "preset = \"quick_http\"\n[testbed]\nnum_testers = 0\n",
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn defaults_without_file_keys() {
+        let cfg = experiment_from_toml("").unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert!(matches!(cfg.service, ServiceKind::Http(_)));
+    }
+}

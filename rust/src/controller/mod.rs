@@ -1,0 +1,400 @@
+//! The DiPerF controller (§3): the paper's core contribution.
+//!
+//! The controller receives the target-service address and client code,
+//! distributes the code to candidate nodes (scp model), starts testers
+//! with a predefined stagger so offered load ramps up gradually
+//! (Figure 2), streams their performance reports, detects failed or
+//! silent testers and deletes them from the reporter list, and at the
+//! end reconciles every sample's local timestamps onto the common time
+//! base to produce the aggregate views of §4.
+//!
+//! Like [`crate::tester`], this is a pure state machine: the experiment
+//! world owns the clock and the network.
+
+use crate::ids::{NodeId, TesterId};
+use crate::metrics::{
+    CallSample, GlobalSample, OnlineView, RunData, TesterRecord,
+};
+use crate::timesync::ClockMap;
+use crate::transport::{
+    GoodbyeReason, SessionState, TestDescription, TesterMsg,
+};
+
+/// Controller policy knobs.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Delay between consecutive tester starts (the paper uses 25 s).
+    pub stagger_s: f64,
+    /// Evict a tester after this many consecutive client failures
+    /// (0 disables).
+    pub eviction_failures: u32,
+    /// Evict a tester silent for this long (covers node death).
+    pub silence_timeout_s: f64,
+    /// The test description handed to every tester.
+    pub desc: TestDescription,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> ControllerConfig {
+        ControllerConfig {
+            stagger_s: 25.0,
+            eviction_failures: 3,
+            silence_timeout_s: 600.0,
+            desc: TestDescription::default(),
+        }
+    }
+}
+
+/// Controller-side record of one tester session.
+#[derive(Clone, Debug)]
+struct Slot {
+    node: NodeId,
+    state: SessionState,
+    started_at: f64,
+    stopped_at: f64,
+    last_heard: f64,
+    consecutive_failures: u32,
+    samples: Vec<CallSample>,
+    clock: ClockMap,
+}
+
+/// Actions the world must carry out for the controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CtrlAction {
+    /// Send Stop to (and forget) this tester.
+    Evict(TesterId),
+}
+
+/// The controller state machine.
+pub struct Controller {
+    cfg: ControllerConfig,
+    slots: Vec<Slot>,
+    /// Live aggregate view (Figure 2's "on-line" visualization).
+    pub online: OnlineView,
+    started: usize,
+}
+
+impl Controller {
+    /// A controller over a candidate-node pool.
+    pub fn new(cfg: ControllerConfig, nodes: &[NodeId]) -> Controller {
+        let slots = nodes
+            .iter()
+            .map(|&node| Slot {
+                node,
+                state: SessionState::Deploying,
+                started_at: f64::NAN,
+                stopped_at: f64::MAX,
+                last_heard: 0.0,
+                consecutive_failures: 0,
+                samples: Vec::new(),
+                clock: ClockMap::new(),
+            })
+            .collect();
+        Controller {
+            cfg,
+            slots,
+            online: OnlineView::new(60.0),
+            started: 0,
+        }
+    }
+
+    /// Number of testers in the roster.
+    pub fn roster_len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Testers currently believed to be running.
+    pub fn live_testers(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.state == SessionState::Running)
+            .count()
+    }
+
+    /// Deploy outcome for a tester.
+    pub fn deploy_finished(&mut self, t: TesterId, ok: bool, now: f64) {
+        let s = &mut self.slots[t.index()];
+        debug_assert_eq!(s.state, SessionState::Deploying);
+        s.state = if ok {
+            SessionState::Ready
+        } else {
+            SessionState::DeployFailed
+        };
+        s.last_heard = now;
+    }
+
+    /// The staggered start schedule: tester `i` starts `i * stagger`
+    /// after `ramp_begin` ("the controller starts each tester with a
+    /// predefined delay in order to gradually build up the load").
+    pub fn start_time(&self, i: usize, ramp_begin: f64) -> f64 {
+        ramp_begin + i as f64 * self.cfg.stagger_s
+    }
+
+    /// Mark a tester started (its Start message was sent at `now`).
+    pub fn mark_started(&mut self, t: TesterId, now: f64) {
+        let s = &mut self.slots[t.index()];
+        if s.state == SessionState::Ready {
+            s.state = SessionState::Running;
+            s.started_at = now;
+            s.last_heard = now;
+            self.started += 1;
+        }
+    }
+
+    /// The test description for a tester (uniform in this version).
+    pub fn description(&self) -> TestDescription {
+        self.cfg.desc
+    }
+
+    /// Handle a tester report at global time `now`; may return an
+    /// eviction action.
+    pub fn on_msg(
+        &mut self,
+        now: f64,
+        t: TesterId,
+        msg: TesterMsg,
+    ) -> Option<CtrlAction> {
+        let evict_after = self.cfg.eviction_failures;
+        let s = &mut self.slots[t.index()];
+        if matches!(s.state, SessionState::Evicted | SessionState::Done) {
+            return None; // deleted from the reporter list (§3)
+        }
+        s.last_heard = now;
+        match msg {
+            TesterMsg::DeployDone | TesterMsg::Heartbeat => None,
+            TesterMsg::Sync(p) => {
+                s.clock.record(p);
+                None
+            }
+            TesterMsg::Sample(sample) => {
+                if sample.outcome.ok() {
+                    s.consecutive_failures = 0;
+                } else {
+                    s.consecutive_failures += 1;
+                }
+                // online view: approximate global time with arrival time
+                self.online.push(now, sample.outcome.ok());
+                s.samples.push(sample);
+                if evict_after > 0 && s.consecutive_failures >= evict_after
+                {
+                    s.state = SessionState::Evicted;
+                    s.stopped_at = now;
+                    return Some(CtrlAction::Evict(t));
+                }
+                None
+            }
+            TesterMsg::Goodbye(reason) => {
+                s.stopped_at = now;
+                s.state = match reason {
+                    GoodbyeReason::Finished => SessionState::Done,
+                    GoodbyeReason::TooManyFailures => SessionState::Evicted,
+                };
+                None
+            }
+        }
+    }
+
+    /// Periodic liveness sweep; evicts silent testers.
+    pub fn check_liveness(&mut self, now: f64) -> Vec<CtrlAction> {
+        let mut actions = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.state == SessionState::Running
+                && now - s.last_heard > self.cfg.silence_timeout_s
+            {
+                s.state = SessionState::Evicted;
+                s.stopped_at = now;
+                actions.push(CtrlAction::Evict(TesterId(i as u32)));
+            }
+        }
+        actions
+    }
+
+    /// Reconcile all collected samples onto the common time base.
+    ///
+    /// Samples from testers with an empty clock map cannot be placed on
+    /// the common base and are counted in `dropped_unsynced` — exactly
+    /// the paper's design (results aggregate only synchronized
+    /// reporters).  `t_end_true` is filled with NaN; the simulation
+    /// world backfills it for validation.
+    pub fn finalize(&self, duration_s: f64) -> RunData {
+        let mut rd = RunData {
+            duration_s,
+            ..Default::default()
+        };
+        for (i, s) in self.slots.iter().enumerate() {
+            let id = TesterId(i as u32);
+            rd.testers.push(TesterRecord {
+                id,
+                node: s.node,
+                started_at: s.started_at,
+                stopped_at: if s.stopped_at == f64::MAX {
+                    duration_s
+                } else {
+                    s.stopped_at
+                },
+                evicted: s.state == SessionState::Evicted,
+                clock: s.clock.clone(),
+                samples: s.samples.len() as u64,
+            });
+            for c in &s.samples {
+                match (
+                    s.clock.to_global(c.t_submit_local),
+                    s.clock.to_global(c.t_done_local),
+                ) {
+                    (Some(t_start), Some(t_end)) => {
+                        rd.samples.push(GlobalSample {
+                            tester: id,
+                            seq: c.seq,
+                            t_start,
+                            t_end,
+                            rt: c.rt_s,
+                            outcome: c.outcome,
+                            t_end_true: f64::NAN,
+                        });
+                    }
+                    _ => rd.dropped_unsynced += 1,
+                }
+            }
+        }
+        rd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SampleOutcome;
+    use crate::timesync::SyncPoint;
+
+    fn sample(t: u32, seq: u32, ok: bool, at: f64) -> TesterMsg {
+        TesterMsg::Sample(CallSample {
+            tester: TesterId(t),
+            seq,
+            t_submit_local: at - 1.0,
+            t_done_local: at,
+            rt_s: 0.9,
+            outcome: if ok {
+                SampleOutcome::Success
+            } else {
+                SampleOutcome::ServiceError
+            },
+        })
+    }
+
+    fn controller(n: usize) -> Controller {
+        let nodes: Vec<NodeId> = (0..n).map(|i| NodeId(3 + i as u32)).collect();
+        Controller::new(ControllerConfig::default(), &nodes)
+    }
+
+    #[test]
+    fn stagger_schedule() {
+        let c = controller(4);
+        assert_eq!(c.start_time(0, 100.0), 100.0);
+        assert_eq!(c.start_time(3, 100.0), 175.0);
+    }
+
+    #[test]
+    fn eviction_after_consecutive_failures() {
+        let mut c = controller(2);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 10.0);
+        assert!(c.on_msg(11.0, TesterId(0), sample(0, 0, false, 11.0)).is_none());
+        assert!(c.on_msg(12.0, TesterId(0), sample(0, 1, false, 12.0)).is_none());
+        let act = c.on_msg(13.0, TesterId(0), sample(0, 2, false, 13.0));
+        assert_eq!(act, Some(CtrlAction::Evict(TesterId(0))));
+        assert_eq!(c.live_testers(), 0);
+        // post-eviction reports are ignored (§3: deleted from reporters)
+        assert!(c.on_msg(14.0, TesterId(0), sample(0, 3, true, 14.0)).is_none());
+        let rd = c.finalize(100.0);
+        assert!(rd.testers[0].evicted);
+        assert_eq!(rd.testers[0].samples, 3);
+    }
+
+    #[test]
+    fn success_resets_failure_count() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        for i in 0..2 {
+            c.on_msg(1.0, TesterId(0), sample(0, i, false, 1.0));
+        }
+        c.on_msg(2.0, TesterId(0), sample(0, 2, true, 2.0));
+        for i in 3..5 {
+            assert!(c.on_msg(3.0, TesterId(0), sample(0, i, false, 3.0)).is_none());
+        }
+        assert_eq!(c.live_testers(), 1);
+    }
+
+    #[test]
+    fn silence_eviction() {
+        let mut c = controller(2);
+        for i in 0..2u32 {
+            c.deploy_finished(TesterId(i), true, 0.0);
+            c.mark_started(TesterId(i), 0.0);
+        }
+        c.on_msg(500.0, TesterId(1), TesterMsg::Heartbeat);
+        let actions = c.check_liveness(700.0);
+        // tester 0 silent since t=0 -> evicted; tester 1 heard at 500
+        assert_eq!(actions, vec![CtrlAction::Evict(TesterId(0))]);
+        assert_eq!(c.live_testers(), 1);
+    }
+
+    #[test]
+    fn finalize_maps_local_to_global() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        // tester clock is 1000 s ahead of global
+        c.on_msg(
+            5.0,
+            TesterId(0),
+            TesterMsg::Sync(SyncPoint {
+                l1: 1004.9,
+                server: 5.0,
+                l2: 1005.1,
+            }),
+        );
+        c.on_msg(60.0, TesterId(0), sample(0, 0, true, 1060.0));
+        let rd = c.finalize(100.0);
+        assert_eq!(rd.samples.len(), 1);
+        assert_eq!(rd.dropped_unsynced, 0);
+        assert!((rd.samples[0].t_end - 60.0).abs() < 0.01);
+        assert!((rd.samples[0].t_start - 59.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn finalize_drops_unsynced() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        c.on_msg(60.0, TesterId(0), sample(0, 0, true, 1060.0));
+        let rd = c.finalize(100.0);
+        assert_eq!(rd.samples.len(), 0);
+        assert_eq!(rd.dropped_unsynced, 1);
+    }
+
+    #[test]
+    fn goodbye_finished_marks_done() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        c.on_msg(
+            3600.0,
+            TesterId(0),
+            TesterMsg::Goodbye(GoodbyeReason::Finished),
+        );
+        let rd = c.finalize(4000.0);
+        assert!(!rd.testers[0].evicted);
+        assert_eq!(rd.testers[0].stopped_at, 3600.0);
+    }
+
+    #[test]
+    fn deploy_failure_excludes_node() {
+        let mut c = controller(2);
+        c.deploy_finished(TesterId(0), false, 0.0);
+        c.deploy_finished(TesterId(1), true, 0.0);
+        c.mark_started(TesterId(0), 10.0); // must be a no-op
+        c.mark_started(TesterId(1), 10.0);
+        assert_eq!(c.live_testers(), 1);
+    }
+}

@@ -1,0 +1,713 @@
+//! The experiment world: wires controller, testers, clock sync, the WAN
+//! and a target service into the discrete-event engine and runs a full
+//! DiPerF experiment.
+//!
+//! This is the simulation twin of the paper's deployment: one controller
+//! machine, one target-service machine and one time-stamp server on the
+//! "UofC" LAN, plus N wide-area tester nodes.  Every protocol action —
+//! client-code distribution, staggered tester starts, each client's RPC,
+//! the five-minute sync exchanges, sample streaming, failure detection —
+//! is an explicit event with network latency applied, so framework
+//! artifacts (sync error, report latency, ramp shape) appear in the data
+//! exactly as they did on PlanetLab.
+
+pub mod presets;
+
+use std::collections::HashMap;
+
+use crate::client;
+use crate::cluster::{Testbed, TestbedParams};
+use crate::controller::{Controller, ControllerConfig, CtrlAction};
+use crate::ids::{RequestId, TesterId};
+use crate::metrics::RunData;
+use crate::net::NetModel;
+use crate::services::{
+    gram_prews::{GramPrews, GramPrewsParams},
+    gram_ws::{GramWs, GramWsParams},
+    http::{HttpParams, HttpService},
+    Service, ServiceStats, SvcOut,
+};
+use crate::sim::{Engine, SimDuration, SimTime};
+use crate::tester::{Phase, Tester};
+use crate::timesync::{SyncAccuracy, SyncPoint};
+use crate::transport::{
+    ClientCode, CtrlMsg, GoodbyeReason, TesterMsg,
+};
+use crate::util::Pcg64;
+
+/// Which target service to deploy (with calibration).
+#[derive(Clone, Debug)]
+pub enum ServiceKind {
+    /// GT3.2 pre-WS GRAM model.
+    GramPrews(GramPrewsParams),
+    /// GT3.2 WS GRAM model.
+    GramWs(GramWsParams),
+    /// Apache + CGI model.
+    Http(HttpParams),
+}
+
+impl ServiceKind {
+    fn build(&self, speed: f64) -> Box<dyn Service> {
+        match self {
+            ServiceKind::GramPrews(p) => {
+                let mut p = p.clone();
+                p.speed = speed;
+                Box::new(GramPrews::new(p))
+            }
+            ServiceKind::GramWs(p) => {
+                let mut p = p.clone();
+                p.speed = speed;
+                Box::new(GramWs::new(p))
+            }
+            ServiceKind::Http(p) => {
+                let mut p = p.clone();
+                p.speed = speed;
+                Box::new(HttpService::new(p))
+            }
+        }
+    }
+
+    /// Service label (for reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServiceKind::GramPrews(_) => "gt3.2-prews-gram",
+            ServiceKind::GramWs(_) => "gt3.2-ws-gram",
+            ServiceKind::Http(_) => "apache-cgi",
+        }
+    }
+}
+
+/// Full experiment specification.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Master seed; every component stream derives from it.
+    pub seed: u64,
+    /// Target service + calibration.
+    pub service: ServiceKind,
+    /// Testbed synthesis parameters (tester count lives here).
+    pub testbed: TestbedParams,
+    /// Controller policy (stagger, eviction, test description).
+    pub controller: ControllerConfig,
+    /// Client-code payload for the deploy phase.
+    pub code: ClientCode,
+    /// Extra time after the last tester's duration before the
+    /// experiment is cut off.
+    pub grace_s: f64,
+}
+
+/// Everything a finished experiment produces.
+pub struct ExperimentResult {
+    /// Reconciled samples + per-tester records.
+    pub data: RunData,
+    /// Service-side counters.
+    pub service_stats: ServiceStats,
+    /// Service label.
+    pub service_name: &'static str,
+    /// Clock-sync accuracy over all sync exchanges (vs simulation truth).
+    pub sync: SyncAccuracy,
+    /// DES events dispatched.
+    pub events: u64,
+    /// Wall-clock milliseconds spent simulating.
+    pub wall_ms: f64,
+    /// Service stalls observed (WS GRAM only; 0 otherwise).
+    pub stalls: u64,
+}
+
+/// Events of the DiPerF world.
+enum Ev {
+    /// scp of the client code to tester `i` completed.
+    DeployDone(usize),
+    /// Controller message delivered at tester `i`.
+    CtrlDeliver(usize, CtrlMsg),
+    /// Tester report delivered at the controller.
+    TesterDeliver(usize, TesterMsg),
+    /// Controller decides to start tester `i` (per the ramp schedule).
+    StartTester(usize),
+    /// Tester `i` launches its next client.
+    ClientLaunch(usize),
+    /// A client's request reaches the service.
+    RequestArrive(RequestId),
+    /// A service wake (PS completion horizon) fires; the tag must match
+    /// the world's armed wake or the event is stale and skipped.
+    ServiceWake(u64),
+    /// The service's response for `req` reaches its tester.
+    ResponseDeliver(RequestId, crate::services::Outcome),
+    /// Periodic tester-timeout sweep (§3 failure #1).  One recurring
+    /// event replaces a per-launch timeout event: stale timeouts used to
+    /// sit in the heap for the full timeout window and dominated heap
+    /// traffic (see EXPERIMENTS.md §Perf).
+    TimeoutSweep,
+    /// Tester `i`'s sync request reaches the time server.
+    SyncReqArrive(usize, f64),
+    /// The sync reply reaches tester `i` (server reading attached).
+    SyncReplyArrive(usize, f64, f64),
+    /// Tester `i` begins its next sync exchange.
+    SyncBegin(usize),
+    /// Node under tester `i` dies.
+    NodeFail(usize),
+    /// Controller liveness sweep.
+    CtrlTick,
+}
+
+struct ReqInfo {
+    tester: usize,
+}
+
+/// The running world.
+struct World {
+    eng: Engine<Ev>,
+    bed: Testbed,
+    net: NetModel,
+    controller: Controller,
+    testers: Vec<Tester>,
+    service: Box<dyn Service>,
+    /// Per-component RNG streams (deterministic regardless of order).
+    rng_net: Pcg64,
+    rng_svc: Pcg64,
+    rng_testers: Vec<Pcg64>,
+    reqs: HashMap<u32, ReqInfo>,
+    next_req: u32,
+    /// Simulation truth for validation: (tester, seq) -> true end time.
+    truth: HashMap<(u32, u32), f64>,
+    sync: SyncAccuracy,
+    deploys_pending: usize,
+    ramp_begun: bool,
+    horizon: SimTime,
+    /// The earliest armed service wake (dedupe: stale ServiceWake events
+    /// whose tag mismatches are dropped, so wake chains cannot multiply).
+    svc_wake: Option<u64>,
+}
+
+impl World {
+    fn local(&self, i: usize) -> f64 {
+        self.bed
+            .node(self.testers[i].node)
+            .clock
+            .local_secs(self.eng.now())
+    }
+
+    /// Convert a tester-local target time to global for scheduling.
+    fn local_to_global(&self, i: usize, local: f64) -> SimTime {
+        let g = self
+            .bed
+            .node(self.testers[i].node)
+            .clock
+            .global_secs(local);
+        SimTime::from_secs_f64(g.max(self.eng.now().as_secs_f64()))
+    }
+
+    fn send_to_controller(&mut self, i: usize, msg: TesterMsg) {
+        if self.testers[i].phase == Phase::Dead {
+            return;
+        }
+        let lat = self.net.latency(
+            self.testers[i].node,
+            self.bed.controller,
+            &mut self.rng_net,
+        );
+        self.eng.schedule_in(lat, Ev::TesterDeliver(i, msg));
+    }
+
+    fn send_to_tester(&mut self, i: usize, msg: CtrlMsg) {
+        let lat = self.net.latency(
+            self.bed.controller,
+            self.testers[i].node,
+            &mut self.rng_net,
+        );
+        self.eng.schedule_in(lat, Ev::CtrlDeliver(i, msg));
+    }
+
+    fn handle_svc_outs(&mut self, outs: Vec<SvcOut>) {
+        for o in outs {
+            match o {
+                SvcOut::Wake { at } => {
+                    let tag = at.as_micros().max(self.eng.now().as_micros());
+                    if self.svc_wake.is_none_or(|w| tag < w) {
+                        self.svc_wake = Some(tag);
+                        self.eng
+                            .schedule(SimTime(tag), Ev::ServiceWake(tag));
+                    }
+                }
+                SvcOut::Done { req, outcome, .. } => {
+                    if let Some(info) = self.reqs.get(&req.0) {
+                        let lat = self.net.latency(
+                            self.bed.service,
+                            self.testers[info.tester].node,
+                            &mut self.rng_net,
+                        );
+                        self.eng
+                            .schedule_in(lat, Ev::ResponseDeliver(req, outcome));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Schedule tester `i`'s next client launch (local pacing -> global).
+    fn schedule_next_launch(&mut self, i: usize) {
+        let now_local = self.local(i);
+        let t = self.testers[i].next_launch_local(now_local);
+        let at = self.local_to_global(i, t);
+        self.eng.schedule(at, Ev::ClientLaunch(i));
+    }
+
+    /// Tester produced a sample: forward it, apply the give-up policy,
+    /// and keep the loop going.
+    fn after_sample(&mut self, i: usize, sample: crate::metrics::CallSample) {
+        self.truth.insert(
+            (sample.tester.0, sample.seq),
+            self.eng.now().as_secs_f64(),
+        );
+        self.send_to_controller(i, TesterMsg::Sample(sample));
+        let give_up = self.testers[i].desc.give_up_failures;
+        if self.testers[i].should_give_up(give_up) {
+            self.testers[i].stop();
+            self.send_to_controller(
+                i,
+                TesterMsg::Goodbye(GoodbyeReason::TooManyFailures),
+            );
+            return;
+        }
+        if self.testers[i].phase == Phase::Running {
+            if self.testers[i].duration_elapsed(self.local(i)) {
+                self.testers[i].stop();
+                self.send_to_controller(
+                    i,
+                    TesterMsg::Goodbye(GoodbyeReason::Finished),
+                );
+            } else {
+                self.schedule_next_launch(i);
+            }
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::DeployDone(i) => {
+                self.controller.deploy_finished(
+                    TesterId(i as u32),
+                    true,
+                    self.eng.now().as_secs_f64(),
+                );
+                self.deploys_pending -= 1;
+                if self.deploys_pending == 0 && !self.ramp_begun {
+                    self.ramp_begun = true;
+                    let ramp0 = self.eng.now().as_secs_f64();
+                    for j in 0..self.testers.len() {
+                        let at = SimTime::from_secs_f64(
+                            self.controller.start_time(j, ramp0),
+                        );
+                        self.eng.schedule(at, Ev::StartTester(j));
+                    }
+                    // horizon: last start + duration + grace
+                    let last = self
+                        .controller
+                        .start_time(self.testers.len() - 1, ramp0);
+                    self.horizon = SimTime::from_secs_f64(
+                        last + self.controller.description().duration_s
+                            + 120.0,
+                    );
+                }
+            }
+            Ev::StartTester(i) => {
+                self.controller
+                    .mark_started(TesterId(i as u32), self.eng.now().as_secs_f64());
+                self.send_to_tester(i, CtrlMsg::Start(self.controller.description()));
+            }
+            Ev::CtrlDeliver(i, msg) => match msg {
+                CtrlMsg::Start(desc) => {
+                    if self.testers[i].phase != Phase::Idle {
+                        return;
+                    }
+                    let now_local = self.local(i);
+                    self.testers[i].start(now_local, desc);
+                    // latency estimate: one ping round trip to the service
+                    let rtt = self
+                        .net
+                        .latency(
+                            self.testers[i].node,
+                            self.bed.service,
+                            &mut self.rng_net,
+                        )
+                        .as_secs_f64()
+                        + self
+                            .net
+                            .latency(
+                                self.bed.service,
+                                self.testers[i].node,
+                                &mut self.rng_net,
+                            )
+                            .as_secs_f64();
+                    self.testers[i].latency_estimate_s = rtt / 2.0;
+                    // first sync now; first client launch follows it
+                    self.eng.schedule_in(SimDuration(0), Ev::SyncBegin(i));
+                }
+                CtrlMsg::Stop => {
+                    self.testers[i].stop();
+                }
+            },
+            Ev::SyncBegin(i) => {
+                if !matches!(self.testers[i].phase, Phase::Running) {
+                    return;
+                }
+                let l1 = self.local(i);
+                let lat = self.net.latency(
+                    self.testers[i].node,
+                    self.bed.time_server,
+                    &mut self.rng_net,
+                );
+                self.eng.schedule_in(lat, Ev::SyncReqArrive(i, l1));
+            }
+            Ev::SyncReqArrive(i, l1) => {
+                // the server stamps its own clock reading
+                let server = self
+                    .bed
+                    .node(self.bed.time_server)
+                    .clock
+                    .local_secs(self.eng.now());
+                let lat = self.net.latency(
+                    self.bed.time_server,
+                    self.testers[i].node,
+                    &mut self.rng_net,
+                );
+                self.eng
+                    .schedule_in(lat, Ev::SyncReplyArrive(i, l1, server));
+            }
+            Ev::SyncReplyArrive(i, l1, server) => {
+                if self.testers[i].phase == Phase::Dead {
+                    return;
+                }
+                let l2 = self.local(i);
+                let p = SyncPoint { l1, server, l2 };
+                let first = self.testers[i].clock.is_empty();
+                self.testers[i].record_sync(p);
+                // accuracy vs simulation truth, at the reply instant
+                if let Some(est) = self.testers[i].clock.to_global(l2) {
+                    let truth = self.eng.now().as_secs_f64();
+                    self.sync.push(est - truth, p.rtt());
+                }
+                self.send_to_controller(i, TesterMsg::Sync(p));
+                if self.testers[i].phase == Phase::Running {
+                    // periodic re-sync
+                    let next_local = l2 + self.testers[i].desc.sync_interval_s;
+                    let at = self.local_to_global(i, next_local);
+                    self.eng.schedule(at, Ev::SyncBegin(i));
+                    if first {
+                        self.schedule_next_launch(i);
+                    }
+                }
+            }
+            Ev::ClientLaunch(i) => {
+                if !self.testers[i].can_launch(self.local(i)) {
+                    // duration elapsed or a client is still outstanding
+                    if self.testers[i].phase == Phase::Running
+                        && self.testers[i].outstanding.is_none()
+                        && self.testers[i].duration_elapsed(self.local(i))
+                    {
+                        self.testers[i].stop();
+                        self.send_to_controller(
+                            i,
+                            TesterMsg::Goodbye(GoodbyeReason::Finished),
+                        );
+                    }
+                    return;
+                }
+                let now_local = self.local(i);
+                let node = self.bed.node(self.testers[i].node).clone();
+                if !client::try_start(
+                    node.client_start_failure,
+                    &mut self.rng_testers[i],
+                ) {
+                    let s = self.testers[i].record_start_failure(now_local);
+                    self.after_sample(i, s);
+                    return;
+                }
+                let req = RequestId(self.next_req);
+                self.next_req += 1;
+                let inv = self.testers[i].launch(now_local, req);
+                self.reqs.insert(req.0, ReqInfo { tester: i });
+                // client exec overhead before the RPC leaves the node
+                let pre =
+                    client::exec_overhead_s(node.cpu_speed, &mut self.rng_testers[i]);
+                let lat = self.net.latency(
+                    self.testers[i].node,
+                    self.bed.service,
+                    &mut self.rng_net,
+                );
+                self.eng.schedule_in(
+                    SimDuration::from_secs_f64(pre) + lat,
+                    Ev::RequestArrive(req),
+                );
+                let _ = inv; // timeout handled by the periodic sweep
+            }
+            Ev::RequestArrive(req) => {
+                let client_id = match self.reqs.get(&req.0) {
+                    Some(info) => info.tester as u32,
+                    None => return,
+                };
+                let outs = self.service.submit(
+                    self.eng.now(),
+                    req,
+                    client_id,
+                    &mut self.rng_svc,
+                );
+                self.handle_svc_outs(outs);
+            }
+            Ev::ServiceWake(tag) => {
+                if self.svc_wake != Some(tag) {
+                    return; // superseded by an earlier wake
+                }
+                self.svc_wake = None;
+                let outs = self.service.on_wake(self.eng.now(), &mut self.rng_svc);
+                self.handle_svc_outs(outs);
+            }
+            Ev::ResponseDeliver(req, outcome) => {
+                let Some(info) = self.reqs.remove(&req.0) else {
+                    return;
+                };
+                let i = info.tester;
+                if self.testers[i].phase == Phase::Dead {
+                    return;
+                }
+                let now_local = self.local(i);
+                let node = self.bed.node(self.testers[i].node).clone();
+                let post =
+                    client::exec_overhead_s(node.cpu_speed, &mut self.rng_testers[i]);
+                if let Some(s) = self.testers[i].record_result(
+                    now_local,
+                    req,
+                    client::classify(outcome),
+                    post,
+                ) {
+                    self.after_sample(i, s);
+                }
+            }
+            Ev::TimeoutSweep => {
+                for i in 0..self.testers.len() {
+                    if self.testers[i].phase == Phase::Dead {
+                        continue;
+                    }
+                    let Some(inv) = self.testers[i].outstanding else {
+                        continue;
+                    };
+                    let now_local = self.local(i);
+                    if now_local - inv.launched_local
+                        < self.testers[i].desc.timeout_s
+                    {
+                        continue;
+                    }
+                    if let Some(s) = self.testers[i]
+                        .record_timeout(now_local, inv.timeout_token)
+                    {
+                        // the request's eventual response must be ignored
+                        self.reqs.remove(&inv.req.0);
+                        self.after_sample(i, s);
+                    }
+                }
+                self.eng
+                    .schedule_in(SimDuration::from_secs(5), Ev::TimeoutSweep);
+            }
+            Ev::TesterDeliver(i, msg) => {
+                let action = self.controller.on_msg(
+                    self.eng.now().as_secs_f64(),
+                    TesterId(i as u32),
+                    msg,
+                );
+                if let Some(CtrlAction::Evict(t)) = action {
+                    self.send_to_tester(t.index(), CtrlMsg::Stop);
+                }
+            }
+            Ev::NodeFail(i) => {
+                self.testers[i].kill();
+            }
+            Ev::CtrlTick => {
+                let now = self.eng.now().as_secs_f64();
+                for a in self.controller.check_liveness(now) {
+                    let CtrlAction::Evict(t) = a;
+                    self.send_to_tester(t.index(), CtrlMsg::Stop);
+                }
+                self.eng
+                    .schedule_in(SimDuration::from_secs(30), Ev::CtrlTick);
+            }
+        }
+    }
+}
+
+/// Run a complete DiPerF experiment.
+pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    let wall = std::time::Instant::now();
+    let mut root = Pcg64::seed_from(cfg.seed);
+    let mut rng_bed = root.split(1);
+    let bed = Testbed::generate(&cfg.testbed, &mut rng_bed);
+    let n = bed.testers.len();
+
+    let service = cfg
+        .service
+        .build(bed.node(bed.service).cpu_speed);
+    let controller = Controller::new(cfg.controller.clone(), &bed.testers);
+    let testers: Vec<Tester> = bed
+        .testers
+        .iter()
+        .enumerate()
+        .map(|(i, &node)| Tester::new(TesterId(i as u32), node))
+        .collect();
+    let rng_testers: Vec<Pcg64> =
+        (0..n).map(|i| root.split(100 + i as u64)).collect();
+
+    let mut w = World {
+        eng: Engine::new(),
+        net: bed.net.clone(),
+        controller,
+        testers,
+        service,
+        rng_net: root.split(2),
+        rng_svc: root.split(3),
+        rng_testers,
+        reqs: HashMap::new(),
+        next_req: 0,
+        truth: HashMap::new(),
+        sync: SyncAccuracy::new(),
+        deploys_pending: n,
+        ramp_begun: false,
+        horizon: SimTime::MAX,
+        svc_wake: None,
+        bed,
+    };
+
+    // deploy phase: scp the client code to every tester node
+    let mut rng_deploy = root.split(4);
+    for i in 0..n {
+        let dt = w.net.transfer_time(
+            w.bed.controller,
+            w.testers[i].node,
+            cfg.code.bytes(),
+            &mut rng_deploy,
+        );
+        w.eng.schedule(SimTime(0) + dt, Ev::DeployDone(i));
+    }
+    // node-failure injection
+    let duration =
+        SimDuration::from_secs_f64(cfg.controller.desc.duration_s * 2.0);
+    let mut rng_fail = root.split(5);
+    for i in 0..n {
+        if let Some(at) =
+            w.bed
+                .sample_failure_time(w.testers[i].node, duration, &mut rng_fail)
+        {
+            w.eng.schedule(at, Ev::NodeFail(i));
+        }
+    }
+    w.eng.schedule(SimTime(0), Ev::CtrlTick);
+    w.eng.schedule(SimTime(0), Ev::TimeoutSweep);
+
+    // main loop (horizon is set once the ramp schedule is known)
+    loop {
+        let horizon = w.horizon
+            + SimDuration::from_secs_f64(cfg.grace_s.max(0.0));
+        let Some((_, ev)) = ({
+            if w.eng.pending() == 0 || w.eng.now() > horizon {
+                None
+            } else {
+                w.eng.next()
+            }
+        }) else {
+            break;
+        };
+        w.handle(ev);
+    }
+
+    let duration_s = w.eng.now().as_secs_f64();
+    let mut data = w.controller.finalize(duration_s);
+    // backfill simulation truth for sync-pipeline validation
+    for s in data.samples.iter_mut() {
+        s.t_end_true = w
+            .truth
+            .get(&(s.tester.0, s.seq))
+            .copied()
+            .unwrap_or(f64::NAN);
+    }
+
+    ExperimentResult {
+        data,
+        service_stats: w.service.stats(),
+        service_name: w.service.name(),
+        stalls: w.service.stalls(),
+        sync: w.sync,
+        events: w.eng.processed(),
+        wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn tiny_http_experiment_completes() {
+        let cfg = presets::quick_http(4, 60.0, 42);
+        let r = run_experiment(&cfg);
+        assert!(r.data.completed() > 50, "completed {}", r.data.completed());
+        assert_eq!(r.data.dropped_unsynced, 0);
+        assert!(r.events > 100);
+        // conservation: service accounting matches
+        let st = r.service_stats;
+        assert!(st.submitted >= st.completed + st.denied + st.errored);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = presets::quick_http(3, 30.0, 7);
+        let a = run_experiment(&cfg);
+        let b = run_experiment(&cfg);
+        assert_eq!(a.data.samples.len(), b.data.samples.len());
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.data.samples.iter().zip(&b.data.samples) {
+            assert_eq!(x.t_end, y.t_end);
+            assert_eq!(x.rt, y.rt);
+        }
+    }
+
+    #[test]
+    fn samples_reconcile_close_to_truth() {
+        let cfg = presets::quick_http(4, 60.0, 11);
+        let r = run_experiment(&cfg);
+        let mut errs: Vec<f64> = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.t_end_true.is_finite())
+            .map(|s| (s.t_end - s.t_end_true).abs())
+            .collect();
+        assert!(!errs.is_empty());
+        errs.sort_by(f64::total_cmp);
+        let med = errs[errs.len() / 2];
+        // reconciliation error is clock-sync error: tens of ms, never s
+        assert!(med < 0.25, "median reconciliation error {med}");
+    }
+
+    #[test]
+    fn ramp_is_staggered() {
+        let cfg = presets::quick_http(5, 60.0, 13);
+        let r = run_experiment(&cfg);
+        let starts: Vec<f64> =
+            r.data.testers.iter().map(|t| t.started_at).collect();
+        for w in starts.windows(2) {
+            let gap = w[1] - w[0];
+            assert!((gap - cfg.controller.stagger_s).abs() < 1e-6,
+                "stagger gap {gap}");
+        }
+    }
+
+    #[test]
+    fn sync_happens_repeatedly() {
+        let mut cfg = presets::quick_http(2, 120.0, 17);
+        cfg.controller.desc.sync_interval_s = 30.0;
+        let r = run_experiment(&cfg);
+        for t in &r.data.testers {
+            // 120 s / 30 s -> at least 3 sync points per tester
+            assert!(t.clock.len() >= 3, "sync points {}", t.clock.len());
+        }
+        assert!(r.sync.errors_s.len() >= 6);
+    }
+}

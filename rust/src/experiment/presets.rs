@@ -1,0 +1,201 @@
+//! Shipped experiment presets: one per paper experiment (DESIGN.md §4),
+//! plus scaled-down variants for tests and the quickstart.
+
+use super::{ExperimentConfig, ServiceKind};
+use crate::cluster::TestbedParams;
+use crate::controller::ControllerConfig;
+use crate::services::gram_prews::GramPrewsParams;
+use crate::services::gram_ws::GramWsParams;
+use crate::services::http::HttpParams;
+use crate::transport::{ClientCode, TestDescription};
+
+/// E1–E3: the §4.1 pre-WS GRAM run — 89 testers, 25 s stagger, one hour
+/// each, 1 s client interval, 5 min syncs (5800 s total).
+pub fn prews_fig3(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::GramPrews(GramPrewsParams::default()),
+        testbed: TestbedParams {
+            num_testers: 89,
+            ..Default::default()
+        },
+        controller: ControllerConfig {
+            stagger_s: 25.0,
+            eviction_failures: 5,
+            silence_timeout_s: 900.0,
+            desc: TestDescription {
+                duration_s: 3600.0,
+                client_interval_s: 1.0,
+                sync_interval_s: 300.0,
+                rate_cap_per_s: f64::INFINITY,
+                timeout_s: 300.0,
+                give_up_failures: 10,
+            },
+        },
+        code: ClientCode::NativeBinary,
+        grace_s: 120.0,
+    }
+}
+
+/// E4–E6: the §4.2 WS GRAM run — 26 testers (the paper's second,
+/// successful attempt), jar deployment, longer timeout.
+pub fn ws_fig6(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::GramWs(GramWsParams::default()),
+        testbed: TestbedParams {
+            num_testers: 26,
+            ..Default::default()
+        },
+        controller: ControllerConfig {
+            stagger_s: 25.0,
+            eviction_failures: 2,
+            silence_timeout_s: 1200.0,
+            desc: TestDescription {
+                duration_s: 3600.0,
+                client_interval_s: 1.0,
+                sync_interval_s: 300.0,
+                rate_cap_per_s: f64::INFINITY,
+                timeout_s: 600.0,
+                give_up_failures: 6,
+            },
+        },
+        code: ClientCode::Jar,
+        grace_s: 180.0,
+    }
+}
+
+/// The aborted §4.2 first attempt: 89 clients against WS GRAM (the
+/// service "did not fail gracefully": it stalled and every client
+/// failed).  Eviction is disabled — the paper's testers kept hammering
+/// until the authors aborted the run.
+pub fn ws_overload(seed: u64) -> ExperimentConfig {
+    let mut cfg = ws_fig6(seed);
+    cfg.testbed.num_testers = 89;
+    cfg.controller.eviction_failures = 0;
+    cfg.controller.desc.give_up_failures = 0;
+    cfg
+}
+
+/// E7: the §4.3 HTTP/CGI saturation run — 125 testers, ≤ 3 jobs/s each.
+pub fn http_sec43(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::Http(HttpParams::default()),
+        testbed: TestbedParams {
+            num_testers: 125,
+            ..Default::default()
+        },
+        controller: ControllerConfig {
+            stagger_s: 25.0,
+            eviction_failures: 0, // denials are expected at saturation
+            silence_timeout_s: 300.0,
+            desc: TestDescription {
+                duration_s: 1800.0,
+                client_interval_s: 0.0,
+                sync_interval_s: 300.0,
+                rate_cap_per_s: 3.0,
+                timeout_s: 30.0,
+                give_up_failures: 0,
+            },
+        },
+        code: ClientCode::NativeBinary,
+        grace_s: 60.0,
+    }
+}
+
+/// A small, fast HTTP experiment on a quiet LAN — used by unit tests and
+/// the quickstart example.
+pub fn quick_http(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::Http(HttpParams::default()),
+        testbed: TestbedParams::lan(testers),
+        controller: ControllerConfig {
+            stagger_s: 2.0,
+            eviction_failures: 0,
+            silence_timeout_s: 120.0,
+            desc: TestDescription {
+                duration_s,
+                client_interval_s: 0.5,
+                sync_interval_s: 30.0,
+                rate_cap_per_s: f64::INFINITY,
+                timeout_s: 30.0,
+                give_up_failures: 0,
+            },
+        },
+        code: ClientCode::Custom(100_000),
+        grace_s: 30.0,
+    }
+}
+
+/// A scaled-down pre-WS GRAM run (for integration tests: same shape as
+/// E1 at a fraction of the event count).
+pub fn prews_small(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = prews_fig3(seed);
+    cfg.testbed.num_testers = testers;
+    cfg.controller.desc.duration_s = duration_s;
+    cfg.controller.stagger_s = 10.0;
+    cfg
+}
+
+/// Framework-scalability preset (E11): many testers against a fast
+/// service so the *framework* is the stressed component.
+pub fn scalability(testers: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::Http(HttpParams {
+            max_concurrent: usize::MAX,
+            ..Default::default()
+        }),
+        testbed: TestbedParams {
+            num_testers: testers,
+            ..Default::default()
+        },
+        controller: ControllerConfig {
+            stagger_s: 1.0,
+            eviction_failures: 0,
+            silence_timeout_s: 600.0,
+            desc: TestDescription {
+                duration_s: 300.0,
+                client_interval_s: 1.0,
+                sync_interval_s: 300.0,
+                rate_cap_per_s: 1.0,
+                timeout_s: 60.0,
+                give_up_failures: 0,
+            },
+        },
+        code: ClientCode::Custom(100_000),
+        grace_s: 60.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_parameters() {
+        let p = prews_fig3(1);
+        assert_eq!(p.testbed.num_testers, 89);
+        assert_eq!(p.controller.stagger_s, 25.0);
+        assert_eq!(p.controller.desc.duration_s, 3600.0);
+        assert_eq!(p.controller.desc.sync_interval_s, 300.0);
+
+        let w = ws_fig6(1);
+        assert_eq!(w.testbed.num_testers, 26);
+        assert!(matches!(w.code, ClientCode::Jar));
+
+        let h = http_sec43(1);
+        assert_eq!(h.testbed.num_testers, 125);
+        assert!((h.controller.desc.min_spacing_s() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overload_preset_scales_testers_only() {
+        let w = ws_fig6(1);
+        let o = ws_overload(1);
+        assert_eq!(o.testbed.num_testers, 89);
+        assert_eq!(o.controller.stagger_s, w.controller.stagger_s);
+    }
+}

@@ -1,0 +1,57 @@
+//! Shared newtype identifiers.
+//!
+//! Kept in one tiny module so `net`, `cluster`, `services`, `tester` and
+//! `controller` can all speak the same vocabulary without depending on
+//! each other.
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, Default, Eq, Hash, Ord, PartialEq, PartialOrd)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            /// The id as a zero-based index.
+            #[inline]
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!(stringify!($name), "({})"), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A machine in the testbed (tester host, service host, controller,
+    /// time-stamp server).
+    NodeId
+);
+id_type!(
+    /// A tester agent (the paper assigns these 1..=N by start order; we
+    /// keep 0-based indices internally and add 1 when reporting).
+    TesterId
+);
+id_type!(
+    /// One client invocation (one RPC-like call to the target service).
+    RequestId
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_display() {
+        let n = NodeId(7);
+        assert_eq!(n.index(), 7);
+        assert_eq!(format!("{n}"), "NodeId(7)");
+        assert!(TesterId(1) < TesterId(2));
+    }
+}

@@ -1,0 +1,46 @@
+//! # DiPerF — an automated DIstributed PERformance testing framework
+//!
+//! A full reproduction of Dumitrescu, Raicu, Ripeanu & Foster,
+//! *"DiPerF: an automated DIstributed PERformance testing Framework"*
+//! (GRID 2004), as a three-layer rust + JAX/Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the framework itself: controller, tester
+//!   agents, ssh-like control plane, central time-stamp synchronization,
+//!   plus the simulated substrate the paper's testbed requires (WAN
+//!   model, PlanetLab-like node population, the GT3.2 pre-WS/WS GRAM and
+//!   Apache/CGI target services) under a deterministic discrete-event
+//!   engine.
+//! * **Layer 2/1 (python/, build-time only)** — the automated analysis
+//!   pipeline (per-quantum binning, moving averages, polynomial models,
+//!   per-client utilization/fairness) as JAX + Pallas kernels, AOT-
+//!   lowered to HLO text and executed from [`runtime`] via PJRT.  Python
+//!   never runs on the measurement path.
+//!
+//! Start at [`experiment::run_experiment`] with a preset from
+//! [`experiment::presets`], then feed the result to [`analysis`] (native)
+//! or [`runtime`] (XLA) and [`report`].
+
+#![warn(missing_docs)]
+
+pub mod analysis;
+pub mod baseline;
+pub mod bench_util;
+pub mod cli;
+pub mod client;
+pub mod config;
+pub mod cluster;
+pub mod controller;
+pub mod experiment;
+pub mod experiments;
+pub mod ids;
+pub mod metrics;
+pub mod net;
+pub mod predict;
+pub mod report;
+pub mod runtime;
+pub mod services;
+pub mod sim;
+pub mod tester;
+pub mod timesync;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,12 @@
+//! DiPerF command-line entry point (see `diperf help`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match diperf::cli::main(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

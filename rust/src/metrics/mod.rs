@@ -1,0 +1,352 @@
+//! Performance-metric types and aggregation (paper §4 definitions).
+//!
+//! Testers time every client invocation in *local* clock seconds and
+//! stream [`CallSample`]s to the controller; at analysis time the
+//! controller maps them onto the common time base (via each tester's
+//! [`crate::timesync::ClockMap`]) producing [`GlobalSample`]s — the rows
+//! that feed both the native analysis and the AOT-compiled XLA pipeline.
+//!
+//! Metric definitions implemented here and in `analysis`:
+//!  * service response time — request issue to completion, minus the
+//!    tester's network-latency estimate (and minus client execution
+//!    time, which is negligible in the models);
+//!  * service throughput — successful completions per time quantum;
+//!  * offered load — concurrent in-flight requests (time-averaged);
+//!  * service utilization (per client) — own completions / all
+//!    completions while the client was active;
+//!  * service fairness (per client) — completions / utilization.
+
+use crate::ids::{NodeId, TesterId};
+use crate::timesync::ClockMap;
+
+/// Why a client invocation failed (§3's taxonomy, plus success).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum SampleOutcome {
+    /// The call completed successfully.
+    Success,
+    /// Tester-enforced timeout expired (§3 failure #1).
+    Timeout,
+    /// The client executable failed to start locally (§3 failure #2).
+    StartFailure,
+    /// The service refused the request (§3 failure #3).
+    Denied,
+    /// The service accepted and then failed the request (overload).
+    ServiceError,
+}
+
+impl SampleOutcome {
+    /// Successful completion?
+    pub fn ok(self) -> bool {
+        matches!(self, SampleOutcome::Success)
+    }
+}
+
+/// One timed client invocation, in tester-local seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct CallSample {
+    /// Which tester ran the client.
+    pub tester: TesterId,
+    /// Per-tester invocation sequence number.
+    pub seq: u32,
+    /// Local time the client issued the call.
+    pub t_submit_local: f64,
+    /// Local time the call finished (or failed/timed out).
+    pub t_done_local: f64,
+    /// Service response time: wall span minus the tester's network
+    /// latency estimate, clamped at >= 0.
+    pub rt_s: f64,
+    /// Terminal status.
+    pub outcome: SampleOutcome,
+}
+
+/// A sample mapped onto the common (global) time base.
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalSample {
+    /// Source tester.
+    pub tester: TesterId,
+    /// Per-tester invocation sequence number (stable across network
+    /// reordering of the report stream).
+    pub seq: u32,
+    /// Global request-issue time (s).
+    pub t_start: f64,
+    /// Global completion time (s).
+    pub t_end: f64,
+    /// Service response time (s).
+    pub rt: f64,
+    /// Terminal status.
+    pub outcome: SampleOutcome,
+    /// Simulation-truth completion time — exists only because this is a
+    /// simulation; used to validate the clock-sync pipeline, never fed
+    /// to the analysis.
+    pub t_end_true: f64,
+}
+
+/// Per-tester bookkeeping carried into the run record.
+#[derive(Clone, Debug)]
+pub struct TesterRecord {
+    /// Tester id (0-based; the paper's figures use 1-based).
+    pub id: TesterId,
+    /// Node the tester ran on.
+    pub node: NodeId,
+    /// Global time the tester was started (controller-side).
+    pub started_at: f64,
+    /// Global time the tester stopped/was evicted (f64::MAX if running
+    /// at experiment end).
+    pub stopped_at: f64,
+    /// True if the controller evicted it (failures / silence).
+    pub evicted: bool,
+    /// Local->global mapping accumulated from its sync exchanges.
+    pub clock: ClockMap,
+    /// Samples received from this tester.
+    pub samples: u64,
+}
+
+/// Everything a finished experiment hands to analysis/reporting.
+#[derive(Clone, Debug, Default)]
+pub struct RunData {
+    /// Reconciled samples (analysis input).
+    pub samples: Vec<GlobalSample>,
+    /// Per-tester records.
+    pub testers: Vec<TesterRecord>,
+    /// Experiment duration (global seconds, ramp-up to last event).
+    pub duration_s: f64,
+    /// Samples dropped because their tester had no usable clock map.
+    pub dropped_unsynced: u64,
+}
+
+impl RunData {
+    /// Successful completions.
+    pub fn completed(&self) -> usize {
+        self.samples.iter().filter(|s| s.outcome.ok()).count()
+    }
+
+    /// Failed invocations (all taxonomy classes).
+    pub fn failed(&self) -> usize {
+        self.samples.len() - self.completed()
+    }
+
+    /// The peak-concurrency window `[w0, w1]`: the span during which all
+    /// non-evicted testers were running (used for Figures 4/5/7/8).
+    /// Falls back to the middle half of the run when no such window
+    /// exists.
+    pub fn peak_window(&self) -> (f64, f64) {
+        let active: Vec<&TesterRecord> = self
+            .testers
+            .iter()
+            .filter(|t| !t.evicted && t.samples > 0)
+            .collect();
+        if !active.is_empty() {
+            let w0 = active
+                .iter()
+                .map(|t| t.started_at)
+                .fold(f64::MIN, f64::max);
+            let w1 = active
+                .iter()
+                .map(|t| t.stopped_at)
+                .fold(f64::MAX, f64::min);
+            if w1 > w0 {
+                return (w0, w1);
+            }
+        }
+        (self.duration_s * 0.25, self.duration_s * 0.75)
+    }
+
+    /// Mean response time of successful calls.
+    pub fn mean_rt(&self) -> f64 {
+        let (mut sum, mut n) = (0.0, 0u64);
+        for s in &self.samples {
+            if s.outcome.ok() {
+                sum += s.rt;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+/// Streaming aggregate view at the controller ("the service evolution
+/// can be visualized on-line", §3 / Figure 2): completions and failures
+/// in a sliding window, plus an in-flight estimate.
+#[derive(Clone, Debug)]
+pub struct OnlineView {
+    window_s: f64,
+    /// (global completion time, ok) ring; pruned lazily.
+    recent: std::collections::VecDeque<(f64, bool)>,
+    /// Currently running testers (controller's belief).
+    pub active_testers: usize,
+    /// Total samples seen.
+    pub total: u64,
+}
+
+impl OnlineView {
+    /// A view over a sliding window of the given width.
+    pub fn new(window_s: f64) -> OnlineView {
+        OnlineView {
+            window_s,
+            recent: Default::default(),
+            active_testers: 0,
+            total: 0,
+        }
+    }
+
+    /// Feed one reconciled sample (called as reports stream in).
+    pub fn push(&mut self, t_end: f64, ok: bool) {
+        self.total += 1;
+        self.recent.push_back((t_end, ok));
+        let cutoff = t_end - self.window_s;
+        while self.recent.front().is_some_and(|&(t, _)| t < cutoff) {
+            self.recent.pop_front();
+        }
+    }
+
+    /// Completions per minute over the window ending at `now`.
+    pub fn throughput_per_min(&self, now: f64) -> f64 {
+        let cutoff = now - self.window_s;
+        let n = self
+            .recent
+            .iter()
+            .filter(|&&(t, ok)| ok && t >= cutoff)
+            .count();
+        n as f64 * 60.0 / self.window_s
+    }
+
+    /// Failure fraction over the window ending at `now`.
+    pub fn failure_rate(&self, now: f64) -> f64 {
+        let cutoff = now - self.window_s;
+        let (mut fails, mut all) = (0usize, 0usize);
+        for &(t, ok) in &self.recent {
+            if t >= cutoff {
+                all += 1;
+                if !ok {
+                    fails += 1;
+                }
+            }
+        }
+        if all == 0 {
+            0.0
+        } else {
+            fails as f64 / all as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u32, start: f64, stop: f64, evicted: bool) -> TesterRecord {
+        TesterRecord {
+            id: TesterId(id),
+            node: NodeId(id + 3),
+            started_at: start,
+            stopped_at: stop,
+            evicted,
+            clock: ClockMap::new(),
+            samples: 10,
+        }
+    }
+
+    fn gs(t_end: f64, ok: bool) -> GlobalSample {
+        GlobalSample {
+            tester: TesterId(0),
+            seq: 0,
+            t_start: t_end - 1.0,
+            t_end,
+            rt: 1.0,
+            outcome: if ok {
+                SampleOutcome::Success
+            } else {
+                SampleOutcome::Timeout
+            },
+            t_end_true: t_end,
+        }
+    }
+
+    #[test]
+    fn outcome_taxonomy() {
+        assert!(SampleOutcome::Success.ok());
+        for o in [
+            SampleOutcome::Timeout,
+            SampleOutcome::StartFailure,
+            SampleOutcome::Denied,
+            SampleOutcome::ServiceError,
+        ] {
+            assert!(!o.ok());
+        }
+    }
+
+    #[test]
+    fn run_counts() {
+        let rd = RunData {
+            samples: vec![gs(1.0, true), gs(2.0, false), gs(3.0, true)],
+            ..Default::default()
+        };
+        assert_eq!(rd.completed(), 2);
+        assert_eq!(rd.failed(), 1);
+        assert!((rd.mean_rt() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_window_is_all_testers_up() {
+        let rd = RunData {
+            testers: vec![
+                rec(0, 0.0, 100.0, false),
+                rec(1, 25.0, 125.0, false),
+                rec(2, 50.0, 150.0, false),
+            ],
+            duration_s: 150.0,
+            ..Default::default()
+        };
+        let (w0, w1) = rd.peak_window();
+        assert_eq!(w0, 50.0); // last start
+        assert_eq!(w1, 100.0); // first stop
+    }
+
+    #[test]
+    fn peak_window_ignores_evicted() {
+        let rd = RunData {
+            testers: vec![
+                rec(0, 0.0, 100.0, false),
+                rec(1, 90.0, 95.0, true), // evicted: would shrink window
+            ],
+            duration_s: 100.0,
+            ..Default::default()
+        };
+        let (w0, w1) = rd.peak_window();
+        assert_eq!((w0, w1), (0.0, 100.0));
+    }
+
+    #[test]
+    fn peak_window_fallback() {
+        let rd = RunData {
+            duration_s: 100.0,
+            ..Default::default()
+        };
+        assert_eq!(rd.peak_window(), (25.0, 75.0));
+    }
+
+    #[test]
+    fn online_view_throughput() {
+        let mut v = OnlineView::new(60.0);
+        for i in 0..30 {
+            v.push(i as f64, true);
+        }
+        // 30 completions in the last 60 s = 30/min
+        assert!((v.throughput_per_min(30.0) - 30.0).abs() < 1e-9);
+        assert_eq!(v.total, 30);
+    }
+
+    #[test]
+    fn online_view_prunes_and_fails() {
+        let mut v = OnlineView::new(10.0);
+        v.push(0.0, false);
+        v.push(100.0, true); // prunes the first
+        assert_eq!(v.failure_rate(100.0), 0.0);
+        v.push(101.0, false);
+        assert!((v.failure_rate(101.0) - 0.5).abs() < 1e-9);
+    }
+}

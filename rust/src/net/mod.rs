@@ -1,0 +1,285 @@
+//! Wide-area network model.
+//!
+//! Substitutes for the paper's PlanetLab internet paths (DESIGN.md §1).
+//! Each node gets an asymmetric pair of one-way latencies to the network
+//! "core" (client→server latency = sender's uplink + receiver's
+//! downlink), multiplicative jitter per message, a bandwidth for bulk
+//! transfers (client-code distribution), and an optional LAN override
+//! for co-located pairs (the UofC controller / service / time-server
+//! machines in §4).
+//!
+//! Route asymmetry is what bounds clock-sync accuracy (§3.1.2: "in the
+//! worst case — non-symmetrical network routes — the timer can be off by
+//! at most the network latency"), so it is modeled explicitly.
+
+use crate::ids::NodeId;
+use crate::sim::SimDuration;
+use crate::util::dist::{lognormal_median, weighted_index};
+use crate::util::Pcg64;
+
+/// Per-node connectivity profile.
+#[derive(Clone, Debug)]
+pub struct NetProfile {
+    /// One-way latency, node -> core.
+    pub up: SimDuration,
+    /// One-way latency, core -> node.
+    pub down: SimDuration,
+    /// Multiplicative jitter spread (lognormal median-1 spread factor,
+    /// >= 1.0; 1.0 disables jitter).
+    pub jitter: f64,
+    /// Bulk-transfer bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Probability a given message is lost (control plane retries).
+    pub loss: f64,
+}
+
+impl NetProfile {
+    /// A quiet LAN profile (100 Mbps Ethernet, sub-ms latency).
+    pub fn lan() -> NetProfile {
+        NetProfile {
+            up: SimDuration::from_millis(0) + SimDuration(300),
+            down: SimDuration(300),
+            jitter: 1.05,
+            bandwidth: 12.5e6,
+            loss: 0.0,
+        }
+    }
+}
+
+/// The network: per-node profiles, sampled per-message latencies.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    profiles: Vec<NetProfile>,
+}
+
+impl NetModel {
+    /// Build a model from per-node profiles (indexed by [`NodeId`]).
+    pub fn new(profiles: Vec<NetProfile>) -> NetModel {
+        NetModel { profiles }
+    }
+
+    /// Number of nodes the model covers.
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// True when the model covers no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// A node's connectivity profile.
+    pub fn profile(&self, n: NodeId) -> &NetProfile {
+        &self.profiles[n.index()]
+    }
+
+    /// Sample the one-way latency for a message `from -> to`.
+    pub fn latency(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> SimDuration {
+        if from == to {
+            return SimDuration(50); // loopback
+        }
+        let a = &self.profiles[from.index()];
+        let b = &self.profiles[to.index()];
+        let base = a.up + b.down;
+        let jitter = (a.jitter.max(b.jitter)).max(1.0);
+        if jitter <= 1.0 {
+            base
+        } else {
+            base.scale(lognormal_median(rng, 1.0, jitter))
+        }
+    }
+
+    /// Sample whether a message `from -> to` is lost.
+    pub fn lost(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> bool {
+        let p = self.profiles[from.index()].loss + self.profiles[to.index()].loss;
+        p > 0.0 && rng.chance(p)
+    }
+
+    /// Bulk-transfer time for `bytes` from `from` to `to` (scp model:
+    /// one latency round trip + serialization at the slower endpoint).
+    pub fn transfer_time(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+        rng: &mut Pcg64,
+    ) -> SimDuration {
+        let lat = self.latency(from, to, rng) + self.latency(to, from, rng);
+        let bw = self.profiles[from.index()]
+            .bandwidth
+            .min(self.profiles[to.index()].bandwidth)
+            .max(1.0);
+        lat + SimDuration::from_secs_f64(bytes as f64 / bw)
+    }
+}
+
+/// Parameters for synthesizing a PlanetLab-like population.
+///
+/// Calibrated against §3.1.2: "the majority of the clients had a network
+/// latency of less than 80 ms" (to the UofC time server), with a long
+/// tail, and route asymmetry large enough to produce the measured sync
+/// skew (mean 62 ms / median 57 ms / σ 52 ms).
+#[derive(Clone, Debug)]
+pub struct WanParams {
+    /// (weight, min_ms, max_ms) latency bands for the one-way base.
+    pub bands: Vec<(f64, f64, f64)>,
+    /// Lognormal sigma of the up/down asymmetry factor.
+    pub asymmetry_sigma: f64,
+    /// Multiplicative jitter spread.
+    pub jitter: f64,
+    /// Bandwidth range (bytes/s).
+    pub bandwidth: (f64, f64),
+    /// Per-message loss probability range.
+    pub loss: (f64, f64),
+}
+
+impl Default for WanParams {
+    fn default() -> WanParams {
+        WanParams {
+            // one-way bands: 2004-era PlanetLab to a US university
+            bands: vec![
+                (0.55, 5.0, 40.0),   // continental US
+                (0.30, 40.0, 80.0),  // coasts / EU
+                (0.15, 80.0, 350.0), // intercontinental / congested tail
+            ],
+            asymmetry_sigma: 0.9,
+            jitter: 1.12,
+            bandwidth: (0.5e6, 8.0e6),
+            loss: (0.0, 0.002),
+        }
+    }
+}
+
+impl WanParams {
+    /// Sample one WAN node profile.
+    pub fn sample(&self, rng: &mut Pcg64) -> NetProfile {
+        let weights: Vec<f64> = self.bands.iter().map(|b| b.0).collect();
+        let band = self.bands[weighted_index(rng, &weights)];
+        // split the RTT-ish base into asymmetric up/down legs
+        let base_ms = rng.uniform(band.1, band.2);
+        let asym = (self.asymmetry_sigma
+            * crate::util::dist::std_normal(rng))
+        .exp();
+        let up_ms = (base_ms * asym).clamp(0.2, 2_000.0);
+        let down_ms = (base_ms / asym).clamp(0.2, 2_000.0);
+        NetProfile {
+            up: SimDuration::from_secs_f64(up_ms * 1e-3),
+            down: SimDuration::from_secs_f64(down_ms * 1e-3),
+            jitter: self.jitter,
+            bandwidth: rng.uniform(self.bandwidth.0, self.bandwidth.1),
+            loss: rng.uniform(self.loss.0, self.loss.1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, prop};
+    use crate::util::Summary;
+
+    fn two_node_net(up_a: u64, down_a: u64, up_b: u64, down_b: u64) -> NetModel {
+        let mk = |u, d| NetProfile {
+            up: SimDuration::from_millis(u),
+            down: SimDuration::from_millis(d),
+            jitter: 1.0,
+            bandwidth: 1e6,
+            loss: 0.0,
+        };
+        NetModel::new(vec![mk(up_a, down_a), mk(up_b, down_b)])
+    }
+
+    #[test]
+    fn latency_composes_up_and_down() {
+        let net = two_node_net(10, 1, 2, 20);
+        let mut rng = Pcg64::seed_from(1);
+        // a -> b = a.up + b.down = 10 + 20
+        let l = net.latency(NodeId(0), NodeId(1), &mut rng);
+        assert_eq!(l, SimDuration::from_millis(30));
+        // b -> a = b.up + a.down = 2 + 1
+        let l = net.latency(NodeId(1), NodeId(0), &mut rng);
+        assert_eq!(l, SimDuration::from_millis(3));
+    }
+
+    #[test]
+    fn loopback_is_fast() {
+        let net = two_node_net(10, 10, 10, 10);
+        let mut rng = Pcg64::seed_from(2);
+        assert!(net.latency(NodeId(0), NodeId(0), &mut rng)
+            < SimDuration::from_millis(1));
+    }
+
+    #[test]
+    fn jitter_spreads_latency() {
+        let mut net = two_node_net(50, 50, 50, 50);
+        net.profiles[0].jitter = 1.3;
+        let mut rng = Pcg64::seed_from(3);
+        let xs: Vec<f64> = (0..2000)
+            .map(|_| {
+                net.latency(NodeId(0), NodeId(1), &mut rng)
+                    .as_millis_f64()
+            })
+            .collect();
+        let s = Summary::of(&xs);
+        assert!((s.median - 100.0).abs() < 5.0, "median {}", s.median);
+        assert!(s.std > 5.0, "jitter should spread: std {}", s.std);
+        assert!(s.min > 25.0); // lognormal tail can dip below base
+    }
+
+    #[test]
+    fn transfer_time_includes_serialization() {
+        let net = two_node_net(1, 1, 1, 1);
+        let mut rng = Pcg64::seed_from(4);
+        let t = net.transfer_time(NodeId(0), NodeId(1), 1_000_000, &mut rng);
+        // 1 MB at 1 MB/s = 1 s, plus ~4 ms latency
+        assert!(t >= SimDuration::from_secs(1));
+        assert!(t < SimDuration::from_secs_f64(1.1));
+    }
+
+    #[test]
+    fn wan_population_latency_distribution() {
+        // majority of nodes under 80 ms one-way to core — §3.1.2 shape
+        let mut rng = Pcg64::seed_from(5);
+        let params = WanParams::default();
+        let ups: Vec<f64> = (0..2000)
+            .map(|_| params.sample(&mut rng).up.as_millis_f64())
+            .collect();
+        let under_80 = ups.iter().filter(|&&u| u < 80.0).count();
+        assert!(
+            under_80 as f64 > 0.5 * ups.len() as f64,
+            "only {under_80}/2000 under 80ms"
+        );
+        // ...but a real tail exists
+        assert!(ups.iter().any(|&u| u > 150.0));
+    }
+
+    #[test]
+    fn wan_asymmetry_is_material() {
+        let mut rng = Pcg64::seed_from(6);
+        let params = WanParams::default();
+        let errs: Vec<f64> = (0..2000)
+            .map(|_| {
+                let p = params.sample(&mut rng);
+                (p.up.as_millis_f64() - p.down.as_millis_f64()).abs() / 2.0
+            })
+            .collect();
+        let s = Summary::of(&errs);
+        // this is the clock-sync error driver; must be tens of ms
+        assert!(s.mean > 15.0 && s.mean < 200.0, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn loss_respects_probability() {
+        forall(5, |rng| {
+            let mut net = two_node_net(1, 1, 1, 1);
+            net.profiles[0].loss = 0.25;
+            let lost = (0..4000)
+                .filter(|_| net.lost(NodeId(0), NodeId(1), rng))
+                .count();
+            prop(
+                (700..=1400).contains(&lost),
+                &format!("lost {lost}/4000 at p=0.25"),
+            )
+        });
+    }
+}

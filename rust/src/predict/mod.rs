@@ -1,0 +1,196 @@
+//! Empirical performance models (paper §1, §5).
+//!
+//! "Using this data, it is possible to build empirical performance
+//! estimators that link observed service performance (throughput,
+//! response time) to offered load.  These estimates can then be used as
+//! input by a resource scheduler to increase resource utilization while
+//! maintaining desired quality of service levels."
+//!
+//! [`PerfModel::fit`] builds exactly that estimator from the analysis
+//! series: weighted polynomial fits of RT(load) and TPut(load) over the
+//! observed load range, plus the capacity knee.  [`PerfModel::max_load_for_rt`]
+//! answers the scheduler's QoS question.
+
+use crate::analysis::{capacity_knee, AnalysisOutput};
+use crate::util::linalg;
+
+/// Degree used for the load-response surfaces (lower than the time-trend
+/// degree: the load axis is narrower and monotone).
+pub const MODEL_DEGREE: usize = 3;
+
+/// An empirical service-performance model: RT and throughput as
+/// functions of offered load.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    /// RT(load) polynomial (increasing powers over normalized load).
+    pub rt_coef: Vec<f64>,
+    /// TPut(load) polynomial.
+    pub tput_coef: Vec<f64>,
+    /// Load range observed during fitting (predictions clamp to it).
+    pub load_range: (f64, f64),
+    /// Offered load where throughput saturates, if detectable.
+    pub knee: Option<f64>,
+    /// RMS residual of the RT fit (s).
+    pub rt_rms: f64,
+}
+
+impl PerfModel {
+    /// Fit from analysis series (quantum-aligned load/rt/tput, weighted
+    /// by per-quantum completion counts so idle quanta don't distort).
+    pub fn fit(out: &AnalysisOutput) -> PerfModel {
+        let load = &out.load;
+        let (lo, hi) = load_range(load);
+        let xs: Vec<f64> = load.iter().map(|&l| normalize(l, lo, hi)).collect();
+        let w: Vec<f64> = out.tput.clone();
+        let rt_coef = linalg::polyfit(&xs, &out.rt_mean, &w, MODEL_DEGREE);
+        // throughput fit weights: any quantum with offered load
+        let w_t: Vec<f64> = load.iter().map(|&l| if l > 0.0 { 1.0 } else { 0.0 }).collect();
+        let tput_coef = linalg::polyfit(&xs, &out.tput, &w_t, MODEL_DEGREE);
+        // residuals
+        let mut se = 0.0;
+        let mut n = 0.0;
+        for i in 0..load.len() {
+            if w[i] > 0.0 {
+                let e = linalg::polyval(&rt_coef, xs[i]) - out.rt_mean[i];
+                se += w[i] * e * e;
+                n += w[i];
+            }
+        }
+        PerfModel {
+            rt_coef,
+            tput_coef,
+            load_range: (lo, hi),
+            knee: capacity_knee(load, &out.tput, 0.05),
+            rt_rms: (se / n.max(1.0)).sqrt(),
+        }
+    }
+
+    /// Predicted mean response time at `load` (clamped to fitted range).
+    pub fn predict_rt(&self, load: f64) -> f64 {
+        let x = normalize(
+            load.clamp(self.load_range.0, self.load_range.1),
+            self.load_range.0,
+            self.load_range.1,
+        );
+        linalg::polyval(&self.rt_coef, x).max(0.0)
+    }
+
+    /// Predicted throughput (completions/quantum) at `load`.
+    pub fn predict_tput(&self, load: f64) -> f64 {
+        let x = normalize(
+            load.clamp(self.load_range.0, self.load_range.1),
+            self.load_range.0,
+            self.load_range.1,
+        );
+        linalg::polyval(&self.tput_coef, x).max(0.0)
+    }
+
+    /// Largest offered load whose predicted RT stays at or below
+    /// `rt_target` — the scheduler's QoS query.  Scans the fitted range
+    /// (the fit is low-degree; a scan is exact enough and robust to
+    /// non-monotone wiggles).
+    pub fn max_load_for_rt(&self, rt_target: f64) -> Option<f64> {
+        let (lo, hi) = self.load_range;
+        let steps = 512;
+        let mut best = None;
+        for i in 0..=steps {
+            let l = lo + (hi - lo) * i as f64 / steps as f64;
+            if self.predict_rt(l) <= rt_target {
+                best = Some(l);
+            }
+        }
+        best
+    }
+
+    /// Mean relative error of RT predictions against a (load, rt)
+    /// hold-out set — used to validate models across runs (§5 future
+    /// work, implemented).
+    pub fn validation_error(&self, load: &[f64], rt: &[f64], w: &[f64]) -> f64 {
+        let mut err = 0.0;
+        let mut n = 0.0;
+        for i in 0..load.len() {
+            if w[i] > 0.0 && rt[i] > 0.0 {
+                err += w[i] * ((self.predict_rt(load[i]) - rt[i]) / rt[i]).abs();
+                n += w[i];
+            }
+        }
+        err / n.max(1.0)
+    }
+}
+
+fn load_range(load: &[f64]) -> (f64, f64) {
+    let lo = 0.0;
+    let hi = load.iter().cloned().fold(0.0, f64::max).max(1e-6);
+    (lo, hi)
+}
+
+fn normalize(l: f64, lo: f64, hi: f64) -> f64 {
+    2.0 * (l - lo) / (hi - lo).max(1e-9) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic analysis output with rt = 0.5 + 0.1 * load and
+    /// tput = min(load, 30).
+    fn synthetic() -> AnalysisOutput {
+        let q = 128;
+        let mut out = AnalysisOutput::default();
+        for i in 0..q {
+            let load = i as f64 * 0.5;
+            out.load.push(load);
+            out.rt_mean.push(0.5 + 0.1 * load);
+            out.tput.push(load.min(30.0) + 1.0);
+        }
+        out
+    }
+
+    #[test]
+    fn fits_linear_rt_surface() {
+        let m = PerfModel::fit(&synthetic());
+        for load in [5.0, 20.0, 50.0] {
+            let want = 0.5 + 0.1 * load;
+            let got = m.predict_rt(load);
+            assert!(
+                (got - want).abs() < 0.15,
+                "rt({load}) = {got}, want {want}"
+            );
+        }
+        assert!(m.rt_rms < 0.1, "rms {}", m.rt_rms);
+    }
+
+    #[test]
+    fn knee_found_near_saturation() {
+        let m = PerfModel::fit(&synthetic());
+        let knee = m.knee.expect("knee");
+        assert!((knee - 29.0).abs() < 6.0, "knee {knee}");
+    }
+
+    #[test]
+    fn qos_query_inverts_rt() {
+        let m = PerfModel::fit(&synthetic());
+        // rt <= 2.0 -> load <= 15
+        let l = m.max_load_for_rt(2.0).unwrap();
+        assert!((l - 15.0).abs() < 2.0, "load {l}");
+        // unreachable target
+        assert!(m.max_load_for_rt(0.01).is_none());
+    }
+
+    #[test]
+    fn predictions_clamp_to_fitted_range() {
+        let m = PerfModel::fit(&synthetic());
+        let at_max = m.predict_rt(63.5);
+        let beyond = m.predict_rt(1e6);
+        assert_eq!(at_max, beyond);
+    }
+
+    #[test]
+    fn validation_error_small_on_training_data() {
+        let s = synthetic();
+        let m = PerfModel::fit(&s);
+        let w = vec![1.0; s.load.len()];
+        let e = m.validation_error(&s.load, &s.rt_mean, &w);
+        assert!(e < 0.05, "validation error {e}");
+    }
+}

@@ -1,0 +1,418 @@
+//! Reporting: run directories, per-figure CSV series, gnuplot scripts,
+//! and terminal ASCII charts (the paper's Figures 3–8 as data files).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::analysis::AnalysisOutput;
+use crate::metrics::RunData;
+
+/// Timeline series (Figures 3 and 6): one row per quantum.
+pub fn timeline_csv(out: &AnalysisOutput, t0: f64, quantum: f64) -> String {
+    let mut s = String::from(
+        "time_s,load,load_ma,throughput,throughput_ma,rt_mean_s,rt_ma_s\n",
+    );
+    for b in 0..out.tput.len() {
+        let t = t0 + (b as f64 + 0.5) * quantum;
+        let _ = writeln!(
+            s,
+            "{:.1},{:.3},{:.3},{:.3},{:.3},{:.4},{:.4}",
+            t,
+            out.load[b],
+            out.load_ma[b],
+            out.tput[b],
+            out.tput_ma[b],
+            out.rt_mean[b],
+            out.rt_ma[b]
+        );
+    }
+    s
+}
+
+/// Per-machine series (Figures 4/5/7/8): one row per client that ran.
+/// Machine ids are 1-based in start order, matching the paper's x-axis.
+pub fn per_client_csv(out: &AnalysisOutput, rd: &RunData) -> String {
+    let mut s = String::from(
+        "machine_id,completed,utilization,fairness,active_s,avg_load\n",
+    );
+    for (i, t) in rd.testers.iter().enumerate() {
+        if i >= out.completed.len() || t.samples == 0 {
+            continue;
+        }
+        // average aggregate load over the client's active window is
+        // approximated by fairness/active seconds (completions by all /
+        // time), scaled to per-second; the bubble figures use it as the
+        // y-axis
+        let avg_load = if out.active_time[i] > 0.0 {
+            out.fairness[i] / out.active_time[i]
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            s,
+            "{},{:.0},{:.5},{:.1},{:.1},{:.3}",
+            i + 1,
+            out.completed[i],
+            out.util[i],
+            out.fairness[i],
+            out.active_time[i],
+            avg_load
+        );
+    }
+    s
+}
+
+/// Polynomial-model echo (coefficients over normalized time).
+pub fn poly_csv(out: &AnalysisOutput) -> String {
+    let mut s = String::from("series,degree,coefficients\n");
+    for (name, coef) in [
+        ("rt", &out.poly_rt),
+        ("throughput", &out.poly_tput),
+        ("load", &out.poly_load),
+    ] {
+        let cs: Vec<String> =
+            coef.iter().map(|c| format!("{c:.6e}")).collect();
+        let _ = writeln!(s, "{},{},\"{}\"", name, coef.len().saturating_sub(1), cs.join(";"));
+    }
+    s
+}
+
+/// A gnuplot script that renders the timeline CSV like Figure 3/6.
+pub fn timeline_gnuplot(csv_name: &str, title: &str) -> String {
+    format!(
+        "set title '{title}'\n\
+         set datafile separator ','\n\
+         set xlabel 'time (s)'\n\
+         set ylabel 'load / throughput (jobs/quantum)'\n\
+         set y2label 'response time (s)'\n\
+         set y2tics\n\
+         set key outside\n\
+         set term pngcairo size 1100,600\n\
+         set output '{csv_name}.png'\n\
+         plot '{csv_name}' using 1:2 with lines title 'load', \\\n\
+              '{csv_name}' using 1:5 with lines title 'throughput (ma)', \\\n\
+              '{csv_name}' using 1:7 axes x1y2 with lines title 'rt (ma)'\n"
+    )
+}
+
+/// Minimal ASCII chart for terminal output (the controller's "on-line"
+/// view and the examples' summaries).
+pub fn ascii_chart(series: &[f64], width: usize, height: usize, label: &str) -> String {
+    if series.is_empty() || width == 0 || height == 0 {
+        return format!("{label}: (no data)\n");
+    }
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    let min = 0.0f64.min(series.iter().cloned().fold(f64::MAX, f64::min));
+    let span = (max - min).max(1e-12);
+    // resample to width columns
+    let cols: Vec<f64> = (0..width)
+        .map(|c| {
+            let lo = c * series.len() / width;
+            let hi = (((c + 1) * series.len()) / width).max(lo + 1);
+            series[lo..hi.min(series.len())]
+                .iter()
+                .cloned()
+                .fold(f64::MIN, f64::max)
+        })
+        .collect();
+    let mut s = format!("{label} (max {max:.2})\n");
+    for row in (0..height).rev() {
+        let thresh = min + span * (row as f64 + 0.5) / height as f64;
+        for &v in &cols {
+            s.push(if v >= thresh { '█' } else { ' ' });
+        }
+        s.push('\n');
+    }
+    s.push_str(&"-".repeat(width));
+    s.push('\n');
+    s
+}
+
+/// A run directory: writes every figure's data + scripts + a summary.
+pub struct RunDir {
+    /// Directory all artifacts of this run are written into.
+    pub path: PathBuf,
+}
+
+impl RunDir {
+    /// Create (or reuse) a run directory.
+    pub fn create(base: impl AsRef<Path>, name: &str) -> Result<RunDir> {
+        let path = base.as_ref().join(name);
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(RunDir { path })
+    }
+
+    /// Write one named file.
+    pub fn write(&self, name: &str, contents: &str) -> Result<()> {
+        let p = self.path.join(name);
+        let mut f = std::fs::File::create(&p)
+            .with_context(|| format!("creating {}", p.display()))?;
+        f.write_all(contents.as_bytes())?;
+        Ok(())
+    }
+
+    /// Write the full figure set for one experiment.
+    pub fn write_figures(
+        &self,
+        tag: &str,
+        out: &AnalysisOutput,
+        rd: &RunData,
+        t0: f64,
+        quantum: f64,
+    ) -> Result<()> {
+        self.write(&format!("{tag}_timeline.csv"), &timeline_csv(out, t0, quantum))?;
+        self.write(&format!("{tag}_per_client.csv"), &per_client_csv(out, rd))?;
+        self.write(&format!("{tag}_poly.csv"), &poly_csv(out))?;
+        self.write(
+            &format!("{tag}_timeline.gp"),
+            &timeline_gnuplot(&format!("{tag}_timeline.csv"), tag),
+        )?;
+        Ok(())
+    }
+}
+
+/// Markdown row helper for EXPERIMENTS.md-style tables.
+pub fn md_row(cells: &[String]) -> String {
+    format!("| {} |", cells.join(" | "))
+}
+
+/// Raw reconciled samples as CSV (the run's persistent record; the
+/// `analyze`/`predict` subcommands re-load it).
+pub fn samples_csv(rd: &RunData) -> String {
+    let mut s = String::from("tester,seq,t_start,t_end,rt,outcome\n");
+    for x in &rd.samples {
+        let _ = writeln!(
+            s,
+            "{},{},{:.6},{:.6},{:.6},{}",
+            x.tester.0,
+            x.seq,
+            x.t_start,
+            x.t_end,
+            x.rt,
+            outcome_str(x.outcome)
+        );
+    }
+    s
+}
+
+fn outcome_str(o: crate::metrics::SampleOutcome) -> &'static str {
+    use crate::metrics::SampleOutcome as O;
+    match o {
+        O::Success => "ok",
+        O::Timeout => "timeout",
+        O::StartFailure => "start_failure",
+        O::Denied => "denied",
+        O::ServiceError => "service_error",
+    }
+}
+
+fn outcome_from(s: &str) -> Option<crate::metrics::SampleOutcome> {
+    use crate::metrics::SampleOutcome as O;
+    Some(match s {
+        "ok" => O::Success,
+        "timeout" => O::Timeout,
+        "start_failure" => O::StartFailure,
+        "denied" => O::Denied,
+        "service_error" => O::ServiceError,
+        _ => return None,
+    })
+}
+
+/// Parse a samples CSV back into a [`RunData`] (tester records are
+/// reconstructed from the samples; clock maps are not persisted).
+pub fn parse_samples_csv(text: &str) -> Result<RunData> {
+    use crate::ids::{NodeId, TesterId};
+    use crate::metrics::{GlobalSample, TesterRecord};
+    let mut rd = RunData::default();
+    let mut lines = text.lines();
+    let header = lines.next().context("empty samples csv")?;
+    if !header.starts_with("tester,seq,t_start") {
+        anyhow::bail!("unrecognized samples csv header: {header}");
+    }
+    let mut max_tester = 0u32;
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 6 {
+            anyhow::bail!("line {}: expected 6 fields", ln + 2);
+        }
+        let tester: u32 = f[0].parse()?;
+        max_tester = max_tester.max(tester);
+        let t_end: f64 = f[3].parse()?;
+        rd.samples.push(GlobalSample {
+            tester: TesterId(tester),
+            seq: f[1].parse()?,
+            t_start: f[2].parse()?,
+            t_end,
+            rt: f[4].parse()?,
+            outcome: outcome_from(f[5])
+                .with_context(|| format!("line {}: bad outcome", ln + 2))?,
+            t_end_true: f64::NAN,
+        });
+        rd.duration_s = rd.duration_s.max(t_end);
+    }
+    // reconstruct tester records from sample spans
+    for t in 0..=max_tester {
+        let mine: Vec<&GlobalSample> = rd
+            .samples
+            .iter()
+            .filter(|s| s.tester.0 == t)
+            .collect();
+        let (start, stop) = if mine.is_empty() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (
+                mine.iter().map(|s| s.t_start).fold(f64::MAX, f64::min),
+                mine.iter().map(|s| s.t_end).fold(f64::MIN, f64::max),
+            )
+        };
+        rd.testers.push(TesterRecord {
+            id: TesterId(t),
+            node: NodeId(3 + t),
+            started_at: start,
+            stopped_at: stop,
+            evicted: false,
+            clock: crate::timesync::ClockMap::new(),
+            samples: mine.len() as u64,
+        });
+    }
+    Ok(rd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_out() -> AnalysisOutput {
+        AnalysisOutput {
+            load: vec![1.0, 2.0],
+            load_ma: vec![1.0, 2.0],
+            tput: vec![3.0, 4.0],
+            tput_ma: vec![3.0, 4.0],
+            rt_mean: vec![0.5, 0.6],
+            rt_ma: vec![0.5, 0.6],
+            poly_rt: vec![1.0, 2.0],
+            poly_tput: vec![3.0],
+            poly_load: vec![4.0],
+            completed: vec![10.0],
+            util: vec![0.5],
+            fairness: vec![20.0],
+            active_time: vec![40.0],
+            totals: [7.0; 8],
+        }
+    }
+
+    #[test]
+    fn timeline_csv_has_all_quanta() {
+        let csv = timeline_csv(&small_out(), 0.0, 10.0);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("time_s,"));
+        assert!(lines[1].starts_with("5.0,"));
+        assert!(lines[2].starts_with("15.0,"));
+    }
+
+    #[test]
+    fn per_client_csv_is_one_based() {
+        let mut rd = RunData::default();
+        rd.testers.push(crate::metrics::TesterRecord {
+            id: crate::ids::TesterId(0),
+            node: crate::ids::NodeId(3),
+            started_at: 0.0,
+            stopped_at: 100.0,
+            evicted: false,
+            clock: crate::timesync::ClockMap::new(),
+            samples: 10,
+        });
+        let csv = per_client_csv(&small_out(), &rd);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].starts_with("1,10,"));
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let s = ascii_chart(&[0.0, 1.0, 2.0, 3.0], 8, 4, "demo");
+        assert!(s.contains("demo"));
+        assert!(s.contains('█'));
+        // taller bars to the right
+        let rows: Vec<&str> = s.lines().skip(1).take(4).collect();
+        assert!(rows[0].trim_end().len() >= rows[3].trim_end().len() - 8);
+    }
+
+    #[test]
+    fn ascii_chart_empty() {
+        assert!(ascii_chart(&[], 10, 3, "x").contains("no data"));
+    }
+
+    #[test]
+    fn run_dir_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!(
+            "diperf_report_test_{}",
+            std::process::id()
+        ));
+        let rd = RunDir::create(&tmp, "runA").unwrap();
+        rd.write("hello.txt", "world").unwrap();
+        let back =
+            std::fs::read_to_string(rd.path.join("hello.txt")).unwrap();
+        assert_eq!(back, "world");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn samples_csv_roundtrip() {
+        use crate::ids::TesterId;
+        use crate::metrics::{GlobalSample, SampleOutcome};
+        let mut rd = RunData::default();
+        for (i, o) in [
+            SampleOutcome::Success,
+            SampleOutcome::Timeout,
+            SampleOutcome::Denied,
+        ]
+        .iter()
+        .enumerate()
+        {
+            rd.samples.push(GlobalSample {
+                tester: TesterId(i as u32),
+                seq: i as u32,
+                t_start: i as f64,
+                t_end: i as f64 + 1.5,
+                rt: 1.25,
+                outcome: *o,
+                t_end_true: f64::NAN,
+            });
+        }
+        rd.duration_s = 4.5;
+        let csv = samples_csv(&rd);
+        let back = parse_samples_csv(&csv).unwrap();
+        assert_eq!(back.samples.len(), 3);
+        assert_eq!(back.samples[1].outcome, SampleOutcome::Timeout);
+        assert_eq!(back.testers.len(), 3);
+        // duration is reconstructed as the last completion time
+        assert!((back.duration_s - 3.5).abs() < 1e-9);
+        assert!((back.samples[2].t_end - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_samples_csv("").is_err());
+        assert!(parse_samples_csv("wrong,header\n").is_err());
+        assert!(
+            parse_samples_csv("tester,seq,t_start,t_end,rt,outcome\n1,2,3\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn gnuplot_script_references_csv() {
+        let gp = timeline_gnuplot("fig3.csv", "pre-WS GRAM");
+        assert!(gp.contains("fig3.csv"));
+        assert!(gp.contains("pre-WS GRAM"));
+    }
+}

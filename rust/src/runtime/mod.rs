@@ -1,0 +1,309 @@
+//! PJRT runtime: loads the AOT-compiled analysis artifacts and runs
+//! DiPerF's automated analysis on them — Python never touches the
+//! measurement path.
+//!
+//! `make artifacts` lowers `python/compile/model.py` once per sample-
+//! capacity variant to HLO *text* (see aot.py for why text, not
+//! serialized protos); this module discovers the variants through
+//! `artifacts/manifest.txt` (a plain `key=value` format — the
+//! environment has no serde), compiles each lazily on the PJRT CPU
+//! client, caches the executable, and marshals
+//! [`AnalysisInput`]/[`AnalysisOutput`] across the boundary.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::{AnalysisInput, AnalysisOutput};
+
+/// One lowered variant of the analysis computation.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// Variant name (e.g. `analyze_s16384`).
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Padded sample capacity S.
+    pub samples: usize,
+    /// Number of time quanta Q.
+    pub quanta: usize,
+    /// Client capacity C.
+    pub clients: usize,
+    /// Polynomial degree D.
+    pub degree: usize,
+    /// Length of the packed scalar-parameter vector.
+    pub params: usize,
+}
+
+/// Sorted output order of the AOT tuple (must match model.OUTPUT_NAMES).
+const OUTPUT_NAMES: [&str; 14] = [
+    "active_time",
+    "completed",
+    "fairness",
+    "load",
+    "load_ma",
+    "poly_load",
+    "poly_rt",
+    "poly_tput",
+    "rt_ma",
+    "rt_mean",
+    "totals",
+    "tput",
+    "tput_ma",
+    "util",
+];
+
+/// Parse `artifacts/manifest.txt`.
+pub fn parse_manifest(text: &str) -> Result<Vec<Variant>> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().context("empty manifest")?;
+    if header.trim() != "format=1" {
+        bail!("unsupported manifest format: {header}");
+    }
+    let mut variants = Vec::new();
+    for line in lines {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("variant ") else {
+            bail!("unexpected manifest line: {line}");
+        };
+        let mut v = Variant {
+            name: String::new(),
+            file: String::new(),
+            samples: 0,
+            quanta: 0,
+            clients: 0,
+            degree: 0,
+            params: 0,
+        };
+        let mut outputs_ok = false;
+        for tok in rest.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .with_context(|| format!("bad token {tok}"))?;
+            match key {
+                "name" => v.name = val.to_string(),
+                "file" => v.file = val.to_string(),
+                "samples" => v.samples = val.parse()?,
+                "quanta" => v.quanta = val.parse()?,
+                "clients" => v.clients = val.parse()?,
+                "degree" => v.degree = val.parse()?,
+                "params" => v.params = val.parse()?,
+                "outputs" => {
+                    // sanity-check name order matches our unpacker
+                    let names: Vec<&str> = val
+                        .split(';')
+                        .map(|o| o.split(':').next().unwrap_or(""))
+                        .collect();
+                    if names != OUTPUT_NAMES {
+                        bail!(
+                            "artifact output order {names:?} does not match \
+                             the runtime unpacker — rebuild artifacts"
+                        );
+                    }
+                    outputs_ok = true;
+                }
+                _ => {} // forward-compatible: ignore unknown keys
+            }
+        }
+        if v.name.is_empty() || v.samples == 0 || !outputs_ok {
+            bail!("incomplete variant line: {line}");
+        }
+        variants.push(v);
+    }
+    variants.sort_by_key(|v| v.samples);
+    Ok(variants)
+}
+
+struct Compiled {
+    variant: Variant,
+    exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// The analysis runtime: PJRT client + lazily-compiled variants.
+pub struct XlaAnalyzer {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    slots: Vec<Compiled>,
+}
+
+impl XlaAnalyzer {
+    /// Discover artifacts in `dir` and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaAnalyzer> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.txt — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let variants = parse_manifest(&manifest)?;
+        if variants.is_empty() {
+            bail!("manifest lists no variants");
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaAnalyzer {
+            client,
+            dir,
+            slots: variants
+                .into_iter()
+                .map(|variant| Compiled { variant, exe: None })
+                .collect(),
+        })
+    }
+
+    /// The available variants (ascending capacity).
+    pub fn variants(&self) -> Vec<Variant> {
+        self.slots.iter().map(|s| s.variant.clone()).collect()
+    }
+
+    /// Pick the smallest variant holding `n` samples.
+    pub fn pick(&self, n: usize) -> Result<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.variant.samples >= n)
+            .with_context(|| {
+                format!(
+                    "no artifact variant holds {n} samples (max {})",
+                    self.slots.last().map_or(0, |s| s.variant.samples)
+                )
+            })
+    }
+
+    fn ensure_compiled(&mut self, idx: usize) -> Result<()> {
+        if self.slots[idx].exe.is_some() {
+            return Ok(());
+        }
+        let path = self.dir.join(&self.slots[idx].variant.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.slots[idx].exe = Some(exe);
+        Ok(())
+    }
+
+    /// Run the analysis on the XLA path.  Pads the input to the chosen
+    /// variant's capacity; panics on capacity overflow (callers check
+    /// via [`pick`](Self::pick)).
+    pub fn analyze(&mut self, inp: &AnalysisInput) -> Result<AnalysisOutput> {
+        let idx = self.pick(inp.len())?;
+        self.ensure_compiled(idx)?;
+        let v = self.slots[idx].variant.clone();
+        let mut padded = inp.clone();
+        padded.pad_to(v.samples);
+
+        let mut params = vec![0f32; v.params];
+        params[0] = inp.t0;
+        params[1] = inp.quantum;
+        params[2] = inp.half_window;
+        params[3] = inp.w0;
+        params[4] = inp.w1;
+        params[5] = inp.duration;
+
+        let lits = [
+            xla::Literal::vec1(&padded.t_start),
+            xla::Literal::vec1(&padded.t_end),
+            xla::Literal::vec1(&padded.rt),
+            xla::Literal::vec1(&padded.ok),
+            xla::Literal::vec1(&padded.valid),
+            xla::Literal::vec1(&padded.client_id),
+            xla::Literal::vec1(&params),
+        ];
+        let exe = self.slots[idx].exe.as_ref().expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != OUTPUT_NAMES.len() {
+            bail!(
+                "artifact returned {} outputs, expected {}",
+                outs.len(),
+                OUTPUT_NAMES.len()
+            );
+        }
+        let col = |i: usize| -> Result<Vec<f64>> {
+            Ok(outs[i]
+                .to_vec::<f32>()?
+                .into_iter()
+                .map(|x| x as f64)
+                .collect())
+        };
+        let totals_v = col(10)?;
+        let mut totals = [0.0; 8];
+        totals.copy_from_slice(&totals_v[..8]);
+        Ok(AnalysisOutput {
+            active_time: col(0)?,
+            completed: col(1)?,
+            fairness: col(2)?,
+            load: col(3)?,
+            load_ma: col(4)?,
+            poly_load: col(5)?,
+            poly_rt: col(6)?,
+            poly_tput: col(7)?,
+            rt_ma: col(8)?,
+            rt_mean: col(9)?,
+            totals,
+            tput: col(11)?,
+            tput_ma: col(12)?,
+            util: col(13)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = "format=1\n\
+        variant name=analyze_s16384 file=analyze_s16384.hlo.txt \
+        samples=16384 quanta=512 clients=128 degree=6 params=8 \
+        outputs=active_time:128;completed:128;fairness:128;load:512;\
+        load_ma:512;poly_load:7;poly_rt:7;poly_tput:7;rt_ma:512;\
+        rt_mean:512;totals:8;tput:512;tput_ma:512;util:128\n";
+
+    #[test]
+    fn manifest_parses() {
+        let vs = parse_manifest(MANIFEST).unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].name, "analyze_s16384");
+        assert_eq!(vs[0].samples, 16384);
+        assert_eq!(vs[0].quanta, 512);
+        assert_eq!(vs[0].clients, 128);
+        assert_eq!(vs[0].params, 8);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        assert!(parse_manifest("format=2\n").is_err());
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("format=1\ngarbage line\n").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_output_order() {
+        let bad = MANIFEST.replace("active_time:128;completed:128",
+                                   "completed:128;active_time:128");
+        assert!(parse_manifest(&bad).is_err());
+    }
+
+    #[test]
+    fn variants_sorted_by_capacity() {
+        let two = format!(
+            "format=1\n\
+             variant name=b file=b.hlo.txt samples=65536 quanta=512 \
+             clients=128 degree=6 params=8 outputs={o}\n\
+             variant name=a file=a.hlo.txt samples=16384 quanta=512 \
+             clients=128 degree=6 params=8 outputs={o}\n",
+            o = "active_time:1;completed:1;fairness:1;load:1;load_ma:1;\
+                 poly_load:1;poly_rt:1;poly_tput:1;rt_ma:1;rt_mean:1;\
+                 totals:1;tput:1;tput_ma:1;util:1"
+                .replace(' ', "")
+                .replace('\n', "")
+        );
+        let vs = parse_manifest(&two).unwrap();
+        assert_eq!(vs[0].samples, 16384);
+        assert_eq!(vs[1].samples, 65536);
+    }
+}

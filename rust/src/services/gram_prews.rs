@@ -1,0 +1,345 @@
+//! GT3.2 pre-WS GRAM model (§3.2, §4.1).
+//!
+//! The real service: a gatekeeper authenticates the user (mutual
+//! authentication round trips), forks a job-manager process as the local
+//! user, the job manager runs the job through the fork interface and
+//! keeps an HTTPS status channel.  The paper's measurements pin down its
+//! behaviour precisely:
+//!
+//!   * CPU-bound (> 90 % CPU during sequential requests); per-job cost
+//!     stays ~720 ms regardless of concurrency — i.e. a processor-
+//!     sharing CPU is the right queueing model;
+//!   * sequential response time ≈ 700 ms;
+//!   * response time grows slowly up to ≈ 33 concurrent clients, then
+//!     "fluctuates significantly and increases at a faster rate";
+//!   * heavy-load (89 clients) response time ≈ 35 s.
+//!
+//! Model: a two-stage pipeline.  Stage 1 (protocol) is a fixed
+//! non-shared delay — the authentication round trips and channel setup,
+//! which overlap freely across requests.  Stage 2 (gatekeeper + job
+//! manager + job) is CPU demand on the shared PS core.  Past
+//! `thrash_threshold` concurrent jobs, per-job demand inflates linearly
+//! (`thrash_factor` per excess job): process-table pressure and context
+//! switching — this reproduces the super-linear response-time growth and
+//! the fluctuation onset the paper reports at ~33 clients.
+
+use super::ps::PsQueue;
+use super::{Outcome, Service, ServiceStats, SvcOut};
+use crate::ids::RequestId;
+use crate::sim::{SimDuration, SimTime};
+use crate::util::dist::lognormal_median;
+use crate::util::Pcg64;
+
+/// Calibration knobs (defaults reproduce the paper's §4.1 signature on a
+/// speed-1.0 host; see EXPERIMENTS.md E1 for the calibration run).
+#[derive(Clone, Debug)]
+pub struct GramPrewsParams {
+    /// Median per-job CPU demand (dedicated seconds).
+    pub cpu_demand_s: f64,
+    /// Lognormal spread of the demand (>= 1).
+    pub demand_spread: f64,
+    /// Fixed protocol delay (auth round trips, channel setup).
+    pub protocol_delay_s: f64,
+    /// Concurrency beyond which demand inflates (the ~33-client knee).
+    pub thrash_threshold: usize,
+    /// Fractional demand inflation per job beyond the threshold.
+    pub thrash_factor: f64,
+    /// Probability the gatekeeper denies a request outright.
+    pub deny_prob: f64,
+    /// Host CPU speed (1.0 = the paper's AMD K7 2.16 GHz).
+    pub speed: f64,
+}
+
+impl Default for GramPrewsParams {
+    fn default() -> GramPrewsParams {
+        GramPrewsParams {
+            cpu_demand_s: 0.42,
+            demand_spread: 1.25,
+            protocol_delay_s: 0.28,
+            thrash_threshold: 33,
+            thrash_factor: 0.002,
+            deny_prob: 0.0005,
+            speed: 1.0,
+        }
+    }
+}
+
+/// The pre-WS GRAM service model.
+pub struct GramPrews {
+    params: GramPrewsParams,
+    /// Stage-1 (protocol) holding area: (ready_at, req, demand).
+    handshake: Vec<(SimTime, RequestId, f64)>,
+    /// Stage-2 shared CPU.
+    cpu: PsQueue,
+    stats: ServiceStats,
+}
+
+impl GramPrews {
+    /// Build the service with the given calibration.
+    pub fn new(params: GramPrewsParams) -> GramPrews {
+        let speed = params.speed;
+        GramPrews {
+            params,
+            handshake: Vec::new(),
+            cpu: PsQueue::new(speed),
+            stats: ServiceStats::default(),
+        }
+    }
+
+}
+
+fn extract_if_ready(
+    v: &mut Vec<(SimTime, RequestId, f64)>,
+    now: SimTime,
+) -> Vec<(SimTime, RequestId, f64)> {
+    let mut ready = Vec::new();
+    let mut i = 0;
+    while i < v.len() {
+        if v[i].0 <= now {
+            ready.push(v.remove(i));
+        } else {
+            i += 1;
+        }
+    }
+    ready
+}
+
+impl Service for GramPrews {
+    fn name(&self) -> &'static str {
+        "gt3.2-prews-gram"
+    }
+
+    fn submit(
+        &mut self,
+        now: SimTime,
+        req: RequestId,
+        _client: u32,
+        rng: &mut Pcg64,
+    ) -> Vec<SvcOut> {
+        self.stats.submitted += 1;
+        let mut out = self.drive(now);
+        if rng.chance(self.params.deny_prob) {
+            self.stats.denied += 1;
+            out.push(SvcOut::Done {
+                req,
+                outcome: Outcome::Denied,
+                at: now,
+            });
+            return out;
+        }
+        // demand is drawn at admission; thrash inflation reflects the
+        // concurrency the job will face (approximation: sampled once)
+        let n = self.in_flight();
+        let excess = n.saturating_sub(self.params.thrash_threshold) as f64;
+        let inflate = 1.0 + self.params.thrash_factor * excess;
+        let demand =
+            lognormal_median(rng, self.params.cpu_demand_s, self.params.demand_spread)
+                * inflate;
+        let ready = now + SimDuration::from_secs_f64(self.params.protocol_delay_s);
+        self.handshake.push((ready, req, demand));
+        out.push(SvcOut::Wake { at: ready });
+        out
+    }
+
+    fn on_wake(&mut self, now: SimTime, _rng: &mut Pcg64) -> Vec<SvcOut> {
+        self.drive(now)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.handshake.len() + self.cpu.len()
+    }
+
+    fn stats(&self) -> ServiceStats {
+        self.stats
+    }
+}
+
+impl GramPrews {
+    /// Advance both stages to `now`; emit completions and the next wake.
+    fn drive(&mut self, now: SimTime) -> Vec<SvcOut> {
+        let mut out = Vec::new();
+        // CPU completions up to now
+        for (req, at) in self.cpu.advance(now) {
+            self.stats.completed += 1;
+            out.push(SvcOut::Done {
+                req,
+                outcome: Outcome::Success,
+                at,
+            });
+        }
+        // protocol stage -> CPU
+        for (_, req, demand) in extract_if_ready(&mut self.handshake, now) {
+            self.cpu.push(now, req, demand);
+        }
+        // next wake: earliest of protocol-ready or CPU completion
+        let mut wake: Option<SimTime> = self.cpu.next_completion();
+        for &(ready, _, _) in &self.handshake {
+            wake = Some(wake.map_or(ready, |w| w.min(ready)));
+        }
+        if let Some(at) = wake {
+            out.push(SvcOut::Wake { at });
+        }
+        out
+    }
+
+    /// CPU busy-seconds so far (utilization reporting).
+    pub fn busy_seconds(&self) -> f64 {
+        self.cpu.busy_seconds()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::services::stats_conserved;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    /// Drive the service directly (no network): submit `n` concurrent
+    /// requests at t=0, run wakes until all complete; return RTs.
+    fn run_concurrent(n: usize, params: GramPrewsParams) -> Vec<f64> {
+        let mut svc = GramPrews::new(params);
+        let mut rng = Pcg64::seed_from(42);
+        let mut events: std::collections::BinaryHeap<std::cmp::Reverse<u64>> =
+            Default::default();
+        let mut rts = vec![f64::NAN; n];
+        let mut done = 0;
+        for i in 0..n {
+            for o in svc.submit(t(0.0), RequestId(i as u32), i as u32, &mut rng)
+            {
+                match o {
+                    SvcOut::Wake { at } => {
+                        events.push(std::cmp::Reverse(at.as_micros()))
+                    }
+                    SvcOut::Done { req, outcome, at } => {
+                        assert!(outcome == Outcome::Denied || outcome.ok());
+                        if outcome.ok() {
+                            rts[req.index()] = at.as_secs_f64();
+                        }
+                        done += 1;
+                    }
+                }
+            }
+        }
+        while done < n {
+            let at = SimTime(events.pop().expect("stuck").0);
+            for o in svc.on_wake(at, &mut rng) {
+                match o {
+                    SvcOut::Wake { at } => {
+                        events.push(std::cmp::Reverse(at.as_micros()))
+                    }
+                    SvcOut::Done { req, outcome, at } => {
+                        if outcome.ok() {
+                            rts[req.index()] = at.as_secs_f64();
+                        }
+                        done += 1;
+                    }
+                }
+            }
+        }
+        assert!(stats_conserved(&svc.stats(), svc.in_flight()));
+        rts
+    }
+
+    fn no_jitter() -> GramPrewsParams {
+        GramPrewsParams {
+            demand_spread: 1.0 + 1e-9,
+            deny_prob: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sequential_response_time_is_700ms() {
+        let rts = run_concurrent(1, no_jitter());
+        assert!((rts[0] - 0.7).abs() < 0.02, "rt {}", rts[0]);
+    }
+
+    #[test]
+    fn response_time_grows_linearly_below_knee() {
+        let rt10 = run_concurrent(10, no_jitter());
+        let worst = rt10.iter().cloned().fold(0.0, f64::max);
+        // 10 jobs sharing: last completion ~ 10 * 0.42 + 0.28 = 4.48
+        assert!((worst - 4.48).abs() < 0.3, "worst {worst}");
+    }
+
+    #[test]
+    fn thrash_inflates_past_knee() {
+        let with_thrash = run_concurrent(
+            60,
+            GramPrewsParams {
+                thrash_factor: 0.02,
+                ..no_jitter()
+            },
+        );
+        let without = run_concurrent(
+            60,
+            GramPrewsParams {
+                thrash_factor: 0.0,
+                ..no_jitter()
+            },
+        );
+        let w = with_thrash.iter().cloned().fold(0.0, f64::max);
+        let wo = without.iter().cloned().fold(0.0, f64::max);
+        assert!(w > wo * 1.05, "thrash {w} vs clean {wo}");
+    }
+
+    #[test]
+    fn heavy_load_rt_near_paper_35s() {
+        let rt89 = run_concurrent(89, no_jitter());
+        let worst = rt89.iter().cloned().fold(0.0, f64::max);
+        // paper: ~35 s under 89 concurrent clients; same order required
+        assert!(
+            (25.0..80.0).contains(&worst),
+            "89-client worst-case rt {worst}"
+        );
+    }
+
+    #[test]
+    fn per_job_cpu_cost_constant_under_load() {
+        // the paper's signature: total busy time == jobs x per-job cost
+        let mut svc = GramPrews::new(no_jitter());
+        let mut rng = Pcg64::seed_from(1);
+        let mut wakes = std::collections::BinaryHeap::new();
+        for i in 0..20u32 {
+            for o in svc.submit(t(0.0), RequestId(i), i, &mut rng) {
+                if let SvcOut::Wake { at } = o {
+                    wakes.push(std::cmp::Reverse(at.as_micros()));
+                }
+            }
+        }
+        while let Some(std::cmp::Reverse(us)) = wakes.pop() {
+            for o in svc.on_wake(SimTime(us), &mut rng) {
+                if let SvcOut::Wake { at } = o {
+                    wakes.push(std::cmp::Reverse(at.as_micros()));
+                }
+            }
+        }
+        assert_eq!(svc.stats().completed, 20);
+        let per_job = svc.busy_seconds() / 20.0;
+        assert!((per_job - 0.42).abs() < 0.03, "per-job {per_job}");
+    }
+
+    #[test]
+    fn denials_respect_probability() {
+        let params = GramPrewsParams {
+            deny_prob: 0.5,
+            ..no_jitter()
+        };
+        let mut svc = GramPrews::new(params);
+        let mut rng = Pcg64::seed_from(2);
+        let mut denied = 0;
+        for i in 0..200u32 {
+            for o in svc.submit(t(i as f64), RequestId(i), i, &mut rng) {
+                if let SvcOut::Done { outcome, .. } = o {
+                    if outcome == Outcome::Denied {
+                        denied += 1;
+                    }
+                }
+            }
+        }
+        assert!((60..140).contains(&denied), "denied {denied}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Apache HTTP + CGI model (§4.3).
+//!
+//! The paper's fine-granularity sanity check: a default-configuration
+//! Apache serving a CGI script, driven by `wget`.  Requests cost a few
+//! milliseconds of CPU (fork + exec of the CGI) on the shared PS core
+//! plus a tiny fixed parse/connect overhead, and Apache's worker limit
+//! denies connections beyond `max_concurrent` (HTTP 503-style), which
+//! is what the 125-client experiment saturates.
+
+use super::ps::PsQueue;
+use super::{Outcome, Service, ServiceStats, SvcOut};
+use crate::ids::RequestId;
+use crate::sim::{SimDuration, SimTime};
+use crate::util::dist::lognormal_median;
+use crate::util::Pcg64;
+
+/// Calibration knobs.
+#[derive(Clone, Debug)]
+pub struct HttpParams {
+    /// Median CGI CPU demand (seconds).
+    pub cgi_demand_s: f64,
+    /// Lognormal spread.
+    pub demand_spread: f64,
+    /// Fixed parse/connect delay.
+    pub overhead_s: f64,
+    /// Apache worker/connection cap (default config: 150 workers).
+    pub max_concurrent: usize,
+    /// Host CPU speed.
+    pub speed: f64,
+}
+
+impl Default for HttpParams {
+    fn default() -> HttpParams {
+        HttpParams {
+            cgi_demand_s: 0.020,
+            demand_spread: 1.15,
+            overhead_s: 0.003,
+            max_concurrent: 150,
+            speed: 1.0,
+        }
+    }
+}
+
+/// The Apache + CGI service model.
+pub struct HttpService {
+    params: HttpParams,
+    pending: Vec<(SimTime, RequestId, f64)>,
+    cpu: PsQueue,
+    stats: ServiceStats,
+}
+
+impl HttpService {
+    /// Build the service with the given calibration.
+    pub fn new(params: HttpParams) -> HttpService {
+        let speed = params.speed;
+        HttpService {
+            params,
+            pending: Vec::new(),
+            cpu: PsQueue::new(speed),
+            stats: ServiceStats::default(),
+        }
+    }
+
+    /// CPU busy-seconds so far.
+    pub fn busy_seconds(&self) -> f64 {
+        self.cpu.busy_seconds()
+    }
+
+    fn drive(&mut self, now: SimTime) -> Vec<SvcOut> {
+        let mut out = Vec::new();
+        for (req, at) in self.cpu.advance(now) {
+            self.stats.completed += 1;
+            out.push(SvcOut::Done {
+                req,
+                outcome: Outcome::Success,
+                at,
+            });
+        }
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].0 <= now {
+                let (_, req, demand) = self.pending.remove(i);
+                self.cpu.push(now, req, demand);
+            } else {
+                i += 1;
+            }
+        }
+        let mut wake: Option<SimTime> = self.cpu.next_completion();
+        for &(at, _, _) in &self.pending {
+            wake = Some(wake.map_or(at, |w| w.min(at)));
+        }
+        if let Some(at) = wake {
+            out.push(SvcOut::Wake { at });
+        }
+        out
+    }
+}
+
+impl Service for HttpService {
+    fn name(&self) -> &'static str {
+        "apache-cgi"
+    }
+
+    fn submit(
+        &mut self,
+        now: SimTime,
+        req: RequestId,
+        _client: u32,
+        rng: &mut Pcg64,
+    ) -> Vec<SvcOut> {
+        self.stats.submitted += 1;
+        let mut out = self.drive(now);
+        if self.in_flight() >= self.params.max_concurrent {
+            self.stats.denied += 1;
+            out.push(SvcOut::Done {
+                req,
+                outcome: Outcome::Denied,
+                at: now,
+            });
+            return out;
+        }
+        let demand = lognormal_median(
+            rng,
+            self.params.cgi_demand_s,
+            self.params.demand_spread,
+        );
+        let ready = now + SimDuration::from_secs_f64(self.params.overhead_s);
+        self.pending.push((ready, req, demand));
+        out.push(SvcOut::Wake { at: ready });
+        out
+    }
+
+    fn on_wake(&mut self, now: SimTime, _rng: &mut Pcg64) -> Vec<SvcOut> {
+        self.drive(now)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len() + self.cpu.len()
+    }
+
+    fn stats(&self) -> ServiceStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::services::stats_conserved;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    fn drain(svc: &mut HttpService, rng: &mut Pcg64) -> Vec<(RequestId, Outcome, f64)> {
+        let mut wakes = std::collections::BinaryHeap::new();
+        let mut done = Vec::new();
+        // seed with one wake far out to kick the loop if needed
+        if let Some(w) = svc.cpu.next_completion() {
+            wakes.push(std::cmp::Reverse(w.as_micros()));
+        }
+        for &(at, _, _) in &svc.pending {
+            wakes.push(std::cmp::Reverse(at.as_micros()));
+        }
+        while let Some(std::cmp::Reverse(us)) = wakes.pop() {
+            for o in svc.on_wake(SimTime(us), rng) {
+                match o {
+                    SvcOut::Wake { at } => {
+                        wakes.push(std::cmp::Reverse(at.as_micros()))
+                    }
+                    SvcOut::Done { req, outcome, at } => {
+                        done.push((req, outcome, at.as_secs_f64()))
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    #[test]
+    fn single_request_is_milliseconds() {
+        let mut svc = HttpService::new(HttpParams {
+            demand_spread: 1.0 + 1e-9,
+            ..Default::default()
+        });
+        let mut rng = Pcg64::seed_from(1);
+        svc.submit(t(0.0), RequestId(0), 0, &mut rng);
+        let done = drain(&mut svc, &mut rng);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].1.ok());
+        // 3 ms overhead + 20 ms CGI
+        assert!((done[0].2 - 0.023).abs() < 0.002, "rt {}", done[0].2);
+    }
+
+    #[test]
+    fn worker_cap_denies_excess() {
+        let params = HttpParams {
+            max_concurrent: 10,
+            demand_spread: 1.0 + 1e-9,
+            ..Default::default()
+        };
+        let mut svc = HttpService::new(params);
+        let mut rng = Pcg64::seed_from(2);
+        let mut denied = 0;
+        for i in 0..25u32 {
+            for o in svc.submit(t(0.0), RequestId(i), i, &mut rng) {
+                if let SvcOut::Done { outcome, .. } = o {
+                    if outcome == Outcome::Denied {
+                        denied += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(denied, 15);
+        assert!(stats_conserved(&svc.stats(), svc.in_flight()));
+        let done = drain(&mut svc, &mut rng);
+        assert_eq!(done.len(), 10);
+    }
+
+    #[test]
+    fn capacity_is_cpu_bound() {
+        // 20 ms/job -> ~50 jobs/s capacity; 100 concurrent jobs should
+        // all finish in ~2 s of virtual time
+        let mut svc = HttpService::new(HttpParams {
+            demand_spread: 1.0 + 1e-9,
+            ..Default::default()
+        });
+        let mut rng = Pcg64::seed_from(3);
+        for i in 0..100u32 {
+            svc.submit(t(0.0), RequestId(i), i, &mut rng);
+        }
+        let done = drain(&mut svc, &mut rng);
+        assert_eq!(done.len(), 100);
+        let last = done.iter().map(|d| d.2).fold(0.0, f64::max);
+        assert!((1.8..2.4).contains(&last), "drain time {last}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Simulated target services (DESIGN.md §1 substitution table).
+//!
+//! The paper evaluates DiPerF against three real services — GT3.2
+//! pre-WS GRAM, GT3.2 WS GRAM, and an Apache HTTP/CGI server — none of
+//! which can exist in this environment.  Each is rebuilt here as a
+//! queueing-model service over the shared [`ps::PsQueue`] processor-
+//! sharing core, calibrated to the paper's measured signatures (base
+//! response time, capacity knee, overload behaviour).
+//!
+//! The interface is event-driven to fit the DES: a service receives
+//! `submit` / `on_wake` calls and returns [`SvcOut`] actions; it never
+//! schedules events itself (the experiment world owns the engine).
+//! Completion times under processor sharing change whenever concurrency
+//! changes, so services report *wake requests* for the earliest next
+//! completion instead of promising completion times up front; stale
+//! wakes are harmless no-ops.
+
+pub mod gram_prews;
+pub mod gram_ws;
+pub mod http;
+pub mod ps;
+
+use crate::ids::RequestId;
+use crate::sim::SimTime;
+use crate::util::Pcg64;
+
+/// Terminal result of one request, from the service's point of view.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum Outcome {
+    /// Request served successfully.
+    Success,
+    /// Admission rejected ("service denied" in the §3 failure taxonomy).
+    Denied,
+    /// Request was accepted but the service failed it (overload stall,
+    /// internal error).
+    Error,
+}
+
+impl Outcome {
+    /// Did the request complete successfully?
+    pub fn ok(self) -> bool {
+        matches!(self, Outcome::Success)
+    }
+}
+
+/// Action returned by a service to the experiment world.
+#[derive(Clone, Copy, Debug)]
+pub enum SvcOut {
+    /// Request `req` reached a terminal state at time `at` (<= now; the
+    /// response still has to travel back to the client over the WAN).
+    Done {
+        /// The finished request.
+        req: RequestId,
+        /// Its terminal outcome.
+        outcome: Outcome,
+        /// Exact completion time (== the current event time in all but
+        /// degenerate rounding cases).
+        at: SimTime,
+    },
+    /// Ask the world to call `on_wake` at `at` (earliest possible next
+    /// completion).  Superseded wakes fire harmlessly.
+    Wake {
+        /// When to wake the service.
+        at: SimTime,
+    },
+}
+
+/// Counters every service maintains (world-visible for reports/benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests offered to the service.
+    pub submitted: u64,
+    /// Requests finished with [`Outcome::Success`].
+    pub completed: u64,
+    /// Requests refused admission.
+    pub denied: u64,
+    /// Requests accepted but failed.
+    pub errored: u64,
+}
+
+/// An RPC-style target service under test.
+pub trait Service {
+    /// Human-readable service name (used in reports).
+    fn name(&self) -> &'static str;
+
+    /// A request from `client` arrives at the service at time `now`.
+    /// (`client` matters to services with per-user state — WS GRAM's
+    /// User Hosting Environments are launched per submitting user.)
+    fn submit(
+        &mut self,
+        now: SimTime,
+        req: RequestId,
+        client: u32,
+        rng: &mut Pcg64,
+    ) -> Vec<SvcOut>;
+
+    /// A previously requested wake fires.
+    fn on_wake(&mut self, now: SimTime, rng: &mut Pcg64) -> Vec<SvcOut>;
+
+    /// Requests currently inside the service.
+    fn in_flight(&self) -> usize;
+
+    /// Lifetime counters.
+    fn stats(&self) -> ServiceStats;
+
+    /// Overload stalls entered so far (0 for services that cannot stall).
+    fn stalls(&self) -> u64 {
+        0
+    }
+}
+
+/// Sanity check used by tests and the world: every submitted request is
+/// accounted for exactly once.
+pub fn stats_conserved(s: &ServiceStats, in_flight: usize) -> bool {
+    s.submitted == s.completed + s.denied + s.errored + in_flight as u64
+}

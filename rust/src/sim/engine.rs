@@ -1,0 +1,229 @@
+//! Discrete-event simulation engine.
+//!
+//! A min-heap of `(time, seq)`-ordered events over a user event type.
+//! `seq` is a monotone insertion counter, so simultaneous events fire in
+//! FIFO order — this makes simulations deterministic and is what allows
+//! the whole framework (controller, 100+ testers, services, network,
+//! clock-sync traffic) to replay bit-identically from one seed.
+//!
+//! The engine is deliberately generic and infrastructure-only: the DiPerF
+//! world (`crate::experiment`) defines the event enum and owns all
+//! component state; the engine just orders time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+/// An event scheduled at `at`; `seq` breaks ties FIFO.
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue + virtual clock.
+pub struct Engine<E> {
+    now: SimTime,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Engine<E> {
+    /// An empty engine at time zero.
+    pub fn new() -> Engine<E> {
+        Engine {
+            now: SimTime(0),
+            seq: 0,
+            queue: BinaryHeap::with_capacity(1024),
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events dispatched so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events still pending.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `event` at absolute time `at`.  Scheduling in the past
+    /// (possible via f64 rounding at call sites) clamps to `now`; the
+    /// debug assertion catches genuine logic errors.
+    #[inline]
+    pub fn schedule(&mut self, at: SimTime, event: E) {
+        debug_assert!(
+            at.0 + 1 >= self.now.0,
+            "scheduling into the past: at={at} now={}",
+            self.now
+        );
+        let at = at.max(self.now);
+        self.queue.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: super::time::SimDuration, event: E) {
+        self.schedule(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing the clock.  Returns `None` when the
+    /// simulation has quiesced.
+    #[inline]
+    pub fn next(&mut self) -> Option<(SimTime, E)> {
+        let s = self.queue.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.event))
+    }
+
+    /// Run the dispatch loop until quiescence or `until`, whichever comes
+    /// first.  `handler` receives `(engine, time, event)` and may schedule
+    /// further events.
+    pub fn run_until<F>(&mut self, until: SimTime, mut handler: F)
+    where
+        F: FnMut(&mut Engine<E>, SimTime, E),
+    {
+        while let Some(&Scheduled { at, .. }) = self.queue.peek().map(|s| s as _)
+        {
+            if at > until {
+                self.now = until;
+                return;
+            }
+            let (t, e) = self.next().expect("peeked");
+            handler(self, t, e);
+        }
+        self.now = self.now.max(until.min(self.now));
+    }
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SimDuration;
+    use crate::util::proptest::{forall, prop};
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(SimTime(300), 3);
+        eng.schedule(SimTime(100), 1);
+        eng.schedule(SimTime(200), 2);
+        let mut got = vec![];
+        while let Some((t, e)) = eng.next() {
+            got.push((t.0, e));
+        }
+        assert_eq!(got, vec![(100, 1), (200, 2), (300, 3)]);
+    }
+
+    #[test]
+    fn ties_fire_fifo() {
+        let mut eng: Engine<u32> = Engine::new();
+        for i in 0..10 {
+            eng.schedule(SimTime(5), i);
+        }
+        let got: Vec<u32> = std::iter::from_fn(|| eng.next().map(|(_, e)| e))
+            .collect();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        forall(20, |rng| {
+            let mut eng: Engine<u64> = Engine::new();
+            for i in 0..200 {
+                eng.schedule(SimTime(rng.next_below(10_000)), i);
+            }
+            let mut last = 0;
+            while let Some((t, _)) = eng.next() {
+                if t.0 < last {
+                    return Err(format!("clock went back: {} < {last}", t.0));
+                }
+                last = t.0;
+            }
+            prop(eng.pending() == 0, "queue drained")
+        });
+    }
+
+    #[test]
+    fn handler_cascades() {
+        // each event schedules its successor: 0 -> 1 -> ... -> 9
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(SimTime(0), 0);
+        let mut seen = vec![];
+        eng.run_until(SimTime::MAX, |eng, t, e| {
+            seen.push(e);
+            if e < 9 {
+                eng.schedule(t + SimDuration::from_secs(1), e + 1);
+            }
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(eng.now(), SimTime::from_secs_f64(9.0));
+        assert_eq!(eng.processed(), 10);
+    }
+
+    #[test]
+    fn run_until_stops_at_horizon() {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(SimTime::from_secs_f64(1.0), 1);
+        eng.schedule(SimTime::from_secs_f64(100.0), 2);
+        let mut seen = vec![];
+        eng.run_until(SimTime::from_secs_f64(10.0), |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1]);
+        assert_eq!(eng.pending(), 1);
+    }
+
+    #[test]
+    fn schedule_in_past_clamps() {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(SimTime(100), 1);
+        eng.next();
+        eng.schedule(SimTime(100), 2); // == now, fine
+        let (t, e) = eng.next().unwrap();
+        assert_eq!((t.0, e), (100, 2));
+    }
+}

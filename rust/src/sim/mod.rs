@@ -1,0 +1,12 @@
+//! Discrete-event simulation core: virtual time + event engine.
+//!
+//! Substitutes for the paper's real-time PlanetLab/Grid3 deployment: the
+//! full 5800 s pre-WS GRAM experiment replays in well under a second of
+//! wall clock, which is what makes reproducing every figure — and the
+//! 1000-tester scalability study — tractable.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::Engine;
+pub use time::{SimDuration, SimTime};

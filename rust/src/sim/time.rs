@@ -1,0 +1,191 @@
+//! Simulated time: microsecond-resolution virtual clock values.
+//!
+//! All framework timing (tester staggering, clock-sync periods, service
+//! demands, network latencies) is expressed in [`SimTime`] /
+//! [`SimDuration`].  Integer microseconds keep event ordering exact —
+//! float time would make heap ordering platform-dependent — while f64
+//! second conversions are provided at the metric boundary.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Absolute simulation time (microseconds since experiment epoch).
+#[derive(Clone, Copy, Debug, Default, Eq, Hash, Ord, PartialEq, PartialOrd)]
+pub struct SimTime(pub u64);
+
+/// A span of simulation time (microseconds).
+#[derive(Clone, Copy, Debug, Default, Eq, Hash, Ord, PartialEq, PartialOrd)]
+pub struct SimDuration(pub u64);
+
+/// The simulation epoch.
+pub const ZERO: SimTime = SimTime(0);
+
+impl SimTime {
+    /// The far future (run-forever horizons).
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// Convert from (non-negative) seconds.
+    #[inline]
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        debug_assert!(s >= 0.0, "negative absolute time: {s}");
+        SimTime((s * 1e6).round() as u64)
+    }
+
+    /// Seconds since the epoch.
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+
+    /// Raw microsecond tick count.
+    #[inline]
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating difference (earlier-time subtraction clamps to 0).
+    #[inline]
+    pub fn since(self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl SimDuration {
+    /// The empty span.
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    /// Convert from (non-negative) seconds.
+    #[inline]
+    pub fn from_secs_f64(s: f64) -> SimDuration {
+        debug_assert!(s >= 0.0, "negative duration: {s}");
+        SimDuration((s * 1e6).round() as u64)
+    }
+
+    /// Convert from whole milliseconds.
+    #[inline]
+    pub fn from_millis(ms: u64) -> SimDuration {
+        SimDuration(ms * 1_000)
+    }
+
+    /// Convert from whole seconds.
+    #[inline]
+    pub fn from_secs(s: u64) -> SimDuration {
+        SimDuration(s * 1_000_000)
+    }
+
+    /// Span in seconds.
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+
+    /// Span in milliseconds.
+    #[inline]
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 * 1e-3
+    }
+
+    /// Scale by a non-negative factor (e.g. CPU-speed adjustment).
+    #[inline]
+    pub fn scale(self, factor: f64) -> SimDuration {
+        debug_assert!(factor >= 0.0);
+        SimDuration((self.0 as f64 * factor).round() as u64)
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, d: SimDuration) -> SimTime {
+        SimTime(self.0.saturating_add(d.0))
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    #[inline]
+    fn add_assign(&mut self, d: SimDuration) {
+        self.0 = self.0.saturating_add(d.0);
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = SimDuration;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimDuration {
+        self.since(rhs)
+    }
+}
+
+impl Add<SimDuration> for SimDuration {
+    type Output = SimDuration;
+    #[inline]
+    fn add(self, d: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_add(d.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 < 1_000 {
+            write!(f, "{}µs", self.0)
+        } else if self.0 < 1_000_000 {
+            write!(f, "{:.2}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.0, 1_500_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_sub() {
+        let t = SimTime::from_secs_f64(10.0) + SimDuration::from_millis(250);
+        assert_eq!(t.as_micros(), 10_250_000);
+        let d = t - SimTime::from_secs_f64(10.0);
+        assert_eq!(d.as_millis_f64(), 250.0);
+    }
+
+    #[test]
+    fn since_saturates() {
+        let a = SimTime::from_secs_f64(1.0);
+        let b = SimTime::from_secs_f64(2.0);
+        assert_eq!(a.since(b), SimDuration::ZERO);
+        assert_eq!(b.since(a), SimDuration::from_secs(1));
+    }
+
+    #[test]
+    fn scale_rounds() {
+        let d = SimDuration::from_millis(100).scale(1.5);
+        assert_eq!(d.as_millis_f64(), 150.0);
+        assert_eq!(SimDuration::from_secs(1).scale(0.0), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime(5) < SimTime(6));
+        assert!(SimDuration(1) < SimDuration(2));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimDuration(500)), "500µs");
+        assert_eq!(format!("{}", SimDuration(2_500)), "2.50ms");
+        assert_eq!(format!("{}", SimDuration(1_500_000)), "1.500s");
+    }
+}

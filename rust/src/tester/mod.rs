@@ -1,0 +1,335 @@
+//! Tester agent (§3): runs clients against the target service, times
+//! every call, syncs its clock every five minutes, streams samples to
+//! the controller, and stops the moment its controller session dies.
+//!
+//! The state machine here is *pure* — it never touches the event queue.
+//! The experiment world calls these methods at the right virtual times
+//! and turns the returned values into events; that separation is what
+//! makes the tester logic unit-testable without a simulation around it.
+
+use crate::client::Invocation;
+use crate::ids::{NodeId, RequestId, TesterId};
+use crate::metrics::{CallSample, SampleOutcome};
+use crate::timesync::{ClockMap, SyncPoint};
+use crate::transport::TestDescription;
+
+/// Lifecycle phase of a tester.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum Phase {
+    /// Deployed, not yet started.
+    Idle,
+    /// Running clients.
+    Running,
+    /// Duration elapsed or Stop received; no new clients.
+    Stopped,
+    /// Node died; the agent is silent.
+    Dead,
+}
+
+/// The tester agent's state.
+#[derive(Clone, Debug)]
+pub struct Tester {
+    /// Identity (index into the controller roster).
+    pub id: TesterId,
+    /// Host node.
+    pub node: NodeId,
+    /// Current phase.
+    pub phase: Phase,
+    /// Active test description (valid once started).
+    pub desc: TestDescription,
+    /// Local time the test started.
+    pub started_local: f64,
+    /// Next client sequence number.
+    pub seq: u32,
+    /// The single outstanding invocation, if any (clients run
+    /// sequentially: each is one RPC call).
+    pub outstanding: Option<Invocation>,
+    /// Tester-side clock map (mirror of what the controller builds).
+    pub clock: ClockMap,
+    /// Estimated one-way latency to the service (for the §4 response-
+    /// time adjustment), measured by a ping at startup.
+    pub latency_estimate_s: f64,
+    /// Local time of the last client launch (for interval pacing).
+    pub last_launch_local: f64,
+    /// Consecutive failed invocations (drives the eviction policy).
+    pub consecutive_failures: u32,
+    /// Monotone token source for timeout events.
+    next_token: u64,
+}
+
+impl Tester {
+    /// A fresh, idle tester.
+    pub fn new(id: TesterId, node: NodeId) -> Tester {
+        Tester {
+            id,
+            node,
+            phase: Phase::Idle,
+            desc: TestDescription::default(),
+            started_local: 0.0,
+            seq: 0,
+            outstanding: None,
+            clock: ClockMap::new(),
+            latency_estimate_s: 0.0,
+            last_launch_local: f64::NEG_INFINITY,
+            consecutive_failures: 0,
+            next_token: 0,
+        }
+    }
+
+    /// Controller's Start arrived (at local time `now_local`).
+    pub fn start(&mut self, now_local: f64, desc: TestDescription) {
+        debug_assert_eq!(self.phase, Phase::Idle);
+        self.phase = Phase::Running;
+        self.desc = desc;
+        self.started_local = now_local;
+    }
+
+    /// Stop (duration elapsed, Stop message, or session loss).
+    pub fn stop(&mut self) {
+        if self.phase != Phase::Dead {
+            self.phase = Phase::Stopped;
+        }
+        self.outstanding = None;
+    }
+
+    /// The node died under the agent.
+    pub fn kill(&mut self) {
+        self.phase = Phase::Dead;
+        self.outstanding = None;
+    }
+
+    /// Has the configured test duration elapsed?
+    pub fn duration_elapsed(&self, now_local: f64) -> bool {
+        now_local - self.started_local >= self.desc.duration_s
+    }
+
+    /// Earliest local time the next client may launch: the configured
+    /// interval after the previous launch, but never before `now`
+    /// (back-to-back when the previous client ran long — §4).
+    pub fn next_launch_local(&self, now_local: f64) -> f64 {
+        let spacing = self.desc.min_spacing_s();
+        now_local.max(self.last_launch_local + spacing)
+    }
+
+    /// Ready to launch? (running, nothing outstanding)
+    pub fn can_launch(&self, now_local: f64) -> bool {
+        self.phase == Phase::Running
+            && self.outstanding.is_none()
+            && !self.duration_elapsed(now_local)
+    }
+
+    /// Launch a client at `now_local` issuing request `req`.
+    pub fn launch(&mut self, now_local: f64, req: RequestId) -> Invocation {
+        debug_assert!(self.can_launch(now_local));
+        let inv = Invocation {
+            req,
+            seq: self.seq,
+            launched_local: now_local,
+            timeout_token: self.next_token,
+        };
+        self.next_token += 1;
+        self.seq += 1;
+        self.last_launch_local = now_local;
+        self.outstanding = Some(inv);
+        inv
+    }
+
+    /// Record a locally-failed start (§3 failure #2): emits the sample
+    /// without any RPC having been issued.
+    pub fn record_start_failure(&mut self, now_local: f64) -> CallSample {
+        let seq = self.seq;
+        self.seq += 1;
+        self.last_launch_local = now_local;
+        self.consecutive_failures += 1;
+        CallSample {
+            tester: self.id,
+            seq,
+            t_submit_local: now_local,
+            t_done_local: now_local,
+            rt_s: 0.0,
+            outcome: SampleOutcome::StartFailure,
+        }
+    }
+
+    /// The outstanding invocation finished (response arrived) at local
+    /// time `now_local` with the given outcome; returns the sample.
+    /// Returns `None` for stale responses (already timed out).
+    pub fn record_result(
+        &mut self,
+        now_local: f64,
+        req: RequestId,
+        outcome: SampleOutcome,
+        exec_overhead_s: f64,
+    ) -> Option<CallSample> {
+        let inv = self.outstanding?;
+        if inv.req != req {
+            return None; // response for a timed-out predecessor
+        }
+        self.outstanding = None;
+        let span = now_local - inv.launched_local;
+        let rt = crate::client::adjusted_rt(
+            span,
+            2.0 * self.latency_estimate_s,
+            exec_overhead_s,
+        );
+        if outcome.ok() {
+            self.consecutive_failures = 0;
+        } else {
+            self.consecutive_failures += 1;
+        }
+        Some(CallSample {
+            tester: self.id,
+            seq: inv.seq,
+            t_submit_local: inv.launched_local,
+            t_done_local: now_local,
+            rt_s: rt,
+            outcome,
+        })
+    }
+
+    /// The tester-enforced timeout fired for token `token`.  Returns the
+    /// timeout sample, or `None` if the invocation already completed.
+    pub fn record_timeout(
+        &mut self,
+        now_local: f64,
+        token: u64,
+    ) -> Option<CallSample> {
+        let inv = self.outstanding?;
+        if inv.timeout_token != token {
+            return None;
+        }
+        self.outstanding = None;
+        self.consecutive_failures += 1;
+        Some(CallSample {
+            tester: self.id,
+            seq: inv.seq,
+            t_submit_local: inv.launched_local,
+            t_done_local: now_local,
+            rt_s: now_local - inv.launched_local,
+            outcome: SampleOutcome::Timeout,
+        })
+    }
+
+    /// A sync exchange completed; update the local clock map.
+    pub fn record_sync(&mut self, p: SyncPoint) {
+        self.clock.record(p);
+    }
+
+    /// Eviction-policy check (the §3 "delete the client" behaviour, with
+    /// hysteresis: `k` consecutive failures).
+    pub fn should_give_up(&self, k: u32) -> bool {
+        k > 0 && self.consecutive_failures >= k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tester() -> Tester {
+        let mut t = Tester::new(TesterId(0), NodeId(3));
+        t.start(100.0, TestDescription {
+            duration_s: 60.0,
+            client_interval_s: 1.0,
+            ..Default::default()
+        });
+        t
+    }
+
+    #[test]
+    fn launch_pacing_is_interval_or_back_to_back() {
+        let mut t = tester();
+        assert!(t.can_launch(100.0));
+        t.launch(100.0, RequestId(0));
+        // quick completion at 100.3: next launch waits for the interval
+        t.record_result(100.3, RequestId(0), SampleOutcome::Success, 0.0);
+        assert_eq!(t.next_launch_local(100.3), 101.0);
+        // slow client: launch at 101, completes at 105 -> back-to-back
+        t.launch(101.0, RequestId(1));
+        t.record_result(105.0, RequestId(1), SampleOutcome::Success, 0.0);
+        assert_eq!(t.next_launch_local(105.0), 105.0);
+    }
+
+    #[test]
+    fn rt_adjustment_subtracts_latency_estimate() {
+        let mut t = tester();
+        t.latency_estimate_s = 0.05; // one-way
+        t.launch(100.0, RequestId(0));
+        let s = t
+            .record_result(101.0, RequestId(0), SampleOutcome::Success, 0.01)
+            .unwrap();
+        // span 1.0 - rtt 0.1 - exec 0.01
+        assert!((s.rt_s - 0.89).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_response_after_timeout_is_dropped() {
+        let mut t = tester();
+        let inv = t.launch(100.0, RequestId(7));
+        let to = t.record_timeout(100.0 + 300.0, inv.timeout_token);
+        assert!(to.is_some());
+        assert_eq!(to.unwrap().outcome, SampleOutcome::Timeout);
+        // the response eventually shows up: ignored
+        assert!(t
+            .record_result(420.0, RequestId(7), SampleOutcome::Success, 0.0)
+            .is_none());
+    }
+
+    #[test]
+    fn stale_timeout_after_response_is_dropped() {
+        let mut t = tester();
+        let inv = t.launch(100.0, RequestId(7));
+        t.record_result(101.0, RequestId(7), SampleOutcome::Success, 0.0)
+            .unwrap();
+        assert!(t.record_timeout(400.0, inv.timeout_token).is_none());
+    }
+
+    #[test]
+    fn consecutive_failures_track_and_reset() {
+        let mut t = tester();
+        for i in 0..3u32 {
+            t.launch(100.0 + i as f64, RequestId(i));
+            t.record_result(
+                100.5 + i as f64,
+                RequestId(i),
+                SampleOutcome::ServiceError,
+                0.0,
+            );
+        }
+        assert_eq!(t.consecutive_failures, 3);
+        assert!(t.should_give_up(3));
+        assert!(!t.should_give_up(4));
+        t.launch(110.0, RequestId(9));
+        t.record_result(110.5, RequestId(9), SampleOutcome::Success, 0.0);
+        assert_eq!(t.consecutive_failures, 0);
+    }
+
+    #[test]
+    fn duration_gate() {
+        let t = tester();
+        assert!(!t.duration_elapsed(159.9));
+        assert!(t.duration_elapsed(160.0));
+        assert!(!t.can_launch(160.0));
+    }
+
+    #[test]
+    fn start_failure_sample() {
+        let mut t = tester();
+        let s = t.record_start_failure(105.0);
+        assert_eq!(s.outcome, SampleOutcome::StartFailure);
+        assert_eq!(s.seq, 0);
+        assert_eq!(t.consecutive_failures, 1);
+        // seq advanced; next launch respects pacing
+        assert_eq!(t.next_launch_local(105.0), 106.0);
+    }
+
+    #[test]
+    fn stop_clears_outstanding() {
+        let mut t = tester();
+        t.launch(100.0, RequestId(0));
+        t.stop();
+        assert_eq!(t.phase, Phase::Stopped);
+        assert!(t.outstanding.is_none());
+        assert!(!t.can_launch(101.0));
+    }
+}

@@ -1,0 +1,266 @@
+//! Clock synchronization against a central time-stamp server (§3.1.2).
+//!
+//! The paper found PlanetLab's platform clocks unusable ("differences in
+//! the thousands of seconds") and built its own mechanism: a lightweight
+//! central time-stamp server that every tester queries every five
+//! minutes; measurements are taken in local time and mapped to the
+//! common base at aggregation time.
+//!
+//! We implement the same thing: Cristian's algorithm over the simulated
+//! WAN.  A tester records its local send time `l1`, the server's reply
+//! carries the server clock reading `s`, and at local receive time `l2`
+//! the offset estimate is
+//!
+//! ```text
+//! offset = s + (l2 - l1)/2 - l2        (global ≈ local + offset)
+//! ```
+//!
+//! The error is bounded by the route asymmetry — exactly the paper's
+//! "off by at most the network latency" worst case.  Piecewise-linear
+//! interpolation between successive sync points also corrects drift,
+//! mirroring "compute the offset ... and apply it when analyzing
+//! aggregated metrics".
+
+use crate::util::Summary;
+
+/// One completed sync exchange, in tester-local seconds (except `server`).
+#[derive(Clone, Copy, Debug)]
+pub struct SyncPoint {
+    /// Local time the request left.
+    pub l1: f64,
+    /// Server clock reading carried in the reply.
+    pub server: f64,
+    /// Local time the reply arrived.
+    pub l2: f64,
+}
+
+impl SyncPoint {
+    /// Estimated offset such that `global ≈ local + offset` at `l2`.
+    #[inline]
+    pub fn offset(&self) -> f64 {
+        self.server + self.rtt() / 2.0 - self.l2
+    }
+
+    /// Measured round-trip time (local seconds).
+    #[inline]
+    pub fn rtt(&self) -> f64 {
+        (self.l2 - self.l1).max(0.0)
+    }
+}
+
+/// Per-tester clock-mapping state: the history of sync points, used to
+/// translate local sample timestamps into the common (server) base.
+#[derive(Clone, Debug, Default)]
+pub struct ClockMap {
+    points: Vec<SyncPoint>,
+}
+
+impl ClockMap {
+    /// An empty (unsynchronized) map.
+    pub fn new() -> ClockMap {
+        ClockMap { points: Vec::new() }
+    }
+
+    /// Record a completed sync exchange.  Points must arrive in local-
+    /// time order (the tester syncs sequentially, so they do).
+    pub fn record(&mut self, p: SyncPoint) {
+        debug_assert!(
+            self.points.last().map_or(true, |q| p.l2 >= q.l2),
+            "sync points out of order"
+        );
+        self.points.push(p);
+    }
+
+    /// Number of completed sync exchanges.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True before the first sync completes.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The recorded sync points, in local-time order.
+    pub fn points(&self) -> &[SyncPoint] {
+        &self.points
+    }
+
+    /// Map a local timestamp to the common base.
+    ///
+    /// Uses piecewise-linear interpolation of the offset between the two
+    /// surrounding sync points (drift correction); clamps to the first/
+    /// last offset outside the synced range.  Returns `None` before any
+    /// sync has completed (the tester does not report samples until its
+    /// first sync — the controller discards anything earlier).
+    pub fn to_global(&self, local: f64) -> Option<f64> {
+        let pts = &self.points;
+        if pts.is_empty() {
+            return None;
+        }
+        let off = if local <= pts[0].l2 {
+            pts[0].offset()
+        } else if local >= pts[pts.len() - 1].l2 {
+            pts[pts.len() - 1].offset()
+        } else {
+            let i = pts.partition_point(|p| p.l2 <= local);
+            let (a, b) = (&pts[i - 1], &pts[i]);
+            let frac = (local - a.l2) / (b.l2 - a.l2).max(1e-9);
+            a.offset() + frac * (b.offset() - a.offset())
+        };
+        Some(local + off)
+    }
+}
+
+/// Aggregate accuracy statistics over many testers' sync errors
+/// (reproduces the §3.1.2 numbers: mean 62 ms, median 57 ms, σ 52 ms).
+#[derive(Clone, Debug)]
+pub struct SyncAccuracy {
+    /// |estimated global − true global| per probe, seconds.
+    pub errors_s: Vec<f64>,
+    /// RTT per probe, seconds.
+    pub rtts_s: Vec<f64>,
+}
+
+impl SyncAccuracy {
+    /// An empty accumulator.
+    pub fn new() -> SyncAccuracy {
+        SyncAccuracy {
+            errors_s: Vec::new(),
+            rtts_s: Vec::new(),
+        }
+    }
+
+    /// Record one probe's absolute error and round-trip time.
+    pub fn push(&mut self, error_s: f64, rtt_s: f64) {
+        self.errors_s.push(error_s.abs());
+        self.rtts_s.push(rtt_s);
+    }
+
+    /// Summary statistics of the absolute sync errors.
+    pub fn error_summary(&self) -> Summary {
+        Summary::of(&self.errors_s)
+    }
+
+    /// Summary statistics of the probe round-trip times.
+    pub fn rtt_summary(&self) -> Summary {
+        Summary::of(&self.rtts_s)
+    }
+}
+
+impl Default for SyncAccuracy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LocalClock;
+
+    /// Build a sync point for a clock with the given one-way latencies.
+    fn exchange(
+        clock: &LocalClock,
+        server_clock: &LocalClock,
+        t_send: f64,
+        up_s: f64,
+        down_s: f64,
+    ) -> SyncPoint {
+        use crate::sim::SimTime;
+        let l1 = clock.local_secs(SimTime::from_secs_f64(t_send));
+        let t_server = t_send + up_s;
+        let server = server_clock.local_secs(SimTime::from_secs_f64(t_server));
+        let t_recv = t_server + down_s;
+        let l2 = clock.local_secs(SimTime::from_secs_f64(t_recv));
+        SyncPoint { l1, server, l2 }
+    }
+
+    #[test]
+    fn symmetric_route_gives_exact_offset() {
+        let clock = LocalClock {
+            skew_s: 1234.0,
+            drift: 0.0,
+        };
+        let srv = LocalClock::ideal();
+        let p = exchange(&clock, &srv, 100.0, 0.030, 0.030);
+        let mut map = ClockMap::new();
+        map.record(p);
+        // sample at the sync instant maps exactly
+        let local = clock.local_secs(crate::sim::SimTime::from_secs_f64(160.0));
+        let got = map.to_global(local).unwrap();
+        assert!((got - 160.0).abs() < 1e-9, "got {got}");
+    }
+
+    #[test]
+    fn asymmetry_bounds_error_by_latency() {
+        let clock = LocalClock {
+            skew_s: -5000.0,
+            drift: 0.0,
+        };
+        let srv = LocalClock::ideal();
+        // grossly asymmetric: 100 ms up, 10 ms down
+        let p = exchange(&clock, &srv, 50.0, 0.100, 0.010);
+        let mut map = ClockMap::new();
+        map.record(p);
+        let local = clock.local_secs(crate::sim::SimTime::from_secs_f64(70.0));
+        let err = (map.to_global(local).unwrap() - 70.0).abs();
+        // error = |down-up|/2 = 45 ms, below the one-way latency bound
+        assert!((err - 0.045).abs() < 1e-9, "err {err}");
+        assert!(err <= 0.100);
+    }
+
+    #[test]
+    fn interpolation_corrects_drift() {
+        let clock = LocalClock {
+            skew_s: 0.0,
+            drift: 100e-6, // 100 ppm: 0.1 ms skew growth per second
+        };
+        let srv = LocalClock::ideal();
+        let mut map = ClockMap::new();
+        map.record(exchange(&clock, &srv, 0.0, 0.020, 0.020));
+        map.record(exchange(&clock, &srv, 300.0, 0.020, 0.020));
+        // halfway between syncs the drift has added 15 ms of local error;
+        // interpolation absorbs it
+        let t = 150.0;
+        let local = clock.local_secs(crate::sim::SimTime::from_secs_f64(t));
+        let err = (map.to_global(local).unwrap() - t).abs();
+        assert!(err < 1e-4, "err {err}");
+        // a single-point map would be off by ~15 ms
+        let mut single = ClockMap::new();
+        single.record(exchange(&clock, &srv, 0.0, 0.020, 0.020));
+        let err1 = (single.to_global(local).unwrap() - t).abs();
+        assert!(err1 > 5e-3, "err1 {err1}");
+    }
+
+    #[test]
+    fn unsynced_returns_none() {
+        let map = ClockMap::new();
+        assert!(map.to_global(10.0).is_none());
+    }
+
+    #[test]
+    fn clamps_outside_synced_range() {
+        let clock = LocalClock {
+            skew_s: 77.0,
+            drift: 0.0,
+        };
+        let srv = LocalClock::ideal();
+        let mut map = ClockMap::new();
+        map.record(exchange(&clock, &srv, 100.0, 0.010, 0.010));
+        // before the first sync point: clamped to the first offset
+        let local_early = clock.local_secs(crate::sim::SimTime::from_secs_f64(10.0));
+        assert!((map.to_global(local_early).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_accumulator() {
+        let mut acc = SyncAccuracy::new();
+        acc.push(0.050, 0.080);
+        acc.push(-0.070, 0.120);
+        let s = acc.error_summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.060).abs() < 1e-12);
+        assert!(acc.rtt_summary().max >= 0.120);
+    }
+}

@@ -1,0 +1,199 @@
+//! Control-plane transport: the ssh-based channels of §3/§3.1.1.
+//!
+//! DiPerF's components talk over ssh-family tools: the controller copies
+//! client code to candidate nodes (scp), starts testers, streams test
+//! descriptions down and performance reports back.  This module defines
+//! the message vocabulary and the cost model (message sizes, deploy
+//! payloads); the experiment world applies [`crate::net::NetModel`]
+//! latencies when it delivers them.
+//!
+//! Sessions are in-order and reliable (TCP/ssh semantics) but can
+//! *disconnect*; per §3, a tester that loses its controller session
+//! stops testing so an unmonitored client never loads the service.
+
+use crate::metrics::CallSample;
+use crate::timesync::SyncPoint;
+
+/// What a tester is asked to do (§3.1.3: "a tester understands a simple
+/// description of the tests it has to perform").
+#[derive(Clone, Copy, Debug)]
+pub struct TestDescription {
+    /// How long the tester should run clients (seconds).
+    pub duration_s: f64,
+    /// Interval between consecutive client invocations (seconds);
+    /// clients run back-to-back when they take longer than this.
+    pub client_interval_s: f64,
+    /// Interval between clock synchronizations (seconds).
+    pub sync_interval_s: f64,
+    /// Per-client rate cap (max invocations per second; the §4.3 HTTP
+    /// runs cap at 3/s).  `f64::INFINITY` disables the cap.
+    pub rate_cap_per_s: f64,
+    /// Tester-enforced client timeout (seconds, §3 failure #1).
+    pub timeout_s: f64,
+    /// Tester gives up (Goodbye) after this many consecutive client
+    /// failures; 0 = keep hammering forever.
+    pub give_up_failures: u32,
+}
+
+impl Default for TestDescription {
+    fn default() -> TestDescription {
+        TestDescription {
+            duration_s: 3600.0,
+            client_interval_s: 1.0,
+            sync_interval_s: 300.0,
+            rate_cap_per_s: f64::INFINITY,
+            timeout_s: 300.0,
+            give_up_failures: 6,
+        }
+    }
+}
+
+impl TestDescription {
+    /// Effective minimum spacing between client launches.
+    pub fn min_spacing_s(&self) -> f64 {
+        let cap = if self.rate_cap_per_s.is_finite() && self.rate_cap_per_s > 0.0
+        {
+            1.0 / self.rate_cap_per_s
+        } else {
+            0.0
+        };
+        self.client_interval_s.max(cap)
+    }
+}
+
+/// Controller -> tester messages.
+#[derive(Clone, Copy, Debug)]
+pub enum CtrlMsg {
+    /// Start testing against the target service.
+    Start(TestDescription),
+    /// Stop testing and shut down (eviction or experiment end).
+    Stop,
+}
+
+/// Why a tester says goodbye.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum GoodbyeReason {
+    /// Test duration elapsed normally.
+    Finished,
+    /// Too many consecutive client failures (service unusable from this
+    /// vantage point).
+    TooManyFailures,
+}
+
+/// Tester -> controller messages.
+#[derive(Clone, Copy, Debug)]
+pub enum TesterMsg {
+    /// Client code received and unpacked; ready to start.
+    DeployDone,
+    /// One timed client invocation.
+    Sample(CallSample),
+    /// A completed clock-sync exchange (the controller accumulates the
+    /// tester's ClockMap from these).
+    Sync(SyncPoint),
+    /// Liveness signal when no samples flow.
+    Heartbeat,
+    /// Clean shutdown notice.
+    Goodbye(GoodbyeReason),
+}
+
+/// Approximate wire sizes (bytes) for the latency/bandwidth model.
+pub fn msg_bytes_ctrl(m: &CtrlMsg) -> u64 {
+    match m {
+        CtrlMsg::Start(_) => 512,
+        CtrlMsg::Stop => 64,
+    }
+}
+
+/// Wire size of a tester report.
+pub fn msg_bytes_tester(m: &TesterMsg) -> u64 {
+    match m {
+        TesterMsg::DeployDone => 64,
+        TesterMsg::Sample(_) => 128,
+        TesterMsg::Sync(_) => 96,
+        TesterMsg::Heartbeat => 32,
+        TesterMsg::Goodbye(_) => 64,
+    }
+}
+
+/// Client-code payload sizes (§4: pre-WS GRAM ships a standalone
+/// executable, WS GRAM ships a jar and needs a JVM present).
+#[derive(Clone, Copy, Debug)]
+pub enum ClientCode {
+    /// Small native binary.
+    NativeBinary,
+    /// Java archive (bigger, as in the WS GRAM runs).
+    Jar,
+    /// Arbitrary payload size.
+    Custom(u64),
+}
+
+impl ClientCode {
+    /// Payload size in bytes for the scp cost model.
+    pub fn bytes(self) -> u64 {
+        match self {
+            ClientCode::NativeBinary => 800_000,
+            ClientCode::Jar => 5_000_000,
+            ClientCode::Custom(b) => b,
+        }
+    }
+}
+
+/// Controller-side view of one tester session's liveness.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum SessionState {
+    /// Client code is being copied.
+    Deploying,
+    /// Deployed, waiting for its staggered start slot.
+    Ready,
+    /// Running the test.
+    Running,
+    /// Finished normally.
+    Done,
+    /// Evicted (failures / silence / stop).
+    Evicted,
+    /// Deploy never completed (node unusable).
+    DeployFailed,
+}
+
+impl SessionState {
+    /// Is the session expected to produce reports?
+    pub fn is_live(self) -> bool {
+        matches!(self, SessionState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_spacing_honors_rate_cap() {
+        let mut d = TestDescription::default();
+        assert_eq!(d.min_spacing_s(), 1.0);
+        d.rate_cap_per_s = 3.0;
+        d.client_interval_s = 0.0;
+        assert!((d.min_spacing_s() - 1.0 / 3.0).abs() < 1e-12);
+        d.rate_cap_per_s = f64::INFINITY;
+        assert_eq!(d.min_spacing_s(), 0.0);
+    }
+
+    #[test]
+    fn message_sizes_sane() {
+        assert!(msg_bytes_ctrl(&CtrlMsg::Stop) < msg_bytes_ctrl(&CtrlMsg::Start(TestDescription::default())));
+        let s = TesterMsg::Heartbeat;
+        assert!(msg_bytes_tester(&s) <= 64);
+    }
+
+    #[test]
+    fn client_code_sizes() {
+        assert!(ClientCode::Jar.bytes() > ClientCode::NativeBinary.bytes());
+        assert_eq!(ClientCode::Custom(7).bytes(), 7);
+    }
+
+    #[test]
+    fn session_liveness() {
+        assert!(SessionState::Running.is_live());
+        assert!(!SessionState::Deploying.is_live());
+        assert!(!SessionState::Evicted.is_live());
+    }
+}

@@ -1,0 +1,140 @@
+//! Sampling distributions over [`Pcg64`].
+//!
+//! The WAN/testbed models need heavy-tailed and positive-support
+//! distributions (network latency, node speed, service demand).  All
+//! samplers are plain functions over the generator so components can mix
+//! them freely without trait objects on the hot path.
+
+use super::rng::Pcg64;
+
+/// Exponential with rate `lambda` (mean `1/lambda`).
+#[inline]
+pub fn exponential(rng: &mut Pcg64, lambda: f64) -> f64 {
+    debug_assert!(lambda > 0.0);
+    -rng.next_f64_open().ln() / lambda
+}
+
+/// Standard normal via Box–Muller (single value; the pair's twin is
+/// discarded — simplicity beats caching here).
+#[inline]
+pub fn std_normal(rng: &mut Pcg64) -> f64 {
+    let u1 = rng.next_f64_open();
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Normal with mean/stddev.
+#[inline]
+pub fn normal(rng: &mut Pcg64, mean: f64, std: f64) -> f64 {
+    mean + std * std_normal(rng)
+}
+
+/// Normal truncated below at `lo` (resample; `lo` should be within a few
+/// sigma of the mean or this becomes slow — assert guards pathologies).
+pub fn normal_min(rng: &mut Pcg64, mean: f64, std: f64, lo: f64) -> f64 {
+    debug_assert!(lo < mean + 8.0 * std, "truncation too far into tail");
+    for _ in 0..64 {
+        let x = normal(rng, mean, std);
+        if x >= lo {
+            return x;
+        }
+    }
+    lo
+}
+
+/// Log-normal parameterized by the *underlying* normal's mu/sigma.
+#[inline]
+pub fn lognormal(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
+    (mu + sigma * std_normal(rng)).exp()
+}
+
+/// Log-normal parameterized by its own median and a multiplicative
+/// spread `s` (sigma of the underlying normal = ln(s)).
+#[inline]
+pub fn lognormal_median(rng: &mut Pcg64, median: f64, spread: f64) -> f64 {
+    debug_assert!(median > 0.0 && spread >= 1.0);
+    median * (spread.ln() * std_normal(rng)).exp()
+}
+
+/// Pareto with scale `xm > 0` and shape `alpha > 0` (heavy tail).
+#[inline]
+pub fn pareto(rng: &mut Pcg64, xm: f64, alpha: f64) -> f64 {
+    debug_assert!(xm > 0.0 && alpha > 0.0);
+    xm / rng.next_f64_open().powf(1.0 / alpha)
+}
+
+/// Sample an index according to (unnormalized, non-negative) weights.
+pub fn weighted_index(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total > 0.0);
+    let mut x = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn sample<F: FnMut(&mut Pcg64) -> f64>(seed: u64, n: usize, mut f: F) -> Summary {
+        let mut rng = Pcg64::seed_from(seed);
+        let xs: Vec<f64> = (0..n).map(|_| f(&mut rng)).collect();
+        Summary::of(&xs)
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let s = sample(1, 200_000, |r| exponential(r, 0.5));
+        assert!((s.mean - 2.0).abs() < 0.05, "mean {}", s.mean);
+        assert!((s.std - 2.0).abs() < 0.1, "std {}", s.std);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let s = sample(2, 200_000, |r| normal(r, 10.0, 3.0));
+        assert!((s.mean - 10.0).abs() < 0.05);
+        assert!((s.std - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn normal_min_truncates() {
+        let s = sample(3, 50_000, |r| normal_min(r, 1.0, 1.0, 0.2));
+        assert!(s.min >= 0.2);
+        assert!(s.mean > 1.0); // truncation shifts mean up
+    }
+
+    #[test]
+    fn lognormal_median_matches() {
+        let s = sample(4, 200_000, |r| lognormal_median(r, 50.0, 1.8));
+        assert!((s.median / 50.0 - 1.0).abs() < 0.05, "median {}", s.median);
+        assert!(s.min > 0.0);
+    }
+
+    #[test]
+    fn pareto_tail() {
+        let s = sample(5, 200_000, |r| pareto(r, 1.0, 2.5));
+        assert!(s.min >= 1.0);
+        // E[X] = alpha*xm/(alpha-1) = 2.5/1.5
+        assert!((s.mean - 2.5 / 1.5).abs() < 0.05, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn weighted_index_distribution() {
+        let mut rng = Pcg64::seed_from(6);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..40_000 {
+            counts[weighted_index(&mut rng, &w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.2, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Small dense linear algebra: the native (pure-rust) twin of the
+//! Pallas `polyfit` kernel, used by `analysis` (cross-check/fallback) and
+//! `predict` (empirical models).  Mirrors the Python ridge damping so the
+//! XLA and native paths agree bit-for-bit up to f32/f64 differences.
+
+/// Cholesky factorization of an SPD matrix (row-major, n x n).
+/// Returns the lower factor L, or `None` when the matrix is not PD.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `a x = b` for SPD `a` via Cholesky.  Returns `None` if not PD.
+pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    // forward: L z = b
+    let mut z = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    // backward: L^T x = z
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Weighted ridge polynomial fit, increasing-power coefficients.
+///
+/// Exactly the Pallas kernel's algorithm (`python/compile/kernels/
+/// polyfit.py`): Gram accumulation + trace-scaled ridge + Cholesky.
+/// `x` should be pre-normalized to ~[-1, 1] for conditioning.
+pub fn polyfit(x: &[f64], y: &[f64], w: &[f64], degree: usize) -> Vec<f64> {
+    polyfit_ridge(x, y, w, degree, 1e-4)
+}
+
+/// `polyfit` with explicit ridge factor.
+pub fn polyfit_ridge(
+    x: &[f64],
+    y: &[f64],
+    w: &[f64],
+    degree: usize,
+    ridge: f64,
+) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), w.len());
+    let n = degree + 1;
+    let mut a = vec![0.0f64; n * n];
+    let mut b = vec![0.0f64; n];
+    let mut pow = vec![0.0f64; n];
+    for ((&xi, &yi), &wi) in x.iter().zip(y).zip(w) {
+        if wi == 0.0 {
+            continue;
+        }
+        pow[0] = 1.0;
+        for k in 1..n {
+            pow[k] = pow[k - 1] * xi;
+        }
+        for i in 0..n {
+            b[i] += wi * pow[i] * yi;
+            for j in 0..n {
+                a[i * n + j] += wi * pow[i] * pow[j];
+            }
+        }
+    }
+    let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+    let damp = ridge * (trace / n as f64 + 1e-6);
+    for i in 0..n {
+        a[i * n + i] += damp;
+    }
+    cholesky_solve(&a, &b, n).unwrap_or_else(|| vec![0.0; n])
+}
+
+/// Evaluate increasing-power coefficients at `x` (Horner).
+#[inline]
+pub fn polyval(coef: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coef.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Evaluate at many points.
+pub fn polyval_vec(coef: &[f64], xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|&x| polyval(coef, x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert_eq!(l, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn solve_known_system() {
+        // a = [[4,2],[2,3]], b = [2, 5] -> x = [-0.5, 2]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let x = cholesky_solve(&a, &[2.0, 5.0], 2).unwrap();
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polyfit_recovers_cubic() {
+        let xs: Vec<f64> = (0..200).map(|i| -1.0 + i as f64 / 99.5).collect();
+        let coef_true = [3.0, -1.0, 2.0, 0.5];
+        let ys: Vec<f64> = xs.iter().map(|&x| polyval(&coef_true, x)).collect();
+        let w = vec![1.0; xs.len()];
+        let got = polyfit(&xs, &ys, &w, 3);
+        for (g, t) in got.iter().zip(coef_true.iter()) {
+            assert!((g - t).abs() < 5e-3, "{got:?}"); // ridge bias ~1e-3
+        }
+    }
+
+    #[test]
+    fn polyfit_respects_weights() {
+        let xs: Vec<f64> = (0..100).map(|i| -1.0 + i as f64 / 49.5).collect();
+        let mut ys: Vec<f64> = xs.iter().map(|&x| 2.0 + x).collect();
+        let mut w = vec![1.0; xs.len()];
+        for i in (0..100).step_by(10) {
+            ys[i] = 1e3;
+            w[i] = 0.0;
+        }
+        let got = polyfit(&xs, &ys, &w, 1);
+        assert!((got[0] - 2.0).abs() < 1e-2); // ridge-level bias
+        assert!((got[1] - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn polyfit_degenerate_is_finite() {
+        let xs = vec![0.5; 4];
+        let ys = vec![1.0; 4];
+        let w = vec![0.0, 0.0, 0.0, 1.0];
+        let got = polyfit(&xs, &ys, &w, 6);
+        assert!(got.iter().all(|c| c.is_finite()));
+    }
+
+    #[test]
+    fn polyval_horner() {
+        assert_eq!(polyval(&[1.0, 2.0, 3.0], 2.0), 1.0 + 4.0 + 12.0);
+        assert_eq!(polyval(&[], 5.0), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundation utilities: PRNG, distributions, statistics, small linear
+//! algebra, and a mini property-testing harness.
+//!
+//! The execution environment is dependency-light (no `rand`, `statrs`,
+//! `nalgebra`, or `proptest`), so this module is the from-scratch
+//! substrate everything else builds on.
+
+pub mod dist;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;
+pub use stats::{Online, Summary};

@@ -1,0 +1,96 @@
+//! Miniature property-testing harness (the environment ships no
+//! `proptest`/`quickcheck`).  Drives a property over many seeded random
+//! cases and, on failure, reports the seed so the case can be replayed
+//! deterministically:
+//!
+//! ```ignore
+//! forall(100, |rng| {
+//!     let xs = gen_vec(rng, 0..50, |r| r.uniform(0.0, 1.0));
+//!     prop(xs.len() <= 50, "bounded length")
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Property outcome with a human-readable reason on failure.
+pub type PropResult = Result<(), String>;
+
+/// Convenience constructor: `prop(cond, "message")`.
+pub fn prop(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Run `cases` seeded random trials of `property`.  Panics with the
+/// failing seed + message on the first violation.
+pub fn forall<F>(cases: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg64) -> PropResult,
+{
+    forall_seeded(0xD1_7E2F, cases, &mut property);
+}
+
+/// As [`forall`] with an explicit base seed (for replaying failures).
+pub fn forall_seeded<F>(base_seed: u64, cases: u64, property: &mut F)
+where
+    F: FnMut(&mut Pcg64) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut rng = Pcg64::new(seed, 0x5eed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case} (replay: \
+                 forall_seeded({base_seed:#x} + {case}, 1, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector whose length is drawn from `len_range`.
+pub fn gen_vec<T, F>(
+    rng: &mut Pcg64,
+    len_range: std::ops::Range<usize>,
+    mut gen: F,
+) -> Vec<T>
+where
+    F: FnMut(&mut Pcg64) -> T,
+{
+    let span = (len_range.end - len_range.start).max(1) as u64;
+    let len = len_range.start + rng.next_below(span) as usize;
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(25, |rng| {
+            count += 1;
+            prop(rng.next_f64() < 1.0, "u in [0,1)")
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(10, |rng| {
+            prop(rng.next_f64() < 0.5, "always below half (false)")
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_range() {
+        forall(50, |rng| {
+            let v = gen_vec(rng, 2..7, |r| r.next_u64());
+            prop((2..7).contains(&v.len()), "length in range")
+        });
+    }
+}

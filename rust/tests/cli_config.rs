@@ -1,0 +1,113 @@
+//! Integration tests for the config system and the CLI plumbing
+//! (run -> run-dir -> analyze -> predict round trip on disk).
+
+use diperf::cli;
+use diperf::config;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("diperf_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let dir = tmp_dir("cfg");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        "preset = \"quick_http\"\nseed = 5\n\
+         [testbed]\nnum_testers = 3\n\
+         [test]\nduration_s = 45.0\n",
+    )
+    .unwrap();
+    let text = std::fs::read_to_string(&cfg_path).unwrap();
+    let cfg = config::experiment_from_toml(&text).unwrap();
+    assert_eq!(cfg.testbed.num_testers, 3);
+    let r = diperf::experiment::run_experiment(&cfg);
+    assert!(r.data.completed() > 20);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_then_analyze_then_predict_round_trip() {
+    let dir = tmp_dir("run");
+    let out = dir.join("myrun");
+    let out_s = out.to_str().unwrap();
+    // run (native path so this passes without artifacts)
+    let code = cli::main(&sv(&[
+        "run", "--preset", "quick_http", "--testers", "4", "--duration",
+        "60", "--seed", "9", "--out", out_s, "--native", "--quiet",
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    for f in [
+        "samples.csv",
+        "summary.txt",
+        "fig_timeline.csv",
+        "fig_per_client.csv",
+        "fig_poly.csv",
+        "fig_timeline.gp",
+    ] {
+        assert!(out.join(f).exists(), "missing {f}");
+    }
+    // analyze the saved run
+    let code = cli::main(&sv(&[
+        "analyze", "--run", out_s, "--native", "--quiet",
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    // fit the empirical model
+    let code = cli::main(&sv(&[
+        "predict", "--run", out_s, "--native", "--rt-target", "1.0",
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_dir_summary_mentions_service() {
+    let dir = tmp_dir("sum");
+    let out = dir.join("r");
+    cli::main(&sv(&[
+        "run", "--preset", "quick_http", "--testers", "2", "--duration",
+        "30", "--out", out.to_str().unwrap(), "--native", "--quiet",
+    ]))
+    .unwrap();
+    let summary = std::fs::read_to_string(out.join("summary.txt")).unwrap();
+    assert!(summary.contains("apache-cgi"));
+    assert!(summary.contains("sync error"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn timeline_csv_is_wellformed() {
+    let dir = tmp_dir("csv");
+    let out = dir.join("r");
+    cli::main(&sv(&[
+        "run", "--preset", "quick_http", "--testers", "3", "--duration",
+        "40", "--out", out.to_str().unwrap(), "--native", "--quiet",
+    ]))
+    .unwrap();
+    let csv = std::fs::read_to_string(out.join("fig_timeline.csv")).unwrap();
+    let lines: Vec<&str> = csv.trim().lines().collect();
+    assert_eq!(lines.len(), 1 + cli::NUM_QUANTA);
+    assert!(lines[0].split(',').count() >= 7);
+    for l in &lines[1..] {
+        assert_eq!(l.split(',').count(), 7, "row: {l}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_flags_are_loud() {
+    assert!(cli::main(&sv(&["run", "--bogus"])).is_err());
+    assert!(cli::main(&sv(&["run", "--preset", "zzz"])).is_err());
+    assert!(cli::main(&sv(&["analyze"])).is_err()); // missing --run
+}

@@ -1,0 +1,196 @@
+//! Integration tests: full miniature DiPerF experiments across the
+//! controller/tester/service/network stack, checking the paper's system
+//! properties end to end.
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::experiment::{presets, run_experiment, ServiceKind};
+use diperf::experiments::{self, run_with_analysis};
+use diperf::metrics::SampleOutcome;
+use diperf::services::gram_ws::GramWsParams;
+
+#[test]
+fn prews_ramp_shape_holds_at_small_scale() {
+    // 20 testers, 10 s stagger, 10 min each — the E1 shape in miniature
+    let cfg = presets::prews_small(20, 600.0, 11);
+    let run = run_with_analysis(&cfg);
+    let out = &run.out;
+
+    // load ramps to ~20 and back down
+    let peak = out.load.iter().cloned().fold(0.0, f64::max);
+    assert!((18.0..=21.0).contains(&peak), "peak load {peak}");
+
+    // rt grows with load: heavy-load rt must exceed light-load rt
+    let rt_l = experiments::rt_light_load(&run);
+    let rt_h = experiments::rt_heavy_load(&run);
+    assert!(rt_h > rt_l * 1.5, "rt did not grow: {rt_l} -> {rt_h}");
+
+    // per-job service cost stays ~constant (the paper's CPU-bound
+    // signature): completions * demand ~ busy time
+    assert!(run.result.data.completed() > 500);
+}
+
+#[test]
+fn conservation_across_the_stack() {
+    let cfg = presets::prews_small(10, 300.0, 3);
+    let r = run_experiment(&cfg);
+    let st = r.service_stats;
+    // every service-side request is accounted
+    assert!(st.submitted >= st.completed + st.denied + st.errored);
+    // every tester sample is classified
+    let d = &r.data;
+    let by_class = |o: SampleOutcome| {
+        d.samples.iter().filter(|s| s.outcome == o).count()
+    };
+    let total = by_class(SampleOutcome::Success)
+        + by_class(SampleOutcome::Timeout)
+        + by_class(SampleOutcome::StartFailure)
+        + by_class(SampleOutcome::Denied)
+        + by_class(SampleOutcome::ServiceError);
+    assert_eq!(total, d.samples.len());
+    // tester-side successes cannot exceed service-side completions
+    assert!(by_class(SampleOutcome::Success) as u64 <= st.completed);
+}
+
+#[test]
+fn clock_reconciliation_beats_raw_skew() {
+    // WAN testbed with pathological clocks: reconciled times must land
+    // within tens of ms of truth even when raw skew is in the thousands
+    // of seconds
+    let mut cfg = presets::prews_small(12, 240.0, 5);
+    cfg.testbed.clock_good = 0.3;
+    cfg.testbed.clock_moderate = 0.3; // 40% of nodes get wild clocks
+    let r = run_experiment(&cfg);
+    let mut errs: Vec<f64> = r
+        .data
+        .samples
+        .iter()
+        .filter(|s| s.t_end_true.is_finite())
+        .map(|s| (s.t_end - s.t_end_true).abs())
+        .collect();
+    assert!(errs.len() > 100);
+    errs.sort_by(f64::total_cmp);
+    let median = errs[errs.len() / 2];
+    let p99 = errs[errs.len() * 99 / 100];
+    assert!(median < 0.15, "median reconciliation error {median}");
+    assert!(p99 < 1.0, "p99 reconciliation error {p99}");
+}
+
+#[test]
+fn node_failures_are_detected_and_evicted() {
+    let mut cfg = presets::prews_small(12, 900.0, 9);
+    cfg.testbed.failure_rate_per_hour = 3.0; // very flaky testbed
+    cfg.controller.silence_timeout_s = 120.0;
+    let r = run_experiment(&cfg);
+    let evicted = r.data.testers.iter().filter(|t| t.evicted).count();
+    assert!(
+        evicted >= 2,
+        "flaky nodes should be evicted by the silence detector \
+         ({evicted} evicted)"
+    );
+    // evicted testers stop contributing samples after eviction
+    for t in r.data.testers.iter().filter(|t| t.evicted) {
+        let after: usize = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.tester == t.id && s.t_end > t.stopped_at + 60.0)
+            .count();
+        assert_eq!(after, 0, "tester {} reported after eviction", t.id);
+    }
+}
+
+#[test]
+fn ws_overload_fails_ungracefully_and_small_run_recovers() {
+    // small-scale §4.2: 14 testers vs a WS GRAM scaled to capacity ~8
+    let mut cfg = presets::ws_fig6(3);
+    cfg.testbed.num_testers = 14;
+    cfg.service = ServiceKind::GramWs(GramWsParams {
+        job_demand_s: 3.0,
+        stall_threshold: 8,
+        resume_threshold: 6,
+        hard_client_limit: 20,
+        ..Default::default()
+    });
+    cfg.controller.desc.duration_s = 1500.0;
+    let r = run_experiment(&cfg);
+    let evicted = r.data.testers.iter().filter(|t| t.evicted).count();
+    assert!(evicted >= 1, "shedding should evict someone");
+    assert!(
+        r.data.completed() > 50,
+        "service must keep serving after shedding ({} ok)",
+        r.data.completed()
+    );
+}
+
+#[test]
+fn rate_cap_is_respected() {
+    // §4.3 style: per-client rate cap of 2/s on a fast service
+    let mut cfg = presets::quick_http(4, 120.0, 13);
+    cfg.controller.desc.rate_cap_per_s = 2.0;
+    cfg.controller.desc.client_interval_s = 0.0;
+    let r = run_experiment(&cfg);
+    for t in &r.data.testers {
+        let mine: Vec<f64> = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.tester == t.id)
+            .map(|s| s.t_start)
+            .collect();
+        let span = t.stopped_at - t.started_at;
+        let rate = mine.len() as f64 / span.max(1.0);
+        assert!(
+            rate < 2.3,
+            "tester {} exceeded the 2/s cap: {rate:.2}/s",
+            t.id
+        );
+    }
+}
+
+#[test]
+fn analysis_input_roundtrip_from_experiment() {
+    let cfg = presets::quick_http(5, 90.0, 17);
+    let r = run_experiment(&cfg);
+    let inp = AnalysisInput::from_run(&r.data, 128, 20.0);
+    let out = analysis::analyze(&inp, 128, 16);
+    // binned completions == sample-level completions (all within range)
+    let binned: f64 = out.tput.iter().sum();
+    assert_eq!(binned as usize, r.data.completed());
+    // offered-load integral == sum of in-flight spans
+    let span_sum: f64 = r
+        .data
+        .samples
+        .iter()
+        .map(|s| (s.t_end - s.t_start).max(0.0))
+        .sum();
+    assert!(
+        (out.totals[6] - span_sum).abs() / span_sum < 0.02,
+        "load integral {} vs span sum {span_sum}",
+        out.totals[6]
+    );
+}
+
+#[test]
+fn deterministic_replay_full_stack() {
+    let cfg = presets::prews_small(8, 240.0, 21);
+    let a = run_experiment(&cfg);
+    let b = run_experiment(&cfg);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.data.samples.len(), b.data.samples.len());
+    for (x, y) in a.data.samples.iter().zip(&b.data.samples) {
+        assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        assert_eq!(x.rt.to_bits(), y.rt.to_bits());
+        assert_eq!(x.outcome, y.outcome);
+    }
+}
+
+#[test]
+fn seeds_change_outcomes() {
+    let a = run_experiment(&presets::prews_small(8, 240.0, 1));
+    let b = run_experiment(&presets::prews_small(8, 240.0, 2));
+    assert_ne!(
+        a.data.samples.len(),
+        b.data.samples.len(),
+        "different seeds should produce different sample counts"
+    );
+}

@@ -1,0 +1,91 @@
+//! The cross-layer contract: the AOT-compiled XLA analysis (L1 Pallas
+//! kernels + L2 JAX graph, built by `make artifacts`) must agree with
+//! the native rust analysis on real experiment data.
+//!
+//! Skips (with a loud message) when `artifacts/` has not been built —
+//! `make test` always builds it first.
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::experiment::{presets, run_experiment};
+use diperf::experiments::{NUM_CLIENTS, NUM_QUANTA, WINDOW_S};
+use diperf::runtime::XlaAnalyzer;
+
+fn xla() -> Option<XlaAnalyzer> {
+    match XlaAnalyzer::load("artifacts") {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn agrees_on_http_run() {
+    let Some(mut xla) = xla() else { return };
+    let r = run_experiment(&presets::quick_http(6, 120.0, 3));
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    let x = xla.analyze(&inp).unwrap();
+    let n = analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS);
+    assert!(max_diff(&x.tput, &n.tput) < 1e-3);
+    assert!(max_diff(&x.load, &n.load) < 5e-2);
+    assert!(max_diff(&x.rt_mean, &n.rt_mean) < 1e-3);
+    assert!(max_diff(&x.rt_ma, &n.rt_ma) < 1e-3);
+    assert!(max_diff(&x.completed, &n.completed) < 1e-3);
+    assert!(max_diff(&x.util, &n.util) < 1e-3);
+    assert!((x.totals[0] - n.totals[0]).abs() < 0.5);
+}
+
+#[test]
+fn agrees_on_gram_run_with_failures() {
+    let Some(mut xla) = xla() else { return };
+    let mut cfg = presets::prews_small(12, 400.0, 9);
+    cfg.testbed.failure_rate_per_hour = 1.0;
+    let r = run_experiment(&cfg);
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    let x = xla.analyze(&inp).unwrap();
+    let n = analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS);
+    assert!(max_diff(&x.tput, &n.tput) < 1e-3);
+    assert!(max_diff(&x.load, &n.load) < 5e-2);
+    // fairness/util involve divisions; allow a touch more slack for f32
+    assert!(max_diff(&x.util, &n.util) < 1e-2);
+    assert!(max_diff(&x.active_time, &n.active_time) < 0.5);
+}
+
+#[test]
+fn variant_selection_picks_smallest_fit() {
+    let Some(xla) = xla() else { return };
+    let variants = xla.variants();
+    assert!(variants.len() >= 3, "expected 3 capacity variants");
+    assert!(variants.windows(2).all(|w| w[0].samples < w[1].samples));
+    // boundary behaviour
+    assert_eq!(xla.pick(0).unwrap(), 0);
+    assert_eq!(xla.pick(variants[0].samples).unwrap(), 0);
+    assert_eq!(xla.pick(variants[0].samples + 1).unwrap(), 1);
+    assert!(xla.pick(variants.last().unwrap().samples + 1).is_err());
+}
+
+#[test]
+fn polynomial_models_agree_in_value_space() {
+    let Some(mut xla) = xla() else { return };
+    let r = run_experiment(&presets::prews_small(10, 300.0, 4));
+    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
+    let x = xla.analyze(&inp).unwrap();
+    let n = analysis::analyze(&inp, NUM_QUANTA, NUM_CLIENTS);
+    // coefficients are ill-conditioned individually; compare evaluated
+    // trends across the run instead
+    let dur = inp.duration as f64;
+    for frac in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let t = frac * dur;
+        let xa = x.poly_rt_at(t, 0.0, dur);
+        let na = n.poly_rt_at(t, 0.0, dur);
+        assert!(
+            (xa - na).abs() < 0.05 * (na.abs() + 1.0),
+            "poly rt at {t}: xla {xa} vs native {na}"
+        );
+    }
+}
