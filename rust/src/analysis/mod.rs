@@ -298,6 +298,96 @@ pub fn moving_average(num: &[f64], den: &[f64], half: f64) -> Vec<f64> {
     out
 }
 
+/// Availability and fairness under churn (the §3 failure machinery made
+/// measurable).  Computed natively from reconciled samples + tester
+/// records; cheap enough to run on every scenario experiment.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnReport {
+    /// Distinct clients with at least one sample completing in each
+    /// quantum ("who was actually testing right then").
+    pub active: Vec<f64>,
+    /// `active` normalized by its peak, in [0, 1] (all zeros for an
+    /// empty run).
+    pub availability: Vec<f64>,
+    /// Mean availability over the active span (first to last nonzero
+    /// quantum).
+    pub mean_availability: f64,
+    /// Minimum availability over the active span — the churn dip.
+    pub min_availability: f64,
+    /// Jain fairness index over per-client successful completions, in
+    /// [0, 1]; 1.0 means perfectly even service across clients.
+    pub jain_fairness: f64,
+    /// Testers the controller evicted (failures or silence).
+    pub evicted: usize,
+    /// Total tester re-registrations after node restarts.
+    pub rejoins: u64,
+}
+
+/// Compute the churn report at the given time resolution.
+pub fn churn_report(rd: &RunData, num_quanta: usize) -> ChurnReport {
+    let q = num_quanta.max(1);
+    let duration = rd.duration_s.max(1e-9);
+    let quantum = duration / q as f64;
+    let n_clients = rd
+        .testers
+        .len()
+        .max(rd.samples.iter().map(|s| s.tester.index() + 1).max().unwrap_or(0));
+
+    let mut out = ChurnReport {
+        active: vec![0.0; q],
+        availability: vec![0.0; q],
+        evicted: rd.testers.iter().filter(|t| t.evicted).count(),
+        rejoins: rd.testers.iter().map(|t| u64::from(t.rejoins)).sum(),
+        ..Default::default()
+    };
+    if n_clients == 0 {
+        return out;
+    }
+
+    // distinct active clients per quantum + per-client completions
+    let mut marked = vec![false; q * n_clients];
+    let mut completions = vec![0.0f64; n_clients];
+    for s in &rd.samples {
+        let c = s.tester.index();
+        if c >= n_clients {
+            continue;
+        }
+        let b = ((s.t_end / quantum).floor().max(0.0) as usize).min(q - 1);
+        if !marked[b * n_clients + c] {
+            marked[b * n_clients + c] = true;
+            out.active[b] += 1.0;
+        }
+        if s.outcome.ok() {
+            completions[c] += 1.0;
+        }
+    }
+
+    let peak = out.active.iter().cloned().fold(0.0, f64::max);
+    if peak > 0.0 {
+        for b in 0..q {
+            out.availability[b] = out.active[b] / peak;
+        }
+        let first = out.active.iter().position(|&a| a > 0.0).unwrap_or(0);
+        let last = out.active.iter().rposition(|&a| a > 0.0).unwrap_or(0);
+        let span = &out.availability[first..=last];
+        out.mean_availability = span.iter().sum::<f64>() / span.len() as f64;
+        out.min_availability =
+            span.iter().cloned().fold(f64::INFINITY, f64::min);
+    }
+
+    // Jain index over clients that participated at all
+    let participants: Vec<f64> = (0..n_clients)
+        .filter(|&c| (0..q).any(|b| marked[b * n_clients + c]))
+        .map(|c| completions[c])
+        .collect();
+    let sum: f64 = participants.iter().sum();
+    let sq: f64 = participants.iter().map(|x| x * x).sum();
+    if sq > 0.0 {
+        out.jain_fairness = sum * sum / (participants.len() as f64 * sq);
+    }
+    out
+}
+
 /// Detect the service's capacity knee from load/throughput series: the
 /// offered load beyond which throughput stops improving (± `tol`).
 /// This is the §4.1 "service capacity is reached with around 33
@@ -453,6 +543,59 @@ mod tests {
         let ob = analyze(&b, 32, 8);
         assert_eq!(oa.tput, ob.tput);
         assert_eq!(oa.totals, ob.totals);
+    }
+
+    #[test]
+    fn churn_report_flat_run_is_fully_available() {
+        let rd = mk_run(4, 25);
+        let c = churn_report(&rd, 20);
+        assert!((c.mean_availability - 1.0).abs() < 1e-9);
+        assert!((c.min_availability - 1.0).abs() < 1e-9);
+        assert!((c.jain_fairness - 1.0).abs() < 1e-9);
+        assert_eq!(c.evicted, 0);
+        assert_eq!(c.rejoins, 0);
+    }
+
+    #[test]
+    fn churn_report_sees_the_dip() {
+        // 4 clients; clients 2 and 3 stop contributing halfway through
+        let mut rd = RunData::default();
+        for k in 0..100 {
+            let t = k as f64;
+            for c in 0..4u32 {
+                if t >= 50.0 && c >= 2 {
+                    continue;
+                }
+                rd.samples.push(GlobalSample {
+                    tester: TesterId(c),
+                    seq: k as u32,
+                    t_start: t,
+                    t_end: t + 0.5,
+                    rt: 0.5,
+                    outcome: SampleOutcome::Success,
+                    t_end_true: t + 0.5,
+                });
+            }
+        }
+        rd.duration_s = 101.0;
+        let c = churn_report(&rd, 20);
+        assert!((c.min_availability - 0.5).abs() < 0.01, "{}", c.min_availability);
+        assert!(c.mean_availability < 0.99 && c.mean_availability > 0.5);
+        // uneven completions: Jain strictly below 1 but bounded
+        assert!(c.jain_fairness < 1.0);
+        assert!(c.jain_fairness >= 0.25, "{}", c.jain_fairness); // >= 1/n
+    }
+
+    #[test]
+    fn churn_report_empty_run() {
+        let rd = RunData {
+            duration_s: 50.0,
+            ..Default::default()
+        };
+        let c = churn_report(&rd, 8);
+        assert!(c.active.iter().all(|&a| a == 0.0));
+        assert_eq!(c.mean_availability, 0.0);
+        assert_eq!(c.jain_fairness, 0.0);
     }
 
     #[test]

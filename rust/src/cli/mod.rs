@@ -8,7 +8,7 @@ pub mod args;
 
 use anyhow::{Context, Result};
 
-use crate::analysis::{self, AnalysisInput, AnalysisOutput};
+use crate::analysis::{self, AnalysisInput, AnalysisOutput, ChurnReport};
 use crate::config;
 use crate::experiment::{run_experiment, ExperimentConfig, ExperimentResult};
 use crate::metrics::RunData;
@@ -40,6 +40,7 @@ fn spec() -> Vec<Spec> {
         Spec { name: "seed", takes_value: true, help: "master seed (default 42)" },
         Spec { name: "testers", takes_value: true, help: "override tester count" },
         Spec { name: "duration", takes_value: true, help: "override per-tester duration (s)" },
+        Spec { name: "scenario", takes_value: true, help: "fault scenario: none|churn|spike|soak|partition|flaky-service" },
         Spec { name: "out", takes_value: true, help: "run directory (default runs/<preset>-<seed>)" },
         Spec { name: "run", takes_value: true, help: "existing run directory (analyze/predict)" },
         Spec { name: "rt-target", takes_value: true, help: "QoS target for predict (s)" },
@@ -61,9 +62,15 @@ pub fn main(argv: &[String]) -> Result<i32> {
         "presets" => {
             for name in [
                 "prews_fig3", "ws_fig6", "ws_overload", "http_sec43",
-                "quick_http", "scalability",
+                "quick_http", "scalability", "churn_study", "spike_study",
+                "soak",
             ] {
                 println!("{name}");
+            }
+            println!();
+            println!("scenarios (run --scenario <name>):");
+            for name in crate::scenario::NAMES {
+                println!("  {name}");
             }
             Ok(0)
         }
@@ -92,7 +99,17 @@ fn build_config(a: &Args) -> Result<(ExperimentConfig, String)> {
         cfg.testbed.num_testers = n;
     }
     if let Some(d) = a.get_parsed::<f64>("duration")? {
+        let old = cfg.controller.desc.duration_s;
         cfg.controller.desc.duration_s = d;
+        // keep a preset-embedded scenario anchored to the run (a mass
+        // crash at half time stays at half time)
+        if !cfg.scenario.is_empty() && old > 0.0 && d != old {
+            cfg.scenario = cfg.scenario.rescaled(d / old);
+        }
+    }
+    if let Some(s) = a.get("scenario") {
+        cfg.scenario = crate::scenario::by_name(s, cfg.controller.desc.duration_s)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
     }
     config::validate(&cfg)?;
     Ok((cfg, name))
@@ -119,10 +136,10 @@ pub fn run_analysis(
     Ok((analysis::analyze(inp, NUM_QUANTA, NUM_CLIENTS), "native"))
 }
 
-fn summarize(r: &ExperimentResult) -> String {
+fn summarize(r: &ExperimentResult, churn: &ChurnReport) -> String {
     let d = &r.data;
     let es = r.sync.error_summary();
-    format!(
+    let mut s = format!(
         "service           {}\n\
          events            {}\n\
          sim wall time     {:.0} ms\n\
@@ -144,7 +161,12 @@ fn summarize(r: &ExperimentResult) -> String {
         es.mean * 1e3,
         es.median * 1e3,
         es.std * 1e3,
-    )
+    );
+    if r.faults > 0 {
+        s.push_str(&format!("scenario faults   {}\n", r.faults));
+        s.push_str(&report::churn_summary(churn));
+    }
+    s
 }
 
 fn write_run_dir(
@@ -154,13 +176,15 @@ fn write_run_dir(
     r: &ExperimentResult,
     out: &AnalysisOutput,
     inp: &AnalysisInput,
+    churn: &ChurnReport,
 ) -> Result<std::path::PathBuf> {
     let default = format!("runs/{}-{}", name, cfg.seed);
     let dir_name = a.get("out").unwrap_or(&default);
     let rd = RunDir::create(".", dir_name)?;
     rd.write("samples.csv", &report::samples_csv(&r.data))?;
-    rd.write("summary.txt", &summarize(r))?;
+    rd.write("summary.txt", &summarize(r, churn))?;
     rd.write_figures("fig", out, &r.data, inp.t0 as f64, inp.quantum as f64)?;
+    rd.write_churn("fig", churn, inp.t0 as f64, inp.quantum as f64)?;
     Ok(rd.path)
 }
 
@@ -173,11 +197,18 @@ fn cmd_run(a: &Args) -> Result<i32> {
     let r = run_experiment(&cfg);
     let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
     let (out, path_label) = run_analysis(&inp, a)?;
-    let dir = write_run_dir(a, &name, &cfg, &r, &out, &inp)?;
-    print!("{}", summarize(&r));
+    let churn = analysis::churn_report(&r.data, NUM_QUANTA);
+    let dir = write_run_dir(a, &name, &cfg, &r, &out, &inp, &churn)?;
+    print!("{}", summarize(&r, &churn));
     println!("analysis path     {path_label}");
     println!("run directory     {}", dir.display());
     if !a.has("quiet") {
+        if r.faults > 0 {
+            print!(
+                "{}",
+                report::ascii_chart(&churn.active, 72, 6, "active clients")
+            );
+        }
         print!(
             "{}",
             report::ascii_chart(&out.load_ma, 72, 6, "offered load")
@@ -329,5 +360,42 @@ mod tests {
     fn build_config_rejects_bad_preset() {
         let a = Args::parse(&sv(&["run", "--preset", "zzz"]), &spec()).unwrap();
         assert!(build_config(&a).is_err());
+    }
+
+    #[test]
+    fn build_config_applies_scenario() {
+        let a = Args::parse(
+            &sv(&["run", "--preset", "quick_http", "--scenario", "churn"]),
+            &spec(),
+        )
+        .unwrap();
+        let (cfg, _) = build_config(&a).unwrap();
+        assert!(!cfg.scenario.is_empty());
+        assert!(cfg.scenario.churn.is_some());
+
+        let a = Args::parse(
+            &sv(&["run", "--preset", "quick_http", "--scenario", "bogus"]),
+            &spec(),
+        )
+        .unwrap();
+        assert!(build_config(&a).is_err());
+    }
+
+    #[test]
+    fn duration_override_rescales_preset_scenario() {
+        // spike_study pins a mass crash at half time of its 600 s
+        // default; --duration 60 must keep it at half time (t=30)
+        let a = Args::parse(
+            &sv(&["run", "--preset", "spike_study", "--duration", "60"]),
+            &spec(),
+        )
+        .unwrap();
+        let (cfg, _) = build_config(&a).unwrap();
+        assert_eq!(cfg.scenario.timeline.len(), 1);
+        assert!(
+            (cfg.scenario.timeline[0].at_s - 30.0).abs() < 1e-9,
+            "crash at {}",
+            cfg.scenario.timeline[0].at_s
+        );
     }
 }

@@ -94,6 +94,9 @@ pub struct Testbed {
     pub time_server: NodeId,
     /// The wide-area tester pool.
     pub testers: Vec<NodeId>,
+    /// Per-node liveness (scenario churn flips tester nodes down and
+    /// back up; a down node neither sends nor receives).
+    up: Vec<bool>,
 }
 
 /// Knobs for synthesizing a PlanetLab-like testbed.
@@ -211,6 +214,7 @@ impl Testbed {
             testers.push(id);
         }
 
+        let up = vec![true; nodes.len()];
         Testbed {
             nodes,
             net: NetModel::new(profiles),
@@ -218,12 +222,33 @@ impl Testbed {
             service: NodeId(1),
             time_server: NodeId(2),
             testers,
+            up,
         }
     }
 
     /// Look up a node.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.index()]
+    }
+
+    /// Is the node currently up?
+    pub fn is_up(&self, id: NodeId) -> bool {
+        self.up[id.index()]
+    }
+
+    /// Take a node down (crash).  Idempotent.
+    pub fn set_down(&mut self, id: NodeId) {
+        self.up[id.index()] = false;
+    }
+
+    /// Bring a node back up (restart).  Idempotent.
+    pub fn set_up(&mut self, id: NodeId) {
+        self.up[id.index()] = true;
+    }
+
+    /// Number of tester nodes currently up.
+    pub fn testers_up(&self) -> usize {
+        self.testers.iter().filter(|&&t| self.is_up(t)).count()
     }
 
     /// A node's role in the deployment.
@@ -349,6 +374,21 @@ mod tests {
             .count();
         // rate = 0.02/hour -> ~2% fail within the hour
         assert!((10..=80).contains(&fails), "fails {fails}");
+    }
+
+    #[test]
+    fn node_lifecycle_flips_up_and_down() {
+        let mut tb = bed(12);
+        let t = tb.testers[4];
+        assert!(tb.is_up(t));
+        assert_eq!(tb.testers_up(), tb.testers.len());
+        tb.set_down(t);
+        tb.set_down(t); // idempotent
+        assert!(!tb.is_up(t));
+        assert_eq!(tb.testers_up(), tb.testers.len() - 1);
+        tb.set_up(t);
+        assert!(tb.is_up(t));
+        assert_eq!(tb.testers_up(), tb.testers.len());
     }
 
     #[test]

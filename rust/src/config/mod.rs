@@ -155,9 +155,13 @@ pub fn preset_by_name(name: &str, seed: u64) -> Result<ExperimentConfig> {
         "http_sec43" => presets::http_sec43(seed),
         "quick_http" => presets::quick_http(8, 120.0, seed),
         "scalability" => presets::scalability(200, seed),
+        "churn_study" => presets::churn_study(20, 600.0, seed),
+        "spike_study" => presets::spike_study(20, 600.0, seed),
+        "soak" => presets::soak(20, 900.0, seed),
         other => bail!(
             "unknown preset {other:?} (try prews_fig3, ws_fig6, \
-             ws_overload, http_sec43, quick_http, scalability)"
+             ws_overload, http_sec43, quick_http, scalability, \
+             churn_study, spike_study, soak)"
         ),
     })
 }
@@ -194,7 +198,18 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig> {
     }
     if let Some(t) = doc.get("test") {
         let d = &mut cfg.controller.desc;
+        let old_duration = d.duration_s;
         set_f64(t, "duration_s", &mut d.duration_s)?;
+        let new_duration = d.duration_s;
+        // keep a preset-embedded scenario anchored to the new duration
+        // (an explicit [scenario] section below replaces it anyway)
+        if !cfg.scenario.is_empty()
+            && old_duration > 0.0
+            && new_duration != old_duration
+        {
+            cfg.scenario = cfg.scenario.rescaled(new_duration / old_duration);
+        }
+        let d = &mut cfg.controller.desc;
         set_f64(t, "client_interval_s", &mut d.client_interval_s)?;
         set_f64(t, "sync_interval_s", &mut d.sync_interval_s)?;
         set_f64(t, "rate_cap_per_s", &mut d.rate_cap_per_s)?;
@@ -209,8 +224,39 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig> {
     if let Some(s) = doc.get("service") {
         apply_service_overrides(s, &mut cfg.service)?;
     }
+    if let Some(s) = doc.get("scenario") {
+        apply_scenario(s, &mut cfg)?;
+    }
     validate(&cfg)?;
     Ok(cfg)
+}
+
+/// `[scenario]` section: `name` picks a shipped scenario (scaled to the
+/// test duration); churn keys then override its stochastic process.
+fn apply_scenario(
+    s: &HashMap<String, Value>,
+    cfg: &mut ExperimentConfig,
+) -> Result<()> {
+    if let Some(v) = s.get("name") {
+        let name = v.as_str().context("scenario name must be a string")?;
+        cfg.scenario =
+            crate::scenario::by_name(name, cfg.controller.desc.duration_s)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let churn_keys = ["crash_rate_per_hour", "restart_min_s", "restart_max_s", "restart_prob"];
+    if churn_keys.iter().any(|k| s.contains_key(*k)) {
+        let mut c = cfg.scenario.churn.unwrap_or(crate::scenario::ChurnProcess {
+            crash_rate_per_hour: 1.0,
+            restart_delay_s: (30.0, 120.0),
+            restart_prob: 0.8,
+        });
+        set_f64(s, "crash_rate_per_hour", &mut c.crash_rate_per_hour)?;
+        set_f64(s, "restart_min_s", &mut c.restart_delay_s.0)?;
+        set_f64(s, "restart_max_s", &mut c.restart_delay_s.1)?;
+        set_f64(s, "restart_prob", &mut c.restart_prob)?;
+        cfg.scenario.churn = Some(c);
+    }
+    Ok(())
 }
 
 fn apply_service_overrides(
@@ -280,6 +326,9 @@ pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.controller.desc.sync_interval_s <= 0.0 {
         bail!("sync_interval_s must be positive");
     }
+    if let Err(e) = cfg.scenario.validate() {
+        bail!("invalid scenario: {e}");
+    }
     Ok(())
 }
 
@@ -333,6 +382,31 @@ mod tests {
     #[test]
     fn unknown_preset_is_an_error() {
         assert!(experiment_from_toml("preset = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn scenario_section_builds_and_overrides() {
+        let cfg = experiment_from_toml(
+            "preset = \"quick_http\"\n\
+             [scenario]\nname = \"churn\"\ncrash_rate_per_hour = 5.0\n\
+             restart_prob = 0.5\n",
+        )
+        .unwrap();
+        let c = cfg.scenario.churn.expect("churn configured");
+        assert_eq!(c.crash_rate_per_hour, 5.0);
+        assert_eq!(c.restart_prob, 0.5);
+        // churn keys alone create a process without a named scenario
+        let cfg = experiment_from_toml(
+            "preset = \"quick_http\"\n[scenario]\ncrash_rate_per_hour = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.churn.unwrap().crash_rate_per_hour, 2.0);
+        // bad names and invalid processes are loud
+        assert!(experiment_from_toml("[scenario]\nname = \"zzz\"\n").is_err());
+        assert!(experiment_from_toml(
+            "[scenario]\nrestart_prob = 7.0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -56,6 +56,8 @@ struct Slot {
     consecutive_failures: u32,
     samples: Vec<CallSample>,
     clock: ClockMap,
+    /// Times this tester re-registered after a crash (§3 late join).
+    rejoins: u32,
 }
 
 /// Actions the world must carry out for the controller.
@@ -88,6 +90,7 @@ impl Controller {
                 consecutive_failures: 0,
                 samples: Vec::new(),
                 clock: ClockMap::new(),
+                rejoins: 0,
             })
             .collect();
         Controller {
@@ -109,6 +112,13 @@ impl Controller {
             .iter()
             .filter(|s| s.state == SessionState::Running)
             .count()
+    }
+
+    /// Is this tester currently evicted (deleted from the reporter
+    /// list)?  A live tester in this state must re-register (Hello)
+    /// before its reports count again.
+    pub fn is_evicted(&self, t: TesterId) -> bool {
+        self.slots[t.index()].state == SessionState::Evicted
     }
 
     /// Deploy outcome for a tester.
@@ -156,11 +166,27 @@ impl Controller {
     ) -> Option<CtrlAction> {
         let evict_after = self.cfg.eviction_failures;
         let s = &mut self.slots[t.index()];
+        if matches!(msg, TesterMsg::Hello) {
+            // Late join (§3): a tester whose node came back re-registers.
+            // The controller re-adds it to the reporter list — including
+            // one it already evicted for silence while the node was down.
+            if matches!(s.state, SessionState::Running | SessionState::Evicted) {
+                s.state = SessionState::Running;
+                s.stopped_at = f64::MAX;
+                s.consecutive_failures = 0;
+                s.last_heard = now;
+                s.rejoins += 1;
+            }
+            return None;
+        }
         if matches!(s.state, SessionState::Evicted | SessionState::Done) {
             return None; // deleted from the reporter list (§3)
         }
         s.last_heard = now;
         match msg {
+            // Hello never reaches this match (consumed by the late-join
+            // block above); the arm exists only for exhaustiveness.
+            TesterMsg::Hello => None,
             TesterMsg::DeployDone | TesterMsg::Heartbeat => None,
             TesterMsg::Sync(p) => {
                 s.clock.record(p);
@@ -235,6 +261,7 @@ impl Controller {
                 evicted: s.state == SessionState::Evicted,
                 clock: s.clock.clone(),
                 samples: s.samples.len() as u64,
+                rejoins: s.rejoins,
             });
             for c in &s.samples {
                 match (
@@ -337,6 +364,37 @@ mod tests {
         // tester 0 silent since t=0 -> evicted; tester 1 heard at 500
         assert_eq!(actions, vec![CtrlAction::Evict(TesterId(0))]);
         assert_eq!(c.live_testers(), 1);
+    }
+
+    #[test]
+    fn hello_rejoins_an_evicted_tester() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        // silent long enough to be evicted (node down)
+        let actions = c.check_liveness(700.0);
+        assert_eq!(actions, vec![CtrlAction::Evict(TesterId(0))]);
+        assert_eq!(c.live_testers(), 0);
+        // node restarts; the tester re-registers and reports again
+        assert!(c.on_msg(750.0, TesterId(0), TesterMsg::Hello).is_none());
+        assert_eq!(c.live_testers(), 1);
+        assert!(c
+            .on_msg(751.0, TesterId(0), sample(0, 0, true, 751.0))
+            .is_none());
+        let rd = c.finalize(800.0);
+        assert!(!rd.testers[0].evicted);
+        assert_eq!(rd.testers[0].rejoins, 1);
+        assert_eq!(rd.testers[0].samples, 1);
+        assert_eq!(rd.testers[0].stopped_at, 800.0);
+    }
+
+    #[test]
+    fn hello_before_start_is_ignored() {
+        let mut c = controller(1);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.on_msg(1.0, TesterId(0), TesterMsg::Hello);
+        let rd = c.finalize(10.0);
+        assert_eq!(rd.testers[0].rejoins, 0);
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //! is an explicit event with network latency applied, so framework
 //! artifacts (sync error, report latency, ramp shape) appear in the data
 //! exactly as they did on PlanetLab.
+//!
+//! Failure injection: [`ExperimentConfig::scenario`] compiles (see
+//! [`crate::scenario`]) into a concrete fault schedule before the loop
+//! starts; each fault is one DES event, so churn, network weather and
+//! service outages replay bit-identically from the seed.  Messages are
+//! genuinely droppable here — loss and partitions are applied on every
+//! control-plane and data-plane leg — which is what finally exercises
+//! the controller's silence eviction and late-join paths with real
+//! inputs.
 
 pub mod presets;
 
@@ -21,6 +30,7 @@ use crate::controller::{Controller, ControllerConfig, CtrlAction};
 use crate::ids::{RequestId, TesterId};
 use crate::metrics::RunData;
 use crate::net::NetModel;
+use crate::scenario::{Fault, FaultKind, Scenario};
 use crate::services::{
     gram_prews::{GramPrews, GramPrewsParams},
     gram_ws::{GramWs, GramWsParams},
@@ -93,6 +103,9 @@ pub struct ExperimentConfig {
     /// Extra time after the last tester's duration before the
     /// experiment is cut off.
     pub grace_s: f64,
+    /// Fault-injection scenario (churn, weather, service outages);
+    /// [`Scenario::none`] for a quiet run.
+    pub scenario: Scenario,
 }
 
 /// Everything a finished experiment produces.
@@ -111,6 +124,8 @@ pub struct ExperimentResult {
     pub wall_ms: f64,
     /// Service stalls observed (WS GRAM only; 0 otherwise).
     pub stalls: u64,
+    /// Scenario faults scheduled for this run (0 for a quiet run).
+    pub faults: u64,
 }
 
 /// Events of the DiPerF world.
@@ -123,6 +138,11 @@ enum Ev {
     TesterDeliver(usize, TesterMsg),
     /// Controller decides to start tester `i` (per the ramp schedule).
     StartTester(usize),
+    /// Retransmit Start to tester `i` if it still has not come up (the
+    /// one-shot Start can be lost to weather or a crashed node; ssh
+    /// would retry, so the controller does too).  `attempt` bounds the
+    /// chain.
+    StartRetry(usize, u32),
     /// Tester `i` launches its next client.
     ClientLaunch(usize),
     /// A client's request reaches the service.
@@ -141,16 +161,34 @@ enum Ev {
     SyncReqArrive(usize, f64),
     /// The sync reply reaches tester `i` (server reading attached).
     SyncReplyArrive(usize, f64, f64),
-    /// Tester `i` begins its next sync exchange.
-    SyncBegin(usize),
-    /// Node under tester `i` dies.
+    /// Tester `i` begins its next sync exchange.  The generation tag
+    /// keeps exactly one chain alive per tester across crash/restart
+    /// cycles: stale chain events compare unequal and die out.
+    SyncBegin(usize, u32),
+    /// Node under tester `i` dies permanently (testbed reliability, as
+    /// opposed to scenario churn which may restart it).
     NodeFail(usize),
+    /// Scenario fault `k` (index into the compiled schedule) fires.
+    Fault(usize),
     /// Controller liveness sweep.
     CtrlTick,
 }
 
 struct ReqInfo {
     tester: usize,
+}
+
+/// The combined effect of overlapping weather spells on one node: the
+/// worst latency factor, summed loss (clamped), partitioned if any
+/// spell partitions.  Empty input means clear skies.
+fn combine_weather(spells: &[(u64, crate::scenario::WeatherPatch)]) -> crate::scenario::WeatherPatch {
+    let mut p = crate::scenario::WeatherPatch::clear();
+    for &(_, s) in spells {
+        p.latency_factor = p.latency_factor.max(s.latency_factor);
+        p.extra_loss = (p.extra_loss + s.extra_loss).min(1.0);
+        p.partitioned = p.partitioned || s.partitioned;
+    }
+    p
 }
 
 /// The running world.
@@ -176,6 +214,20 @@ struct World {
     /// The earliest armed service wake (dedupe: stale ServiceWake events
     /// whose tag mismatches are dropped, so wake chains cannot multiply).
     svc_wake: Option<u64>,
+    /// Compiled scenario fault schedule (index = event payload).
+    faults: Vec<Fault>,
+    /// Pairing state: the scenario crash currently holding each tester
+    /// down (a restart applies only if its token still matches; `None`
+    /// after a permanent testbed failure so nothing revives it).
+    crash_token: Vec<Option<u64>>,
+    /// Active weather spells per tester node (token -> patch).  A node
+    /// under several overlapping spells gets their *combined* effect;
+    /// each clear removes only its own spell.
+    weather_spells: Vec<Vec<(u64, crate::scenario::WeatherPatch)>>,
+    /// Active service degradations (token -> factor).  Overlapping
+    /// degradations combine as "worst wins"; each restore removes only
+    /// its own entry.
+    degrade_spells: Vec<(u64, f64)>,
 }
 
 impl World {
@@ -197,23 +249,27 @@ impl World {
     }
 
     fn send_to_controller(&mut self, i: usize, msg: TesterMsg) {
-        if self.testers[i].phase == Phase::Dead {
+        let node = self.testers[i].node;
+        if self.testers[i].phase == Phase::Dead || !self.bed.is_up(node) {
             return;
         }
-        let lat = self.net.latency(
-            self.testers[i].node,
-            self.bed.controller,
-            &mut self.rng_net,
-        );
+        if self.net.lost(node, self.bed.controller, &mut self.rng_net) {
+            return;
+        }
+        let lat = self
+            .net
+            .latency(node, self.bed.controller, &mut self.rng_net);
         self.eng.schedule_in(lat, Ev::TesterDeliver(i, msg));
     }
 
     fn send_to_tester(&mut self, i: usize, msg: CtrlMsg) {
-        let lat = self.net.latency(
-            self.bed.controller,
-            self.testers[i].node,
-            &mut self.rng_net,
-        );
+        let node = self.testers[i].node;
+        if self.net.lost(self.bed.controller, node, &mut self.rng_net) {
+            return;
+        }
+        let lat = self
+            .net
+            .latency(self.bed.controller, node, &mut self.rng_net);
         self.eng.schedule_in(lat, Ev::CtrlDeliver(i, msg));
     }
 
@@ -230,11 +286,15 @@ impl World {
                 }
                 SvcOut::Done { req, outcome, .. } => {
                     if let Some(info) = self.reqs.get(&req.0) {
-                        let lat = self.net.latency(
-                            self.bed.service,
-                            self.testers[info.tester].node,
-                            &mut self.rng_net,
-                        );
+                        let node = self.testers[info.tester].node;
+                        if self.net.lost(self.bed.service, node, &mut self.rng_net) {
+                            // the response is gone for good: drop the
+                            // request record; the tester's timeout fires
+                            self.reqs.remove(&req.0);
+                            continue;
+                        }
+                        let lat =
+                            self.net.latency(self.bed.service, node, &mut self.rng_net);
                         self.eng
                             .schedule_in(lat, Ev::ResponseDeliver(req, outcome));
                     }
@@ -281,6 +341,80 @@ impl World {
         }
     }
 
+    /// Re-apply the combined service degradation: the worst (smallest)
+    /// active factor wins; full speed when no degradation is active.
+    fn apply_degrade(&mut self) {
+        let factor = self
+            .degrade_spells
+            .iter()
+            .map(|&(_, f)| f)
+            .fold(1.0, f64::min);
+        let outs = self.service.set_speed_factor(self.eng.now(), factor);
+        self.handle_svc_outs(outs);
+    }
+
+    /// Execute one compiled scenario fault.  Pairing tokens make
+    /// overlapping faults safe: an undo applies only if its setter is
+    /// still the one in effect.
+    fn apply_fault(&mut self, k: usize) {
+        let f = self.faults[k];
+        match f.kind {
+            FaultKind::Crash { tester, token } => {
+                if self.testers[tester].phase != Phase::Dead {
+                    self.testers[tester].kill();
+                    self.bed.set_down(self.testers[tester].node);
+                    self.crash_token[tester] = Some(token);
+                }
+            }
+            FaultKind::Restart { tester, token } => {
+                if self.crash_token[tester] != Some(token) {
+                    return; // superseded or permanently failed
+                }
+                self.crash_token[tester] = None;
+                self.bed.set_up(self.testers[tester].node);
+                if self.testers[tester].revive() == Phase::Running {
+                    // §3 late join: re-register, restart the sync chain,
+                    // and resume launching clients (immediately if the
+                    // pre-crash clock map still places us on the common
+                    // base, otherwise after the first fresh sync)
+                    self.send_to_controller(tester, TesterMsg::Hello);
+                    let gen = self.testers[tester].sync_gen;
+                    self.eng
+                        .schedule_in(SimDuration(0), Ev::SyncBegin(tester, gen));
+                    if !self.testers[tester].clock.is_empty() {
+                        self.schedule_next_launch(tester);
+                    }
+                }
+            }
+            FaultKind::Weather { tester, patch, token } => {
+                self.weather_spells[tester].push((token, patch));
+                self.net.set_weather(
+                    self.testers[tester].node,
+                    combine_weather(&self.weather_spells[tester]),
+                );
+            }
+            FaultKind::WeatherClear { tester, token } => {
+                self.weather_spells[tester].retain(|&(t, _)| t != token);
+                self.net.set_weather(
+                    self.testers[tester].node,
+                    combine_weather(&self.weather_spells[tester]),
+                );
+            }
+            FaultKind::Degrade { factor, token } => {
+                self.degrade_spells.push((token, factor));
+                self.apply_degrade();
+            }
+            FaultKind::DegradeRestore { token } => {
+                self.degrade_spells.retain(|&(t, _)| t != token);
+                self.apply_degrade();
+            }
+            FaultKind::RestartService => {
+                let outs = self.service.restart(self.eng.now());
+                self.handle_svc_outs(outs);
+            }
+        }
+    }
+
     fn handle(&mut self, ev: Ev) {
         match ev {
             Ev::DeployDone(i) => {
@@ -313,49 +447,86 @@ impl World {
                 self.controller
                     .mark_started(TesterId(i as u32), self.eng.now().as_secs_f64());
                 self.send_to_tester(i, CtrlMsg::Start(self.controller.description()));
+                self.eng
+                    .schedule_in(SimDuration::from_secs(15), Ev::StartRetry(i, 1));
             }
-            Ev::CtrlDeliver(i, msg) => match msg {
-                CtrlMsg::Start(desc) => {
-                    if self.testers[i].phase != Phase::Idle {
-                        return;
-                    }
-                    let now_local = self.local(i);
-                    self.testers[i].start(now_local, desc);
-                    // latency estimate: one ping round trip to the service
-                    let rtt = self
-                        .net
-                        .latency(
-                            self.testers[i].node,
-                            self.bed.service,
-                            &mut self.rng_net,
-                        )
-                        .as_secs_f64()
-                        + self
-                            .net
-                            .latency(
-                                self.bed.service,
-                                self.testers[i].node,
-                                &mut self.rng_net,
-                            )
-                            .as_secs_f64();
-                    self.testers[i].latency_estimate_s = rtt / 2.0;
-                    // first sync now; first client launch follows it
-                    self.eng.schedule_in(SimDuration(0), Ev::SyncBegin(i));
-                }
-                CtrlMsg::Stop => {
-                    self.testers[i].stop();
-                }
-            },
-            Ev::SyncBegin(i) => {
-                if !matches!(self.testers[i].phase, Phase::Running) {
+            Ev::StartRetry(i, attempt) => {
+                // Start was lost (weather, or the node was down) and the
+                // tester never came up: retransmit with a bounded chain.
+                // Keep retrying through Dead too — a node that crashed
+                // before its Start arrived revives to Idle and still
+                // needs the retransmit to ever join the run.
+                if !matches!(self.testers[i].phase, Phase::Idle | Phase::Dead)
+                    || attempt > 120
+                {
                     return;
                 }
-                let l1 = self.local(i);
-                let lat = self.net.latency(
-                    self.testers[i].node,
-                    self.bed.time_server,
-                    &mut self.rng_net,
+                self.send_to_tester(i, CtrlMsg::Start(self.controller.description()));
+                self.eng.schedule_in(
+                    SimDuration::from_secs(15),
+                    Ev::StartRetry(i, attempt + 1),
                 );
+            }
+            Ev::CtrlDeliver(i, msg) => {
+                if !self.bed.is_up(self.testers[i].node) {
+                    return; // delivered to a crashed node: lost
+                }
+                match msg {
+                    CtrlMsg::Start(desc) => {
+                        if self.testers[i].phase != Phase::Idle {
+                            return;
+                        }
+                        let now_local = self.local(i);
+                        self.testers[i].start(now_local, desc);
+                        // latency estimate: one ping round trip to the
+                        // service
+                        let rtt = self
+                            .net
+                            .latency(
+                                self.testers[i].node,
+                                self.bed.service,
+                                &mut self.rng_net,
+                            )
+                            .as_secs_f64()
+                            + self
+                                .net
+                                .latency(
+                                    self.bed.service,
+                                    self.testers[i].node,
+                                    &mut self.rng_net,
+                                )
+                                .as_secs_f64();
+                        self.testers[i].latency_estimate_s = rtt / 2.0;
+                        // first sync now; first client launch follows it
+                        let gen = self.testers[i].sync_gen;
+                        self.eng
+                            .schedule_in(SimDuration(0), Ev::SyncBegin(i, gen));
+                    }
+                    CtrlMsg::Stop => {
+                        self.testers[i].stop();
+                    }
+                }
+            }
+            Ev::SyncBegin(i, gen) => {
+                if !matches!(self.testers[i].phase, Phase::Running)
+                    || gen != self.testers[i].sync_gen
+                {
+                    return;
+                }
+                // The chain drives itself from here (not from the reply)
+                // so a lost packet delays one exchange instead of
+                // silencing all future syncs.
+                let l1 = self.local(i);
+                let next_local = l1 + self.testers[i].desc.sync_interval_s;
+                let at = self.local_to_global(i, next_local);
+                self.eng.schedule(at, Ev::SyncBegin(i, gen));
+                let node = self.testers[i].node;
+                if self.net.lost(node, self.bed.time_server, &mut self.rng_net) {
+                    return;
+                }
+                let lat = self
+                    .net
+                    .latency(node, self.bed.time_server, &mut self.rng_net);
                 self.eng.schedule_in(lat, Ev::SyncReqArrive(i, l1));
             }
             Ev::SyncReqArrive(i, l1) => {
@@ -365,16 +536,20 @@ impl World {
                     .node(self.bed.time_server)
                     .clock
                     .local_secs(self.eng.now());
-                let lat = self.net.latency(
-                    self.bed.time_server,
-                    self.testers[i].node,
-                    &mut self.rng_net,
-                );
+                let node = self.testers[i].node;
+                if self.net.lost(self.bed.time_server, node, &mut self.rng_net) {
+                    return;
+                }
+                let lat = self
+                    .net
+                    .latency(self.bed.time_server, node, &mut self.rng_net);
                 self.eng
                     .schedule_in(lat, Ev::SyncReplyArrive(i, l1, server));
             }
             Ev::SyncReplyArrive(i, l1, server) => {
-                if self.testers[i].phase == Phase::Dead {
+                if self.testers[i].phase == Phase::Dead
+                    || !self.bed.is_up(self.testers[i].node)
+                {
                     return;
                 }
                 let l2 = self.local(i);
@@ -387,14 +562,8 @@ impl World {
                     self.sync.push(est - truth, p.rtt());
                 }
                 self.send_to_controller(i, TesterMsg::Sync(p));
-                if self.testers[i].phase == Phase::Running {
-                    // periodic re-sync
-                    let next_local = l2 + self.testers[i].desc.sync_interval_s;
-                    let at = self.local_to_global(i, next_local);
-                    self.eng.schedule(at, Ev::SyncBegin(i));
-                    if first {
-                        self.schedule_next_launch(i);
-                    }
+                if self.testers[i].phase == Phase::Running && first {
+                    self.schedule_next_launch(i);
                 }
             }
             Ev::ClientLaunch(i) => {
@@ -413,6 +582,15 @@ impl World {
                     return;
                 }
                 let now_local = self.local(i);
+                let earliest = self.testers[i].next_launch_local(now_local);
+                if earliest - now_local > 1e-3 {
+                    // an early stale event (e.g. a pre-crash launch chain
+                    // surviving a quick restart): re-anchor to the pacing
+                    // instead of violating the configured rate
+                    let at = self.local_to_global(i, earliest);
+                    self.eng.schedule(at, Ev::ClientLaunch(i));
+                    return;
+                }
                 let node = self.bed.node(self.testers[i].node).clone();
                 if !client::try_start(
                     node.client_start_failure,
@@ -429,6 +607,15 @@ impl World {
                 // client exec overhead before the RPC leaves the node
                 let pre =
                     client::exec_overhead_s(node.cpu_speed, &mut self.rng_testers[i]);
+                if self.net.lost(
+                    self.testers[i].node,
+                    self.bed.service,
+                    &mut self.rng_net,
+                ) {
+                    // the RPC vanished in the WAN; the tester's timeout
+                    // sweep will classify the invocation
+                    return;
+                }
                 let lat = self.net.latency(
                     self.testers[i].node,
                     self.bed.service,
@@ -519,12 +706,30 @@ impl World {
             }
             Ev::NodeFail(i) => {
                 self.testers[i].kill();
+                self.bed.set_down(self.testers[i].node);
+                // permanent: no scenario restart may revive this node
+                self.crash_token[i] = None;
+            }
+            Ev::Fault(k) => {
+                self.apply_fault(k);
             }
             Ev::CtrlTick => {
                 let now = self.eng.now().as_secs_f64();
                 for a in self.controller.check_liveness(now) {
                     let CtrlAction::Evict(t) = a;
                     self.send_to_tester(t.index(), CtrlMsg::Stop);
+                }
+                // Tester-side re-registration loop: a running tester the
+                // controller has evicted keeps offering Hello until one
+                // gets through (the revive-time Hello can be lost to
+                // weather, and a late Start can land after a silence
+                // eviction).
+                for i in 0..self.testers.len() {
+                    if self.testers[i].phase == Phase::Running
+                        && self.controller.is_evicted(TesterId(i as u32))
+                    {
+                        self.send_to_controller(i, TesterMsg::Hello);
+                    }
                 }
                 self.eng
                     .schedule_in(SimDuration::from_secs(30), Ev::CtrlTick);
@@ -571,6 +776,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         ramp_begun: false,
         horizon: SimTime::MAX,
         svc_wake: None,
+        faults: Vec::new(),
+        crash_token: vec![None; n],
+        weather_spells: vec![Vec::new(); n],
+        degrade_spells: Vec::new(),
         bed,
     };
 
@@ -596,6 +805,17 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         {
             w.eng.schedule(at, Ev::NodeFail(i));
         }
+    }
+    // scenario fault injection: compile every random choice up front
+    // (dedicated stream -> the schedule is a pure function of the seed)
+    debug_assert!(cfg.scenario.validate().is_ok(), "invalid scenario");
+    let mut rng_scn = root.split(6);
+    let scn_horizon_s = n as f64 * cfg.controller.stagger_s
+        + cfg.controller.desc.duration_s * 2.0;
+    w.faults = cfg.scenario.compile(n, scn_horizon_s, &mut rng_scn);
+    for (k, f) in w.faults.iter().enumerate() {
+        w.eng
+            .schedule(SimTime::from_secs_f64(f.at_s), Ev::Fault(k));
     }
     w.eng.schedule(SimTime(0), Ev::CtrlTick);
     w.eng.schedule(SimTime(0), Ev::TimeoutSweep);
@@ -635,6 +855,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         sync: w.sync,
         events: w.eng.processed(),
         wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        faults: w.faults.len() as u64,
     }
 }
 
@@ -697,6 +918,159 @@ mod tests {
             assert!((gap - cfg.controller.stagger_s).abs() < 1e-6,
                 "stagger gap {gap}");
         }
+    }
+
+    #[test]
+    fn overlapping_weather_combines_and_clears_independently() {
+        use crate::scenario::WeatherPatch;
+        let partition = (1u64, WeatherPatch::partition());
+        let lossy = (2u64, WeatherPatch::lossy(0.1));
+        let spiky = (3u64, WeatherPatch::spike(4.0));
+        let both = combine_weather(&[partition, lossy]);
+        assert!(both.partitioned);
+        assert_eq!(both.extra_loss, 0.1);
+        // clearing the short lossy spell must not lift the partition
+        let left = combine_weather(&[partition]);
+        assert!(left.partitioned);
+        let calm = combine_weather(&[lossy, spiky]);
+        assert!(!calm.partitioned);
+        assert_eq!(calm.latency_factor, 4.0);
+        assert_eq!(calm.extra_loss, 0.1);
+        assert!(combine_weather(&[]).is_clear());
+    }
+
+    #[test]
+    fn scheduled_crash_and_restart_rejoin() {
+        let mut cfg = presets::quick_http(4, 120.0, 23);
+        cfg.controller.silence_timeout_s = 30.0;
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            at_s: 40.0,
+            action: crate::scenario::Action::CrashTesters {
+                frac: 1.0,
+                restart_after_s: Some(60.0),
+            },
+        }];
+        let r = run_experiment(&cfg);
+        assert_eq!(r.faults, 8, "4 crashes + 4 restarts");
+        let rejoins: u32 = r.data.testers.iter().map(|t| t.rejoins).sum();
+        assert!(rejoins >= 3, "rejoins {rejoins}");
+        // total outage: no completions while everyone is down...
+        let during = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.t_end > 45.0 && s.t_end < 95.0)
+            .count();
+        assert_eq!(during, 0, "samples during the outage");
+        // ...and the pool resumes testing after the restart
+        let after = r.data.samples.iter().filter(|s| s.t_end > 105.0).count();
+        assert!(after > 0, "no samples after the restart");
+    }
+
+    #[test]
+    fn service_restart_fails_in_flight_requests() {
+        let mut cfg = presets::prews_small(8, 240.0, 29);
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            at_s: 150.0,
+            action: crate::scenario::Action::RestartService,
+        }];
+        let r = run_experiment(&cfg);
+        assert!(r.service_stats.errored >= 1, "restart must kill work");
+        let errors = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.outcome == crate::metrics::SampleOutcome::ServiceError)
+            .count();
+        assert!(errors >= 1, "testers must see the failures");
+        let st = r.service_stats;
+        assert!(st.submitted >= st.completed + st.denied + st.errored);
+    }
+
+    #[test]
+    fn service_degradation_reduces_throughput() {
+        let base = run_experiment(&presets::prews_small(8, 300.0, 31));
+        let mut cfg = presets::prews_small(8, 300.0, 31);
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            at_s: 100.0,
+            action: crate::scenario::Action::DegradeService {
+                factor: 0.2,
+                duration_s: 150.0,
+            },
+        }];
+        let r = run_experiment(&cfg);
+        assert!(
+            r.data.completed() < base.data.completed(),
+            "5x slower CPU for half the run must cost completions \
+             ({} vs {})",
+            r.data.completed(),
+            base.data.completed()
+        );
+    }
+
+    #[test]
+    fn nested_degradation_inner_restore_does_not_lift_outer() {
+        // worst-wins: adding a milder inner degradation inside a harsher
+        // outer window must not change the run at all — in particular
+        // the inner restore must not lift the outer degradation early
+        let mk = |with_inner: bool| {
+            let mut cfg = presets::prews_small(6, 300.0, 41);
+            let mut tl = vec![crate::scenario::ScenarioEvent {
+                at_s: 100.0,
+                action: crate::scenario::Action::DegradeService {
+                    factor: 0.2,
+                    duration_s: 150.0,
+                },
+            }];
+            if with_inner {
+                tl.push(crate::scenario::ScenarioEvent {
+                    at_s: 130.0,
+                    action: crate::scenario::Action::DegradeService {
+                        factor: 0.5,
+                        duration_s: 40.0,
+                    },
+                });
+            }
+            cfg.scenario.timeline = tl;
+            run_experiment(&cfg)
+        };
+        let a = mk(false);
+        let b = mk(true);
+        assert_eq!(a.data.samples.len(), b.data.samples.len());
+        for (x, y) in a.data.samples.iter().zip(&b.data.samples) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+            assert_eq!(x.outcome, y.outcome);
+        }
+    }
+
+    #[test]
+    fn partition_weather_starves_then_recovers() {
+        let mut cfg = presets::quick_http(3, 120.0, 37);
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            at_s: 40.0,
+            action: crate::scenario::Action::Weather {
+                frac: 1.0,
+                patch: crate::scenario::WeatherPatch::partition(),
+                duration_s: 30.0,
+            },
+        }];
+        let r = run_experiment(&cfg);
+        // requests and responses are all lost during the partition, so
+        // every invocation in the window times out (timeout 30 s)
+        let during_ok = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.outcome.ok() && s.t_end > 41.0 && s.t_end < 69.0)
+            .count();
+        assert_eq!(during_ok, 0, "completions inside the partition");
+        let after_ok = r
+            .data
+            .samples
+            .iter()
+            .filter(|s| s.outcome.ok() && s.t_end > 80.0)
+            .count();
+        assert!(after_ok > 0, "no recovery after the partition lifted");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use super::{ExperimentConfig, ServiceKind};
 use crate::cluster::TestbedParams;
 use crate::controller::ControllerConfig;
+use crate::scenario::{self, Scenario};
 use crate::services::gram_prews::GramPrewsParams;
 use crate::services::gram_ws::GramWsParams;
 use crate::services::http::HttpParams;
@@ -34,6 +35,7 @@ pub fn prews_fig3(seed: u64) -> ExperimentConfig {
         },
         code: ClientCode::NativeBinary,
         grace_s: 120.0,
+        scenario: Scenario::none(),
     }
 }
 
@@ -62,6 +64,7 @@ pub fn ws_fig6(seed: u64) -> ExperimentConfig {
         },
         code: ClientCode::Jar,
         grace_s: 180.0,
+        scenario: Scenario::none(),
     }
 }
 
@@ -101,6 +104,7 @@ pub fn http_sec43(seed: u64) -> ExperimentConfig {
         },
         code: ClientCode::NativeBinary,
         grace_s: 60.0,
+        scenario: Scenario::none(),
     }
 }
 
@@ -126,6 +130,7 @@ pub fn quick_http(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfi
         },
         code: ClientCode::Custom(100_000),
         grace_s: 30.0,
+        scenario: Scenario::none(),
     }
 }
 
@@ -167,7 +172,43 @@ pub fn scalability(testers: usize, seed: u64) -> ExperimentConfig {
         },
         code: ClientCode::Custom(100_000),
         grace_s: 60.0,
+        scenario: Scenario::none(),
     }
+}
+
+/// Churn study: the E1 shape under PlanetLab-style background churn —
+/// testers crash throughout the run and (mostly) come back, the
+/// controller evicts the silent ones and re-admits late joiners.  A
+/// short silence timeout makes the eviction machinery visible at test
+/// scale.
+pub fn churn_study(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = prews_small(testers, duration_s, seed);
+    cfg.controller.silence_timeout_s = 0.2 * duration_s;
+    cfg.scenario = scenario::by_name("churn", duration_s).expect("shipped scenario");
+    cfg
+}
+
+/// Spike study: a mass failure at half time (30% of the pool dies, most
+/// of it returns) — the availability-dip experiment.
+pub fn spike_study(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = prews_small(testers, duration_s, seed);
+    cfg.controller.silence_timeout_s = 0.15 * duration_s;
+    cfg.scenario = scenario::by_name("spike", duration_s).expect("shipped scenario");
+    cfg
+}
+
+/// Soak: long-haul mild churn plus network weather (latency spells,
+/// loss bursts, occasional partitions) against the HTTP service on a
+/// real WAN testbed.
+pub fn soak(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = quick_http(testers, duration_s, seed);
+    cfg.testbed = TestbedParams {
+        num_testers: testers,
+        ..Default::default()
+    };
+    cfg.controller.silence_timeout_s = 0.2 * duration_s;
+    cfg.scenario = scenario::by_name("soak", duration_s).expect("shipped scenario");
+    cfg
 }
 
 #[cfg(test)]
@@ -197,5 +238,21 @@ mod tests {
         let o = ws_overload(1);
         assert_eq!(o.testbed.num_testers, 89);
         assert_eq!(o.controller.stagger_s, w.controller.stagger_s);
+    }
+
+    #[test]
+    fn paper_presets_are_quiet_scenario_presets_are_not() {
+        assert!(prews_fig3(1).scenario.is_empty());
+        assert!(ws_fig6(1).scenario.is_empty());
+        assert!(http_sec43(1).scenario.is_empty());
+        for cfg in [
+            churn_study(10, 300.0, 1),
+            spike_study(10, 300.0, 1),
+            soak(10, 300.0, 1),
+        ] {
+            assert!(!cfg.scenario.is_empty());
+            cfg.scenario.validate().unwrap();
+        }
+        assert!(soak(10, 300.0, 1).testbed.failure_rate_per_hour > 0.0);
     }
 }

@@ -19,6 +19,24 @@
 //! Start at [`experiment::run_experiment`] with a preset from
 //! [`experiment::presets`], then feed the result to [`analysis`] (native)
 //! or [`runtime`] (XLA) and [`report`].
+//!
+//! ## Scenario engine
+//!
+//! The paper's testbed was defined by failure: PlanetLab nodes died and
+//! came back, paths degraded, and the services buckled.  The
+//! [`scenario`] module makes those conditions first-class experiment
+//! inputs — a [`scenario::Scenario`] combines a scheduled timeline
+//! (mass crashes, latency spikes, loss bursts, partitions, service
+//! degradation/restarts) with stochastic background churn and weather
+//! processes.  Scenarios are *compiled* into a concrete fault schedule
+//! before the event loop starts, so every run — however hostile —
+//! replays bit-identically from its seed.  The churn-facing analysis
+//! (availability and fairness under churn) lives in
+//! [`analysis::churn_report`]; ready-made hostile presets are
+//! [`experiment::presets::churn_study`],
+//! [`experiment::presets::spike_study`] and
+//! [`experiment::presets::soak`], and the CLI exposes them via
+//! `diperf run --scenario <name>`.  See `examples/churn_study.rs`.
 
 #![warn(missing_docs)]
 
@@ -38,6 +56,7 @@ pub mod net;
 pub mod predict;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod services;
 pub mod sim;
 pub mod tester;

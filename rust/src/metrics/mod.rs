@@ -99,6 +99,9 @@ pub struct TesterRecord {
     pub clock: ClockMap,
     /// Samples received from this tester.
     pub samples: u64,
+    /// Times the tester re-registered after a node restart (scenario
+    /// churn; 0 in a quiet run).
+    pub rejoins: u32,
 }
 
 /// Everything a finished experiment hands to analysis/reporting.
@@ -247,6 +250,7 @@ mod tests {
             evicted,
             clock: ClockMap::new(),
             samples: 10,
+            rejoins: 0,
         }
     }
 

@@ -13,6 +13,7 @@
 //! at most the network latency"), so it is modeled explicitly.
 
 use crate::ids::NodeId;
+use crate::scenario::WeatherPatch;
 use crate::sim::SimDuration;
 use crate::util::dist::{lognormal_median, weighted_index};
 use crate::util::Pcg64;
@@ -46,16 +47,35 @@ impl NetProfile {
     }
 }
 
-/// The network: per-node profiles, sampled per-message latencies.
+/// The network: per-node profiles, sampled per-message latencies, and a
+/// mutable per-node *weather* overlay (latency spikes, loss bursts and
+/// partitions injected by [`crate::scenario`] mid-run).
 #[derive(Clone, Debug)]
 pub struct NetModel {
     profiles: Vec<NetProfile>,
+    weather: Vec<WeatherPatch>,
 }
 
 impl NetModel {
     /// Build a model from per-node profiles (indexed by [`NodeId`]).
     pub fn new(profiles: Vec<NetProfile>) -> NetModel {
-        NetModel { profiles }
+        let weather = vec![WeatherPatch::clear(); profiles.len()];
+        NetModel { profiles, weather }
+    }
+
+    /// Overlay a weather patch on one node (replaces any previous one).
+    pub fn set_weather(&mut self, n: NodeId, patch: WeatherPatch) {
+        self.weather[n.index()] = patch;
+    }
+
+    /// Remove a node's weather overlay.
+    pub fn clear_weather(&mut self, n: NodeId) {
+        self.weather[n.index()] = WeatherPatch::clear();
+    }
+
+    /// A node's current weather overlay.
+    pub fn weather(&self, n: NodeId) -> &WeatherPatch {
+        &self.weather[n.index()]
     }
 
     /// Number of nodes the model covers.
@@ -73,14 +93,17 @@ impl NetModel {
         &self.profiles[n.index()]
     }
 
-    /// Sample the one-way latency for a message `from -> to`.
+    /// Sample the one-way latency for a message `from -> to`.  Weather
+    /// overlays multiply each endpoint's own leg.
     pub fn latency(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> SimDuration {
         if from == to {
             return SimDuration(50); // loopback
         }
         let a = &self.profiles[from.index()];
         let b = &self.profiles[to.index()];
-        let base = a.up + b.down;
+        let wa = &self.weather[from.index()];
+        let wb = &self.weather[to.index()];
+        let base = a.up.scale(wa.latency_factor) + b.down.scale(wb.latency_factor);
         let jitter = (a.jitter.max(b.jitter)).max(1.0);
         if jitter <= 1.0 {
             base
@@ -89,9 +112,21 @@ impl NetModel {
         }
     }
 
-    /// Sample whether a message `from -> to` is lost.
+    /// Sample whether a message `from -> to` is lost.  A partitioned
+    /// endpoint loses everything; weather loss adds to profile loss.
     pub fn lost(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> bool {
-        let p = self.profiles[from.index()].loss + self.profiles[to.index()].loss;
+        if from == to {
+            return false;
+        }
+        let wa = &self.weather[from.index()];
+        let wb = &self.weather[to.index()];
+        if wa.partitioned || wb.partitioned {
+            return true;
+        }
+        let p = self.profiles[from.index()].loss
+            + self.profiles[to.index()].loss
+            + wa.extra_loss
+            + wb.extra_loss;
         p > 0.0 && rng.chance(p)
     }
 
@@ -145,7 +180,11 @@ impl Default for WanParams {
             asymmetry_sigma: 0.9,
             jitter: 1.12,
             bandwidth: (0.5e6, 8.0e6),
-            loss: (0.0, 0.002),
+            // Loss now genuinely drops messages (the scenario engine's
+            // weather machinery): baseline paths are clean so that the
+            // paper-shape calibration is unchanged, and loss bursts are
+            // injected explicitly via `scenario::WeatherPatch`.
+            loss: (0.0, 0.0),
         }
     }
 }
@@ -266,6 +305,49 @@ mod tests {
         let s = Summary::of(&errs);
         // this is the clock-sync error driver; must be tens of ms
         assert!(s.mean > 15.0 && s.mean < 200.0, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn weather_overlay_scales_latency_and_clears() {
+        let mut net = two_node_net(10, 10, 10, 10);
+        let mut rng = Pcg64::seed_from(7);
+        net.set_weather(NodeId(0), WeatherPatch::spike(5.0));
+        // 0 -> 1: up leg 10 ms x5 + down leg 10 ms = 60 ms
+        let l = net.latency(NodeId(0), NodeId(1), &mut rng);
+        assert_eq!(l, SimDuration::from_millis(60));
+        // 1 -> 0: node 1's up leg 10 ms (unscaled) + node 0's down leg
+        // 10 ms x5 = 60 ms — weather scales each endpoint's own legs,
+        // so it degrades both directions through the afflicted node
+        let l = net.latency(NodeId(1), NodeId(0), &mut rng);
+        assert_eq!(l, SimDuration::from_millis(60));
+        net.clear_weather(NodeId(0));
+        let l = net.latency(NodeId(0), NodeId(1), &mut rng);
+        assert_eq!(l, SimDuration::from_millis(20));
+    }
+
+    #[test]
+    fn partition_loses_everything() {
+        let mut net = two_node_net(1, 1, 1, 1);
+        let mut rng = Pcg64::seed_from(8);
+        assert!(!net.lost(NodeId(0), NodeId(1), &mut rng));
+        net.set_weather(NodeId(1), WeatherPatch::partition());
+        for _ in 0..100 {
+            assert!(net.lost(NodeId(0), NodeId(1), &mut rng));
+            assert!(net.lost(NodeId(1), NodeId(0), &mut rng));
+        }
+        net.clear_weather(NodeId(1));
+        assert!(!net.lost(NodeId(0), NodeId(1), &mut rng));
+    }
+
+    #[test]
+    fn weather_loss_adds_to_profile_loss() {
+        let mut net = two_node_net(1, 1, 1, 1);
+        net.set_weather(NodeId(0), WeatherPatch::lossy(0.5));
+        let mut rng = Pcg64::seed_from(9);
+        let lost = (0..4000)
+            .filter(|_| net.lost(NodeId(0), NodeId(1), &mut rng))
+            .count();
+        assert!((1700..=2300).contains(&lost), "lost {lost}/4000 at p=0.5");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::analysis::AnalysisOutput;
+use crate::analysis::{AnalysisOutput, ChurnReport};
 use crate::metrics::RunData;
 
 /// Timeline series (Figures 3 and 6): one row per quantum.
@@ -63,6 +63,28 @@ pub fn per_client_csv(out: &AnalysisOutput, rd: &RunData) -> String {
         );
     }
     s
+}
+
+/// Availability-under-churn series: one row per quantum (scenario runs;
+/// flat 1.0 availability in a quiet run).
+pub fn churn_csv(c: &ChurnReport, t0: f64, quantum: f64) -> String {
+    let mut s = String::from("time_s,active_clients,availability\n");
+    for b in 0..c.active.len() {
+        let t = t0 + (b as f64 + 0.5) * quantum;
+        let _ = writeln!(s, "{:.1},{:.0},{:.4}", t, c.active[b], c.availability[b]);
+    }
+    s
+}
+
+/// One-paragraph availability/fairness summary for `summary.txt`.
+pub fn churn_summary(c: &ChurnReport) -> String {
+    format!(
+        "availability      mean {:.3} / min {:.3} (peak-normalized)\n\
+         fairness (Jain)   {:.3}\n\
+         evicted testers   {}\n\
+         tester rejoins    {}\n",
+        c.mean_availability, c.min_availability, c.jain_fairness, c.evicted, c.rejoins,
+    )
 }
 
 /// Polynomial-model echo (coefficients over normalized time).
@@ -173,6 +195,17 @@ impl RunDir {
         )?;
         Ok(())
     }
+
+    /// Write the availability-under-churn series for one experiment.
+    pub fn write_churn(
+        &self,
+        tag: &str,
+        c: &ChurnReport,
+        t0: f64,
+        quantum: f64,
+    ) -> Result<()> {
+        self.write(&format!("{tag}_availability.csv"), &churn_csv(c, t0, quantum))
+    }
 }
 
 /// Markdown row helper for EXPERIMENTS.md-style tables.
@@ -280,6 +313,7 @@ pub fn parse_samples_csv(text: &str) -> Result<RunData> {
             evicted: false,
             clock: crate::timesync::ClockMap::new(),
             samples: mine.len() as u64,
+            rejoins: 0,
         });
     }
     Ok(rd)
@@ -329,11 +363,33 @@ mod tests {
             evicted: false,
             clock: crate::timesync::ClockMap::new(),
             samples: 10,
+            rejoins: 0,
         });
         let csv = per_client_csv(&small_out(), &rd);
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[1].starts_with("1,10,"));
+    }
+
+    #[test]
+    fn churn_csv_and_summary_render() {
+        let c = ChurnReport {
+            active: vec![4.0, 2.0],
+            availability: vec![1.0, 0.5],
+            mean_availability: 0.75,
+            min_availability: 0.5,
+            jain_fairness: 0.9,
+            evicted: 2,
+            rejoins: 3,
+        };
+        let csv = churn_csv(&c, 0.0, 10.0);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("5.0,4,1.0000"));
+        assert!(lines[2].starts_with("15.0,2,0.5000"));
+        let s = churn_summary(&c);
+        assert!(s.contains("min 0.500"));
+        assert!(s.contains("rejoins    3"));
     }
 
     #[test]

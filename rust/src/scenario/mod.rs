@@ -1,0 +1,820 @@
+//! Scenario engine: fault injection, churn and network weather.
+//!
+//! The paper's PlanetLab runs were defined by failure: tester nodes
+//! died and came back, network paths degraded mid-run, and the target
+//! service itself buckled (§3's failure taxonomy and the controller's
+//! eviction machinery exist precisely for this).  A [`Scenario`] makes
+//! those conditions first-class experiment inputs: a deterministic
+//! timeline of scheduled [`Action`]s plus optional stochastic
+//! background processes ([`ChurnProcess`], [`WeatherProcess`]).
+//!
+//! Determinism: a scenario is *compiled* once, before the event loop
+//! starts, into a concrete time-sorted [`Fault`] schedule — every
+//! random choice (which testers crash, when spells start, how long an
+//! outage lasts) is resolved up front from a dedicated RNG stream split
+//! from the experiment seed.  The experiment world then schedules one
+//! DES event per fault, so a run with a scenario replays bit-identically
+//! from its seed just like a run without one.
+//!
+//! Pairing tokens make overlapping faults safe: a `Restart` only
+//! revives the tester if the matching `Crash` is still the one in
+//! effect, and a `WeatherClear` only clears the spell that set it, so
+//! overlapping spells or competing crash sources cannot cancel each
+//! other incorrectly.
+
+use crate::util::{dist, Pcg64};
+
+/// A transient connectivity patch applied to one tester node's WAN
+/// profile (the "weather" overlay on [`crate::net::NetProfile`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeatherPatch {
+    /// One-way latency multiplier (>= 1.0 degrades, 1.0 is clear).
+    pub latency_factor: f64,
+    /// Additional per-message loss probability.
+    pub extra_loss: f64,
+    /// Hard partition: every message to or from the node is lost.
+    pub partitioned: bool,
+}
+
+impl WeatherPatch {
+    /// Clear skies: no overlay.
+    pub fn clear() -> WeatherPatch {
+        WeatherPatch {
+            latency_factor: 1.0,
+            extra_loss: 0.0,
+            partitioned: false,
+        }
+    }
+
+    /// A latency spike (congestion, rerouting).
+    pub fn spike(latency_factor: f64) -> WeatherPatch {
+        WeatherPatch {
+            latency_factor,
+            ..WeatherPatch::clear()
+        }
+    }
+
+    /// A loss burst.
+    pub fn lossy(extra_loss: f64) -> WeatherPatch {
+        WeatherPatch {
+            extra_loss,
+            ..WeatherPatch::clear()
+        }
+    }
+
+    /// A transient partition from the WAN core.
+    pub fn partition() -> WeatherPatch {
+        WeatherPatch {
+            partitioned: true,
+            ..WeatherPatch::clear()
+        }
+    }
+
+    /// Is this patch a no-op?
+    pub fn is_clear(&self) -> bool {
+        *self == WeatherPatch::clear()
+    }
+}
+
+impl Default for WeatherPatch {
+    fn default() -> WeatherPatch {
+        WeatherPatch::clear()
+    }
+}
+
+/// One scheduled scenario action (what the experimenter writes).
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// Crash a fraction of the tester pool; each victim optionally
+    /// restarts after the given outage.
+    CrashTesters {
+        /// Fraction of the pool to kill, in [0, 1].
+        frac: f64,
+        /// Outage before restart; `None` means the crash is permanent.
+        restart_after_s: Option<f64>,
+    },
+    /// Apply a weather patch to a random fraction of tester nodes for a
+    /// fixed duration.
+    Weather {
+        /// Fraction of the pool affected, in [0, 1].
+        frac: f64,
+        /// The overlay to apply.
+        patch: WeatherPatch,
+        /// How long the spell lasts (seconds).
+        duration_s: f64,
+    },
+    /// Degrade the target-service host CPU (factor < 1.0) for a fixed
+    /// duration, then restore full speed.
+    DegradeService {
+        /// Speed multiplier while degraded (> 0).
+        factor: f64,
+        /// How long the degradation lasts (seconds).
+        duration_s: f64,
+    },
+    /// Kill and immediately restart the target service: all in-flight
+    /// requests fail, warm state (e.g. WS GRAM user hosting
+    /// environments) is lost.
+    RestartService,
+}
+
+/// An [`Action`] anchored at a point in experiment (global) time.
+#[derive(Clone, Debug)]
+pub struct ScenarioEvent {
+    /// When the action fires (global seconds).
+    pub at_s: f64,
+    /// What happens.
+    pub action: Action,
+}
+
+/// Stochastic background churn: each tester crashes as a Poisson
+/// process and (usually) comes back after a random outage — the
+/// PlanetLab experience.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnProcess {
+    /// Per-tester crash rate (events per hour of virtual time).
+    pub crash_rate_per_hour: f64,
+    /// Outage duration range `(min_s, max_s)`, sampled uniformly.
+    pub restart_delay_s: (f64, f64),
+    /// Probability a crash is followed by a restart (the rest are
+    /// permanent node losses).
+    pub restart_prob: f64,
+}
+
+/// Stochastic network weather: independent degradation spells per
+/// tester node.
+#[derive(Clone, Copy, Debug)]
+pub struct WeatherProcess {
+    /// Per-node spell rate (spells per hour of virtual time).
+    pub spell_rate_per_hour: f64,
+    /// Spell duration range `(min_s, max_s)`, sampled uniformly.
+    pub spell_duration_s: (f64, f64),
+    /// Overlay applied during an ordinary spell.
+    pub patch: WeatherPatch,
+    /// Probability a spell is a hard partition instead of `patch`.
+    pub partition_prob: f64,
+}
+
+/// A full scenario: scheduled timeline + stochastic processes.
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    /// Scheduled actions (any order; compilation sorts).
+    pub timeline: Vec<ScenarioEvent>,
+    /// Optional background churn.
+    pub churn: Option<ChurnProcess>,
+    /// Optional background network weather.
+    pub weather: Option<WeatherProcess>,
+}
+
+/// A fully resolved fault: all randomness already sampled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fault {
+    /// When the fault fires (global seconds).
+    pub at_s: f64,
+    /// What it does.
+    pub kind: FaultKind,
+}
+
+/// The concrete fault vocabulary the experiment world executes.
+///
+/// `token` pairs a state-setting fault with the fault that later undoes
+/// it; the undo applies only if its token is still the one in effect.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Tester `tester`'s node dies.
+    Crash {
+        /// Index into the tester pool.
+        tester: usize,
+        /// Pairing token for the matching restart.
+        token: u64,
+    },
+    /// Tester `tester`'s node comes back (only if crash `token` is
+    /// still the one that took it down).
+    Restart {
+        /// Index into the tester pool.
+        tester: usize,
+        /// Token of the crash this restart undoes.
+        token: u64,
+    },
+    /// Apply a weather overlay to tester `tester`'s node.
+    Weather {
+        /// Index into the tester pool.
+        tester: usize,
+        /// The overlay.
+        patch: WeatherPatch,
+        /// Pairing token for the matching clear.
+        token: u64,
+    },
+    /// Clear the overlay set by spell `token` (if still in effect).
+    WeatherClear {
+        /// Index into the tester pool.
+        tester: usize,
+        /// Token of the spell this clears.
+        token: u64,
+    },
+    /// Scale the service host CPU by `factor`.
+    Degrade {
+        /// Speed multiplier (> 0; < 1 degrades).
+        factor: f64,
+        /// Pairing token for the matching restore.
+        token: u64,
+    },
+    /// Restore full service speed (if degradation `token` is current).
+    DegradeRestore {
+        /// Token of the degradation this restores.
+        token: u64,
+    },
+    /// Kill + restart the target service.
+    RestartService,
+}
+
+impl Scenario {
+    /// The empty scenario (no faults ever fire).
+    pub fn none() -> Scenario {
+        Scenario::default()
+    }
+
+    /// True when the scenario injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.timeline.is_empty() && self.churn.is_none() && self.weather.is_none()
+    }
+
+    /// Reject scenarios that cannot be compiled sensibly.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, ev) in self.timeline.iter().enumerate() {
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                return Err(format!("timeline[{i}]: bad time {}", ev.at_s));
+            }
+            match &ev.action {
+                Action::CrashTesters { frac, restart_after_s } => {
+                    if !(0.0..=1.0).contains(frac) {
+                        return Err(format!("timeline[{i}]: frac {frac} not in [0,1]"));
+                    }
+                    if let Some(d) = restart_after_s {
+                        if !d.is_finite() || *d < 0.0 {
+                            return Err(format!("timeline[{i}]: bad restart delay {d}"));
+                        }
+                    }
+                }
+                Action::Weather { frac, patch, duration_s } => {
+                    if !(0.0..=1.0).contains(frac) {
+                        return Err(format!("timeline[{i}]: frac {frac} not in [0,1]"));
+                    }
+                    if patch.latency_factor < 1.0 || !(0.0..=1.0).contains(&patch.extra_loss) {
+                        return Err(format!("timeline[{i}]: bad weather patch {patch:?}"));
+                    }
+                    if !duration_s.is_finite() || *duration_s < 0.0 {
+                        return Err(format!("timeline[{i}]: bad duration {duration_s}"));
+                    }
+                }
+                Action::DegradeService { factor, duration_s } => {
+                    if !factor.is_finite() || *factor <= 0.0 {
+                        return Err(format!("timeline[{i}]: bad degrade factor {factor}"));
+                    }
+                    if !duration_s.is_finite() || *duration_s < 0.0 {
+                        return Err(format!("timeline[{i}]: bad duration {duration_s}"));
+                    }
+                }
+                Action::RestartService => {}
+            }
+        }
+        if let Some(c) = &self.churn {
+            if c.crash_rate_per_hour < 0.0
+                || !(0.0..=1.0).contains(&c.restart_prob)
+                || c.restart_delay_s.0 < 0.0
+                || c.restart_delay_s.1 < c.restart_delay_s.0
+            {
+                return Err(format!("bad churn process {c:?}"));
+            }
+        }
+        if let Some(w) = &self.weather {
+            if w.spell_rate_per_hour < 0.0
+                || !(0.0..=1.0).contains(&w.partition_prob)
+                || w.spell_duration_s.0 < 0.0
+                || w.spell_duration_s.1 < w.spell_duration_s.0
+                || w.patch.latency_factor < 1.0
+                || !(0.0..=1.0).contains(&w.patch.extra_loss)
+            {
+                return Err(format!("bad weather process {w:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Rescale the scenario to a new experiment duration: every time
+    /// constant (event times, outage/spell durations) multiplies by
+    /// `factor` = new/old duration, and every per-hour rate divides by
+    /// it, preserving the scenario's shape and its expected fault count
+    /// per run.  Used when a preset's duration is overridden so that,
+    /// e.g., a mass crash pinned at half time stays at half time.
+    pub fn rescaled(&self, factor: f64) -> Scenario {
+        assert!(factor.is_finite() && factor > 0.0, "bad rescale factor");
+        let mut s = self.clone();
+        for ev in &mut s.timeline {
+            ev.at_s *= factor;
+            match &mut ev.action {
+                Action::CrashTesters { restart_after_s, .. } => {
+                    if let Some(d) = restart_after_s {
+                        *d *= factor;
+                    }
+                }
+                Action::Weather { duration_s, .. }
+                | Action::DegradeService { duration_s, .. } => {
+                    *duration_s *= factor;
+                }
+                Action::RestartService => {}
+            }
+        }
+        if let Some(c) = &mut s.churn {
+            c.crash_rate_per_hour /= factor;
+            c.restart_delay_s.0 *= factor;
+            c.restart_delay_s.1 *= factor;
+        }
+        if let Some(w) = &mut s.weather {
+            w.spell_rate_per_hour /= factor;
+            w.spell_duration_s.0 *= factor;
+            w.spell_duration_s.1 *= factor;
+        }
+        s
+    }
+
+    /// Resolve every random choice into a concrete fault schedule over
+    /// `[0, horizon_s]` for a pool of `n_testers`, sorted by time.
+    ///
+    /// All draws come from `rng` in a fixed order (timeline first, then
+    /// churn per tester, then weather per tester), so the schedule is a
+    /// pure function of the scenario, the pool size, the horizon and
+    /// the RNG stream — the determinism anchor for the whole subsystem.
+    pub fn compile(&self, n_testers: usize, horizon_s: f64, rng: &mut Pcg64) -> Vec<Fault> {
+        let mut faults: Vec<Fault> = Vec::new();
+        let mut token: u64 = 0;
+        let mut next_token = || {
+            token += 1;
+            token
+        };
+
+        for ev in &self.timeline {
+            if ev.at_s > horizon_s {
+                continue;
+            }
+            match &ev.action {
+                Action::CrashTesters { frac, restart_after_s } => {
+                    for t in pick_fraction(rng, n_testers, *frac) {
+                        let tok = next_token();
+                        faults.push(Fault {
+                            at_s: ev.at_s,
+                            kind: FaultKind::Crash { tester: t, token: tok },
+                        });
+                        if let Some(d) = restart_after_s {
+                            faults.push(Fault {
+                                at_s: ev.at_s + d,
+                                kind: FaultKind::Restart { tester: t, token: tok },
+                            });
+                        }
+                    }
+                }
+                Action::Weather { frac, patch, duration_s } => {
+                    for t in pick_fraction(rng, n_testers, *frac) {
+                        let tok = next_token();
+                        faults.push(Fault {
+                            at_s: ev.at_s,
+                            kind: FaultKind::Weather { tester: t, patch: *patch, token: tok },
+                        });
+                        faults.push(Fault {
+                            at_s: ev.at_s + duration_s,
+                            kind: FaultKind::WeatherClear { tester: t, token: tok },
+                        });
+                    }
+                }
+                Action::DegradeService { factor, duration_s } => {
+                    let tok = next_token();
+                    faults.push(Fault {
+                        at_s: ev.at_s,
+                        kind: FaultKind::Degrade { factor: *factor, token: tok },
+                    });
+                    faults.push(Fault {
+                        at_s: ev.at_s + duration_s,
+                        kind: FaultKind::DegradeRestore { token: tok },
+                    });
+                }
+                Action::RestartService => {
+                    faults.push(Fault {
+                        at_s: ev.at_s,
+                        kind: FaultKind::RestartService,
+                    });
+                }
+            }
+        }
+
+        if let Some(c) = &self.churn {
+            if c.crash_rate_per_hour > 0.0 {
+                for t in 0..n_testers {
+                    let mut now = 0.0;
+                    loop {
+                        now += dist::exponential(rng, c.crash_rate_per_hour / 3600.0);
+                        if now > horizon_s {
+                            break;
+                        }
+                        let tok = next_token();
+                        faults.push(Fault {
+                            at_s: now,
+                            kind: FaultKind::Crash { tester: t, token: tok },
+                        });
+                        if !rng.chance(c.restart_prob) {
+                            break; // permanent loss
+                        }
+                        let d = rng.uniform(c.restart_delay_s.0, c.restart_delay_s.1);
+                        now += d;
+                        faults.push(Fault {
+                            at_s: now,
+                            kind: FaultKind::Restart { tester: t, token: tok },
+                        });
+                    }
+                }
+            }
+        }
+
+        if let Some(w) = &self.weather {
+            if w.spell_rate_per_hour > 0.0 {
+                for t in 0..n_testers {
+                    let mut now = 0.0;
+                    loop {
+                        now += dist::exponential(rng, w.spell_rate_per_hour / 3600.0);
+                        if now > horizon_s {
+                            break;
+                        }
+                        let patch = if rng.chance(w.partition_prob) {
+                            WeatherPatch::partition()
+                        } else {
+                            w.patch
+                        };
+                        let d = rng.uniform(w.spell_duration_s.0, w.spell_duration_s.1);
+                        let tok = next_token();
+                        faults.push(Fault {
+                            at_s: now,
+                            kind: FaultKind::Weather { tester: t, patch, token: tok },
+                        });
+                        faults.push(Fault {
+                            at_s: now + d,
+                            kind: FaultKind::WeatherClear { tester: t, token: tok },
+                        });
+                        now += d;
+                    }
+                }
+            }
+        }
+
+        faults.sort_by(|a, b| {
+            a.at_s
+                .total_cmp(&b.at_s)
+                .then_with(|| fault_token(&a.kind).cmp(&fault_token(&b.kind)))
+        });
+        faults
+    }
+}
+
+fn fault_token(k: &FaultKind) -> u64 {
+    match *k {
+        FaultKind::Crash { token, .. }
+        | FaultKind::Restart { token, .. }
+        | FaultKind::Weather { token, .. }
+        | FaultKind::WeatherClear { token, .. }
+        | FaultKind::Degrade { token, .. }
+        | FaultKind::DegradeRestore { token } => token,
+        FaultKind::RestartService => 0,
+    }
+}
+
+/// Pick `ceil(frac * n)` distinct tester indices, uniformly, in a
+/// deterministic order given the RNG state.
+fn pick_fraction(rng: &mut Pcg64, n: usize, frac: f64) -> Vec<usize> {
+    let k = ((frac * n as f64).ceil() as usize).min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(k);
+    idx
+}
+
+/// Named scenario presets for the CLI and config files.
+///
+/// Times scale with the experiment's per-tester `duration_s` so the
+/// same name works for a 2-minute smoke run and a 1-hour figure run.
+pub fn by_name(name: &str, duration_s: f64) -> Result<Scenario, String> {
+    let d = duration_s.max(1.0);
+    Ok(match name {
+        "none" => Scenario::none(),
+        // continuous PlanetLab-style churn: testers die and come back
+        "churn" => Scenario {
+            churn: Some(ChurnProcess {
+                crash_rate_per_hour: 2.0,
+                restart_delay_s: (0.05 * d, 0.15 * d),
+                restart_prob: 0.85,
+            }),
+            ..Scenario::default()
+        },
+        // one mass failure mid-run: 30% of testers die, most return
+        "spike" => Scenario {
+            timeline: vec![ScenarioEvent {
+                at_s: 0.5 * d,
+                action: Action::CrashTesters {
+                    frac: 0.3,
+                    restart_after_s: Some(0.2 * d),
+                },
+            }],
+            ..Scenario::default()
+        },
+        // long-haul weather + mild churn (soak test)
+        "soak" => Scenario {
+            churn: Some(ChurnProcess {
+                crash_rate_per_hour: 0.5,
+                restart_delay_s: (0.02 * d, 0.10 * d),
+                restart_prob: 0.9,
+            }),
+            weather: Some(WeatherProcess {
+                spell_rate_per_hour: 2.0,
+                spell_duration_s: (0.02 * d, 0.08 * d),
+                patch: WeatherPatch {
+                    latency_factor: 4.0,
+                    extra_loss: 0.01,
+                    partitioned: false,
+                },
+                partition_prob: 0.1,
+            }),
+            ..Scenario::default()
+        },
+        // a transient partition cuts 30% of the pool off the core
+        "partition" => Scenario {
+            timeline: vec![ScenarioEvent {
+                at_s: 0.4 * d,
+                action: Action::Weather {
+                    frac: 0.3,
+                    patch: WeatherPatch::partition(),
+                    duration_s: 0.2 * d,
+                },
+            }],
+            ..Scenario::default()
+        },
+        // the service itself misbehaves: slowdown, then a hard restart
+        "flaky-service" => Scenario {
+            timeline: vec![
+                ScenarioEvent {
+                    at_s: 0.3 * d,
+                    action: Action::DegradeService {
+                        factor: 0.4,
+                        duration_s: 0.2 * d,
+                    },
+                },
+                ScenarioEvent {
+                    at_s: 0.7 * d,
+                    action: Action::RestartService,
+                },
+            ],
+            ..Scenario::default()
+        },
+        other => {
+            return Err(format!(
+                "unknown scenario {other:?} (try none, churn, spike, soak, \
+                 partition, flaky-service)"
+            ))
+        }
+    })
+}
+
+/// Names accepted by [`by_name`] (for help output).
+pub const NAMES: [&str; 6] = [
+    "none",
+    "churn",
+    "spike",
+    "soak",
+    "partition",
+    "flaky-service",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn churny() -> Scenario {
+        Scenario {
+            timeline: vec![
+                ScenarioEvent {
+                    at_s: 100.0,
+                    action: Action::CrashTesters {
+                        frac: 0.3,
+                        restart_after_s: Some(60.0),
+                    },
+                },
+                ScenarioEvent {
+                    at_s: 200.0,
+                    action: Action::Weather {
+                        frac: 0.5,
+                        patch: WeatherPatch::spike(5.0),
+                        duration_s: 30.0,
+                    },
+                },
+                ScenarioEvent {
+                    at_s: 300.0,
+                    action: Action::DegradeService {
+                        factor: 0.5,
+                        duration_s: 50.0,
+                    },
+                },
+                ScenarioEvent {
+                    at_s: 400.0,
+                    action: Action::RestartService,
+                },
+            ],
+            churn: Some(ChurnProcess {
+                crash_rate_per_hour: 6.0,
+                restart_delay_s: (10.0, 50.0),
+                restart_prob: 0.8,
+            }),
+            weather: Some(WeatherProcess {
+                spell_rate_per_hour: 4.0,
+                spell_duration_s: (5.0, 40.0),
+                patch: WeatherPatch::lossy(0.05),
+                partition_prob: 0.25,
+            }),
+        }
+    }
+
+    #[test]
+    fn empty_scenario_compiles_to_nothing() {
+        let mut rng = Pcg64::seed_from(1);
+        assert!(Scenario::none().is_empty());
+        assert!(Scenario::none().compile(20, 1000.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let s = churny();
+        let a = s.compile(20, 2000.0, &mut Pcg64::seed_from(7));
+        let b = s.compile(20, 2000.0, &mut Pcg64::seed_from(7));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = s.compile(20, 2000.0, &mut Pcg64::seed_from(8));
+        assert_ne!(a, c, "different stream must give a different schedule");
+    }
+
+    #[test]
+    fn compiled_schedule_is_sorted_and_paired() {
+        let s = churny();
+        let faults = s.compile(30, 2000.0, &mut Pcg64::seed_from(3));
+        for w in faults.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        // every restart/clear/restore refers to an earlier setter with
+        // the same token and a non-later time
+        for f in &faults {
+            let (tok, want_setter) = match f.kind {
+                FaultKind::Restart { token, .. } => (token, "crash"),
+                FaultKind::WeatherClear { token, .. } => (token, "weather"),
+                FaultKind::DegradeRestore { token } => (token, "degrade"),
+                _ => continue,
+            };
+            let setter = faults.iter().find(|g| {
+                matches!(
+                    g.kind,
+                    FaultKind::Crash { token, .. }
+                    | FaultKind::Weather { token, .. }
+                    | FaultKind::Degrade { token, .. }
+                    if token == tok
+                )
+            });
+            let setter = setter.unwrap_or_else(|| panic!("no {want_setter} for token {tok}"));
+            assert!(setter.at_s <= f.at_s);
+        }
+    }
+
+    #[test]
+    fn crash_fraction_picks_distinct_testers() {
+        let s = Scenario {
+            timeline: vec![ScenarioEvent {
+                at_s: 10.0,
+                action: Action::CrashTesters {
+                    frac: 0.3,
+                    restart_after_s: None,
+                },
+            }],
+            ..Scenario::default()
+        };
+        let faults = s.compile(10, 100.0, &mut Pcg64::seed_from(5));
+        let crashed: Vec<usize> = faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::Crash { tester, .. } => Some(tester),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(crashed.len(), 3); // ceil(0.3 * 10)
+        let mut uniq = crashed.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3);
+        assert!(uniq.iter().all(|&t| t < 10));
+    }
+
+    #[test]
+    fn horizon_truncates() {
+        let s = churny();
+        let faults = s.compile(20, 150.0, &mut Pcg64::seed_from(9));
+        // the t=200/300/400 timeline entries fall past the horizon
+        assert!(faults.iter().all(|f| !matches!(
+            f.kind,
+            FaultKind::Weather { .. } | FaultKind::Degrade { .. }
+        ) || f.at_s <= 150.0 + 40.0));
+        assert!(!faults
+            .iter()
+            .any(|f| matches!(f.kind, FaultKind::RestartService)));
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        assert!(churny().validate().is_ok());
+        let bad_frac = Scenario {
+            timeline: vec![ScenarioEvent {
+                at_s: 1.0,
+                action: Action::CrashTesters {
+                    frac: 1.5,
+                    restart_after_s: None,
+                },
+            }],
+            ..Scenario::default()
+        };
+        assert!(bad_frac.validate().is_err());
+        let bad_factor = Scenario {
+            timeline: vec![ScenarioEvent {
+                at_s: 1.0,
+                action: Action::DegradeService {
+                    factor: 0.0,
+                    duration_s: 10.0,
+                },
+            }],
+            ..Scenario::default()
+        };
+        assert!(bad_factor.validate().is_err());
+        let bad_churn = Scenario {
+            churn: Some(ChurnProcess {
+                crash_rate_per_hour: -1.0,
+                restart_delay_s: (0.0, 1.0),
+                restart_prob: 0.5,
+            }),
+            ..Scenario::default()
+        };
+        assert!(bad_churn.validate().is_err());
+    }
+
+    #[test]
+    fn presets_by_name() {
+        for name in NAMES {
+            let s = by_name(name, 600.0).unwrap();
+            s.validate().unwrap();
+            if name == "none" {
+                assert!(s.is_empty());
+            } else {
+                assert!(!s.is_empty(), "{name} should inject something");
+            }
+        }
+        assert!(by_name("zzz", 600.0).is_err());
+    }
+
+    #[test]
+    fn rescaled_preserves_shape_and_expected_counts() {
+        let spike = by_name("spike", 600.0).unwrap().rescaled(0.1); // -> 60 s run
+        spike.validate().unwrap();
+        let ev = &spike.timeline[0];
+        assert!((ev.at_s - 30.0).abs() < 1e-9, "half time stays half time");
+        match &ev.action {
+            Action::CrashTesters { frac, restart_after_s } => {
+                assert_eq!(*frac, 0.3);
+                assert!((restart_after_s.unwrap() - 12.0).abs() < 1e-9);
+            }
+            other => panic!("unexpected action {other:?}"),
+        }
+        let churn = by_name("churn", 600.0).unwrap().rescaled(0.1);
+        churn.validate().unwrap();
+        let c = churn.churn.unwrap();
+        // rate scales inversely: expected crashes per run unchanged
+        assert!((c.crash_rate_per_hour - 20.0).abs() < 1e-9);
+        assert!((c.restart_delay_s.0 - 3.0).abs() < 1e-9);
+        assert!((c.restart_delay_s.1 - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn churn_rate_shapes_crash_count() {
+        let s = Scenario {
+            churn: Some(ChurnProcess {
+                crash_rate_per_hour: 1.0,
+                restart_delay_s: (10.0, 20.0),
+                restart_prob: 1.0,
+            }),
+            ..Scenario::default()
+        };
+        // 100 testers x 1 crash/hour x 1 hour ~ Poisson(100)
+        let faults = s.compile(100, 3600.0, &mut Pcg64::seed_from(11));
+        let crashes = faults
+            .iter()
+            .filter(|f| matches!(f.kind, FaultKind::Crash { .. }))
+            .count();
+        assert!((60..=160).contains(&crashes), "crashes {crashes}");
+    }
+}

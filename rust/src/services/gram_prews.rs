@@ -152,6 +152,31 @@ impl Service for GramPrews {
     fn stats(&self) -> ServiceStats {
         self.stats
     }
+
+    fn set_speed_factor(&mut self, now: SimTime, factor: f64) -> Vec<SvcOut> {
+        let mut out = self.drive(now); // settle at the old rate
+        self.cpu.set_speed(now, self.params.speed * factor);
+        if let Some(at) = self.cpu.next_completion() {
+            out.push(SvcOut::Wake { at });
+        }
+        out
+    }
+
+    fn restart(&mut self, now: SimTime) -> Vec<SvcOut> {
+        let mut out = self.drive(now);
+        let dead: Vec<RequestId> = self
+            .cpu
+            .drain_all()
+            .into_iter()
+            .chain(
+                std::mem::take(&mut self.handshake)
+                    .into_iter()
+                    .map(|(_, r, _)| r),
+            )
+            .collect();
+        super::fail_drained(dead, &mut self.stats, &mut out, now);
+        out
+    }
 }
 
 impl GramPrews {

@@ -216,7 +216,7 @@ impl GramWs {
         }
     }
 
-    fn drive(&mut self, now: SimTime, _rng: &mut Pcg64) -> Vec<SvcOut> {
+    fn drive(&mut self, now: SimTime) -> Vec<SvcOut> {
         let mut out = Vec::new();
         // CPU completions (only progress when not stalled; when stalled
         // the queue is already drained)
@@ -309,7 +309,7 @@ impl Service for GramWs {
     ) -> Vec<SvcOut> {
         self.stats.submitted += 1;
         self.recent.insert(client, now.as_secs_f64());
-        let mut out = self.drive(now, rng);
+        let mut out = self.drive(now);
         if self.health == Health::Stalled {
             // ungraceful: the request hangs and then fails
             self.owner.insert(req.0, client);
@@ -331,8 +331,8 @@ impl Service for GramWs {
         out
     }
 
-    fn on_wake(&mut self, now: SimTime, rng: &mut Pcg64) -> Vec<SvcOut> {
-        self.drive(now, rng)
+    fn on_wake(&mut self, now: SimTime, _rng: &mut Pcg64) -> Vec<SvcOut> {
+        self.drive(now)
     }
 
     fn in_flight(&self) -> usize {
@@ -345,6 +345,44 @@ impl Service for GramWs {
 
     fn stalls(&self) -> u64 {
         self.stalls
+    }
+
+    fn set_speed_factor(&mut self, now: SimTime, factor: f64) -> Vec<SvcOut> {
+        let mut out = self.drive(now);
+        self.cpu.set_speed(now, self.params.speed * factor);
+        if let Some(at) = self.cpu.next_completion() {
+            out.push(SvcOut::Wake { at });
+        }
+        out
+    }
+
+    fn restart(&mut self, now: SimTime) -> Vec<SvcOut> {
+        let mut out = self.drive(now);
+        // every in-flight request — queued, in service, or already
+        // doomed — fails at the restart instant
+        let dead: Vec<RequestId> = self
+            .cpu
+            .drain_all()
+            .into_iter()
+            .chain(
+                std::mem::take(&mut self.handshake)
+                    .into_iter()
+                    .map(|(_, r, _)| r),
+            )
+            .chain(std::mem::take(&mut self.doomed).into_iter().map(|(_, r)| r))
+            .collect();
+        for req in &dead {
+            self.owner.remove(&req.0);
+        }
+        super::fail_drained(dead, &mut self.stats, &mut out, now);
+        // warm state is gone: UHEs must relaunch, pressure resets
+        self.uhe.clear();
+        self.recent.clear();
+        self.health = Health::Up {
+            pressure: 0.0,
+            last: now,
+        };
+        out
     }
 }
 

@@ -141,6 +141,27 @@ impl Service for HttpService {
     fn stats(&self) -> ServiceStats {
         self.stats
     }
+
+    fn set_speed_factor(&mut self, now: SimTime, factor: f64) -> Vec<SvcOut> {
+        let mut out = self.drive(now); // settle at the old rate
+        self.cpu.set_speed(now, self.params.speed * factor);
+        if let Some(at) = self.cpu.next_completion() {
+            out.push(SvcOut::Wake { at });
+        }
+        out
+    }
+
+    fn restart(&mut self, now: SimTime) -> Vec<SvcOut> {
+        let mut out = self.drive(now);
+        let dead: Vec<RequestId> = self
+            .cpu
+            .drain_all()
+            .into_iter()
+            .chain(std::mem::take(&mut self.pending).into_iter().map(|(_, r, _)| r))
+            .collect();
+        super::fail_drained(dead, &mut self.stats, &mut out, now);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -215,6 +236,62 @@ mod tests {
         assert!(stats_conserved(&svc.stats(), svc.in_flight()));
         let done = drain(&mut svc, &mut rng);
         assert_eq!(done.len(), 10);
+    }
+
+    #[test]
+    fn restart_fails_all_in_flight_work() {
+        let mut svc = HttpService::new(HttpParams::default());
+        let mut rng = Pcg64::seed_from(4);
+        for i in 0..5u32 {
+            svc.submit(t(0.0), RequestId(i), i, &mut rng);
+        }
+        assert_eq!(svc.in_flight(), 5);
+        let outs = svc.restart(t(0.001));
+        let errors = outs
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o,
+                    SvcOut::Done {
+                        outcome: Outcome::Error,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(errors, 5);
+        assert_eq!(svc.in_flight(), 0);
+        assert!(stats_conserved(&svc.stats(), 0));
+        // the service accepts new work immediately after the restart
+        svc.submit(t(0.002), RequestId(9), 0, &mut rng);
+        let done = drain(&mut svc, &mut rng);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].1.ok());
+    }
+
+    #[test]
+    fn degraded_cpu_stretches_response_times() {
+        let params = HttpParams {
+            demand_spread: 1.0 + 1e-9,
+            ..Default::default()
+        };
+        let mut fast = HttpService::new(params.clone());
+        let mut slow = HttpService::new(params);
+        let mut rng_a = Pcg64::seed_from(5);
+        let mut rng_b = Pcg64::seed_from(5);
+        fast.submit(t(0.0), RequestId(0), 0, &mut rng_a);
+        slow.submit(t(0.0), RequestId(0), 0, &mut rng_b);
+        slow.set_speed_factor(t(0.0), 0.1);
+        let f = drain(&mut fast, &mut rng_a)[0].2;
+        let s = drain(&mut slow, &mut rng_b)[0].2;
+        // 20 ms of CGI work at 0.1x speed -> ~200 ms (+3 ms overhead)
+        assert!((f - 0.023).abs() < 0.002, "fast rt {f}");
+        assert!((s - 0.203).abs() < 0.005, "slow rt {s}");
+        // restoring full speed brings new requests back to normal
+        slow.set_speed_factor(t(1.0), 1.0);
+        slow.submit(t(1.0), RequestId(1), 0, &mut rng_b);
+        let s2 = drain(&mut slow, &mut rng_b)[0].2 - 1.0;
+        assert!((s2 - 0.023).abs() < 0.002, "restored rt {s2}");
     }
 
     #[test]

@@ -107,10 +107,45 @@ pub trait Service {
     fn stalls(&self) -> u64 {
         0
     }
+
+    /// Scenario hook: scale the host CPU to `factor` × the calibrated
+    /// speed (< 1.0 degrades, 1.0 restores).  Work already accrued is
+    /// settled at the old rate first; the returned actions carry any
+    /// completions that settling surfaces plus a fresh wake.  Default:
+    /// the service does not model degradation.
+    fn set_speed_factor(&mut self, _now: SimTime, _factor: f64) -> Vec<SvcOut> {
+        Vec::new()
+    }
+
+    /// Scenario hook: the service process is killed and restarted.
+    /// Every in-flight request fails and warm state (caches, hosting
+    /// environments) is lost.  Default: restart is not modeled.
+    fn restart(&mut self, _now: SimTime) -> Vec<SvcOut> {
+        Vec::new()
+    }
 }
 
 /// Sanity check used by tests and the world: every submitted request is
 /// accounted for exactly once.
 pub fn stats_conserved(s: &ServiceStats, in_flight: usize) -> bool {
     s.submitted == s.completed + s.denied + s.errored + in_flight as u64
+}
+
+/// Fail every drained request at `at` (the shared tail of each
+/// service's restart hook): bumps the error counter and emits one
+/// `Done`/`Error` action per request.
+pub fn fail_drained(
+    reqs: impl IntoIterator<Item = RequestId>,
+    stats: &mut ServiceStats,
+    out: &mut Vec<SvcOut>,
+    at: SimTime,
+) {
+    for req in reqs {
+        stats.errored += 1;
+        out.push(SvcOut::Done {
+            req,
+            outcome: Outcome::Error,
+            at,
+        });
+    }
 }

@@ -75,6 +75,21 @@ impl PsQueue {
         self.busy_s
     }
 
+    /// Change the CPU capacity mid-run (scenario degradation).  The
+    /// queue must be [`advance`](Self::advance)d to `now` first so the
+    /// credit already accrued is settled at the old rate; stored targets
+    /// never change, so exactness is preserved.
+    pub fn set_speed(&mut self, now: SimTime, speed: f64) {
+        assert!(speed > 0.0);
+        debug_assert!(
+            (now.as_secs_f64() - self.last_s).abs() < 1e-6,
+            "set_speed without advance: now={} last={}",
+            now.as_secs_f64(),
+            self.last_s
+        );
+        self.speed = speed;
+    }
+
     /// Admit a job with the given demand (dedicated-CPU seconds).
     /// Call [`advance`](Self::advance) to `now` first.
     pub fn push(&mut self, now: SimTime, req: RequestId, demand_s: f64) {
@@ -279,6 +294,30 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert!((done[0].1.as_secs_f64() - 2.5).abs() < 1e-6,
             "got {}", done[0].1.as_secs_f64());
+    }
+
+    #[test]
+    fn speed_change_mid_flight_is_exact() {
+        // demand 2 at speed 1 for 1 s (1 left), then speed drops to 0.5:
+        // remaining 1 demand-second takes 2 s -> completes at t = 3.
+        let mut q = PsQueue::new(1.0);
+        q.push(t(0.0), RequestId(1), 2.0);
+        q.advance(t(1.0));
+        q.set_speed(t(1.0), 0.5);
+        let done = q.advance(t(10.0));
+        assert_eq!(done.len(), 1);
+        assert!((done[0].1.as_secs_f64() - 3.0).abs() < 1e-6,
+            "got {}", done[0].1.as_secs_f64());
+    }
+
+    #[test]
+    fn speed_restore_speeds_completion() {
+        let mut q = PsQueue::new(1.0);
+        q.push(t(0.0), RequestId(1), 4.0);
+        q.advance(t(1.0));
+        q.set_speed(t(1.0), 3.0); // 3 demand-seconds left at 3x -> 1 s
+        let done = q.advance(t(10.0));
+        assert!((done[0].1.as_secs_f64() - 2.0).abs() < 1e-6);
     }
 
     #[test]

@@ -53,6 +53,13 @@ pub struct Tester {
     pub last_launch_local: f64,
     /// Consecutive failed invocations (drives the eviction policy).
     pub consecutive_failures: u32,
+    /// Generation of the periodic clock-sync chain; stale chain events
+    /// (from before a crash/restart) compare unequal and die out.
+    pub sync_gen: u32,
+    /// Crashes this agent has survived (scenario churn bookkeeping).
+    pub crashes: u32,
+    /// Phase at the moment of the last crash (restored on revive).
+    prev_phase: Phase,
     /// Monotone token source for timeout events.
     next_token: u64,
 }
@@ -72,6 +79,9 @@ impl Tester {
             latency_estimate_s: 0.0,
             last_launch_local: f64::NEG_INFINITY,
             consecutive_failures: 0,
+            sync_gen: 0,
+            crashes: 0,
+            prev_phase: Phase::Idle,
             next_token: 0,
         }
     }
@@ -82,6 +92,7 @@ impl Tester {
         self.phase = Phase::Running;
         self.desc = desc;
         self.started_local = now_local;
+        self.sync_gen += 1;
     }
 
     /// Stop (duration elapsed, Stop message, or session loss).
@@ -94,8 +105,27 @@ impl Tester {
 
     /// The node died under the agent.
     pub fn kill(&mut self) {
+        if self.phase != Phase::Dead {
+            self.prev_phase = self.phase;
+            self.crashes += 1;
+        }
         self.phase = Phase::Dead;
         self.outstanding = None;
+    }
+
+    /// The node came back: the agent restarts in the phase it crashed
+    /// in, with fresh invocation/failure state (its clock map survives —
+    /// skew and drift are properties of the hardware, not the process).
+    /// Returns the phase after revival; a no-op if the agent was not
+    /// dead.
+    pub fn revive(&mut self) -> Phase {
+        if self.phase == Phase::Dead {
+            self.phase = self.prev_phase;
+            self.outstanding = None;
+            self.consecutive_failures = 0;
+            self.sync_gen += 1;
+        }
+        self.phase
     }
 
     /// Has the configured test duration elapsed?
@@ -321,6 +351,46 @@ mod tests {
         assert_eq!(t.consecutive_failures, 1);
         // seq advanced; next launch respects pacing
         assert_eq!(t.next_launch_local(105.0), 106.0);
+    }
+
+    #[test]
+    fn crash_and_revive_restores_running() {
+        let mut t = tester();
+        let gen0 = t.sync_gen;
+        t.launch(100.0, RequestId(0));
+        for _ in 0..2 {
+            t.consecutive_failures += 1;
+        }
+        t.kill();
+        assert_eq!(t.phase, Phase::Dead);
+        assert!(t.outstanding.is_none());
+        assert_eq!(t.crashes, 1);
+        let restored = t.revive();
+        assert_eq!(restored, Phase::Running);
+        assert_eq!(t.phase, Phase::Running);
+        assert_eq!(t.consecutive_failures, 0);
+        assert!(t.sync_gen > gen0, "revive must invalidate the old sync chain");
+        // reviving a live tester is a no-op
+        let gen1 = t.sync_gen;
+        assert_eq!(t.revive(), Phase::Running);
+        assert_eq!(t.sync_gen, gen1);
+    }
+
+    #[test]
+    fn revive_of_idle_tester_stays_idle() {
+        let mut t = Tester::new(TesterId(1), NodeId(4));
+        t.kill();
+        assert_eq!(t.revive(), Phase::Idle);
+        assert_eq!(t.phase, Phase::Idle);
+    }
+
+    #[test]
+    fn double_kill_counts_once_and_preserves_pre_crash_phase() {
+        let mut t = tester();
+        t.kill();
+        t.kill();
+        assert_eq!(t.crashes, 1);
+        assert_eq!(t.revive(), Phase::Running);
     }
 
     #[test]

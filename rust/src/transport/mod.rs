@@ -85,6 +85,9 @@ pub enum GoodbyeReason {
 pub enum TesterMsg {
     /// Client code received and unpacked; ready to start.
     DeployDone,
+    /// Re-registration after a node restart (§3 late join): the tester
+    /// asks to be put back on the reporter list.
+    Hello,
     /// One timed client invocation.
     Sample(CallSample),
     /// A completed clock-sync exchange (the controller accumulates the
@@ -108,6 +111,7 @@ pub fn msg_bytes_ctrl(m: &CtrlMsg) -> u64 {
 pub fn msg_bytes_tester(m: &TesterMsg) -> u64 {
     match m {
         TesterMsg::DeployDone => 64,
+        TesterMsg::Hello => 64,
         TesterMsg::Sample(_) => 128,
         TesterMsg::Sync(_) => 96,
         TesterMsg::Heartbeat => 32,

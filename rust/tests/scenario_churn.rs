@@ -1,0 +1,211 @@
+//! Scenario-engine integration tests: determinism under faults, the
+//! churn end-to-end run, and property tests for scenario + analysis
+//! invariants (the framework is only trustworthy once its own hostile
+//! runs are reproducible).
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::cli;
+use diperf::experiment::{presets, run_experiment};
+use diperf::scenario::{Action, ScenarioEvent};
+use diperf::util::proptest::{forall, prop};
+
+/// The determinism contract, checked field by field: two runs of the
+/// same config + seed must produce bit-identical `RunData`.
+fn assert_bit_identical(a: &diperf::metrics::RunData, b: &diperf::metrics::RunData) {
+    assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+    assert_eq!(a.dropped_unsynced, b.dropped_unsynced);
+    assert_eq!(a.samples.len(), b.samples.len());
+    for (x, y) in a.samples.iter().zip(&b.samples) {
+        assert_eq!(x.tester, y.tester);
+        assert_eq!(x.seq, y.seq);
+        assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+        assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        assert_eq!(x.rt.to_bits(), y.rt.to_bits());
+        assert_eq!(x.outcome, y.outcome);
+    }
+    assert_eq!(a.testers.len(), b.testers.len());
+    for (x, y) in a.testers.iter().zip(&b.testers) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.started_at.to_bits(), y.started_at.to_bits());
+        assert_eq!(x.stopped_at.to_bits(), y.stopped_at.to_bits());
+        assert_eq!(x.evicted, y.evicted);
+        assert_eq!(x.samples, y.samples);
+        assert_eq!(x.rejoins, y.rejoins);
+    }
+}
+
+#[test]
+fn churn_run_is_bit_identical_per_seed() {
+    // prews_fig3 scaled down, with the shipped churn scenario on top
+    let cfg = presets::churn_study(12, 300.0, 42);
+    let a = run_experiment(&cfg);
+    let b = run_experiment(&cfg);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.faults, b.faults);
+    assert_bit_identical(&a.data, &b.data);
+
+    // a different seed genuinely changes the run
+    let c = run_experiment(&presets::churn_study(12, 300.0, 43));
+    assert_ne!(
+        a.data.samples.len(),
+        c.data.samples.len(),
+        "different seeds should produce different runs"
+    );
+}
+
+#[test]
+fn killing_a_third_of_testers_mid_run_completes_and_dips() {
+    let mut cfg = presets::prews_small(12, 600.0, 7);
+    cfg.controller.silence_timeout_s = 60.0;
+    cfg.scenario.timeline = vec![ScenarioEvent {
+        at_s: 300.0,
+        action: Action::CrashTesters {
+            frac: 0.3,
+            restart_after_s: None, // permanent: the paper's dead nodes
+        },
+    }];
+    let r = run_experiment(&cfg);
+    assert_eq!(r.faults, 4, "ceil(0.3 * 12) permanent crashes");
+
+    // the controller notices: the silent testers are evicted
+    let evicted = r.data.testers.iter().filter(|t| t.evicted).count();
+    assert!(evicted >= 4, "evicted {evicted}");
+
+    // fewer distinct active clients in the affected quanta
+    let churn = analysis::churn_report(&r.data, 64);
+    let quantum = r.data.duration_s.max(1.0) / 64.0;
+    let window_mean = |lo: f64, hi: f64| {
+        let vals: Vec<f64> = (0..64)
+            .filter(|&b| {
+                let t = (b as f64 + 0.5) * quantum;
+                t >= lo && t <= hi
+            })
+            .map(|b| churn.active[b])
+            .collect();
+        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    };
+    let pre = window_mean(150.0, 290.0);
+    let post = window_mean(350.0, 550.0);
+    assert!(
+        post <= pre - 3.0,
+        "active clients did not drop: pre {pre:.1} post {post:.1}"
+    );
+
+    // the run still completes and produces data after the crash
+    assert!(r.data.samples.iter().any(|s| s.t_end > 400.0));
+    assert!(r.data.completed() > 500);
+}
+
+#[test]
+fn prop_evicted_testers_never_report_after_eviction() {
+    forall(3, |rng| {
+        let seed = rng.next_u64();
+        let mut cfg = presets::churn_study(8, 240.0, seed);
+        // most crashes permanent so evictions actually stick
+        cfg.scenario.churn.as_mut().expect("churn preset").restart_prob = 0.3;
+        cfg.scenario.churn.as_mut().expect("churn preset").crash_rate_per_hour = 20.0;
+        let r = run_experiment(&cfg);
+        for t in r.data.testers.iter().filter(|t| t.evicted) {
+            // 5 s margin absorbs clock-reconciliation error
+            let after = r
+                .data
+                .samples
+                .iter()
+                .filter(|s| s.tester == t.id && s.t_end > t.stopped_at + 5.0)
+                .count();
+            if after > 0 {
+                return Err(format!(
+                    "tester {} reported {after} samples after eviction (seed {seed})",
+                    t.id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binned_throughput_equals_per_client_sum() {
+    forall(3, |rng| {
+        let seed = rng.next_u64();
+        let cfg = presets::churn_study(8, 240.0, seed);
+        let r = run_experiment(&cfg);
+        let inp = AnalysisInput::from_run(&r.data, 128, 20.0);
+        let out = analysis::analyze(&inp, 128, 16);
+        let binned: f64 = out.tput.iter().sum();
+        let mut per_client = vec![0.0f64; 16];
+        for s in &r.data.samples {
+            if s.outcome.ok() {
+                per_client[s.tester.index()] += 1.0;
+            }
+        }
+        let by_client: f64 = per_client.iter().sum();
+        if binned != by_client {
+            return Err(format!(
+                "binned {binned} != per-client sum {by_client} (seed {seed})"
+            ));
+        }
+        prop(
+            binned == r.data.completed() as f64,
+            &format!("binned {binned} != completed {} (seed {seed})", r.data.completed()),
+        )
+    });
+}
+
+#[test]
+fn prop_fairness_and_availability_bounded() {
+    forall(3, |rng| {
+        let seed = rng.next_u64();
+        let cfg = presets::spike_study(10, 300.0, seed);
+        let r = run_experiment(&cfg);
+        let c = analysis::churn_report(&r.data, 64);
+        if !(0.0..=1.0).contains(&c.jain_fairness) {
+            return Err(format!("jain {} out of [0,1] (seed {seed})", c.jain_fairness));
+        }
+        for (b, &a) in c.availability.iter().enumerate() {
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("availability[{b}] = {a} (seed {seed})"));
+            }
+        }
+        if c.min_availability > c.mean_availability + 1e-12 {
+            return Err(format!(
+                "min {} > mean {} (seed {seed})",
+                c.min_availability, c.mean_availability
+            ));
+        }
+        let inp = AnalysisInput::from_run(&r.data, 64, 20.0);
+        let out = analysis::analyze(&inp, 64, 16);
+        for (i, &u) in out.util.iter().enumerate() {
+            if !(0.0..=1.0 + 1e-9).contains(&u) {
+                return Err(format!("util[{i}] = {u} (seed {seed})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cli_spike_preset_emits_availability_report() {
+    let dir = std::env::temp_dir().join(format!(
+        "diperf_scn_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("spikerun");
+    let argv: Vec<String> = [
+        "run", "--preset", "spike_study", "--testers", "8", "--seed", "5",
+        "--out", out.to_str().unwrap(), "--native", "--quiet",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(cli::main(&argv).unwrap(), 0);
+    let avail =
+        std::fs::read_to_string(out.join("fig_availability.csv")).unwrap();
+    assert!(avail.starts_with("time_s,active_clients,availability\n"));
+    assert!(avail.trim().lines().count() > 10);
+    let summary = std::fs::read_to_string(out.join("summary.txt")).unwrap();
+    assert!(summary.contains("scenario faults"), "summary: {summary}");
+    assert!(summary.contains("availability"), "summary: {summary}");
+    std::fs::remove_dir_all(&dir).ok();
+}

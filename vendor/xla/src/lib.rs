@@ -1,0 +1,131 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The execution environment ships no `libxla`/PJRT plugin, so this
+//! crate provides the exact API surface `diperf::runtime` compiles
+//! against while failing cleanly at *runtime*: `PjRtClient::cpu()`
+//! returns an error, which the callers already treat as "XLA path
+//! unavailable" and fall back to the native analysis.  Swapping this
+//! stub for the real `xla` crate (same names, same signatures) enables
+//! the AOT path without touching `diperf`.
+
+use std::fmt;
+
+/// Error produced by every stub entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT is not available in this build (stub xla crate)"
+        ))
+    }
+}
+
+/// Stub result alias matching `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (tensor) handle.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy the literal out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one `Vec<PjRtBuffer>` per
+    /// device, one buffer per output.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (CPU in this workspace).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client.  Always fails in the stub, which callers
+    /// treat as "XLA analysis path unavailable".
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_loudly_but_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1f32]).to_vec::<f32>().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("stub"));
+    }
+}
