@@ -7,8 +7,16 @@
 //! share [`AnalysisInput`]/[`AnalysisOutput`], are cross-checked against
 //! each other in `rust/tests/`, and the native path doubles as the
 //! fallback when `artifacts/` has not been built.
+//!
+//! The native pipeline is split so the streaming collection mode can
+//! reuse it: the per-sample binning lives in [`crate::metrics::Binned`]
+//! (fed post hoc by [`analyze`], incrementally by a streaming run), and
+//! [`output_from_binned`] finishes the O(quanta + clients) statistics
+//! into the full output.  [`churn_report_grid`]/[`churn_from_stream`]
+//! are the grid-aligned churn views that let the two modes be compared
+//! bin for bin.
 
-use crate::metrics::RunData;
+use crate::metrics::{AnalysisGrid, Binned, RunData, StreamAgg, TesterRecord};
 use crate::util::linalg;
 
 /// Degree of the polynomial trend models (matches the AOT variants).
@@ -61,6 +69,32 @@ impl AnalysisInput {
             w0: w0 as f32,
             w1: w1 as f32,
             duration: duration as f32,
+            ..Default::default()
+        };
+        for s in &rd.samples {
+            inp.t_start.push(s.t_start as f32);
+            inp.t_end.push(s.t_end as f32);
+            inp.rt.push(s.rt as f32);
+            inp.ok.push(if s.outcome.ok() { 1.0 } else { 0.0 });
+            inp.valid.push(1.0);
+            inp.client_id.push(s.tester.0 as f32);
+        }
+        inp
+    }
+
+    /// Build the analysis input on an explicit pre-declared grid instead
+    /// of the run-derived one.  This is how a retained run is analyzed
+    /// when it must be comparable with a streaming run of the same seed
+    /// (the streaming accumulators bin on the planned grid, which is
+    /// fixed before the first sample arrives).
+    pub fn from_grid(rd: &RunData, grid: &AnalysisGrid) -> AnalysisInput {
+        let mut inp = AnalysisInput {
+            t0: grid.t0 as f32,
+            quantum: grid.quantum as f32,
+            half_window: grid.half_window as f32,
+            w0: grid.w0 as f32,
+            w1: grid.w1 as f32,
+            duration: grid.duration as f32,
             ..Default::default()
         };
         for s in &rd.samples {
@@ -150,86 +184,78 @@ impl AnalysisOutput {
 /// Semantics match `python/compile/model.py` exactly — see that file for
 /// the metric definitions; divergences beyond f32/f64 rounding are bugs
 /// (and `rust/tests/xla_native_equivalence.rs` enforces that).
+///
+/// Internally this is the two halves the streaming path also uses: fold
+/// every valid sample into a [`Binned`] accumulator, then finish with
+/// [`output_from_binned`].
 pub fn analyze(
     inp: &AnalysisInput,
     num_quanta: usize,
     num_clients: usize,
 ) -> AnalysisOutput {
-    let q = num_quanta;
-    let t0 = inp.t0 as f64;
-    let quantum = (inp.quantum as f64).max(1e-9);
+    let grid = AnalysisGrid {
+        t0: inp.t0 as f64,
+        quantum: inp.quantum as f64,
+        num_quanta,
+        num_clients,
+        half_window: inp.half_window as f64,
+        w0: inp.w0 as f64,
+        w1: inp.w1 as f64,
+        duration: inp.duration as f64,
+    };
+    let mut binned = Binned::new(grid);
+    for i in 0..inp.len() {
+        if inp.valid[i] == 0.0 {
+            continue;
+        }
+        binned.push(
+            inp.t_start[i],
+            inp.t_end[i],
+            inp.rt[i],
+            inp.ok[i] > 0.0,
+            inp.client_id[i] as usize,
+        );
+    }
+    output_from_binned(&binned)
+}
+
+/// Finish binned statistics into the full analysis output: per-quantum
+/// means, moving averages, polynomial trends, per-client utilization and
+/// fairness, and the summary totals.
+///
+/// This is the half of [`analyze`] that needs no samples — only the
+/// O(quanta + clients) sufficient statistics — so a streaming run calls
+/// it once at the end on its [`Binned`] accumulator.
+pub fn output_from_binned(binned: &Binned) -> AnalysisOutput {
+    let g = &binned.grid;
+    let q = g.num_quanta;
+    let num_clients = g.num_clients;
+    let t0 = g.t0;
+    let quantum = g.quantum.max(1e-9);
+    let (w0, w1) = (g.w0, g.w1);
     let mut out = AnalysisOutput {
-        load: vec![0.0; q],
-        tput: vec![0.0; q],
+        load: binned.load.clone(),
+        tput: binned.tput.clone(),
         rt_mean: vec![0.0; q],
-        completed: vec![0.0; num_clients],
+        completed: binned.completed.clone(),
         util: vec![0.0; num_clients],
         fairness: vec![0.0; num_clients],
         active_time: vec![0.0; num_clients],
         ..Default::default()
     };
-    let mut rt_sum = vec![0.0; q];
-    let mut amin = vec![f64::INFINITY; num_clients];
-    let mut amax = vec![f64::NEG_INFINITY; num_clients];
-    let w0 = inp.w0 as f64;
-    let w1 = inp.w1 as f64;
-
-    // --- binning pass (the Pallas bin_samples/bin_clients twin) --------
-    let mut total_ok = 0.0;
-    let mut total_valid = 0.0;
-    let mut rt_total = 0.0;
-    let mut rt_max = 0.0f64;
-    for i in 0..inp.len() {
-        if inp.valid[i] == 0.0 {
-            continue;
-        }
-        total_valid += 1.0;
-        let ts = inp.t_start[i] as f64;
-        let te = inp.t_end[i] as f64;
-        let rt = inp.rt[i] as f64;
-        let ok = inp.ok[i] > 0.0;
-        if ok {
-            total_ok += 1.0;
-            rt_total += rt;
-            rt_max = rt_max.max(rt);
-            let b = ((te - t0) / quantum).floor();
-            if b >= 0.0 && (b as usize) < q {
-                out.tput[b as usize] += 1.0;
-                rt_sum[b as usize] += rt;
-            }
-        }
-        // offered-load overlap integral
-        let b_lo = (((ts - t0) / quantum).floor().max(0.0)) as usize;
-        let b_hi = ((((te - t0) / quantum).ceil()) as usize).min(q);
-        for b in b_lo..b_hi {
-            let left = t0 + b as f64 * quantum;
-            let right = left + quantum;
-            let ov = (te.min(right) - ts.max(left)).clamp(0.0, quantum);
-            out.load[b] += ov / quantum;
-        }
-        // per-client aggregation
-        let c = inp.client_id[i] as usize;
-        if c < num_clients {
-            if ok && (w0..=w1).contains(&te) {
-                out.completed[c] += 1.0;
-            }
-            amin[c] = amin[c].min(ts);
-            amax[c] = amax[c].max(te);
-        }
-    }
     for b in 0..q {
-        out.rt_mean[b] = rt_sum[b] / out.tput[b].max(1.0);
+        out.rt_mean[b] = binned.rt_sum[b] / out.tput[b].max(1.0);
     }
 
     // --- moving averages ------------------------------------------------
-    let h = inp.half_window as f64;
-    out.rt_ma = moving_average(&rt_sum, &out.tput, h);
+    let h = g.half_window;
+    out.rt_ma = moving_average(&binned.rt_sum, &out.tput, h);
     let ones = vec![1.0; q];
     out.tput_ma = moving_average(&out.tput, &ones, h);
     out.load_ma = moving_average(&out.load, &ones, h);
 
     // --- polynomial trends ------------------------------------------------
-    let duration = inp.duration as f64;
+    let duration = g.duration;
     let xs: Vec<f64> = (0..q)
         .map(|b| 2.0 * ((b as f64 + 0.5) * quantum) / duration.max(1e-9) - 1.0)
         .collect();
@@ -253,11 +279,11 @@ pub fn analyze(
         cum[idx] + (pos - idx as f64) * out.tput[idx]
     };
     for c in 0..num_clients {
-        if amin[c] > amax[c] {
+        if binned.amin[c] > binned.amax[c] {
             continue; // never ran
         }
-        let a0 = amin[c].max(w0);
-        let a1 = amax[c].min(w1);
+        let a0 = binned.amin[c].max(w0);
+        let a1 = binned.amax[c].min(w1);
         out.active_time[c] = (a1 - a0).max(0.0);
         let tot = (total_at(a1) - total_at(a0)).max(0.0);
         if tot > 0.0 {
@@ -269,12 +295,12 @@ pub fn analyze(
     }
 
     out.totals = [
-        total_ok,
-        total_valid - total_ok,
-        rt_total / total_ok.max(1.0),
+        binned.total_ok,
+        binned.total_valid - binned.total_ok,
+        binned.rt_total / binned.total_ok.max(1.0),
         out.load.iter().cloned().fold(0.0, f64::max),
         out.tput.iter().cloned().fold(0.0, f64::max),
-        rt_max,
+        binned.rt_max,
         out.load.iter().sum::<f64>() * quantum,
         0.0,
     ];
@@ -362,6 +388,20 @@ pub fn churn_report(rd: &RunData, num_quanta: usize) -> ChurnReport {
         }
     }
 
+    // Jain index over clients that participated at all
+    let participants: Vec<f64> = (0..n_clients)
+        .filter(|&c| (0..q).any(|b| marked[b * n_clients + c]))
+        .map(|c| completions[c])
+        .collect();
+    finish_churn(&mut out, &participants);
+    out
+}
+
+/// The availability/fairness post-pass shared by every churn view:
+/// peak-normalize `active`, summarize the active span, and compute the
+/// Jain index over the participating clients' completion counts.
+fn finish_churn(out: &mut ChurnReport, participants: &[f64]) {
+    let q = out.active.len();
     let peak = out.active.iter().cloned().fold(0.0, f64::max);
     if peak > 0.0 {
         for b in 0..q {
@@ -374,17 +414,72 @@ pub fn churn_report(rd: &RunData, num_quanta: usize) -> ChurnReport {
         out.min_availability =
             span.iter().cloned().fold(f64::INFINITY, f64::min);
     }
-
-    // Jain index over clients that participated at all
-    let participants: Vec<f64> = (0..n_clients)
-        .filter(|&c| (0..q).any(|b| marked[b * n_clients + c]))
-        .map(|c| completions[c])
-        .collect();
     let sum: f64 = participants.iter().sum();
     let sq: f64 = participants.iter().map(|x| x * x).sum();
     if sq > 0.0 {
         out.jain_fairness = sum * sum / (participants.len() as f64 * sq);
     }
+}
+
+/// [`churn_report`] on an explicit pre-declared grid (quantum width and
+/// client capacity from the grid rather than the observed duration), so
+/// a retained run can be compared bin-for-bin with a streaming run.
+pub fn churn_report_grid(rd: &RunData, grid: &AnalysisGrid) -> ChurnReport {
+    let q = grid.num_quanta.max(1);
+    let quantum = grid.quantum.max(1e-9);
+    let n_clients = grid.num_clients;
+    let mut out = ChurnReport {
+        active: vec![0.0; q],
+        availability: vec![0.0; q],
+        evicted: rd.testers.iter().filter(|t| t.evicted).count(),
+        rejoins: rd.testers.iter().map(|t| u64::from(t.rejoins)).sum(),
+        ..Default::default()
+    };
+    if n_clients == 0 {
+        return out;
+    }
+    let mut marked = vec![false; q * n_clients];
+    let mut completions = vec![0.0f64; n_clients];
+    for s in &rd.samples {
+        let c = s.tester.index();
+        if c >= n_clients {
+            continue;
+        }
+        let b = ((s.t_end / quantum).floor().max(0.0) as usize).min(q - 1);
+        if !marked[b * n_clients + c] {
+            marked[b * n_clients + c] = true;
+            out.active[b] += 1.0;
+        }
+        if s.outcome.ok() {
+            completions[c] += 1.0;
+        }
+    }
+    let participants: Vec<f64> = (0..n_clients)
+        .filter(|&c| (0..q).any(|b| marked[b * n_clients + c]))
+        .map(|c| completions[c])
+        .collect();
+    finish_churn(&mut out, &participants);
+    out
+}
+
+/// The churn report of a streaming run: the [`StreamAgg`] already holds
+/// the per-quantum distinct-client counts and per-client completions;
+/// this just runs the shared post-pass over them plus the tester
+/// records' eviction/rejoin counters.
+pub fn churn_from_stream(agg: &StreamAgg, testers: &[TesterRecord]) -> ChurnReport {
+    let g = agg.grid();
+    let mut out = ChurnReport {
+        active: agg.active.clone(),
+        availability: vec![0.0; g.num_quanta],
+        evicted: testers.iter().filter(|t| t.evicted).count(),
+        rejoins: testers.iter().map(|t| u64::from(t.rejoins)).sum(),
+        ..Default::default()
+    };
+    let participants: Vec<f64> = (0..g.num_clients)
+        .filter(|&c| agg.participated(c))
+        .map(|c| agg.completions[c])
+        .collect();
+    finish_churn(&mut out, &participants);
     out
 }
 
@@ -543,6 +638,53 @@ mod tests {
         let ob = analyze(&b, 32, 8);
         assert_eq!(oa.tput, ob.tput);
         assert_eq!(oa.totals, ob.totals);
+    }
+
+    #[test]
+    fn stream_agg_matches_grid_analysis() {
+        use crate::metrics::{AnalysisGrid, StreamAgg};
+        let rd = mk_run(4, 25);
+        let (w0, w1) = rd.peak_window();
+        let grid = AnalysisGrid::planned(64, 8, 10.0, w0, w1, rd.duration_s);
+        let inp = AnalysisInput::from_grid(&rd, &grid);
+        let posthoc = analyze(&inp, grid.num_quanta, grid.num_clients);
+        let mut agg = StreamAgg::new(grid);
+        // stream in reverse order: the statistics must not care
+        for s in rd.samples.iter().rev() {
+            agg.push(s.tester.index(), s.t_start, s.t_end, s.rt, s.outcome.ok());
+        }
+        let streamed = output_from_binned(&agg.binned);
+        assert_eq!(posthoc.tput, streamed.tput, "counting series exact");
+        assert_eq!(posthoc.completed, streamed.completed);
+        assert_eq!(posthoc.totals[0], streamed.totals[0]);
+        for (a, b) in posthoc.load.iter().zip(&streamed.load) {
+            assert!((a - b).abs() < 1e-9, "load {a} vs {b}");
+        }
+        for (a, b) in posthoc.rt_ma.iter().zip(&streamed.rt_ma) {
+            assert!((a - b).abs() < 1e-9, "rt_ma {a} vs {b}");
+        }
+        for (a, b) in posthoc.util.iter().zip(&streamed.util) {
+            assert!((a - b).abs() < 1e-9, "util {a} vs {b}");
+        }
+        // churn views agree too
+        let cr = churn_report_grid(&rd, &grid);
+        let cs = churn_from_stream(&agg, &rd.testers);
+        assert_eq!(cr.active, cs.active);
+        assert!((cr.jain_fairness - cs.jain_fairness).abs() < 1e-12);
+        assert!((cr.mean_availability - cs.mean_availability).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_grid_pins_the_declared_constants() {
+        use crate::metrics::AnalysisGrid;
+        let rd = mk_run(2, 5);
+        let grid = AnalysisGrid::planned(32, 4, 20.0, 3.0, 9.0, 64.0);
+        let inp = AnalysisInput::from_grid(&rd, &grid);
+        assert_eq!(inp.quantum as f64, grid.quantum);
+        assert_eq!(inp.w0 as f64, grid.w0);
+        assert_eq!(inp.w1 as f64, grid.w1);
+        assert_eq!(inp.duration as f64, grid.duration);
+        assert_eq!(inp.len(), rd.samples.len());
     }
 
     #[test]

@@ -123,6 +123,96 @@ pub fn md_header() -> String {
     "| bench | median | mean | σ | rate |\n|---|---|---|---|---|".into()
 }
 
+/// Peak resident-set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`); 0 where procfs is unavailable.
+pub fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// Best-effort reset of the peak-RSS watermark (`/proc/self/clear_refs`,
+/// Linux ≥ 4.0) so successive bench phases measure their own peaks.
+/// Returns false when the kernel interface is unavailable.
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", "5").is_ok()
+}
+
+/// One measured configuration of the scale benchmark — the row format
+/// of `BENCH_scale.json` (stable keys so future PRs can diff the perf
+/// trajectory and change-point tooling can ingest it).
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    /// Row label (e.g. `"churn-100000-wheel"`).
+    pub label: String,
+    /// Tester-pool size.
+    pub testers: usize,
+    /// Event-queue implementation ("wheel" / "heap").
+    pub queue: &'static str,
+    /// Collection mode ("stream" / "retain").
+    pub collection: &'static str,
+    /// Virtual seconds simulated.
+    pub virtual_s: f64,
+    /// Wall-clock seconds for the run (median over iterations).
+    pub wall_s: f64,
+    /// DES events dispatched.
+    pub events: u64,
+    /// Events per wall-clock second.
+    pub events_per_sec: f64,
+    /// High-water mark of pending events in the queue.
+    pub peak_pending: u64,
+    /// Peak resident set during the run (KiB; 0 if unknown).
+    pub peak_rss_kb: u64,
+    /// Samples produced by the run.
+    pub samples: u64,
+}
+
+impl ScaleRow {
+    /// The row as a JSON object.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"label\":\"{}\",\"testers\":{},\"queue\":\"{}\",\
+             \"collection\":\"{}\",\"virtual_s\":{:.1},\"wall_s\":{:.4},\
+             \"events\":{},\"events_per_sec\":{:.1},\"peak_pending\":{},\
+             \"peak_rss_kb\":{},\"samples\":{}}}",
+            self.label,
+            self.testers,
+            self.queue,
+            self.collection,
+            self.virtual_s,
+            self.wall_s,
+            self.events,
+            self.events_per_sec,
+            self.peak_pending,
+            self.peak_rss_kb,
+            self.samples,
+        )
+    }
+}
+
+/// Assemble the `BENCH_scale.json` document from measured rows plus
+/// free-form summary fields (already-rendered JSON values).
+pub fn scale_json(rows: &[ScaleRow], summary: &[(&str, String)]) -> String {
+    let mut s = String::from("{\n  \"schema\": \"diperf-bench-scale-v1\",\n");
+    for (k, v) in summary {
+        s.push_str(&format!("  \"{k}\": {v},\n"));
+    }
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&r.json());
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 fn fmt_t(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
@@ -167,6 +257,41 @@ mod tests {
             });
         let rate = r.rate().unwrap();
         assert!(rate > 100_000.0 && rate < 1_500_000.0, "rate {rate}");
+    }
+
+    #[test]
+    fn scale_json_renders() {
+        let row = ScaleRow {
+            label: "churn-1000-wheel".into(),
+            testers: 1000,
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: 300.0,
+            wall_s: 1.25,
+            events: 4_000_000,
+            events_per_sec: 3.2e6,
+            peak_pending: 2048,
+            peak_rss_kb: 51200,
+            samples: 250_000,
+        };
+        let doc = scale_json(
+            &[row.clone(), row],
+            &[("note", "\"smoke\"".into()), ("wheel_vs_heap", "2.1".into())],
+        );
+        assert!(doc.contains("\"schema\": \"diperf-bench-scale-v1\""));
+        assert!(doc.contains("\"wheel_vs_heap\": 2.1"));
+        assert!(doc.contains("\"events_per_sec\":3200000.0"));
+        // two rows, comma-separated, valid bracket structure
+        assert_eq!(doc.matches("\"label\"").count(), 2);
+        assert_eq!(doc.matches('[').count(), 1);
+        assert_eq!(doc.matches(']').count(), 1);
+    }
+
+    #[test]
+    fn rss_probe_is_sane() {
+        let kb = peak_rss_kb();
+        // on Linux this is at least a few MB; elsewhere it reports 0
+        assert!(kb == 0 || kb > 1000, "VmHWM {kb} kB");
     }
 
     #[test]

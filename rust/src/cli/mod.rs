@@ -1,8 +1,16 @@
 //! Command-line interface: `diperf run|analyze|predict|selftest|presets`.
 //!
 //! `run` is the paper's workflow end to end: deploy → staggered ramp →
-//! collection → reconciliation → automated analysis (XLA artifacts when
-//! present, native fallback otherwise) → figure CSVs + terminal charts.
+//! collection → reconciliation → automated analysis → figure CSVs +
+//! terminal charts.
+//!
+//! Collection defaults to **streaming** (memory O(testers + quanta),
+//! native analysis only).  Pass `--retain-samples` for the classic
+//! store-everything path, which also writes `samples.csv` (needed by
+//! `analyze`/`predict` later) and enables the XLA analysis artifacts.
+//! `--queue heap|wheel` selects the engine's event queue and
+//! `--bench-json <path>` dumps the run's performance counters in the
+//! `BENCH_scale.json` row format.
 
 pub mod args;
 
@@ -10,11 +18,15 @@ use anyhow::{Context, Result};
 
 use crate::analysis::{self, AnalysisInput, AnalysisOutput, ChurnReport};
 use crate::config;
-use crate::experiment::{run_experiment, ExperimentConfig, ExperimentResult};
-use crate::metrics::RunData;
+use crate::experiment::{
+    run_experiment, run_experiment_opts, ExperimentConfig, ExperimentResult,
+    RunOptions,
+};
+use crate::metrics::{CollectionMode, RunData};
 use crate::predict::PerfModel;
 use crate::report::{self, RunDir};
 use crate::runtime::XlaAnalyzer;
+use crate::sim::QueueKind;
 use args::{Args, Spec};
 
 /// Analysis resolution used by the CLI (matches the AOT variants).
@@ -48,7 +60,34 @@ fn spec() -> Vec<Spec> {
         Spec { name: "native", takes_value: false, help: "force the native analysis path" },
         Spec { name: "xla", takes_value: false, help: "require the XLA analysis path" },
         Spec { name: "quiet", takes_value: false, help: "suppress charts" },
+        Spec { name: "retain-samples", takes_value: false, help: "keep every sample in memory (writes samples.csv, enables XLA)" },
+        Spec { name: "queue", takes_value: true, help: "event queue: wheel (default) | heap" },
+        Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path" },
     ]
+}
+
+/// Run-mechanics options from CLI flags (streaming + wheel by default).
+fn run_opts(a: &Args) -> Result<RunOptions> {
+    let mut opts = RunOptions {
+        collect: if a.has("retain-samples") {
+            CollectionMode::Retain
+        } else {
+            CollectionMode::Stream
+        },
+        num_quanta: NUM_QUANTA,
+        window_s: WINDOW_S,
+        ..RunOptions::default()
+    };
+    if let Some(q) = a.get("queue") {
+        opts.queue = QueueKind::parse(q).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if a.has("xla") && opts.collect == CollectionMode::Stream {
+        anyhow::bail!(
+            "--xla needs retained samples (the AOT artifacts take sample \
+             columns); add --retain-samples"
+        );
+    }
+    Ok(opts)
 }
 
 /// CLI entry point; returns the process exit code.
@@ -63,7 +102,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             for name in [
                 "prews_fig3", "ws_fig6", "ws_overload", "http_sec43",
                 "quick_http", "scalability", "churn_study", "spike_study",
-                "soak",
+                "soak", "bench_scale",
             ] {
                 println!("{name}");
             }
@@ -139,29 +178,52 @@ pub fn run_analysis(
 fn summarize(r: &ExperimentResult, churn: &ChurnReport) -> String {
     let d = &r.data;
     let es = r.sync.error_summary();
+    // sample counters come from the aggregator in streaming mode
+    let (total, ok, failed, mean_rt) = match r.stream.as_ref() {
+        Some(agg) => (
+            agg.samples_seen,
+            agg.binned.total_ok as u64,
+            (agg.binned.total_valid - agg.binned.total_ok) as u64,
+            agg.binned.rt_total / agg.binned.total_ok.max(1.0),
+        ),
+        None => (
+            d.samples.len() as u64,
+            d.completed() as u64,
+            d.failed() as u64,
+            d.mean_rt(),
+        ),
+    };
     let mut s = format!(
         "service           {}\n\
-         events            {}\n\
+         events            {} ({} queue, peak pending {})\n\
+         collection        {}\n\
          sim wall time     {:.0} ms\n\
-         samples           {} ({} ok / {} failed, {} unsynced dropped)\n\
+         samples           {total} ({ok} ok / {failed} failed, {} unsynced dropped)\n\
          experiment span   {:.0} s\n\
-         mean rt           {:.3} s\n\
+         mean rt           {mean_rt:.3} s\n\
          service stalls    {}\n\
          sync error        mean {:.1} ms / median {:.1} ms / σ {:.1} ms\n",
         r.service_name,
         r.events,
+        r.queue.label(),
+        r.peak_pending,
+        r.collection.label(),
         r.wall_ms,
-        d.samples.len(),
-        d.completed(),
-        d.failed(),
         d.dropped_unsynced,
         d.duration_s,
-        d.mean_rt(),
         r.stalls,
         es.mean * 1e3,
         es.median * 1e3,
         es.std * 1e3,
     );
+    if let Some(agg) = r.stream.as_ref() {
+        s.push_str(&format!(
+            "rt quantiles      p50 {:.3} s / p90 {:.3} s / p99 {:.3} s (P² online)\n",
+            agg.rt_p50.value(),
+            agg.rt_p90.value(),
+            agg.rt_p99.value(),
+        ));
+    }
     if r.faults > 0 {
         s.push_str(&format!("scenario faults   {}\n", r.faults));
         s.push_str(&report::churn_summary(churn));
@@ -175,30 +237,79 @@ fn write_run_dir(
     cfg: &ExperimentConfig,
     r: &ExperimentResult,
     out: &AnalysisOutput,
-    inp: &AnalysisInput,
     churn: &ChurnReport,
 ) -> Result<std::path::PathBuf> {
     let default = format!("runs/{}-{}", name, cfg.seed);
     let dir_name = a.get("out").unwrap_or(&default);
     let rd = RunDir::create(".", dir_name)?;
-    rd.write("samples.csv", &report::samples_csv(&r.data))?;
+    if r.collection == CollectionMode::Retain {
+        rd.write("samples.csv", &report::samples_csv(&r.data))?;
+    }
     rd.write("summary.txt", &summarize(r, churn))?;
-    rd.write_figures("fig", out, &r.data, inp.t0 as f64, inp.quantum as f64)?;
-    rd.write_churn("fig", churn, inp.t0 as f64, inp.quantum as f64)?;
+    rd.write_figures("fig", out, &r.data, r.grid.t0, r.grid.quantum)?;
+    rd.write_churn("fig", churn, r.grid.t0, r.grid.quantum)?;
     Ok(rd.path)
+}
+
+/// Write the run's performance counters in the `BENCH_scale.json` row
+/// format (for `--bench-json`).
+fn write_bench_json(path: &str, name: &str, r: &ExperimentResult) -> Result<()> {
+    use crate::bench_util::{peak_rss_kb, scale_json, ScaleRow};
+    let testers = r.data.testers.len();
+    let wall_s = (r.wall_ms / 1e3).max(1e-9);
+    let row = ScaleRow {
+        label: format!("{name}-{testers}-{}", r.queue.label()),
+        testers,
+        queue: r.queue.label(),
+        collection: r.collection.label(),
+        virtual_s: r.data.duration_s,
+        wall_s,
+        events: r.events,
+        events_per_sec: r.events as f64 / wall_s,
+        peak_pending: r.peak_pending,
+        peak_rss_kb: peak_rss_kb(),
+        samples: match r.stream.as_ref() {
+            Some(agg) => agg.samples_seen,
+            None => r.data.samples.len() as u64,
+        },
+    };
+    let source = format!("\"diperf run --preset {name}\"");
+    std::fs::write(path, scale_json(&[row], &[("source", source)]))
+        .with_context(|| format!("writing {path}"))?;
+    Ok(())
 }
 
 fn cmd_run(a: &Args) -> Result<i32> {
     let (cfg, name) = build_config(a)?;
+    let opts = run_opts(a)?;
     eprintln!(
-        "[diperf] running preset {name:?}: {} testers x {:.0}s (seed {})",
-        cfg.testbed.num_testers, cfg.controller.desc.duration_s, cfg.seed
+        "[diperf] running preset {name:?}: {} testers x {:.0}s \
+         (seed {}, {} queue, {} collection)",
+        cfg.testbed.num_testers,
+        cfg.controller.desc.duration_s,
+        cfg.seed,
+        opts.queue.label(),
+        opts.collect.label(),
     );
-    let r = run_experiment(&cfg);
-    let inp = AnalysisInput::from_run(&r.data, NUM_QUANTA, WINDOW_S);
-    let (out, path_label) = run_analysis(&inp, a)?;
-    let churn = analysis::churn_report(&r.data, NUM_QUANTA);
-    let dir = write_run_dir(a, &name, &cfg, &r, &out, &inp, &churn)?;
+    let r = run_experiment_opts(&cfg, opts);
+    let (out, path_label, churn) = match r.stream.as_ref() {
+        Some(agg) => (
+            analysis::output_from_binned(&agg.binned),
+            "native-stream",
+            analysis::churn_from_stream(agg, &r.data.testers),
+        ),
+        None => {
+            // retained: analyze on the same pre-declared grid streaming
+            // uses, so both modes produce identical figure CSVs
+            let inp = AnalysisInput::from_grid(&r.data, &r.grid);
+            let (out, label) = run_analysis(&inp, a)?;
+            (out, label, analysis::churn_report_grid(&r.data, &r.grid))
+        }
+    };
+    let dir = write_run_dir(a, &name, &cfg, &r, &out, &churn)?;
+    if let Some(path) = a.get("bench-json") {
+        write_bench_json(path, &name, &r)?;
+    }
     print!("{}", summarize(&r, &churn));
     println!("analysis path     {path_label}");
     println!("run directory     {}", dir.display());
@@ -379,6 +490,41 @@ mod tests {
         )
         .unwrap();
         assert!(build_config(&a).is_err());
+    }
+
+    #[test]
+    fn run_opts_default_to_streaming_wheel() {
+        let a = Args::parse(&sv(&["run"]), &spec()).unwrap();
+        let o = run_opts(&a).unwrap();
+        assert_eq!(o.collect, CollectionMode::Stream);
+        assert_eq!(o.queue, QueueKind::Wheel);
+        assert_eq!(o.num_quanta, NUM_QUANTA);
+    }
+
+    #[test]
+    fn run_opts_flags_parse() {
+        let a = Args::parse(
+            &sv(&["run", "--retain-samples", "--queue", "heap"]),
+            &spec(),
+        )
+        .unwrap();
+        let o = run_opts(&a).unwrap();
+        assert_eq!(o.collect, CollectionMode::Retain);
+        assert_eq!(o.queue, QueueKind::Heap);
+
+        let a = Args::parse(&sv(&["run", "--queue", "zzz"]), &spec()).unwrap();
+        assert!(run_opts(&a).is_err());
+
+        // --xla without retained samples cannot work: the AOT artifacts
+        // consume sample columns
+        let a = Args::parse(&sv(&["run", "--xla"]), &spec()).unwrap();
+        assert!(run_opts(&a).is_err());
+        let a = Args::parse(
+            &sv(&["run", "--xla", "--retain-samples"]),
+            &spec(),
+        )
+        .unwrap();
+        assert!(run_opts(&a).is_ok());
     }
 
     #[test]

@@ -158,10 +158,11 @@ pub fn preset_by_name(name: &str, seed: u64) -> Result<ExperimentConfig> {
         "churn_study" => presets::churn_study(20, 600.0, seed),
         "spike_study" => presets::spike_study(20, 600.0, seed),
         "soak" => presets::soak(20, 900.0, seed),
+        "bench_scale" => presets::bench_scale(1000, 300.0, seed),
         other => bail!(
             "unknown preset {other:?} (try prews_fig3, ws_fig6, \
              ws_overload, http_sec43, quick_http, scalability, \
-             churn_study, spike_study, soak)"
+             churn_study, spike_study, soak, bench_scale)"
         ),
     })
 }

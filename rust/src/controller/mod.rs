@@ -10,10 +10,18 @@
 //!
 //! Like [`crate::tester`], this is a pure state machine: the experiment
 //! world owns the clock and the network.
+//!
+//! Sample collection runs in one of two modes (see
+//! [`crate::metrics::CollectionMode`]): the classic retain-everything
+//! path, or streaming aggregation where each sample is reconciled and
+//! folded into a [`crate::metrics::StreamAgg`] as soon as a sync point
+//! covers its completion time — the controller then holds O(sync
+//! interval) samples per tester instead of O(run length).
 
 use crate::ids::{NodeId, TesterId};
 use crate::metrics::{
-    CallSample, GlobalSample, OnlineView, RunData, TesterRecord,
+    CallSample, CollectionMode, GlobalSample, OnlineView, RunData, StreamAgg,
+    TesterRecord,
 };
 use crate::timesync::ClockMap;
 use crate::transport::{
@@ -54,7 +62,15 @@ struct Slot {
     stopped_at: f64,
     last_heard: f64,
     consecutive_failures: u32,
+    /// Retained samples (empty in streaming mode).
     samples: Vec<CallSample>,
+    /// Streaming mode: samples awaiting a covering sync point.  A
+    /// sample is reconciled and folded into the aggregator as soon as
+    /// a sync exchange lands at or past its completion time, so the
+    /// buffer holds at most one sync interval's worth of calls.
+    pending: Vec<CallSample>,
+    /// Samples received (either mode).
+    samples_seen: u64,
     clock: ClockMap,
     /// Times this tester re-registered after a crash (§3 late join).
     rejoins: u32,
@@ -74,10 +90,16 @@ pub struct Controller {
     /// Live aggregate view (Figure 2's "on-line" visualization).
     pub online: OnlineView,
     started: usize,
+    /// Streaming aggregator; `None` until [`Controller::set_streaming`]
+    /// (retain mode keeps it `None` for the whole run).
+    stream: Option<StreamAgg>,
+    /// Streaming-mode samples dropped for lack of a usable clock map.
+    dropped_unsynced: u64,
 }
 
 impl Controller {
-    /// A controller over a candidate-node pool.
+    /// A controller over a candidate-node pool (retain mode until
+    /// [`Controller::set_streaming`] is called).
     pub fn new(cfg: ControllerConfig, nodes: &[NodeId]) -> Controller {
         let slots = nodes
             .iter()
@@ -89,6 +111,8 @@ impl Controller {
                 last_heard: 0.0,
                 consecutive_failures: 0,
                 samples: Vec::new(),
+                pending: Vec::new(),
+                samples_seen: 0,
                 clock: ClockMap::new(),
                 rejoins: 0,
             })
@@ -98,7 +122,36 @@ impl Controller {
             slots,
             online: OnlineView::new(60.0),
             started: 0,
+            stream: None,
+            dropped_unsynced: 0,
         }
+    }
+
+    /// Switch to streaming collection: from now on samples are folded
+    /// into `agg` the moment a sync point covers them, instead of being
+    /// retained.  Must be installed before the first sample arrives
+    /// (the experiment world does this when the ramp schedule is fixed,
+    /// which is before any tester starts).
+    pub fn set_streaming(&mut self, agg: StreamAgg) {
+        debug_assert!(
+            self.slots.iter().all(|s| s.samples_seen == 0),
+            "streaming installed after samples arrived"
+        );
+        self.stream = Some(agg);
+    }
+
+    /// Which collection mode the controller is running.
+    pub fn mode(&self) -> CollectionMode {
+        if self.stream.is_some() {
+            CollectionMode::Stream
+        } else {
+            CollectionMode::Retain
+        }
+    }
+
+    /// Take the streaming aggregator out (after [`Controller::finalize`]).
+    pub fn take_stream(&mut self) -> Option<StreamAgg> {
+        self.stream.take()
     }
 
     /// Number of testers in the roster.
@@ -190,6 +243,32 @@ impl Controller {
             TesterMsg::DeployDone | TesterMsg::Heartbeat => None,
             TesterMsg::Sync(p) => {
                 s.clock.record(p);
+                // Streaming: this sync point covers every buffered
+                // sample finished at or before its arrival — their
+                // clock-map interpolation can no longer change, so
+                // reconcile them now and drop them.
+                if let Some(agg) = self.stream.as_mut() {
+                    let ready = s
+                        .pending
+                        .iter()
+                        .take_while(|c| c.t_done_local <= p.l2)
+                        .count();
+                    for c in s.pending.drain(..ready) {
+                        match (
+                            s.clock.to_global(c.t_submit_local),
+                            s.clock.to_global(c.t_done_local),
+                        ) {
+                            (Some(t_start), Some(t_end)) => agg.push(
+                                t.index(),
+                                t_start,
+                                t_end,
+                                c.rt_s,
+                                c.outcome.ok(),
+                            ),
+                            _ => self.dropped_unsynced += 1,
+                        }
+                    }
+                }
                 None
             }
             TesterMsg::Sample(sample) => {
@@ -200,7 +279,12 @@ impl Controller {
                 }
                 // online view: approximate global time with arrival time
                 self.online.push(now, sample.outcome.ok());
-                s.samples.push(sample);
+                s.samples_seen += 1;
+                if self.stream.is_some() {
+                    s.pending.push(sample);
+                } else {
+                    s.samples.push(sample);
+                }
                 if evict_after > 0 && s.consecutive_failures >= evict_after
                 {
                     s.state = SessionState::Evicted;
@@ -242,12 +326,20 @@ impl Controller {
     /// the paper's design (results aggregate only synchronized
     /// reporters).  `t_end_true` is filled with NaN; the simulation
     /// world backfills it for validation.
-    pub fn finalize(&self, duration_s: f64) -> RunData {
+    ///
+    /// In streaming mode the returned [`RunData`] carries no samples
+    /// (they were folded into the aggregator as they arrived); the
+    /// leftovers past each tester's last sync point are reconciled here
+    /// on the final clock map — the same clamp the retained path
+    /// applies — before the aggregator is handed out via
+    /// [`Controller::take_stream`].
+    pub fn finalize(&mut self, duration_s: f64) -> RunData {
         let mut rd = RunData {
             duration_s,
+            dropped_unsynced: self.dropped_unsynced,
             ..Default::default()
         };
-        for (i, s) in self.slots.iter().enumerate() {
+        for (i, s) in self.slots.iter_mut().enumerate() {
             let id = TesterId(i as u32);
             rd.testers.push(TesterRecord {
                 id,
@@ -260,7 +352,7 @@ impl Controller {
                 },
                 evicted: s.state == SessionState::Evicted,
                 clock: s.clock.clone(),
-                samples: s.samples.len() as u64,
+                samples: s.samples_seen,
                 rejoins: s.rejoins,
             });
             for c in &s.samples {
@@ -280,6 +372,23 @@ impl Controller {
                         });
                     }
                     _ => rd.dropped_unsynced += 1,
+                }
+            }
+            if let Some(agg) = self.stream.as_mut() {
+                for c in s.pending.drain(..) {
+                    match (
+                        s.clock.to_global(c.t_submit_local),
+                        s.clock.to_global(c.t_done_local),
+                    ) {
+                        (Some(t_start), Some(t_end)) => agg.push(
+                            i,
+                            t_start,
+                            t_end,
+                            c.rt_s,
+                            c.outcome.ok(),
+                        ),
+                        _ => rd.dropped_unsynced += 1,
+                    }
                 }
             }
         }
@@ -429,6 +538,63 @@ mod tests {
         let rd = c.finalize(100.0);
         assert_eq!(rd.samples.len(), 0);
         assert_eq!(rd.dropped_unsynced, 1);
+    }
+
+    #[test]
+    fn streaming_mode_reconciles_incrementally() {
+        use crate::metrics::{AnalysisGrid, CollectionMode, StreamAgg};
+        let mut c = controller(1);
+        assert_eq!(c.mode(), CollectionMode::Retain);
+        let grid = AnalysisGrid::planned(16, 1, 10.0, 0.0, 200.0, 200.0);
+        c.set_streaming(StreamAgg::new(grid));
+        assert_eq!(c.mode(), CollectionMode::Stream);
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        // tester clock is 1000 s ahead of global
+        c.on_msg(
+            5.0,
+            TesterId(0),
+            TesterMsg::Sync(SyncPoint {
+                l1: 1004.9,
+                server: 5.0,
+                l2: 1005.1,
+            }),
+        );
+        c.on_msg(60.0, TesterId(0), sample(0, 0, true, 1060.0));
+        // buffered: no sync point covers local t=1060 yet
+        c.on_msg(
+            100.0,
+            TesterId(0),
+            TesterMsg::Sync(SyncPoint {
+                l1: 1099.9,
+                server: 100.0,
+                l2: 1100.1,
+            }),
+        );
+        let rd = c.finalize(200.0);
+        assert!(rd.samples.is_empty(), "streaming retains nothing");
+        assert_eq!(rd.testers[0].samples, 1);
+        assert_eq!(rd.dropped_unsynced, 0);
+        let agg = c.take_stream().expect("aggregator installed");
+        assert_eq!(agg.samples_seen, 1);
+        assert_eq!(agg.binned.total_ok, 1.0);
+        // the sample reconciled onto the common base (~t=60)
+        assert!((agg.binned.amax[0] - 60.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn streaming_drops_unsynced_at_finalize() {
+        use crate::metrics::{AnalysisGrid, StreamAgg};
+        let mut c = controller(1);
+        c.set_streaming(StreamAgg::new(AnalysisGrid::planned(
+            8, 1, 10.0, 0.0, 100.0, 100.0,
+        )));
+        c.deploy_finished(TesterId(0), true, 0.0);
+        c.mark_started(TesterId(0), 0.0);
+        c.on_msg(60.0, TesterId(0), sample(0, 0, true, 1060.0));
+        let rd = c.finalize(100.0);
+        assert_eq!(rd.dropped_unsynced, 1);
+        assert_eq!(c.take_stream().unwrap().samples_seen, 0);
     }
 
     #[test]

@@ -19,16 +19,23 @@
 //! control-plane and data-plane leg — which is what finally exercises
 //! the controller's silence eviction and late-join paths with real
 //! inputs.
+//!
+//! Scale-out mechanics: [`RunOptions`] selects the engine's event queue
+//! (timer wheel vs reference heap, [`crate::sim::QueueKind`]) and the
+//! sample-collection mode (retain vs streaming,
+//! [`crate::metrics::CollectionMode`]).  Neither knob perturbs the
+//! simulation — all four combinations replay the same seed to the same
+//! event sequence — they only change how fast it runs and how much
+//! memory collection takes, which is what makes 100 000-tester churn
+//! sweeps practical (see `rust/benches/bench_scale.rs`).
 
 pub mod presets;
-
-use std::collections::HashMap;
 
 use crate::client;
 use crate::cluster::{Testbed, TestbedParams};
 use crate::controller::{Controller, ControllerConfig, CtrlAction};
 use crate::ids::{RequestId, TesterId};
-use crate::metrics::RunData;
+use crate::metrics::{AnalysisGrid, CollectionMode, RunData, StreamAgg};
 use crate::net::NetModel;
 use crate::scenario::{Fault, FaultKind, Scenario};
 use crate::services::{
@@ -37,13 +44,13 @@ use crate::services::{
     http::{HttpParams, HttpService},
     Service, ServiceStats, SvcOut,
 };
-use crate::sim::{Engine, SimDuration, SimTime};
+use crate::sim::{Engine, QueueKind, SimDuration, SimTime};
 use crate::tester::{Phase, Tester};
 use crate::timesync::{SyncAccuracy, SyncPoint};
 use crate::transport::{
     ClientCode, CtrlMsg, GoodbyeReason, TesterMsg,
 };
-use crate::util::Pcg64;
+use crate::util::{FxHashMap, Pcg64};
 
 /// Which target service to deploy (with calibration).
 #[derive(Clone, Debug)]
@@ -108,9 +115,39 @@ pub struct ExperimentConfig {
     pub scenario: Scenario,
 }
 
+/// Run-mechanics knobs orthogonal to the experiment specification: how
+/// samples are collected and which event queue the engine runs on.
+/// Neither changes the simulated world — a given seed dispatches the
+/// identical event sequence under every combination.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Sample collection strategy (default: retain, the classic path).
+    pub collect: CollectionMode,
+    /// Event-queue implementation (default: the timer wheel).
+    pub queue: QueueKind,
+    /// Streaming-grid resolution in quanta (default 512, matching the
+    /// AOT analysis variants).
+    pub num_quanta: usize,
+    /// Moving-average window in seconds (default 160, the paper's
+    /// Figure 3 window).
+    pub window_s: f64,
+}
+
+impl Default for RunOptions {
+    fn default() -> RunOptions {
+        RunOptions {
+            collect: CollectionMode::Retain,
+            queue: QueueKind::Wheel,
+            num_quanta: 512,
+            window_s: 160.0,
+        }
+    }
+}
+
 /// Everything a finished experiment produces.
 pub struct ExperimentResult {
-    /// Reconciled samples + per-tester records.
+    /// Reconciled samples + per-tester records (samples empty in
+    /// streaming mode).
     pub data: RunData,
     /// Service-side counters.
     pub service_stats: ServiceStats,
@@ -126,6 +163,17 @@ pub struct ExperimentResult {
     pub stalls: u64,
     /// Scenario faults scheduled for this run (0 for a quiet run).
     pub faults: u64,
+    /// The analysis grid fixed at ramp time (both collection modes
+    /// report it, so retained runs can be analyzed comparably).
+    pub grid: AnalysisGrid,
+    /// Streaming aggregation state (streaming mode only).
+    pub stream: Option<StreamAgg>,
+    /// High-water mark of pending DES events.
+    pub peak_pending: u64,
+    /// Which event queue ran the experiment.
+    pub queue: QueueKind,
+    /// Which collection mode ran the experiment.
+    pub collection: CollectionMode,
 }
 
 /// Events of the DiPerF world.
@@ -203,14 +251,22 @@ struct World {
     rng_net: Pcg64,
     rng_svc: Pcg64,
     rng_testers: Vec<Pcg64>,
-    reqs: HashMap<u32, ReqInfo>,
+    reqs: FxHashMap<u32, ReqInfo>,
     next_req: u32,
     /// Simulation truth for validation: (tester, seq) -> true end time.
-    truth: HashMap<(u32, u32), f64>,
+    /// Populated only in retain mode — it is O(calls) by nature and the
+    /// sync-validation tests that consume it need the samples anyway.
+    truth: FxHashMap<(u32, u32), f64>,
     sync: SyncAccuracy,
     deploys_pending: usize,
     ramp_begun: bool,
     horizon: SimTime,
+    /// Run-mechanics options (collection mode, queue choice, grid).
+    opts: RunOptions,
+    /// The analysis grid, fixed once the ramp schedule is known.
+    grid: Option<AnalysisGrid>,
+    /// Copy of the config's grace window (for the planned grid span).
+    grace_s: f64,
     /// The earliest armed service wake (dedupe: stale ServiceWake events
     /// whose tag mismatches are dropped, so wake chains cannot multiply).
     svc_wake: Option<u64>,
@@ -314,10 +370,12 @@ impl World {
     /// Tester produced a sample: forward it, apply the give-up policy,
     /// and keep the loop going.
     fn after_sample(&mut self, i: usize, sample: crate::metrics::CallSample) {
-        self.truth.insert(
-            (sample.tester.0, sample.seq),
-            self.eng.now().as_secs_f64(),
-        );
+        if self.opts.collect == CollectionMode::Retain {
+            self.truth.insert(
+                (sample.tester.0, sample.seq),
+                self.eng.now().as_secs_f64(),
+            );
+        }
         self.send_to_controller(i, TesterMsg::Sample(sample));
         let give_up = self.testers[i].desc.give_up_failures;
         if self.testers[i].should_give_up(give_up) {
@@ -437,10 +495,37 @@ impl World {
                     let last = self
                         .controller
                         .start_time(self.testers.len() - 1, ramp0);
-                    self.horizon = SimTime::from_secs_f64(
-                        last + self.controller.description().duration_s
-                            + 120.0,
+                    let duration_s = self.controller.description().duration_s;
+                    self.horizon =
+                        SimTime::from_secs_f64(last + duration_s + 120.0);
+                    // The analysis grid is fixed here — before the first
+                    // tester starts, so before the first sample — from
+                    // the planned span and the declared peak window
+                    // (last start .. first planned stop).  Streaming
+                    // aggregation begins on it immediately.
+                    let planned = self.horizon.as_secs_f64()
+                        + self.grace_s.max(0.0);
+                    // declared peak window: last start .. first planned
+                    // stop; when the ramp outlasts the duration no
+                    // all-up window exists — fall back to the middle
+                    // half, mirroring `RunData::peak_window`
+                    let (w0, w1) = if ramp0 + duration_s > last {
+                        (last, ramp0 + duration_s)
+                    } else {
+                        (0.25 * planned, 0.75 * planned)
+                    };
+                    let grid = AnalysisGrid::planned(
+                        self.opts.num_quanta,
+                        self.testers.len(),
+                        self.opts.window_s,
+                        w0,
+                        w1,
+                        planned,
                     );
+                    if self.opts.collect == CollectionMode::Stream {
+                        self.controller.set_streaming(StreamAgg::new(grid));
+                    }
+                    self.grid = Some(grid);
                 }
             }
             Ev::StartTester(i) => {
@@ -738,8 +823,32 @@ impl World {
     }
 }
 
-/// Run a complete DiPerF experiment.
+/// Run a complete DiPerF experiment with the default mechanics
+/// (retained samples, timer-wheel queue).
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    run_experiment_opts(cfg, RunOptions::default())
+}
+
+/// Run a complete DiPerF experiment with explicit run mechanics.
+///
+/// ```
+/// use diperf::experiment::{presets, run_experiment_opts, RunOptions};
+/// use diperf::metrics::CollectionMode;
+///
+/// let cfg = presets::quick_http(2, 20.0, 1);
+/// let opts = RunOptions {
+///     collect: CollectionMode::Stream,
+///     ..RunOptions::default()
+/// };
+/// let r = run_experiment_opts(&cfg, opts);
+/// assert!(r.data.samples.is_empty(), "streaming retains no samples");
+/// let agg = r.stream.expect("streaming aggregator");
+/// assert!(agg.binned.total_ok > 0.0);
+/// ```
+pub fn run_experiment_opts(
+    cfg: &ExperimentConfig,
+    opts: RunOptions,
+) -> ExperimentResult {
     let wall = std::time::Instant::now();
     let mut root = Pcg64::seed_from(cfg.seed);
     let mut rng_bed = root.split(1);
@@ -760,7 +869,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         (0..n).map(|i| root.split(100 + i as u64)).collect();
 
     let mut w = World {
-        eng: Engine::new(),
+        eng: Engine::with_queue(opts.queue),
         net: bed.net.clone(),
         controller,
         testers,
@@ -768,13 +877,16 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         rng_net: root.split(2),
         rng_svc: root.split(3),
         rng_testers,
-        reqs: HashMap::new(),
+        reqs: FxHashMap::default(),
         next_req: 0,
-        truth: HashMap::new(),
+        truth: FxHashMap::default(),
         sync: SyncAccuracy::new(),
         deploys_pending: n,
         ramp_begun: false,
         horizon: SimTime::MAX,
+        opts,
+        grid: None,
+        grace_s: cfg.grace_s,
         svc_wake: None,
         faults: Vec::new(),
         crash_token: vec![None; n],
@@ -846,6 +958,19 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
             .copied()
             .unwrap_or(f64::NAN);
     }
+    let stream = w.controller.take_stream();
+    // A run that never reached the ramp (nothing deployed) falls back to
+    // an observed-duration grid so downstream code always has one.
+    let grid = w.grid.unwrap_or_else(|| {
+        AnalysisGrid::planned(
+            opts.num_quanta,
+            n,
+            opts.window_s,
+            0.0,
+            duration_s,
+            duration_s,
+        )
+    });
 
     ExperimentResult {
         data,
@@ -856,6 +981,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
         events: w.eng.processed(),
         wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         faults: w.faults.len() as u64,
+        grid,
+        stream,
+        peak_pending: w.eng.peak_pending() as u64,
+        queue: opts.queue,
+        collection: opts.collect,
     }
 }
 
@@ -887,6 +1017,56 @@ mod tests {
             assert_eq!(x.t_end, y.t_end);
             assert_eq!(x.rt, y.rt);
         }
+    }
+
+    #[test]
+    fn queue_choice_does_not_perturb_the_run() {
+        let cfg = presets::quick_http(3, 30.0, 7);
+        let heap = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                queue: QueueKind::Heap,
+                ..RunOptions::default()
+            },
+        );
+        let wheel = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                queue: QueueKind::Wheel,
+                ..RunOptions::default()
+            },
+        );
+        assert_eq!(heap.events, wheel.events);
+        assert_eq!(heap.data.samples.len(), wheel.data.samples.len());
+        for (x, y) in heap.data.samples.iter().zip(&wheel.data.samples) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+            assert_eq!(x.outcome, y.outcome);
+        }
+    }
+
+    #[test]
+    fn streaming_collects_without_retaining() {
+        let cfg = presets::quick_http(4, 60.0, 42);
+        let retain = run_experiment(&cfg);
+        let stream = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                collect: CollectionMode::Stream,
+                ..RunOptions::default()
+            },
+        );
+        assert_eq!(stream.events, retain.events, "same simulation");
+        assert!(stream.data.samples.is_empty(), "nothing retained");
+        let agg = stream.stream.as_ref().expect("aggregator present");
+        // same sample population, counted instead of stored
+        assert_eq!(
+            agg.samples_seen + stream.data.dropped_unsynced,
+            retain.data.samples.len() as u64 + retain.data.dropped_unsynced
+        );
+        assert_eq!(agg.binned.total_ok as usize, retain.data.completed());
+        assert_eq!(stream.data.testers.len(), retain.data.testers.len());
+        assert!(retain.stream.is_none());
+        assert!(stream.peak_pending > 0);
     }
 
     #[test]

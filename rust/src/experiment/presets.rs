@@ -211,6 +211,48 @@ pub fn soak(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
     cfg
 }
 
+/// Scale benchmark: a churn scenario shaped for very large pools
+/// (1k–100k testers).  The whole pool ramps within the first tenth of
+/// the run, each tester offers ≤ 1 job/s against an uncontended HTTP
+/// service, and PlanetLab-style background churn keeps the fault
+/// machinery hot — so the *framework* (event queue, sample pipeline) is
+/// the stressed component.  This is the workload `BENCH_scale.json`
+/// tracks.
+pub fn bench_scale(testers: usize, duration_s: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        seed,
+        service: ServiceKind::Http(HttpParams {
+            max_concurrent: usize::MAX,
+            ..Default::default()
+        }),
+        testbed: TestbedParams {
+            num_testers: testers,
+            ..Default::default()
+        },
+        controller: ControllerConfig {
+            // everyone is up after duration/10, whatever the pool size
+            stagger_s: 0.1 * duration_s / testers.max(1) as f64,
+            eviction_failures: 0,
+            silence_timeout_s: duration_s,
+            desc: TestDescription {
+                duration_s,
+                client_interval_s: 0.0,
+                // frequent syncs keep the streaming release buffers
+                // bounded (a sample waits at most one sync interval, so
+                // the controller holds ~30 calls per tester, not the
+                // whole run)
+                sync_interval_s: 30.0,
+                rate_cap_per_s: 1.0,
+                timeout_s: 60.0,
+                give_up_failures: 0,
+            },
+        },
+        code: ClientCode::Custom(100_000),
+        grace_s: 30.0,
+        scenario: scenario::by_name("churn", duration_s).expect("shipped scenario"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +296,19 @@ mod tests {
             cfg.scenario.validate().unwrap();
         }
         assert!(soak(10, 300.0, 1).testbed.failure_rate_per_hour > 0.0);
+    }
+
+    #[test]
+    fn bench_scale_ramp_fits_a_tenth_of_the_run() {
+        for n in [10usize, 1_000, 100_000] {
+            let cfg = bench_scale(n, 300.0, 1);
+            let ramp = cfg.controller.stagger_s * n as f64;
+            assert!(
+                (ramp - 30.0).abs() < 1e-6,
+                "ramp {ramp} at n={n}"
+            );
+            assert!(!cfg.scenario.is_empty());
+            cfg.scenario.validate().unwrap();
+        }
     }
 }

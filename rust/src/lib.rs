@@ -37,6 +37,27 @@
 //! [`experiment::presets::spike_study`] and
 //! [`experiment::presets::soak`], and the CLI exposes them via
 //! `diperf run --scenario <name>`.  See `examples/churn_study.rs`.
+//!
+//! ## Scale-out subsystem
+//!
+//! The framework runs 100 000-tester experiments on one machine via two
+//! coupled mechanisms, both pure observers of the simulation (every
+//! seed replays bit-identically under every combination):
+//!
+//! * **Hierarchical timer wheel** ([`sim::TimerWheel`], selected by
+//!   [`sim::QueueKind`]) — O(1) schedule/expire for the near horizon
+//!   with an overflow heap for the far future, replacing the O(log n)
+//!   `BinaryHeap` walk over hundreds of thousands of pending events.
+//! * **Streaming metric aggregation** ([`metrics::StreamAgg`],
+//!   selected by [`metrics::CollectionMode`]) — per-quantum
+//!   accumulators, an availability bitset and P² response-time
+//!   quantile estimators ([`metrics::P2Quantile`]) fed as samples
+//!   reconcile, so collection memory is O(testers + quanta) instead of
+//!   O(calls).  The classic retain-everything path stays available
+//!   (`--retain-samples`) for `samples.csv` and the XLA analyzer.
+//!
+//! `rust/benches/bench_scale.rs` tracks the resulting perf trajectory
+//! in `BENCH_scale.json`; `ARCHITECTURE.md` maps the layers end to end.
 
 #![warn(missing_docs)]
 

@@ -15,6 +15,38 @@
 //!  * service utilization (per client) — own completions / all
 //!    completions while the client was active;
 //!  * service fairness (per client) — completions / utilization.
+//!
+//! ## Collection modes
+//!
+//! Two ways to hold the data behind those definitions:
+//!
+//! * **Retain** ([`CollectionMode::Retain`]) — every reconciled
+//!   [`GlobalSample`] is kept in [`RunData::samples`] and analyzed
+//!   post-hoc.  Memory is O(calls); required for `samples.csv`, the
+//!   XLA analysis path and the sync-validation tests.
+//! * **Stream** ([`CollectionMode::Stream`]) — samples are folded into
+//!   a [`StreamAgg`] the moment they can be placed on the common time
+//!   base, then dropped.  Memory is O(testers + quanta), independent of
+//!   call count, which is what makes 100 000-tester runs fit in RAM.
+//!
+//! The streaming accumulators ([`Binned`], the availability bitset in
+//! [`StreamAgg`], the [`P2Quantile`] estimators) mirror the post-hoc
+//! arithmetic operation for operation, so both modes produce the same
+//! figures for the same seed (enforced by
+//! `rust/tests/streaming_equivalence.rs`).
+//!
+//! ```
+//! use diperf::metrics::{AnalysisGrid, StreamAgg};
+//!
+//! // a 10-quantum grid over a planned 100 s run with 2 clients
+//! let grid = AnalysisGrid::planned(10, 2, 20.0, 10.0, 90.0, 100.0);
+//! let mut agg = StreamAgg::new(grid);
+//! agg.push(0, 12.0, 13.0, 1.0, true); // client 0: one 1 s call at t=12..13
+//! agg.push(1, 14.0, 16.0, 2.0, true);
+//! assert_eq!(agg.samples_seen, 2);
+//! assert_eq!(agg.binned.total_ok, 2.0);
+//! assert_eq!(agg.completions, vec![1.0, 1.0]);
+//! ```
 
 use crate::ids::{NodeId, TesterId};
 use crate::timesync::ClockMap;
@@ -168,6 +200,420 @@ impl RunData {
         } else {
             sum / n as f64
         }
+    }
+}
+
+/// How an experiment holds its samples (see the module docs).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum CollectionMode {
+    /// Keep every reconciled sample in memory (O(calls)); the classic
+    /// post-hoc path, required for `samples.csv` and the XLA analyzer.
+    Retain,
+    /// Fold samples into streaming accumulators as they are reconciled
+    /// and drop them (O(testers + quanta)).
+    Stream,
+}
+
+impl CollectionMode {
+    /// Stable label for reports and CLI flags.
+    pub fn label(self) -> &'static str {
+        match self {
+            CollectionMode::Retain => "retain",
+            CollectionMode::Stream => "stream",
+        }
+    }
+}
+
+/// The fixed time grid all streaming aggregation runs on.
+///
+/// The post-hoc path derives its grid from the *observed* run duration;
+/// a streaming run cannot wait for that, so the grid is fixed up front
+/// from the experiment plan (ramp schedule + per-tester duration +
+/// grace).  Every field is rounded through `f32` at construction so the
+/// streaming accumulators and the f32-column [`crate::analysis::AnalysisInput`]
+/// see bit-identical grid constants.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalysisGrid {
+    /// Left edge of quantum 0 (global s).
+    pub t0: f64,
+    /// Quantum width (s).
+    pub quantum: f64,
+    /// Number of quanta in every per-quantum series.
+    pub num_quanta: usize,
+    /// Client capacity of every per-client series.
+    pub num_clients: usize,
+    /// Moving-average half window, in quanta.
+    pub half_window: f64,
+    /// Peak-window left edge (global s).
+    pub w0: f64,
+    /// Peak-window right edge (global s).
+    pub w1: f64,
+    /// Run duration the grid spans (s) — normalizes the polynomial
+    /// abscissa.
+    pub duration: f64,
+}
+
+impl AnalysisGrid {
+    /// A grid from explicit constants (each rounded through `f32`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        t0: f64,
+        quantum: f64,
+        num_quanta: usize,
+        num_clients: usize,
+        half_window: f64,
+        w0: f64,
+        w1: f64,
+        duration: f64,
+    ) -> AnalysisGrid {
+        AnalysisGrid {
+            t0: t0 as f32 as f64,
+            quantum: quantum as f32 as f64,
+            num_quanta,
+            num_clients,
+            half_window: half_window as f32 as f64,
+            w0: w0 as f32 as f64,
+            w1: w1 as f32 as f64,
+            duration: duration as f32 as f64,
+        }
+    }
+
+    /// The planned grid for a run of the given total `duration` seconds:
+    /// `num_quanta` equal quanta from t=0, a `window_s`-second moving
+    /// average, and the declared peak window `[w0, w1]`.
+    pub fn planned(
+        num_quanta: usize,
+        num_clients: usize,
+        window_s: f64,
+        w0: f64,
+        w1: f64,
+        duration: f64,
+    ) -> AnalysisGrid {
+        let duration = duration.max(1.0);
+        let quantum = duration / num_quanta.max(1) as f64;
+        AnalysisGrid::new(
+            0.0,
+            quantum,
+            num_quanta,
+            num_clients,
+            window_s / 2.0 / quantum,
+            w0,
+            w1,
+            duration,
+        )
+    }
+}
+
+/// Per-quantum + per-client sufficient statistics of a run — the
+/// sample-order-insensitive core the analysis finishes into an
+/// [`crate::analysis::AnalysisOutput`].
+///
+/// One `push` performs exactly the arithmetic of the post-hoc binning
+/// pass (same `f32 -> f64` promotions, same bin edges), so a streaming
+/// run and a retained run accumulate the same statistics; the counting
+/// series (`tput`, `completed`) and the extrema (`amin`, `amax`,
+/// `rt_max`) agree bit-for-bit regardless of sample order, while the
+/// floating sums (`load`, `rt_sum`) agree to summation-order rounding.
+#[derive(Clone, Debug)]
+pub struct Binned {
+    /// The grid every series is binned on.
+    pub grid: AnalysisGrid,
+    /// Offered-load overlap integral per quantum.
+    pub load: Vec<f64>,
+    /// Successful completions per quantum.
+    pub tput: Vec<f64>,
+    /// Sum of response times of completions per quantum.
+    pub rt_sum: Vec<f64>,
+    /// Per-client completions inside the peak window.
+    pub completed: Vec<f64>,
+    /// Per-client earliest request-issue time (INFINITY if never ran).
+    pub amin: Vec<f64>,
+    /// Per-client latest completion time (NEG_INFINITY if never ran).
+    pub amax: Vec<f64>,
+    /// Total successful completions.
+    pub total_ok: f64,
+    /// Total samples (any outcome).
+    pub total_valid: f64,
+    /// Sum of response times over completions.
+    pub rt_total: f64,
+    /// Maximum response time over completions.
+    pub rt_max: f64,
+}
+
+impl Binned {
+    /// Empty statistics on a grid.
+    pub fn new(grid: AnalysisGrid) -> Binned {
+        Binned {
+            load: vec![0.0; grid.num_quanta],
+            tput: vec![0.0; grid.num_quanta],
+            rt_sum: vec![0.0; grid.num_quanta],
+            completed: vec![0.0; grid.num_clients],
+            amin: vec![f64::INFINITY; grid.num_clients],
+            amax: vec![f64::NEG_INFINITY; grid.num_clients],
+            total_ok: 0.0,
+            total_valid: 0.0,
+            rt_total: 0.0,
+            rt_max: 0.0,
+            grid,
+        }
+    }
+
+    /// Fold in one reconciled sample.  Times arrive as `f32` — the
+    /// column precision of the analysis input — so both collection
+    /// modes bin identical values.
+    pub fn push(&mut self, t_start: f32, t_end: f32, rt: f32, ok: bool, client: usize) {
+        let q = self.grid.num_quanta;
+        let t0 = self.grid.t0;
+        let quantum = self.grid.quantum.max(1e-9);
+        let (w0, w1) = (self.grid.w0, self.grid.w1);
+        self.total_valid += 1.0;
+        let ts = t_start as f64;
+        let te = t_end as f64;
+        let rt = rt as f64;
+        if ok {
+            self.total_ok += 1.0;
+            self.rt_total += rt;
+            self.rt_max = self.rt_max.max(rt);
+            let b = ((te - t0) / quantum).floor();
+            if b >= 0.0 && (b as usize) < q {
+                self.tput[b as usize] += 1.0;
+                self.rt_sum[b as usize] += rt;
+            }
+        }
+        // offered-load overlap integral
+        let b_lo = (((ts - t0) / quantum).floor().max(0.0)) as usize;
+        let b_hi = ((((te - t0) / quantum).ceil()) as usize).min(q);
+        for b in b_lo..b_hi {
+            let left = t0 + b as f64 * quantum;
+            let right = left + quantum;
+            let ov = (te.min(right) - ts.max(left)).clamp(0.0, quantum);
+            self.load[b] += ov / quantum;
+        }
+        // per-client aggregation
+        if client < self.grid.num_clients {
+            if ok && (w0..=w1).contains(&te) {
+                self.completed[client] += 1.0;
+            }
+            self.amin[client] = self.amin[client].min(ts);
+            self.amax[client] = self.amax[client].max(te);
+        }
+    }
+}
+
+/// Online quantile estimation with the P² algorithm (Jain & Chlamtac,
+/// CACM 1985): tracks one quantile of a stream in O(1) memory by
+/// maintaining five markers whose heights are adjusted with a piecewise
+/// parabolic fit.  Used for the streaming response-time percentiles —
+/// exact order statistics would need every sample retained.
+///
+/// ```
+/// use diperf::metrics::P2Quantile;
+///
+/// let mut med = P2Quantile::new(0.5);
+/// for i in 1..=1001 {
+///     med.push(i as f64);
+/// }
+/// let v = med.value();
+/// assert!((v - 501.0).abs() < 5.0, "median of 1..=1001 ~ 501, got {v}");
+/// ```
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights (ascending).
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    want: [f64; 5],
+    /// Desired-position increments per observation.
+    dpos: [f64; 5],
+    count: u64,
+}
+
+impl P2Quantile {
+    /// An estimator for the `p`-quantile, `0 < p < 1`.
+    pub fn new(p: f64) -> P2Quantile {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1)");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            want: [
+                1.0,
+                1.0 + 2.0 * p,
+                1.0 + 4.0 * p,
+                3.0 + 2.0 * p,
+                5.0,
+            ],
+            dpos: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    /// Observations seen so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Feed one observation.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            // bootstrap: collect the first five observations sorted
+            let k = (self.count - 1) as usize;
+            self.q[k] = x;
+            self.q[..=k].sort_by(f64::total_cmp);
+            return;
+        }
+        // locate the cell, adjusting the extremes
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for pos in self.pos.iter_mut().skip(k + 1) {
+            *pos += 1.0;
+        }
+        for (want, d) in self.want.iter_mut().zip(self.dpos) {
+            *want += d;
+        }
+        // adjust the three interior markers toward their desired ranks
+        for i in 1..4 {
+            let d = self.want[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let parabolic = self.q[i]
+                    + d / (self.pos[i + 1] - self.pos[i - 1])
+                        * ((self.pos[i] - self.pos[i - 1] + d)
+                            * (self.q[i + 1] - self.q[i])
+                            / (self.pos[i + 1] - self.pos[i])
+                            + (self.pos[i + 1] - self.pos[i] - d)
+                                * (self.q[i] - self.q[i - 1])
+                                / (self.pos[i] - self.pos[i - 1]));
+                self.q[i] = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1]
+                {
+                    parabolic
+                } else {
+                    // linear fallback toward the neighbour in direction d
+                    let j = if d > 0.0 { i + 1 } else { i - 1 };
+                    self.q[i]
+                        + d * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Current quantile estimate (exact for five or fewer observations;
+    /// 0.0 before any observation).
+    pub fn value(&self) -> f64 {
+        match self.count {
+            0 => 0.0,
+            n if n <= 5 => {
+                let k = n as usize;
+                let idx = (self.p * (k - 1) as f64).round() as usize;
+                self.q[idx.min(k - 1)]
+            }
+            _ => self.q[2],
+        }
+    }
+}
+
+/// The full streaming aggregation state for one experiment: the binned
+/// analysis statistics, the availability-under-churn view, and online
+/// response-time percentiles.  Memory is O(testers + quanta) — the one
+/// per-(tester, quantum) structure is a 1-bit activity mask.
+#[derive(Clone, Debug)]
+pub struct StreamAgg {
+    /// Binned analysis statistics (finished by
+    /// [`crate::analysis::output_from_binned`]).
+    pub binned: Binned,
+    /// Distinct active clients per quantum (the churn view's `active`).
+    pub active: Vec<f64>,
+    /// Per-client successful completions over the whole run.
+    pub completions: Vec<f64>,
+    /// Streaming median response time of completions.
+    pub rt_p50: P2Quantile,
+    /// Streaming 90th-percentile response time.
+    pub rt_p90: P2Quantile,
+    /// Streaming 99th-percentile response time.
+    pub rt_p99: P2Quantile,
+    /// Samples folded in.
+    pub samples_seen: u64,
+    /// (client, quantum) activity bitset, client-major.
+    seen: Vec<u64>,
+    words_per_client: usize,
+}
+
+impl StreamAgg {
+    /// An empty aggregator on a grid.
+    pub fn new(grid: AnalysisGrid) -> StreamAgg {
+        let words_per_client = grid.num_quanta.div_ceil(64);
+        StreamAgg {
+            active: vec![0.0; grid.num_quanta],
+            completions: vec![0.0; grid.num_clients],
+            rt_p50: P2Quantile::new(0.5),
+            rt_p90: P2Quantile::new(0.9),
+            rt_p99: P2Quantile::new(0.99),
+            samples_seen: 0,
+            seen: vec![0; grid.num_clients * words_per_client],
+            words_per_client,
+            binned: Binned::new(grid),
+        }
+    }
+
+    /// The grid this aggregator bins on.
+    pub fn grid(&self) -> &AnalysisGrid {
+        &self.binned.grid
+    }
+
+    /// Fold in one reconciled sample (global-time f64 values; the
+    /// analysis series internally bin at f32 column precision, the
+    /// churn view at f64, mirroring the two post-hoc passes).
+    pub fn push(&mut self, client: usize, t_start: f64, t_end: f64, rt: f64, ok: bool) {
+        self.samples_seen += 1;
+        self.binned
+            .push(t_start as f32, t_end as f32, rt as f32, ok, client);
+        if ok {
+            self.rt_p50.push(rt);
+            self.rt_p90.push(rt);
+            self.rt_p99.push(rt);
+        }
+        let g = &self.binned.grid;
+        if client >= g.num_clients || g.num_quanta == 0 {
+            return;
+        }
+        let quantum = g.quantum.max(1e-9);
+        let b = (((t_end / quantum).floor().max(0.0)) as usize).min(g.num_quanta - 1);
+        let w = client * self.words_per_client + (b >> 6);
+        let bit = 1u64 << (b & 63);
+        if self.seen[w] & bit == 0 {
+            self.seen[w] |= bit;
+            self.active[b] += 1.0;
+        }
+        if ok {
+            self.completions[client] += 1.0;
+        }
+    }
+
+    /// Did this client complete at least one call in any quantum?
+    pub fn participated(&self, client: usize) -> bool {
+        let lo = client * self.words_per_client;
+        self.seen[lo..lo + self.words_per_client]
+            .iter()
+            .any(|&w| w != 0)
     }
 }
 
@@ -342,6 +788,99 @@ mod tests {
         // 30 completions in the last 60 s = 30/min
         assert!((v.throughput_per_min(30.0) - 30.0).abs() < 1e-9);
         assert_eq!(v.total, 30);
+    }
+
+    #[test]
+    fn p2_is_exact_for_tiny_streams() {
+        let mut q = P2Quantile::new(0.5);
+        assert_eq!(q.value(), 0.0);
+        for x in [3.0, 1.0, 2.0] {
+            q.push(x);
+        }
+        assert_eq!(q.value(), 2.0);
+        assert_eq!(q.count(), 3);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_quantiles() {
+        use crate::util::Pcg64;
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p90 = P2Quantile::new(0.9);
+        let mut p99 = P2Quantile::new(0.99);
+        let mut rng = Pcg64::seed_from(42);
+        for _ in 0..50_000 {
+            let x = rng.next_f64();
+            p50.push(x);
+            p90.push(x);
+            p99.push(x);
+        }
+        assert!((p50.value() - 0.5).abs() < 0.02, "p50 {}", p50.value());
+        assert!((p90.value() - 0.9).abs() < 0.02, "p90 {}", p90.value());
+        assert!((p99.value() - 0.99).abs() < 0.01, "p99 {}", p99.value());
+    }
+
+    #[test]
+    fn p2_monotone_markers_on_adversarial_order() {
+        // sorted input is the classic degenerate case
+        let mut q = P2Quantile::new(0.9);
+        for i in 0..10_000 {
+            q.push(i as f64);
+        }
+        let v = q.value();
+        assert!((v - 9_000.0).abs() < 300.0, "p90 of 0..10000 ~ 9000, got {v}");
+    }
+
+    #[test]
+    fn grid_constants_survive_f32_roundtrip() {
+        let g = AnalysisGrid::planned(512, 100, 160.0, 100.0, 400.0, 512.0);
+        assert_eq!(g.quantum as f32 as f64, g.quantum);
+        assert_eq!(g.half_window as f32 as f64, g.half_window);
+        assert_eq!(g.w0, 100.0);
+        assert_eq!(g.num_quanta, 512);
+        assert_eq!(g.num_clients, 100);
+    }
+
+    #[test]
+    fn binned_counts_and_window() {
+        let grid = AnalysisGrid::planned(10, 2, 0.0, 20.0, 80.0, 100.0);
+        let mut b = Binned::new(grid);
+        b.push(10.0, 11.0, 1.0, true, 0); // before window
+        b.push(30.0, 31.0, 1.0, true, 0); // inside
+        b.push(30.0, 32.0, 2.0, false, 1); // failure: no tput
+        assert_eq!(b.total_valid, 3.0);
+        assert_eq!(b.total_ok, 2.0);
+        assert_eq!(b.completed, vec![1.0, 0.0]);
+        assert_eq!(b.tput.iter().sum::<f64>(), 2.0);
+        // load integral: 1 + 1 + 2 in-flight seconds over 10 s quanta
+        let load: f64 = b.load.iter().sum::<f64>() * grid.quantum;
+        assert!((load - 4.0).abs() < 1e-9, "busy seconds {load}");
+        assert_eq!(b.amin[1], 30.0);
+        assert_eq!(b.amax[0], 31.0);
+    }
+
+    #[test]
+    fn stream_agg_marks_distinct_clients_per_quantum() {
+        let grid = AnalysisGrid::planned(4, 3, 0.0, 0.0, 100.0, 100.0);
+        let mut agg = StreamAgg::new(grid);
+        // two samples of client 0 in quantum 0 count once
+        agg.push(0, 1.0, 2.0, 1.0, true);
+        agg.push(0, 3.0, 4.0, 1.0, true);
+        agg.push(1, 5.0, 30.0, 1.0, false); // quantum 1, failed
+        agg.push(7, 1.0, 2.0, 1.0, true); // out of range: ignored
+        assert_eq!(agg.active, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(agg.completions, vec![2.0, 0.0, 0.0]);
+        assert!(agg.participated(0));
+        assert!(agg.participated(1));
+        assert!(!agg.participated(2));
+        assert_eq!(agg.samples_seen, 4);
+        assert_eq!(agg.rt_p50.count(), 3);
+    }
+
+    #[test]
+    fn collection_mode_labels() {
+        assert_eq!(CollectionMode::Retain.label(), "retain");
+        assert_eq!(CollectionMode::Stream.label(), "stream");
+        assert_ne!(CollectionMode::Retain, CollectionMode::Stream);
     }
 
     #[test]

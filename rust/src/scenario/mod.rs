@@ -21,6 +21,27 @@
 //! effect, and a `WeatherClear` only clears the spell that set it, so
 //! overlapping spells or competing crash sources cannot cancel each
 //! other incorrectly.
+//!
+//! ```
+//! use diperf::scenario::{Action, Scenario, ScenarioEvent};
+//! use diperf::util::Pcg64;
+//!
+//! // half the pool crashes at t=120 s and comes back a minute later
+//! let s = Scenario {
+//!     timeline: vec![ScenarioEvent {
+//!         at_s: 120.0,
+//!         action: Action::CrashTesters {
+//!             frac: 0.5,
+//!             restart_after_s: Some(60.0),
+//!         },
+//!     }],
+//!     ..Scenario::default()
+//! };
+//! s.validate().unwrap();
+//! let faults = s.compile(10, 600.0, &mut Pcg64::seed_from(1));
+//! assert_eq!(faults.len(), 10); // 5 crashes + 5 paired restarts
+//! assert!(faults.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+//! ```
 
 use crate::util::{dist, Pcg64};
 

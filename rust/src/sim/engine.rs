@@ -1,25 +1,44 @@
 //! Discrete-event simulation engine.
 //!
-//! A min-heap of `(time, seq)`-ordered events over a user event type.
-//! `seq` is a monotone insertion counter, so simultaneous events fire in
-//! FIFO order — this makes simulations deterministic and is what allows
-//! the whole framework (controller, 100+ testers, services, network,
-//! clock-sync traffic) to replay bit-identically from one seed.
+//! A `(time, seq)`-ordered event queue over a user event type.  `seq` is
+//! a monotone insertion counter, so simultaneous events fire in FIFO
+//! order — this makes simulations deterministic and is what allows the
+//! whole framework (controller, up to 100 000 testers, services,
+//! network, clock-sync traffic) to replay bit-identically from one seed.
+//!
+//! Two queue implementations sit behind the same API (see
+//! [`QueueKind`]): the original `BinaryHeap` reference and the
+//! [`super::wheel::TimerWheel`] used by default, which keeps
+//! schedule/expire O(1) at 100k-tester scale.  Both dispatch identical
+//! event sequences — `rust/tests/engine_queues.rs` proves it
+//! differentially — so the choice is purely a performance knob.
 //!
 //! The engine is deliberately generic and infrastructure-only: the DiPerF
 //! world (`crate::experiment`) defines the event enum and owns all
 //! component state; the engine just orders time.
+//!
+//! ```
+//! use diperf::sim::{Engine, SimTime};
+//!
+//! let mut eng: Engine<&'static str> = Engine::new();
+//! eng.schedule(SimTime::from_secs_f64(2.0), "second");
+//! eng.schedule(SimTime::from_secs_f64(1.0), "first");
+//! let mut order = Vec::new();
+//! eng.run_until(SimTime::MAX, |_, _, e| order.push(e));
+//! assert_eq!(order, vec!["first", "second"]);
+//! ```
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::time::SimTime;
+use super::wheel::TimerWheel;
 
 /// An event scheduled at `at`; `seq` breaks ties FIFO.
-struct Scheduled<E> {
-    at: SimTime,
-    seq: u64,
-    event: E,
+pub(crate) struct Scheduled<E> {
+    pub(crate) at: SimTime,
+    pub(crate) seq: u64,
+    pub(crate) event: E,
 }
 
 impl<E> PartialEq for Scheduled<E> {
@@ -44,23 +63,107 @@ impl<E> PartialOrd for Scheduled<E> {
     }
 }
 
+/// Which event-queue implementation an [`Engine`] runs on.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum QueueKind {
+    /// The reference `BinaryHeap`: O(log n) per operation over all
+    /// pending events.  Kept as the differential-testing baseline and
+    /// the benchmark yardstick.
+    Heap,
+    /// The hierarchical timer wheel: O(1) schedule/expire for the near
+    /// horizon, heap overflow bucket for the far future.  The default.
+    Wheel,
+}
+
+impl QueueKind {
+    /// Stable label for reports and CLI flags.
+    pub fn label(self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Wheel => "wheel",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<QueueKind, String> {
+        match s {
+            "heap" => Ok(QueueKind::Heap),
+            "wheel" => Ok(QueueKind::Wheel),
+            other => Err(format!("unknown queue {other:?} (try heap, wheel)")),
+        }
+    }
+}
+
+/// The queue behind the engine: same ordering contract, different costs.
+enum Queue<E> {
+    Heap(BinaryHeap<Scheduled<E>>),
+    Wheel(TimerWheel<E>),
+}
+
+impl<E> Queue<E> {
+    fn push(&mut self, s: Scheduled<E>) {
+        match self {
+            Queue::Heap(h) => h.push(s),
+            Queue::Wheel(w) => w.push(s),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Scheduled<E>> {
+        match self {
+            Queue::Heap(h) => h.pop(),
+            Queue::Wheel(w) => w.pop(),
+        }
+    }
+
+    fn peek_at(&mut self) -> Option<SimTime> {
+        match self {
+            Queue::Heap(h) => h.peek().map(|s| s.at),
+            Queue::Wheel(w) => w.peek().map(|(at, _)| at),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Queue::Heap(h) => h.len(),
+            Queue::Wheel(w) => w.len(),
+        }
+    }
+}
+
 /// The event queue + virtual clock.
 pub struct Engine<E> {
     now: SimTime,
     seq: u64,
-    queue: BinaryHeap<Scheduled<E>>,
+    queue: Queue<E>,
+    kind: QueueKind,
     processed: u64,
+    peak_pending: usize,
 }
 
 impl<E> Engine<E> {
-    /// An empty engine at time zero.
+    /// An empty engine at time zero on the default (timer-wheel) queue.
     pub fn new() -> Engine<E> {
+        Engine::with_queue(QueueKind::Wheel)
+    }
+
+    /// An empty engine at time zero on an explicit queue implementation.
+    pub fn with_queue(kind: QueueKind) -> Engine<E> {
         Engine {
             now: SimTime(0),
             seq: 0,
-            queue: BinaryHeap::with_capacity(1024),
+            queue: match kind {
+                QueueKind::Heap => Queue::Heap(BinaryHeap::with_capacity(1024)),
+                QueueKind::Wheel => Queue::Wheel(TimerWheel::new()),
+            },
+            kind,
             processed: 0,
+            peak_pending: 0,
         }
+    }
+
+    /// Which queue implementation this engine runs on.
+    pub fn queue_kind(&self) -> QueueKind {
+        self.kind
     }
 
     /// Current virtual time.
@@ -77,6 +180,12 @@ impl<E> Engine<E> {
     /// Events still pending.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// High-water mark of pending events over the engine's lifetime
+    /// (the queue-pressure number `BENCH_scale.json` tracks).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 
     /// Schedule `event` at absolute time `at`.  Scheduling in the past
@@ -96,6 +205,10 @@ impl<E> Engine<E> {
             event,
         });
         self.seq += 1;
+        let len = self.queue.len();
+        if len > self.peak_pending {
+            self.peak_pending = len;
+        }
     }
 
     /// Schedule `event` after a delay.
@@ -115,15 +228,21 @@ impl<E> Engine<E> {
         Some((s.at, s.event))
     }
 
+    /// Expiry time of the earliest pending event without dispatching it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.queue.peek_at()
+    }
+
     /// Run the dispatch loop until quiescence or `until`, whichever comes
     /// first.  `handler` receives `(engine, time, event)` and may schedule
-    /// further events.
+    /// further events.  On return the clock has advanced to `until` (or
+    /// beyond it, to the last dispatched event) even if the queue drained
+    /// early — a drained simulation still reaches its horizon.
     pub fn run_until<F>(&mut self, until: SimTime, mut handler: F)
     where
         F: FnMut(&mut Engine<E>, SimTime, E),
     {
-        while let Some(&Scheduled { at, .. }) = self.queue.peek().map(|s| s as _)
-        {
+        while let Some(at) = self.peek_time() {
             if at > until {
                 self.now = until;
                 return;
@@ -131,7 +250,8 @@ impl<E> Engine<E> {
             let (t, e) = self.next().expect("peeked");
             handler(self, t, e);
         }
-        self.now = self.now.max(until.min(self.now));
+        // Drained before the horizon: the clock still advances to it.
+        self.now = self.now.max(until);
     }
 }
 
@@ -147,83 +267,129 @@ mod tests {
     use crate::sim::time::SimDuration;
     use crate::util::proptest::{forall, prop};
 
+    const KINDS: [QueueKind; 2] = [QueueKind::Heap, QueueKind::Wheel];
+
     #[test]
     fn events_fire_in_time_order() {
-        let mut eng: Engine<u32> = Engine::new();
-        eng.schedule(SimTime(300), 3);
-        eng.schedule(SimTime(100), 1);
-        eng.schedule(SimTime(200), 2);
-        let mut got = vec![];
-        while let Some((t, e)) = eng.next() {
-            got.push((t.0, e));
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            eng.schedule(SimTime(300), 3);
+            eng.schedule(SimTime(100), 1);
+            eng.schedule(SimTime(200), 2);
+            let mut got = vec![];
+            while let Some((t, e)) = eng.next() {
+                got.push((t.0, e));
+            }
+            assert_eq!(got, vec![(100, 1), (200, 2), (300, 3)], "{kind:?}");
         }
-        assert_eq!(got, vec![(100, 1), (200, 2), (300, 3)]);
     }
 
     #[test]
     fn ties_fire_fifo() {
-        let mut eng: Engine<u32> = Engine::new();
-        for i in 0..10 {
-            eng.schedule(SimTime(5), i);
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            for i in 0..10 {
+                eng.schedule(SimTime(5), i);
+            }
+            let got: Vec<u32> =
+                std::iter::from_fn(|| eng.next().map(|(_, e)| e)).collect();
+            assert_eq!(got, (0..10).collect::<Vec<_>>(), "{kind:?}");
         }
-        let got: Vec<u32> = std::iter::from_fn(|| eng.next().map(|(_, e)| e))
-            .collect();
-        assert_eq!(got, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        forall(20, |rng| {
-            let mut eng: Engine<u64> = Engine::new();
-            for i in 0..200 {
-                eng.schedule(SimTime(rng.next_below(10_000)), i);
-            }
-            let mut last = 0;
-            while let Some((t, _)) = eng.next() {
-                if t.0 < last {
-                    return Err(format!("clock went back: {} < {last}", t.0));
+        for kind in KINDS {
+            forall(20, |rng| {
+                let mut eng: Engine<u64> = Engine::with_queue(kind);
+                for i in 0..200 {
+                    eng.schedule(SimTime(rng.next_below(10_000)), i);
                 }
-                last = t.0;
-            }
-            prop(eng.pending() == 0, "queue drained")
-        });
+                let mut last = 0;
+                while let Some((t, _)) = eng.next() {
+                    if t.0 < last {
+                        return Err(format!("clock went back: {} < {last}", t.0));
+                    }
+                    last = t.0;
+                }
+                prop(eng.pending() == 0, "queue drained")
+            });
+        }
     }
 
     #[test]
     fn handler_cascades() {
         // each event schedules its successor: 0 -> 1 -> ... -> 9
-        let mut eng: Engine<u32> = Engine::new();
-        eng.schedule(SimTime(0), 0);
-        let mut seen = vec![];
-        eng.run_until(SimTime::MAX, |eng, t, e| {
-            seen.push(e);
-            if e < 9 {
-                eng.schedule(t + SimDuration::from_secs(1), e + 1);
-            }
-        });
-        assert_eq!(seen, (0..10).collect::<Vec<_>>());
-        assert_eq!(eng.now(), SimTime::from_secs_f64(9.0));
-        assert_eq!(eng.processed(), 10);
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            eng.schedule(SimTime(0), 0);
+            let mut seen = vec![];
+            let horizon = SimTime::from_secs_f64(60.0);
+            eng.run_until(horizon, |eng, t, e| {
+                seen.push(e);
+                if e < 9 {
+                    eng.schedule(t + SimDuration::from_secs(1), e + 1);
+                }
+            });
+            assert_eq!(seen, (0..10).collect::<Vec<_>>(), "{kind:?}");
+            // drained at t=9s, clock carried on to the horizon
+            assert_eq!(eng.now(), horizon);
+            assert_eq!(eng.processed(), 10);
+        }
     }
 
     #[test]
     fn run_until_stops_at_horizon() {
-        let mut eng: Engine<u32> = Engine::new();
-        eng.schedule(SimTime::from_secs_f64(1.0), 1);
-        eng.schedule(SimTime::from_secs_f64(100.0), 2);
-        let mut seen = vec![];
-        eng.run_until(SimTime::from_secs_f64(10.0), |_, _, e| seen.push(e));
-        assert_eq!(seen, vec![1]);
-        assert_eq!(eng.pending(), 1);
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            eng.schedule(SimTime::from_secs_f64(1.0), 1);
+            eng.schedule(SimTime::from_secs_f64(100.0), 2);
+            let mut seen = vec![];
+            eng.run_until(SimTime::from_secs_f64(10.0), |_, _, e| seen.push(e));
+            assert_eq!(seen, vec![1], "{kind:?}");
+            assert_eq!(eng.pending(), 1);
+            assert_eq!(eng.now(), SimTime::from_secs_f64(10.0));
+        }
+    }
+
+    #[test]
+    fn drained_run_advances_clock_to_horizon() {
+        // regression: `run_until` on a drained queue used to leave the
+        // clock at the last event instead of the horizon
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            eng.schedule(SimTime::from_secs_f64(1.0), 1);
+            eng.run_until(SimTime::from_secs_f64(10.0), |_, _, _| {});
+            assert_eq!(eng.now(), SimTime::from_secs_f64(10.0), "{kind:?}");
+            // an already-empty engine advances too
+            let mut idle: Engine<u32> = Engine::with_queue(kind);
+            idle.run_until(SimTime::from_secs_f64(5.0), |_, _, _| {});
+            assert_eq!(idle.now(), SimTime::from_secs_f64(5.0));
+        }
     }
 
     #[test]
     fn schedule_in_past_clamps() {
-        let mut eng: Engine<u32> = Engine::new();
-        eng.schedule(SimTime(100), 1);
-        eng.next();
-        eng.schedule(SimTime(100), 2); // == now, fine
-        let (t, e) = eng.next().unwrap();
-        assert_eq!((t.0, e), (100, 2));
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            eng.schedule(SimTime(100), 1);
+            eng.next();
+            eng.schedule(SimTime(100), 2); // == now, fine
+            let (t, e) = eng.next().unwrap();
+            assert_eq!((t.0, e), (100, 2), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn peak_pending_tracks_high_water() {
+        for kind in KINDS {
+            let mut eng: Engine<u32> = Engine::with_queue(kind);
+            for i in 0..50 {
+                eng.schedule(SimTime(i as u64), i);
+            }
+            while eng.next().is_some() {}
+            assert_eq!(eng.peak_pending(), 50, "{kind:?}");
+            assert_eq!(eng.pending(), 0);
+        }
     }
 }

@@ -3,10 +3,17 @@
 //! Substitutes for the paper's real-time PlanetLab/Grid3 deployment: the
 //! full 5800 s pre-WS GRAM experiment replays in well under a second of
 //! wall clock, which is what makes reproducing every figure — and the
-//! 1000-tester scalability study — tractable.
+//! 100 000-tester scalability study — tractable.
+//!
+//! The engine runs on one of two interchangeable queues (see
+//! [`QueueKind`]): the reference `BinaryHeap` or the hierarchical
+//! [`wheel::TimerWheel`] (the default), which keeps per-event cost flat
+//! as the pending-event population grows with the tester pool.
 
 pub mod engine;
 pub mod time;
+pub mod wheel;
 
-pub use engine::Engine;
+pub use engine::{Engine, QueueKind};
 pub use time::{SimDuration, SimTime};
+pub use wheel::TimerWheel;

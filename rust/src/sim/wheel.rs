@@ -1,0 +1,366 @@
+//! Hierarchical timer wheel: the scale-out event queue.
+//!
+//! A single `BinaryHeap` is O(log n) per operation with n equal to *all*
+//! pending events — at 100 000 testers that is hundreds of thousands of
+//! resident events and every push/pop walks a cold ~18-level heap.  The
+//! wheel replaces it with the classic hashed hierarchical timer wheel
+//! (Varghese & Lauck, SOSP '87): three 256-slot levels of geometrically
+//! coarser resolution plus an overflow heap for the far future.
+//! Scheduling is O(1) (two shifts and a `Vec::push`); expiry cost is
+//! amortized O(1) per event plus a tiny ordering heap that only ever
+//! holds the events of one ~1 ms slot.
+//!
+//! Layout (microsecond ticks, `G = 2^10` µs ≈ 1 ms level-0 slots):
+//!
+//! ```text
+//! level 0:  256 slots x 2^10 µs  — covers the next ~0.26 s
+//! level 1:  256 slots x 2^18 µs  — covers the next ~67 s
+//! level 2:  256 slots x 2^26 µs  — covers the next ~4.8 h
+//! overflow: (time, seq) min-heap — everything beyond
+//! ```
+//!
+//! **Ordering contract.**  The wheel dispatches in exactly the same
+//! `(time, seq)` order as the reference heap: events land in the slot
+//! covering their expiry; a slot is drained wholly into the `cur`
+//! ordering heap before any of its events pops, so equal-time events
+//! always meet in `cur` where the insertion sequence number breaks the
+//! tie FIFO.  `rust/tests/engine_queues.rs` enforces this with a
+//! differential test against the `BinaryHeap` implementation — both
+//! queues must produce bit-identical dispatch sequences for random
+//! workloads, which is what lets [`super::Engine`] swap implementations
+//! without perturbing a single seeded replay.
+//!
+//! The key internal invariant is the `released` watermark: every pending
+//! event with expiry `< released` lives in `cur`; the wheel levels and
+//! the overflow heap hold only events `>= released`.  `released` only
+//! advances, and only to values no greater than the earliest pending
+//! event outside `cur`, which is what makes slot reuse across frames
+//! safe without per-frame generation counters.
+
+use std::collections::BinaryHeap;
+
+use super::engine::Scheduled;
+use super::time::SimTime;
+
+/// log2 of the level-0 slot width in µs (2^10 µs ≈ 1 ms).
+const G_BITS: u32 = 10;
+/// log2 of the slot count per level.
+const SLOT_BITS: u32 = 8;
+/// Slots per level.
+const SLOTS: usize = 1 << SLOT_BITS;
+/// Number of wheel levels before the overflow heap.
+const LEVELS: usize = 3;
+
+/// Slot-width shift for level `lvl`.
+#[inline]
+fn slot_shift(lvl: usize) -> u32 {
+    G_BITS + SLOT_BITS * lvl as u32
+}
+
+/// Frame-width shift for level `lvl` (one frame = 256 slots).
+#[inline]
+fn frame_shift(lvl: usize) -> u32 {
+    G_BITS + SLOT_BITS * (lvl as u32 + 1)
+}
+
+/// One wheel level: 256 slots + an occupancy bitmap for O(1) scans.
+struct Level<E> {
+    slots: Vec<Vec<Scheduled<E>>>,
+    occupied: [u64; SLOTS / 64],
+}
+
+impl<E> Level<E> {
+    fn new() -> Level<E> {
+        Level {
+            slots: (0..SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; SLOTS / 64],
+        }
+    }
+
+    #[inline]
+    fn put(&mut self, idx: usize, s: Scheduled<E>) {
+        self.slots[idx].push(s);
+        self.occupied[idx >> 6] |= 1u64 << (idx & 63);
+    }
+
+    /// Remove and return the whole slot.
+    fn take(&mut self, idx: usize) -> Vec<Scheduled<E>> {
+        self.occupied[idx >> 6] &= !(1u64 << (idx & 63));
+        std::mem::take(&mut self.slots[idx])
+    }
+
+    /// Is slot `idx` occupied?
+    #[inline]
+    fn is_occupied(&self, idx: usize) -> bool {
+        self.occupied[idx >> 6] & (1u64 << (idx & 63)) != 0
+    }
+
+    /// Lowest occupied slot index `>= start`, if any.
+    fn next_occupied(&self, start: usize) -> Option<usize> {
+        let mut word = start >> 6;
+        let mut bits = self.occupied[word] & (!0u64 << (start & 63));
+        loop {
+            if bits != 0 {
+                return Some((word << 6) + bits.trailing_zeros() as usize);
+            }
+            word += 1;
+            if word >= SLOTS / 64 {
+                return None;
+            }
+            bits = self.occupied[word];
+        }
+    }
+}
+
+/// The hierarchical timer wheel (see the module docs for the layout and
+/// the ordering contract).
+pub struct TimerWheel<E> {
+    /// Events below the `released` watermark, ordered by `(time, seq)`.
+    cur: BinaryHeap<Scheduled<E>>,
+    /// Exclusive watermark (µs): pending events `< released` are in
+    /// `cur`; the levels/overflow hold only events `>= released`.
+    released: u64,
+    levels: Vec<Level<E>>,
+    /// Far-future events beyond the level-2 frame, earliest first.
+    overflow: BinaryHeap<Scheduled<E>>,
+    len: usize,
+}
+
+impl<E> TimerWheel<E> {
+    /// An empty wheel anchored at tick zero.
+    pub fn new() -> TimerWheel<E> {
+        TimerWheel {
+            cur: BinaryHeap::with_capacity(64),
+            released: 0,
+            levels: (0..LEVELS).map(|_| Level::new()).collect(),
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    /// Pending events.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is pending.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert an event (O(1)).
+    pub fn push(&mut self, s: Scheduled<E>) {
+        self.len += 1;
+        if s.at.0 < self.released {
+            self.cur.push(s);
+        } else {
+            self.insert_wheel(s);
+        }
+    }
+
+    /// Place an event (with `at >= released`) into the level whose
+    /// current frame covers it, or the overflow heap.
+    fn insert_wheel(&mut self, s: Scheduled<E>) {
+        debug_assert!(s.at.0 >= self.released, "wheel insert below watermark");
+        let t = s.at.0;
+        for lvl in 0..LEVELS {
+            if (t >> frame_shift(lvl)) == (self.released >> frame_shift(lvl)) {
+                let idx = ((t >> slot_shift(lvl)) & (SLOTS as u64 - 1)) as usize;
+                self.levels[lvl].put(idx, s);
+                return;
+            }
+        }
+        self.overflow.push(s);
+    }
+
+    /// Pop the earliest event in `(time, seq)` order.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        if self.cur.is_empty() && !self.refill() {
+            return None;
+        }
+        let s = self.cur.pop()?;
+        self.len -= 1;
+        Some(s)
+    }
+
+    /// Expiry time and sequence number of the earliest pending event.
+    /// Takes `&mut self` because peeking may advance the wheel cursor
+    /// (it never changes which event is earliest).
+    pub fn peek(&mut self) -> Option<(SimTime, u64)> {
+        if self.cur.is_empty() && !self.refill() {
+            return None;
+        }
+        self.cur.peek().map(|s| (s.at, s.seq))
+    }
+
+    /// Advance the watermark to the earliest pending slot and move its
+    /// events into `cur`.  Returns false when the wheel is empty.
+    fn refill(&mut self) -> bool {
+        debug_assert!(self.cur.is_empty());
+        loop {
+            if self.len == 0 {
+                return false;
+            }
+            // 1. Overflow events whose time now falls inside the top
+            //    frame migrate into the wheel first, so the slot scans
+            //    below can never skip past them.
+            let top = frame_shift(LEVELS - 1);
+            while let Some(s) = self.overflow.peek() {
+                if (s.at.0 >> top) != (self.released >> top) {
+                    break;
+                }
+                let s = self.overflow.pop().expect("peeked");
+                self.insert_wheel(s);
+            }
+            // 1b. The watermark can cross a frame boundary via a plain
+            //     slot drain (step 2 on slot 255), leaving events for
+            //     the *new* frame stranded in the higher-level slot
+            //     that now contains the watermark — where a fresh push
+            //     into level 0 of the new frame could overtake them.
+            //     Merge those slots down before any scan.  Top level
+            //     first, so its spill-out lands in the lower slot
+            //     before that one is merged in turn.
+            for lvl in (1..LEVELS).rev() {
+                let idx = ((self.released >> slot_shift(lvl))
+                    & (SLOTS as u64 - 1)) as usize;
+                if self.levels[lvl].is_occupied(idx) {
+                    for s in self.levels[lvl].take(idx) {
+                        self.insert_wheel(s);
+                    }
+                }
+            }
+            // 2. Level 0: drain the next occupied slot into `cur`.
+            let start0 = ((self.released >> G_BITS) & (SLOTS as u64 - 1)) as usize;
+            if let Some(idx) = self.levels[0].next_occupied(start0) {
+                let frame = (self.released >> frame_shift(0)) << frame_shift(0);
+                let slot_end = frame.saturating_add((idx as u64 + 1) << G_BITS);
+                self.released = self.released.max(slot_end);
+                for s in self.levels[0].take(idx) {
+                    self.cur.push(s);
+                }
+                return true;
+            }
+            // 3. Cascade the next occupied slot of the lowest non-empty
+            //    higher level down one level.
+            let mut cascaded = false;
+            for lvl in 1..LEVELS {
+                let shift = slot_shift(lvl);
+                let start = ((self.released >> shift) & (SLOTS as u64 - 1)) as usize;
+                if let Some(idx) = self.levels[lvl].next_occupied(start) {
+                    let frame =
+                        (self.released >> frame_shift(lvl)) << frame_shift(lvl);
+                    let slot_start = frame.saturating_add((idx as u64) << shift);
+                    self.released = self.released.max(slot_start);
+                    for s in self.levels[lvl].take(idx) {
+                        self.insert_wheel(s);
+                    }
+                    cascaded = true;
+                    break;
+                }
+            }
+            if cascaded {
+                continue;
+            }
+            // 4. Only the far future remains: jump the watermark to the
+            //    overflow minimum's top frame and loop (step 1 pulls the
+            //    events in).
+            match self.overflow.peek() {
+                Some(s) => {
+                    let frame = (s.at.0 >> top) << top;
+                    self.released = self.released.max(frame);
+                }
+                None => return false,
+            }
+        }
+    }
+}
+
+impl<E> Default for TimerWheel<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(at: u64, seq: u64) -> Scheduled<u64> {
+        Scheduled {
+            at: SimTime(at),
+            seq,
+            event: seq,
+        }
+    }
+
+    fn drain(w: &mut TimerWheel<u64>) -> Vec<(u64, u64)> {
+        std::iter::from_fn(|| w.pop().map(|s| (s.at.0, s.seq))).collect()
+    }
+
+    #[test]
+    fn orders_within_one_slot() {
+        let mut w = TimerWheel::new();
+        for (i, t) in [700u64, 100, 400].iter().enumerate() {
+            w.push(sched(*t, i as u64));
+        }
+        assert_eq!(drain(&mut w), vec![(100, 1), (400, 2), (700, 0)]);
+    }
+
+    #[test]
+    fn ties_fifo_across_structures() {
+        let mut w = TimerWheel::new();
+        // same expiry scheduled before and after the watermark moves
+        w.push(sched(5_000, 0));
+        w.push(sched(5_000, 1));
+        let first = w.pop().unwrap();
+        assert_eq!((first.at.0, first.seq), (5_000, 0));
+        w.push(sched(5_000, 2)); // now 5_000 < released: goes to cur
+        assert_eq!(drain(&mut w), vec![(5_000, 1), (5_000, 2)]);
+    }
+
+    #[test]
+    fn spans_all_levels_and_overflow() {
+        let mut w = TimerWheel::new();
+        // ~1 ms (level 0), ~30 s (level 1), ~1 h (level 2), ~6 h and
+        // u64::MAX (overflow)
+        let times = [
+            1_000u64,
+            30_000_000,
+            3_600_000_000,
+            21_600_000_000,
+            u64::MAX,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            w.push(sched(t, i as u64));
+        }
+        assert_eq!(w.len(), 5);
+        let got = drain(&mut w);
+        let want: Vec<(u64, u64)> =
+            times.iter().enumerate().map(|(i, &t)| (t, i as u64)).collect();
+        assert_eq!(got, want);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut w = TimerWheel::new();
+        w.push(sched(10, 0));
+        assert_eq!(w.peek(), Some((SimTime(10), 0)));
+        let s = w.pop().unwrap();
+        assert_eq!(s.at.0, 10);
+        // schedule relative to the drained slot; still dispatches in order
+        w.push(sched(2_000_000, 1));
+        w.push(sched(1_500, 2)); // below the watermark -> cur
+        assert_eq!(drain(&mut w), vec![(1_500, 2), (2_000_000, 1)]);
+    }
+
+    #[test]
+    fn empty_wheel_behaves() {
+        let mut w: TimerWheel<u64> = TimerWheel::new();
+        assert!(w.pop().is_none());
+        assert!(w.peek().is_none());
+        assert_eq!(w.len(), 0);
+    }
+}

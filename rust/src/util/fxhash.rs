@@ -1,0 +1,124 @@
+//! A fast, deterministic hasher for simulation-internal maps.
+//!
+//! `std`'s default SipHash is DoS-resistant but costs real time on the
+//! experiment hot path, where every request completion does a map probe
+//! keyed by a sequential integer id.  This is the Fx multiply-rotate
+//! hash (the rustc/Firefox workhorse): a couple of ALU ops per word,
+//! which at 100k-tester scale removes the hasher from the profile
+//! entirely.  Keys are simulation-internal integers, so hash-flooding
+//! resistance buys nothing here — and unlike `RandomState` the result
+//! is deterministic across runs, which keeps any future map iteration
+//! from becoming a hidden source of nondeterminism.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Fx multiply-rotate hasher state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`] (zero-sized, deterministic).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// A `HashMap` on the Fx hasher; construct with `FxHashMap::default()`.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<u32, &'static str> = FxHashMap::default();
+        m.insert(7, "seven");
+        m.insert(1_000_000, "million");
+        assert_eq!(m.get(&7), Some(&"seven"));
+        assert_eq!(m.remove(&1_000_000), Some("million"));
+        assert!(m.get(&1_000_000).is_none());
+    }
+
+    #[test]
+    fn tuple_keys_work() {
+        let mut m: FxHashMap<(u32, u32), f64> = FxHashMap::default();
+        for i in 0..100u32 {
+            m.insert((i, i * 2), i as f64);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m[&(42, 84)], 42.0);
+    }
+
+    #[test]
+    fn deterministic_and_spread() {
+        let h = |n: u64| {
+            let mut hasher = FxBuildHasher.build_hasher();
+            hasher.write_u64(n);
+            hasher.finish()
+        };
+        assert_eq!(h(123), h(123));
+        // sequential keys must not collide in the low bits
+        let mut low: Vec<u64> = (0..64).map(|i| h(i) & 0xfff).collect();
+        low.sort_unstable();
+        low.dedup();
+        assert!(low.len() > 48, "low-bit collisions: {}", 64 - low.len());
+    }
+}

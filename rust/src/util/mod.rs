@@ -6,10 +6,12 @@
 //! substrate everything else builds on.
 
 pub mod dist;
+pub mod fxhash;
 pub mod linalg;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 
+pub use fxhash::FxHashMap;
 pub use rng::Pcg64;
 pub use stats::{Online, Summary};

@@ -39,10 +39,12 @@ fn run_then_analyze_then_predict_round_trip() {
     let dir = tmp_dir("run");
     let out = dir.join("myrun");
     let out_s = out.to_str().unwrap();
-    // run (native path so this passes without artifacts)
+    // run retained (native path so this passes without artifacts);
+    // samples.csv only exists on the retain path
     let code = cli::main(&sv(&[
         "run", "--preset", "quick_http", "--testers", "4", "--duration",
         "60", "--seed", "9", "--out", out_s, "--native", "--quiet",
+        "--retain-samples",
     ]))
     .unwrap();
     assert_eq!(code, 0);
@@ -68,6 +70,51 @@ fn run_then_analyze_then_predict_round_trip() {
     ]))
     .unwrap();
     assert_eq!(code, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_run_writes_figures_but_no_samples() {
+    let dir = tmp_dir("stream");
+    let out = dir.join("r");
+    let bench = dir.join("bench.json");
+    // streaming is the default; also exercise --queue and --bench-json
+    let code = cli::main(&sv(&[
+        "run", "--preset", "quick_http", "--testers", "3", "--duration",
+        "40", "--seed", "4", "--out", out.to_str().unwrap(), "--quiet",
+        "--queue", "wheel", "--bench-json", bench.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    assert!(!out.join("samples.csv").exists(), "streaming retains nothing");
+    for f in ["summary.txt", "fig_timeline.csv", "fig_per_client.csv"] {
+        assert!(out.join(f).exists(), "missing {f}");
+    }
+    let summary = std::fs::read_to_string(out.join("summary.txt")).unwrap();
+    assert!(summary.contains("collection        stream"));
+    assert!(summary.contains("rt quantiles"));
+    let json = std::fs::read_to_string(&bench).unwrap();
+    assert!(json.contains("\"schema\": \"diperf-bench-scale-v1\""));
+    assert!(json.contains("\"queue\":\"wheel\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn heap_and_wheel_cli_runs_produce_identical_figures() {
+    let dir = tmp_dir("queues");
+    let mk = |tag: &str, queue: &str| {
+        let out = dir.join(tag);
+        cli::main(&sv(&[
+            "run", "--preset", "quick_http", "--testers", "3", "--duration",
+            "40", "--seed", "11", "--out", out.to_str().unwrap(), "--quiet",
+            "--queue", queue,
+        ]))
+        .unwrap();
+        std::fs::read_to_string(out.join("fig_timeline.csv")).unwrap()
+    };
+    let wheel = mk("wheel", "wheel");
+    let heap = mk("heap", "heap");
+    assert_eq!(wheel, heap, "queue choice must not change the figures");
     std::fs::remove_dir_all(&dir).ok();
 }
 

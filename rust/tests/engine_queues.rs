@@ -1,0 +1,181 @@
+//! The queue-equivalence contract: the hierarchical timer wheel and the
+//! reference `BinaryHeap` must dispatch *identical* `(time, seq, event)`
+//! sequences for any workload — that is what lets the engine swap
+//! implementations without perturbing a single seeded replay.
+//!
+//! Differential tests drive both queues with the same inputs and demand
+//! bit-identical outputs; property tests re-state the engine invariants
+//! (time order, FIFO ties, monotone clock, horizon stop) per queue.
+
+use diperf::sim::{Engine, QueueKind, SimTime};
+use diperf::util::proptest::{forall, prop};
+use diperf::util::Pcg64;
+
+const KINDS: [QueueKind; 2] = [QueueKind::Heap, QueueKind::Wheel];
+
+fn drain(eng: &mut Engine<u64>) -> Vec<(u64, u64)> {
+    std::iter::from_fn(|| eng.next().map(|(t, e)| (t.0, e))).collect()
+}
+
+#[test]
+fn differential_random_workloads() {
+    forall(60, |rng| {
+        let n = 1 + rng.next_below(400);
+        // times mixing single-slot clusters, near horizon, far horizon
+        // and overflow territory, with plenty of exact duplicates
+        let times: Vec<u64> = (0..n)
+            .map(|_| match rng.next_below(5) {
+                0 => rng.next_below(1_000),
+                1 => rng.next_below(1_000_000),
+                2 => rng.next_below(100_000_000),
+                3 => rng.next_below(100_000_000_000),
+                _ => 777 * rng.next_below(4), // heavy duplicates
+            })
+            .collect();
+        let mut heap: Engine<u64> = Engine::with_queue(QueueKind::Heap);
+        let mut wheel: Engine<u64> = Engine::with_queue(QueueKind::Wheel);
+        for (i, &t) in times.iter().enumerate() {
+            heap.schedule(SimTime(t), i as u64);
+            wheel.schedule(SimTime(t), i as u64);
+        }
+        prop(
+            drain(&mut heap) == drain(&mut wheel),
+            "dispatch sequences diverged",
+        )
+    });
+}
+
+#[test]
+fn differential_interleaved_push_pop() {
+    // pops interleaved with pushes relative to the current clock — the
+    // wheel's watermark logic is most at risk exactly here
+    forall(40, |rng| {
+        let ops: Vec<u64> = (0..300).map(|_| rng.next_below(1 << 20)).collect();
+        let run = |kind: QueueKind| {
+            let mut eng: Engine<u64> = Engine::with_queue(kind);
+            let mut seen = Vec::new();
+            for (i, &d) in ops.iter().enumerate() {
+                // schedule relative to "now", sometimes pop
+                eng.schedule(eng.now() + diperf::sim::SimDuration(d), i as u64);
+                if i % 3 == 0 {
+                    if let Some((t, e)) = eng.next() {
+                        seen.push((t.0, e));
+                    }
+                }
+            }
+            while let Some((t, e)) = eng.next() {
+                seen.push((t.0, e));
+            }
+            seen
+        };
+        prop(
+            run(QueueKind::Heap) == run(QueueKind::Wheel),
+            "interleaved sequences diverged",
+        )
+    });
+}
+
+#[test]
+fn differential_cascading_workload() {
+    // handler-driven: each event schedules a successor at a random
+    // delta — the tester-launch-loop shape, including far-future jumps
+    let run = |kind: QueueKind| -> Vec<(u64, u32)> {
+        let mut rng = Pcg64::seed_from(99);
+        let mut eng: Engine<u32> = Engine::with_queue(kind);
+        for i in 0..50 {
+            eng.schedule(SimTime(rng.next_below(10_000)), i);
+        }
+        let mut seen = Vec::new();
+        let mut budget = 20_000u32;
+        eng.run_until(SimTime(u64::MAX / 2), |eng, t, e| {
+            seen.push((t.0, e));
+            if budget > 0 {
+                budget -= 1;
+                let d = rng.next_below(50_000_000); // up to 50 s ahead
+                eng.schedule(SimTime(t.0 + d), e.wrapping_add(1));
+            }
+        });
+        seen
+    };
+    let heap = run(QueueKind::Heap);
+    let wheel = run(QueueKind::Wheel);
+    assert_eq!(heap.len(), wheel.len());
+    assert_eq!(heap, wheel);
+}
+
+#[test]
+fn time_order_property_per_queue() {
+    for kind in KINDS {
+        forall(30, |rng| {
+            let mut eng: Engine<u64> = Engine::with_queue(kind);
+            for i in 0..300 {
+                eng.schedule(SimTime(rng.next_below(1 << 40)), i);
+            }
+            let seq = drain(&mut eng);
+            prop(
+                seq.windows(2).all(|w| w[0].0 <= w[1].0),
+                "time order violated",
+            )
+        });
+    }
+}
+
+#[test]
+fn fifo_ties_survive_partial_drains() {
+    for kind in KINDS {
+        forall(30, |rng| {
+            let t = 1_000 + rng.next_below(1_000_000);
+            let mut eng: Engine<u64> = Engine::with_queue(kind);
+            for i in 0..20 {
+                eng.schedule(SimTime(t), i);
+            }
+            let mut got = Vec::new();
+            for _ in 0..5 {
+                got.push(eng.next().expect("pending").1);
+            }
+            // same-time events added after a partial drain still follow
+            for i in 20..30u64 {
+                eng.schedule(SimTime(t), i);
+            }
+            while let Some((_, e)) = eng.next() {
+                got.push(e);
+            }
+            prop(got == (0..30).collect::<Vec<u64>>(), "FIFO tie broken")
+        });
+    }
+}
+
+#[test]
+fn horizon_stop_and_drained_clock_per_queue() {
+    for kind in KINDS {
+        let mut eng: Engine<u32> = Engine::with_queue(kind);
+        eng.schedule(SimTime::from_secs_f64(1.0), 1);
+        eng.schedule(SimTime::from_secs_f64(100.0), 2);
+        let mut seen = Vec::new();
+        eng.run_until(SimTime::from_secs_f64(10.0), |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1], "{kind:?}");
+        assert_eq!(eng.now(), SimTime::from_secs_f64(10.0));
+        assert_eq!(eng.pending(), 1);
+        // continue to quiescence past the event, clock lands on horizon
+        eng.run_until(SimTime::from_secs_f64(500.0), |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1, 2]);
+        assert_eq!(eng.now(), SimTime::from_secs_f64(500.0), "{kind:?}");
+    }
+}
+
+#[test]
+fn wheel_handles_quiescent_far_jumps() {
+    // long silences between bursts force the wheel through whole empty
+    // frames and the overflow rebase path
+    let mut eng: Engine<u32> = Engine::with_queue(QueueKind::Wheel);
+    let hours = [0u64, 1, 7, 50]; // microsecond epochs hours apart
+    for (i, h) in hours.iter().enumerate() {
+        eng.schedule(SimTime(h * 3_600_000_000), i as u32);
+    }
+    let got: Vec<u32> =
+        std::iter::from_fn(|| eng.next().map(|(_, e)| e)).collect();
+    assert_eq!(got, vec![0, 1, 2, 3]);
+    // scheduling resumes normally after the jumps
+    eng.schedule(eng.now() + diperf::sim::SimDuration::from_secs(1), 99);
+    assert_eq!(eng.next().map(|(_, e)| e), Some(99));
+}

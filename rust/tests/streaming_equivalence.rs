@@ -1,0 +1,206 @@
+//! The collection-mode contract: for a fixed seed, a streaming run and
+//! a retained run (analyzed on the same pre-declared grid) must produce
+//! the same figures — under either event queue.
+//!
+//! What "the same" means, precisely: the simulation itself is
+//! bit-identical (collection is an observer), so every counting series
+//! (throughput bins, per-client completions, availability) matches
+//! exactly; floating *sums* (offered load, response-time totals) differ
+//! only in summation order, so they match to rounding; the rendered
+//! figure CSVs therefore agree at print precision.
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::experiment::{presets, run_experiment_opts, RunOptions};
+use diperf::metrics::CollectionMode;
+use diperf::report;
+use diperf::sim::QueueKind;
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn assert_series_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(close(*x, *y, tol), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Compare two CSVs cell by cell: numeric cells to a relative
+/// tolerance, everything else (headers, labels) exactly.
+fn assert_csv_close(a: &str, b: &str, tol: f64, what: &str) {
+    let la: Vec<&str> = a.lines().collect();
+    let lb: Vec<&str> = b.lines().collect();
+    assert_eq!(la.len(), lb.len(), "{what}: row count");
+    for (ra, rb) in la.iter().zip(&lb) {
+        let ca: Vec<&str> = ra.split(',').collect();
+        let cb: Vec<&str> = rb.split(',').collect();
+        assert_eq!(ca.len(), cb.len(), "{what}: column count in {ra:?}");
+        for (x, y) in ca.iter().zip(&cb) {
+            match (x.parse::<f64>(), y.parse::<f64>()) {
+                (Ok(xv), Ok(yv)) => {
+                    assert!(close(xv, yv, tol), "{what}: {x} vs {y} in {ra:?}")
+                }
+                _ => assert_eq!(x, y, "{what}: non-numeric cell"),
+            }
+        }
+    }
+}
+
+#[test]
+fn figures_agree_at_100_testers_under_both_queues() {
+    // 100 testers under churn — the acceptance configuration: crashes,
+    // rejoins and evictions all in play
+    let cfg = presets::churn_study(100, 120.0, 1234);
+    for queue in [QueueKind::Wheel, QueueKind::Heap] {
+        let retain = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                queue,
+                ..RunOptions::default()
+            },
+        );
+        let stream = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                queue,
+                collect: CollectionMode::Stream,
+                ..RunOptions::default()
+            },
+        );
+        // the simulation is identical; only collection differs
+        assert_eq!(retain.events, stream.events, "{queue:?}");
+        assert_eq!(
+            retain.data.dropped_unsynced, stream.data.dropped_unsynced,
+            "{queue:?}"
+        );
+        assert_eq!(retain.faults, stream.faults);
+
+        // post-hoc analysis on the same pre-declared grid streaming used
+        let grid = retain.grid;
+        let inp = AnalysisInput::from_grid(&retain.data, &grid);
+        let posthoc = analysis::analyze(&inp, grid.num_quanta, grid.num_clients);
+        let agg = stream.stream.as_ref().expect("streaming aggregator");
+        let streamed = analysis::output_from_binned(&agg.binned);
+
+        // counting series and their exact-arithmetic derivatives match
+        // bit-for-bit regardless of aggregation order
+        assert_eq!(posthoc.tput, streamed.tput, "{queue:?} tput");
+        assert_eq!(posthoc.completed, streamed.completed, "{queue:?} completed");
+        assert_eq!(posthoc.util, streamed.util, "{queue:?} util");
+        assert_eq!(posthoc.fairness, streamed.fairness, "{queue:?} fairness");
+        assert_eq!(
+            posthoc.active_time, streamed.active_time,
+            "{queue:?} active_time"
+        );
+        assert_eq!(posthoc.totals[0], streamed.totals[0], "completions");
+        assert_eq!(posthoc.totals[1], streamed.totals[1], "failures");
+        assert_eq!(posthoc.totals[5], streamed.totals[5], "max rt");
+
+        // floating sums match to summation-order rounding
+        assert_series_close(&posthoc.load, &streamed.load, 1e-9, "load");
+        assert_series_close(&posthoc.rt_mean, &streamed.rt_mean, 1e-9, "rt_mean");
+        assert_series_close(&posthoc.rt_ma, &streamed.rt_ma, 1e-9, "rt_ma");
+        assert_series_close(&posthoc.load_ma, &streamed.load_ma, 1e-9, "load_ma");
+        assert_eq!(posthoc.tput_ma, streamed.tput_ma, "tput_ma exact");
+        for frac in [0.1, 0.5, 0.9] {
+            let t = frac * grid.duration;
+            let a = posthoc.poly_rt_at(t, grid.t0, grid.duration);
+            let b = streamed.poly_rt_at(t, grid.t0, grid.duration);
+            assert!(close(a, b, 1e-6), "poly rt at {t}: {a} vs {b}");
+        }
+
+        // churn views: identical activity, fairness to rounding
+        let cr = analysis::churn_report_grid(&retain.data, &grid);
+        let cs = analysis::churn_from_stream(agg, &stream.data.testers);
+        assert_eq!(cr.active, cs.active, "{queue:?} active");
+        assert_eq!(cr.evicted, cs.evicted);
+        assert_eq!(cr.rejoins, cs.rejoins);
+        assert!(close(cr.jain_fairness, cs.jain_fairness, 1e-12));
+        assert!(close(cr.mean_availability, cs.mean_availability, 1e-12));
+        assert!(close(cr.min_availability, cs.min_availability, 1e-12));
+
+        // and the rendered figure files agree at print precision
+        assert_csv_close(
+            &report::timeline_csv(&posthoc, grid.t0, grid.quantum),
+            &report::timeline_csv(&streamed, grid.t0, grid.quantum),
+            1e-2,
+            "timeline csv",
+        );
+        assert_csv_close(
+            &report::per_client_csv(&posthoc, &retain.data),
+            &report::per_client_csv(&streamed, &stream.data),
+            1e-2,
+            "per-client csv",
+        );
+        assert_csv_close(
+            &report::churn_csv(&cr, grid.t0, grid.quantum),
+            &report::churn_csv(&cs, grid.t0, grid.quantum),
+            1e-2,
+            "availability csv",
+        );
+    }
+}
+
+#[test]
+fn streaming_quantiles_track_the_retained_distribution() {
+    let cfg = presets::quick_http(20, 90.0, 7);
+    let retain = run_experiment_opts(&cfg, RunOptions::default());
+    let stream = run_experiment_opts(
+        &cfg,
+        RunOptions {
+            collect: CollectionMode::Stream,
+            ..RunOptions::default()
+        },
+    );
+    let agg = stream.stream.as_ref().unwrap();
+    // exact quantiles from the retained samples
+    let mut rts: Vec<f64> = retain
+        .data
+        .samples
+        .iter()
+        .filter(|s| s.outcome.ok())
+        .map(|s| s.rt)
+        .collect();
+    assert!(rts.len() > 500);
+    rts.sort_by(f64::total_cmp);
+    let exact = |p: f64| rts[((rts.len() - 1) as f64 * p) as usize];
+    let p50 = agg.rt_p50.value();
+    let p99 = agg.rt_p99.value();
+    assert!(
+        close(p50, exact(0.5), 0.15),
+        "p50 {p50} vs exact {}",
+        exact(0.5)
+    );
+    assert!(
+        close(p99, exact(0.99), 0.25),
+        "p99 {p99} vs exact {}",
+        exact(0.99)
+    );
+}
+
+#[test]
+fn streaming_buffers_are_bounded_by_the_sync_window() {
+    // the controller's pending buffers drain on every sync: after the
+    // run nothing is left and the aggregate matches the sample count
+    let cfg = presets::quick_http(6, 120.0, 3);
+    let retain = run_experiment_opts(&cfg, RunOptions::default());
+    let stream = run_experiment_opts(
+        &cfg,
+        RunOptions {
+            collect: CollectionMode::Stream,
+            ..RunOptions::default()
+        },
+    );
+    let agg = stream.stream.as_ref().unwrap();
+    assert_eq!(
+        agg.samples_seen + stream.data.dropped_unsynced,
+        retain.data.samples.len() as u64 + retain.data.dropped_unsynced
+    );
+    // per-tester receipt counters agree with the retained ground truth
+    for (a, b) in retain.data.testers.iter().zip(&stream.data.testers) {
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.evicted, b.evicted);
+        assert_eq!(a.rejoins, b.rejoins);
+    }
+}
