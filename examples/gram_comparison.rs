@@ -1,0 +1,72 @@
+//! The paper's §4 comparison as one campaign: pre-WS GRAM vs WS GRAM
+//! vs Apache/CGI across a tester-count ramp, executed in parallel
+//! across all cores, with cross-service comparison CSVs and per-service
+//! performance models validated on held-out load levels (§1/§5's
+//! "estimate service performance given the service load", measured).
+//!
+//!     cargo run --release --offline --example gram_comparison
+
+use diperf::campaign::{self, report};
+use diperf::report::RunDir;
+
+fn main() -> anyhow::Result<()> {
+    let spec = campaign::spec::by_name("gram_comparison", 42)?;
+    let jobs = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!(
+        "[gram_comparison] {} cells ({} services x {} loads x {} seeds) \
+         across {jobs} jobs",
+        spec.num_cells(),
+        spec.services.len(),
+        spec.loads.len(),
+        spec.seeds.len(),
+    );
+    let c = campaign::run(&spec, jobs)?;
+
+    println!("== cross-service comparison (paper §4, Figures 3-9) ==\n");
+    print!("{}", report::summary(&c));
+
+    // the per-service load-response table, paper-style
+    println!("\n| service | testers | peak load | peak tput | mean rt (s) |");
+    println!("|---|---|---|---|---|");
+    for line in report::load_response_csv(&c.spec, &c.cells)
+        .trim()
+        .lines()
+        .skip(1)
+    {
+        let f: Vec<&str> = line.split(',').collect();
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            f[0], f[1], f[3], f[4], f[5]
+        );
+    }
+
+    let dir = RunDir::create("runs", "gram_comparison")?;
+    dir.write("comparison.csv", &report::comparison_csv(&c.cells))?;
+    dir.write("load_response.csv", &report::load_response_csv(&c.spec, &c.cells))?;
+    dir.write("model_error.csv", &report::model_error_csv(&c.models))?;
+    dir.write("models.json", &report::models_json(&c.spec.name, &c.models))?;
+    dir.write("summary.txt", &report::summary(&c))?;
+    println!("\ncampaign CSVs written to {}", dir.path.display());
+
+    // sanity: every service completed work, and every service got a
+    // validated model scored on load levels it never saw
+    anyhow::ensure!(
+        c.cells.iter().all(|o| o.out.totals[0] > 0.0),
+        "a cell produced no completions"
+    );
+    anyhow::ensure!(
+        c.models.len() == c.spec.services.len(),
+        "missing per-service models"
+    );
+    for m in &c.models {
+        anyhow::ensure!(
+            m.err.weight > 0.0 && m.err.mae_s.is_finite(),
+            "{}: hold-out validation is empty",
+            m.service
+        );
+    }
+    println!("gram_comparison OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Campaign fan-out benchmark: the smoke grid at `--jobs 1` vs `--jobs
+//! N`, with the byte-identity contract checked on real hardware and
+//! the speedup appended to `BENCH_scale.json` — the campaign layer's
+//! claim is "simulator speed scales with cores", so the trajectory
+//! artifact must track it (the Ingo & Daly lesson again).
+//!
+//! Grid size: `DIPERF_CAMPAIGN_LOADS=3,6,9` overrides the load axis
+//! (CI smoke keeps the default).
+
+use diperf::bench_util::{append_scale_rows, scale_json, set_scale_field};
+use diperf::campaign::{self, report};
+
+fn main() -> anyhow::Result<()> {
+    let mut spec = campaign::spec::by_name("campaign_smoke", 42)?;
+    if let Ok(loads) = std::env::var("DIPERF_CAMPAIGN_LOADS") {
+        spec.loads = loads
+            .split(',')
+            .filter_map(|x| x.trim().parse().ok())
+            .collect();
+        spec.validate()?;
+    }
+    let jobs = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "# campaign fan-out: {} cells, jobs 1 vs {jobs}\n",
+        spec.num_cells()
+    );
+
+    let serial = campaign::run(&spec, 1)?;
+    let parallel = campaign::run(&spec, jobs)?;
+
+    // the determinism contract, on whatever machine runs this bench
+    let csv1 = report::comparison_csv(&serial.cells);
+    let csvn = report::comparison_csv(&parallel.cells);
+    anyhow::ensure!(csv1 == csvn, "comparison CSV differs across job counts");
+    anyhow::ensure!(
+        report::load_response_csv(&serial.spec, &serial.cells)
+            == report::load_response_csv(&parallel.spec, &parallel.cells),
+        "load-response CSV differs across job counts"
+    );
+    anyhow::ensure!(
+        report::model_error_csv(&serial.models)
+            == report::model_error_csv(&parallel.models),
+        "model-error CSV differs across job counts"
+    );
+
+    let speedup = serial.wall_s / parallel.wall_s.max(1e-9);
+    println!(
+        "jobs 1: {:.2}s   jobs {jobs}: {:.2}s   speedup {speedup:.2}x",
+        serial.wall_s, parallel.wall_s
+    );
+    for m in &parallel.models {
+        println!(
+            "model {}: held-out rt MAE {:.3}s rel {:.1}%",
+            m.service,
+            m.err.mae_s,
+            m.err.rel * 100.0
+        );
+    }
+
+    // One shared row builder (Campaign::bench_row) keeps this bench and
+    // `diperf campaign --bench-json` emitting identical row shapes.
+    let rows = [serial.bench_row(), parallel.bench_row()];
+    let summary = [
+        ("campaign_speedup", format!("{speedup:.3}")),
+        ("campaign_jobs", format!("{jobs}")),
+    ];
+    let doc = match std::fs::read_to_string("BENCH_scale.json") {
+        Ok(existing) => {
+            // overwrite the summary fields whatever they hold (null or
+            // a previous run's value), then append the fresh rows
+            let mut patched = existing;
+            for (k, v) in &summary {
+                if let Some(p) = set_scale_field(&patched, k, v) {
+                    patched = p;
+                }
+            }
+            append_scale_rows(&patched, &rows)
+                .unwrap_or_else(|| scale_json(&rows, &summary))
+        }
+        Err(_) => scale_json(&rows, &summary),
+    };
+    std::fs::write("BENCH_scale.json", doc)?;
+    println!("\nappended campaign rows to BENCH_scale.json");
+
+    // Guard only where it is meaningful: with 2+ real cores and 6 cells
+    // the fan-out must beat serial by a sane margin.  (Single-core CI
+    // runners skip it.)
+    if jobs >= 2 {
+        anyhow::ensure!(
+            speedup >= 1.1,
+            "campaign fan-out gained nothing: {speedup:.2}x on {jobs} cores"
+        );
+    }
+    Ok(())
+}

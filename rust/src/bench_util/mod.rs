@@ -173,15 +173,34 @@ pub struct ScaleRow {
     pub samples: u64,
 }
 
+/// Restrict a row label to JSON-inert characters: anything outside
+/// `[A-Za-z0-9 _./:+-]` becomes `_`.  Labels built from user-controlled
+/// names (a `[campaign] name` from a config file) must not be able to
+/// break the document with a quote or defeat [`append_scale_rows`]'
+/// "rows contain no `]`" invariant.
+pub fn sanitize_label(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || " _./:+-".contains(c) {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
 impl ScaleRow {
-    /// The row as a JSON object.
+    /// The row as a JSON object (label sanitized via
+    /// [`sanitize_label`]).
     pub fn json(&self) -> String {
         format!(
             "{{\"label\":\"{}\",\"testers\":{},\"queue\":\"{}\",\
              \"collection\":\"{}\",\"virtual_s\":{:.1},\"wall_s\":{:.4},\
              \"events\":{},\"events_per_sec\":{:.1},\"peak_pending\":{},\
              \"peak_rss_kb\":{},\"samples\":{}}}",
-            self.label,
+            sanitize_label(&self.label),
             self.testers,
             self.queue,
             self.collection,
@@ -194,6 +213,47 @@ impl ScaleRow {
             self.samples,
         )
     }
+}
+
+/// Append rows to an existing `BENCH_scale.json` document (the
+/// campaign smoke's "add a row on every push" mode, vs
+/// [`scale_json`]'s full rewrite).  Returns `None` when the document
+/// does not contain a recognizable `"rows": [...]` array — callers
+/// should then fall back to writing a fresh document.
+///
+/// Textual surgery is deliberate: the schema is ours (see
+/// `docs/BENCH_scale.md`) and row objects never contain `]`, so the
+/// first `]` after `"rows": [` closes the array.
+pub fn append_scale_rows(doc: &str, rows: &[ScaleRow]) -> Option<String> {
+    let start = doc.find("\"rows\": [")? + "\"rows\": [".len();
+    let close = start + doc[start..].find(']')?;
+    let has_rows = doc[start..close].contains('{');
+    let mut insert = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if has_rows || i > 0 {
+            insert.push(',');
+        }
+        insert.push_str("\n    ");
+        insert.push_str(&r.json());
+    }
+    insert.push_str("\n  ");
+    let body_end = start + doc[start..close].trim_end().len();
+    Some(format!("{}{}{}", &doc[..body_end], insert, &doc[close..]))
+}
+
+/// Overwrite one top-level summary field's value in an existing
+/// `BENCH_scale.json` document, whatever it currently holds (`null` or
+/// a previous measurement).  `value` must be already-rendered JSON.
+/// Returns `None` when the key is absent — callers then leave the
+/// document alone (or rewrite it wholesale with [`scale_json`]).
+pub fn set_scale_field(doc: &str, key: &str, value: &str) -> Option<String> {
+    let pat = format!("\"{key}\": ");
+    let start = doc.find(&pat)? + pat.len();
+    let end = start
+        + doc[start..]
+            .find(|c: char| c == ',' || c == '\n')
+            .unwrap_or(doc.len() - start);
+    Some(format!("{}{}{}", &doc[..start], value, &doc[end..]))
 }
 
 /// Assemble the `BENCH_scale.json` document from measured rows plus
@@ -285,6 +345,78 @@ mod tests {
         assert_eq!(doc.matches("\"label\"").count(), 2);
         assert_eq!(doc.matches('[').count(), 1);
         assert_eq!(doc.matches(']').count(), 1);
+    }
+
+    #[test]
+    fn labels_are_sanitized_for_json() {
+        assert_eq!(sanitize_label("campaign-smoke-jobs4"), "campaign-smoke-jobs4");
+        assert_eq!(sanitize_label("a\"b]c{d"), "a_b_c_d");
+        let row = ScaleRow {
+            label: "evil\"]name".into(),
+            testers: 1,
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: 1.0,
+            wall_s: 1.0,
+            events: 1,
+            events_per_sec: 1.0,
+            peak_pending: 1,
+            peak_rss_kb: 0,
+            samples: 1,
+        };
+        let j = row.json();
+        assert!(j.contains("\"label\":\"evil__name\""), "{j}");
+        assert!(!j.contains(']'), "label must not close the rows array");
+    }
+
+    #[test]
+    fn set_scale_field_overwrites_null_and_values() {
+        let doc = "{\n  \"campaign_speedup\": null,\n  \"campaign_jobs\": null,\n  \"rows\": []\n}\n";
+        let once = set_scale_field(doc, "campaign_speedup", "1.900").unwrap();
+        assert!(once.contains("\"campaign_speedup\": 1.900,"), "{once}");
+        // a re-run overwrites the previous measurement, not just null
+        let twice = set_scale_field(&once, "campaign_speedup", "2.100").unwrap();
+        assert!(twice.contains("\"campaign_speedup\": 2.100,"), "{twice}");
+        assert!(!twice.contains("1.900"), "{twice}");
+        // untouched fields survive, missing keys are a None
+        assert!(twice.contains("\"campaign_jobs\": null"));
+        assert!(set_scale_field(doc, "nope", "1").is_none());
+    }
+
+    #[test]
+    fn append_extends_fresh_and_empty_docs() {
+        let row = ScaleRow {
+            label: "campaign-smoke-jobs4".into(),
+            testers: 18,
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: 1440.0,
+            wall_s: 0.8,
+            events: 100_000,
+            events_per_sec: 125_000.0,
+            peak_pending: 64,
+            peak_rss_kb: 4096,
+            samples: 9000,
+        };
+        // appending to a doc that already has rows keeps them
+        let doc = scale_json(&[row.clone()], &[("note", "\"x\"".into())]);
+        let appended = append_scale_rows(&doc, &[row.clone()]).unwrap();
+        assert_eq!(appended.matches("\"label\"").count(), 2);
+        assert!(appended.contains("},\n    {"), "comma-joined rows");
+        assert!(appended.contains("\"note\": \"x\""), "summary preserved");
+        // appending twice keeps growing
+        let again = append_scale_rows(&appended, &[row.clone()]).unwrap();
+        assert_eq!(again.matches("\"label\"").count(), 3);
+        // appending into an empty `"rows": []` array works without a comma
+        let empty = "{\n  \"schema\": \"diperf-bench-scale-v1\",\n  \"rows\": []\n}\n";
+        let filled = append_scale_rows(empty, &[row.clone()]).unwrap();
+        assert_eq!(filled.matches("\"label\"").count(), 1);
+        assert!(!filled.contains("[,"), "no stray comma:\n{filled}");
+        // still one array, balanced
+        assert_eq!(filled.matches('[').count(), 1);
+        assert_eq!(filled.matches(']').count(), 1);
+        // unrecognizable docs are a None, not a panic
+        assert!(append_scale_rows("{}", &[row]).is_none());
     }
 
     #[test]

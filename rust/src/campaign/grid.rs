@@ -1,0 +1,153 @@
+//! Grid expansion: a [`CampaignSpec`] → the ordered list of cells, and
+//! each cell → its [`ExperimentConfig`].
+//!
+//! Order is part of the determinism contract: cells are emitted
+//! service-major, then scenario, then load, then seed — exactly the
+//! axis nesting documented on [`CampaignSpec`] — and every report folds
+//! results in this index order, so the bytes of the output cannot
+//! depend on which worker finished first.
+
+use anyhow::Result;
+
+use super::spec::{CampaignSpec, ServiceSel};
+use crate::cluster::TestbedParams;
+use crate::controller::ControllerConfig;
+use crate::experiment::ExperimentConfig;
+use crate::scenario;
+use crate::transport::{ClientCode, TestDescription};
+
+/// One point of the campaign grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    /// Target service.
+    pub service: ServiceSel,
+    /// Tester-pool size (the offered-load level).
+    pub load: usize,
+    /// Scenario name (validated against [`scenario::by_name`]).
+    pub scenario: String,
+    /// Master seed of this cell's experiment.
+    pub seed: u64,
+}
+
+impl Cell {
+    /// Stable row label: `service/scenario/load/seed`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}t/s{}",
+            self.service.name(),
+            self.scenario,
+            self.load,
+            self.seed
+        )
+    }
+}
+
+/// Expand a (validated) spec into its ordered cell list.
+pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(spec.num_cells());
+    for &service in &spec.services {
+        for scenario in &spec.scenarios {
+            for &load in &spec.loads {
+                for &seed in &spec.seeds {
+                    cells.push(Cell {
+                        service,
+                        load,
+                        scenario: scenario.clone(),
+                        seed,
+                    });
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Build one cell's full experiment configuration.  Pure function of
+/// (spec, cell): two calls yield identical configs, which is what makes
+/// re-running a cell on any worker thread safe.
+pub fn cell_config(spec: &CampaignSpec, cell: &Cell) -> Result<ExperimentConfig> {
+    let scenario = scenario::by_name(&cell.scenario, spec.duration_s)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let testbed = if spec.lan {
+        TestbedParams::lan(cell.load)
+    } else {
+        TestbedParams {
+            num_testers: cell.load,
+            ..Default::default()
+        }
+    };
+    let cfg = ExperimentConfig {
+        seed: cell.seed,
+        service: cell.service.kind(),
+        testbed,
+        controller: ControllerConfig {
+            stagger_s: spec.stagger_s,
+            eviction_failures: spec.eviction_failures,
+            silence_timeout_s: spec.silence_timeout_s,
+            desc: TestDescription {
+                duration_s: spec.duration_s,
+                client_interval_s: spec.client_interval_s,
+                sync_interval_s: spec.sync_interval_s,
+                rate_cap_per_s: spec.rate_cap_per_s,
+                timeout_s: spec.timeout_s,
+                give_up_failures: spec.give_up_failures,
+            },
+        },
+        code: ClientCode::Custom(400_000),
+        grace_s: spec.grace_s,
+        scenario,
+    };
+    crate::config::validate(&cfg)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_the_full_product_in_axis_order() {
+        let mut spec = CampaignSpec::new("t");
+        spec.services = vec![ServiceSel::GramPrews, ServiceSel::Http];
+        spec.loads = vec![2, 4];
+        spec.scenarios = vec!["none".to_string(), "churn".to_string()];
+        spec.seeds = vec![1, 2];
+        spec.validate().unwrap();
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), spec.num_cells());
+        assert_eq!(cells.len(), 16);
+        // service-major ...
+        assert!(cells[..8].iter().all(|c| c.service == ServiceSel::GramPrews));
+        // ... then scenario, then load, then seed innermost
+        assert_eq!(cells[0].label(), "gram_prews/none/2t/s1");
+        assert_eq!(cells[1].label(), "gram_prews/none/2t/s2");
+        assert_eq!(cells[2].label(), "gram_prews/none/4t/s1");
+        assert_eq!(cells[4].label(), "gram_prews/churn/2t/s1");
+        assert_eq!(cells[8].label(), "http/none/2t/s1");
+    }
+
+    #[test]
+    fn cell_config_is_a_pure_function() {
+        let spec = super::super::spec::by_name("campaign_smoke", 7).unwrap();
+        let cells = expand(&spec);
+        let cell = &cells[1];
+        let a = cell_config(&spec, cell).unwrap();
+        let b = cell_config(&spec, cell).unwrap();
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.testbed.num_testers, cell.load);
+        assert_eq!(a.controller.desc.duration_s, spec.duration_s);
+        assert!(!a.scenario.is_empty(), "smoke cells run under churn");
+        assert_eq!(
+            format!("{:?}", a.scenario.timeline),
+            format!("{:?}", b.scenario.timeline)
+        );
+    }
+
+    #[test]
+    fn cell_config_rejects_bad_scenarios() {
+        let spec = super::super::spec::by_name("campaign_smoke", 7).unwrap();
+        let mut cell = expand(&spec)[0].clone();
+        cell.scenario = "zzz".to_string();
+        assert!(cell_config(&spec, &cell).is_err());
+    }
+}

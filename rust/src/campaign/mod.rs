@@ -1,0 +1,328 @@
+//! Campaign orchestrator: parallel multi-experiment sweeps with a
+//! cross-service comparison report and validated performance models.
+//!
+//! The paper's headline claims are comparative — pre-WS GRAM vs WS
+//! GRAM vs Apache/CGI under ramped load (§4) — and predictive: "build
+//! predictive models that estimate a service performance given the
+//! service load" (§1, §5).  A single `diperf run` produces one point of
+//! that story.  A *campaign* produces the whole story in one command:
+//!
+//! 1. **Spec** ([`CampaignSpec`]) — a declarative grid over four axes:
+//!    `services × scenarios × loads × seeds` (loads are tester-pool
+//!    sizes, the paper's offered-load axis).
+//! 2. **Expansion** ([`grid::expand`]) — the ordered cell list; each
+//!    cell maps to one [`crate::experiment::ExperimentConfig`] by a
+//!    pure function of (spec, cell).
+//! 3. **Execution** ([`pool::run_cells`]) — cells fan out over `--jobs
+//!    N` OS threads.  Each cell is an independent seeded DES run, so
+//!    results are **byte-identical for every thread count and
+//!    completion order** — the determinism contract extends from one
+//!    engine to the whole sweep (`rust/tests/campaign.rs` diffs the
+//!    report bytes at `--jobs 1` vs `--jobs 8`).
+//! 4. **Merge** ([`report`]) — per-cell analyses fold, in grid order,
+//!    into the comparison CSVs (throughput/RT/fairness vs load per
+//!    service, Figures 4–9 style) and the terminal summary.
+//! 5. **Model validation** ([`validate_models`]) — per service, a
+//!    [`PerfModel`] is fitted on *alternate* load levels and scored on
+//!    the held-out levels ([`PerfModel::holdout_error`]; MAE/RMS/
+//!    relative RT error plus capacity-knee agreement).  That turns §5's
+//!    "estimate performance given load" from a claim into a measured,
+//!    regression-testable number.
+//!
+//! ```
+//! use diperf::campaign::{self, CampaignSpec};
+//!
+//! let mut spec = CampaignSpec::new("doc");
+//! spec.loads = vec![2, 3];
+//! spec.duration_s = 40.0;
+//! spec.lan = true;
+//! spec.num_quanta = 64;
+//! spec.window_s = 10.0;
+//! spec.validate().unwrap();
+//! let c = campaign::run(&spec, 2).unwrap();
+//! assert_eq!(c.cells.len(), 2);
+//! // two load levels -> one train level, one held-out level per service
+//! assert_eq!(c.models.len(), 1);
+//! ```
+
+pub mod grid;
+pub mod pool;
+pub mod report;
+pub mod spec;
+
+use anyhow::Result;
+
+pub use grid::Cell;
+pub use pool::CellOutcome;
+pub use spec::{CampaignSpec, ServiceSel, CAMPAIGN_PRESETS};
+
+use crate::analysis::capacity_knee;
+use crate::predict::{HoldoutError, PerfModel};
+
+/// A finished campaign: per-cell outcomes in grid order plus the
+/// per-service validated models.
+pub struct Campaign {
+    /// The validated spec the campaign ran.
+    pub spec: CampaignSpec,
+    /// One outcome per grid cell, in grid order.
+    pub cells: Vec<CellOutcome>,
+    /// Per-service model + hold-out validation (empty when the load
+    /// axis has fewer than two levels).
+    pub models: Vec<ServiceModelReport>,
+    /// Worker threads used.
+    pub jobs: usize,
+    /// Campaign wall time (seconds; nondeterministic, bench rows only).
+    pub wall_s: f64,
+}
+
+/// One service's fitted model and its held-out accuracy.
+pub struct ServiceModelReport {
+    /// Service label (as in the comparison CSV).
+    pub service: &'static str,
+    /// Model fitted on the training load levels' concatenated series.
+    pub model: PerfModel,
+    /// Load levels trained on (even indices of the load axis).
+    pub train_loads: Vec<usize>,
+    /// Load levels held out (odd indices of the load axis).
+    pub holdout_loads: Vec<usize>,
+    /// Weighted RT prediction error on the held-out series.
+    pub err: HoldoutError,
+    /// Capacity knee measured on the *full* series (ground truth).
+    pub knee_truth: Option<f64>,
+    /// One load step: the largest gap between adjacent load levels.
+    pub knee_step: f64,
+    /// Model knee within one load step of truth (`None` when either
+    /// knee is undetectable).
+    pub knee_agree: Option<bool>,
+}
+
+impl Campaign {
+    /// The campaign's performance counters as one `BENCH_scale.json`
+    /// row: counters summed over cells (peak pending: max), wall clock
+    /// the whole sweep's — so `events_per_sec` measures the fan-out,
+    /// not one engine.  Shared by `diperf campaign --bench-json` and
+    /// `rust/benches/campaign_scaling.rs` so the two writers can never
+    /// diverge.
+    pub fn bench_row(&self) -> crate::bench_util::ScaleRow {
+        use crate::bench_util::{peak_rss_kb, ScaleRow};
+        let wall_s = self.wall_s.max(1e-9);
+        let events: u64 = self.cells.iter().map(|o| o.events).sum();
+        ScaleRow {
+            label: format!("campaign-{}-jobs{}", self.spec.name, self.jobs),
+            testers: self.cells.iter().map(|o| o.cell.load).sum(),
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: self.cells.iter().map(|o| o.virtual_s).sum(),
+            wall_s,
+            events,
+            events_per_sec: events as f64 / wall_s,
+            peak_pending: self
+                .cells
+                .iter()
+                .map(|o| o.peak_pending)
+                .max()
+                .unwrap_or(0),
+            peak_rss_kb: peak_rss_kb(),
+            samples: self.cells.iter().map(|o| o.samples).sum(),
+        }
+    }
+}
+
+/// Run a whole campaign: expand, execute across `jobs` threads, merge,
+/// validate models.
+pub fn run(spec: &CampaignSpec, jobs: usize) -> Result<Campaign> {
+    let mut spec = spec.clone();
+    spec.validate()?;
+    let t = std::time::Instant::now();
+    let cells = grid::expand(&spec);
+    let outcomes = pool::run_cells(&spec, &cells, jobs)?;
+    let models = validate_models(&spec, &outcomes);
+    Ok(Campaign {
+        spec,
+        cells: outcomes,
+        models,
+        jobs: jobs.max(1),
+        wall_s: t.elapsed().as_secs_f64(),
+    })
+}
+
+/// Split the load axis into train (even indices) and hold-out (odd
+/// indices) levels; fit one [`PerfModel`] per service on the training
+/// cells' concatenated per-quantum series, score it on the held-out
+/// series, and compare its capacity knee against the knee of the full
+/// series.
+///
+/// Pooling: all scenarios and seeds of a service contribute — a model
+/// fitted under churn is validated under churn, which is exactly the
+/// Zhou et al. question (does the load→performance surface survive
+/// faults?).  Returns an empty vec when fewer than two load levels
+/// exist (nothing to hold out).
+pub fn validate_models(
+    spec: &CampaignSpec,
+    cells: &[CellOutcome],
+) -> Vec<ServiceModelReport> {
+    if spec.loads.len() < 2 {
+        return Vec::new();
+    }
+    let train_loads: Vec<usize> =
+        spec.loads.iter().copied().step_by(2).collect();
+    let holdout_loads: Vec<usize> =
+        spec.loads.iter().copied().skip(1).step_by(2).collect();
+    let knee_step = spec
+        .loads
+        .windows(2)
+        .map(|w| (w[1] - w[0]) as f64)
+        .fold(0.0, f64::max);
+
+    let mut reports = Vec::with_capacity(spec.services.len());
+    for &service in &spec.services {
+        let mut series = SeriesAccum::default();
+        let mut holdout = SeriesAccum::default();
+        let mut full = SeriesAccum::default();
+        for o in cells.iter().filter(|o| o.cell.service == service) {
+            full.extend(o);
+            if train_loads.contains(&o.cell.load) {
+                series.extend(o);
+            } else {
+                holdout.extend(o);
+            }
+        }
+        if series.load.is_empty() || holdout.load.is_empty() {
+            continue; // a service whose cells are all missing
+        }
+        let model =
+            PerfModel::fit_series(&series.load, &series.rt, &series.tput);
+        let err = model.holdout_error(&holdout.load, &holdout.rt, &holdout.tput);
+        let knee_truth = capacity_knee(&full.load, &full.tput, 0.05);
+        let knee_agree = match (model.knee, knee_truth) {
+            (Some(m), Some(t)) => Some((m - t).abs() <= knee_step),
+            _ => None,
+        };
+        reports.push(ServiceModelReport {
+            service: service.label(),
+            model,
+            train_loads: train_loads.clone(),
+            holdout_loads: holdout_loads.clone(),
+            err,
+            knee_truth,
+            knee_step,
+            knee_agree,
+        });
+    }
+    reports
+}
+
+/// Concatenated per-quantum (load, rt, tput) columns across cells.
+#[derive(Default)]
+struct SeriesAccum {
+    load: Vec<f64>,
+    rt: Vec<f64>,
+    tput: Vec<f64>,
+}
+
+impl SeriesAccum {
+    fn extend(&mut self, o: &CellOutcome) {
+        self.load.extend_from_slice(&o.out.load);
+        self.rt.extend_from_slice(&o.out.rt_mean);
+        self.tput.extend_from_slice(&o.out.tput);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{AnalysisOutput, ChurnReport};
+
+    /// Build a synthetic cell outcome whose per-quantum series follow a
+    /// known load→rt/tput law: tput saturates at `knee`, rt grows
+    /// gently below the knee and steeply above it.
+    fn synthetic_cell(service: ServiceSel, load: usize, quanta: usize) -> CellOutcome {
+        let knee = 30.0;
+        let mut out = AnalysisOutput::default();
+        for q in 0..quanta {
+            // the cell ramps its pool up: offered load 0 -> `load`
+            let l = load as f64 * (q as f64 + 0.5) / quanta as f64;
+            let rt = if l <= knee {
+                0.5 + 0.02 * l
+            } else {
+                0.5 + 0.02 * knee + 0.25 * (l - knee)
+            };
+            out.load.push(l);
+            out.rt_mean.push(rt);
+            out.tput.push(l.min(knee).max(0.1));
+        }
+        out.totals = [1.0; 8];
+        CellOutcome {
+            cell: Cell {
+                service,
+                load,
+                scenario: "none".to_string(),
+                seed: 1,
+            },
+            out,
+            churn: ChurnReport::default(),
+            knee: None,
+            rt_quantiles: [0.0; 3],
+            samples: 0,
+            events: 0,
+            faults: 0,
+            stalls: 0,
+            peak_pending: 0,
+            virtual_s: 0.0,
+            wall_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn holdout_validation_on_a_known_knee() {
+        // loads bracket the knee at 30; train on {10, 30, 50}, hold out
+        // {20, 40}
+        let loads = vec![10usize, 20, 30, 40, 50];
+        let mut spec = CampaignSpec::new("syn");
+        spec.services = vec![ServiceSel::Http];
+        spec.loads = loads.clone();
+        spec.validate().unwrap();
+        let cells: Vec<CellOutcome> = loads
+            .iter()
+            .map(|&l| synthetic_cell(ServiceSel::Http, l, 128))
+            .collect();
+        let reports = validate_models(&spec, &cells);
+        assert_eq!(reports.len(), 1);
+        let r = &reports[0];
+        assert_eq!(r.train_loads, vec![10, 30, 50]);
+        assert_eq!(r.holdout_loads, vec![20, 40]);
+        // held-out RT prediction stays tight on a smooth surface
+        assert!(r.err.weight > 0.0);
+        assert!(r.err.rel < 0.15, "relative error {}", r.err.rel);
+        // the detected knee lands within one load step of the truth
+        let truth = r.knee_truth.expect("truth knee");
+        assert!((truth - 30.0).abs() < 6.0, "truth knee {truth}");
+        assert_eq!(r.knee_agree, Some(true), "model knee {:?}", r.model.knee);
+        assert_eq!(r.knee_step, 10.0);
+    }
+
+    #[test]
+    fn single_load_level_yields_no_models() {
+        let mut spec = CampaignSpec::new("one");
+        spec.loads = vec![5];
+        spec.validate().unwrap();
+        let cells = vec![synthetic_cell(ServiceSel::Http, 5, 64)];
+        assert!(validate_models(&spec, &cells).is_empty());
+    }
+
+    #[test]
+    fn missing_service_cells_are_skipped() {
+        let mut spec = CampaignSpec::new("skip");
+        spec.services = vec![ServiceSel::Http, ServiceSel::GramWs];
+        spec.loads = vec![10, 20];
+        spec.validate().unwrap();
+        // only Http cells exist
+        let cells: Vec<CellOutcome> = [10usize, 20]
+            .iter()
+            .map(|&l| synthetic_cell(ServiceSel::Http, l, 64))
+            .collect();
+        let reports = validate_models(&spec, &cells);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].service, "apache-cgi");
+    }
+}

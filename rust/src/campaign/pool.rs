@@ -1,0 +1,182 @@
+//! The campaign worker pool: fan grid cells out over `--jobs N` OS
+//! threads and collect per-cell results in grid order.
+//!
+//! Determinism under parallelism: each cell is an independent seeded
+//! [`crate::sim::Engine`] run — no state is shared between cells except
+//! the read-only spec — and every outcome is stored into a slot indexed
+//! by the cell's grid position.  The fold that produces the report
+//! iterates those slots in index order, so the output bytes are
+//! identical for any thread count and any completion order.  Only wall
+//! clocks (`wall_ms`) differ between runs; reports must not include
+//! them (the bench row does, deliberately).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::grid::{cell_config, Cell};
+use super::spec::CampaignSpec;
+use crate::analysis::{self, AnalysisOutput, ChurnReport};
+use crate::experiment::{run_experiment_opts, RunOptions};
+use crate::metrics::CollectionMode;
+use crate::sim::QueueKind;
+
+/// Everything the merge needs from one finished cell.
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    /// The grid point this outcome belongs to.
+    pub cell: Cell,
+    /// Full per-quantum analysis series for the cell.
+    pub out: AnalysisOutput,
+    /// Availability/fairness view (meaningful under fault scenarios).
+    pub churn: ChurnReport,
+    /// Capacity knee detected in this cell alone, if any.
+    pub knee: Option<f64>,
+    /// Streaming response-time quantiles (p50/p90/p99, seconds).
+    pub rt_quantiles: [f64; 3],
+    /// Samples folded into the aggregator.
+    pub samples: u64,
+    /// DES events dispatched.
+    pub events: u64,
+    /// Scenario faults scheduled.
+    pub faults: u64,
+    /// Service stalls observed (WS GRAM).
+    pub stalls: u64,
+    /// High-water mark of pending DES events.
+    pub peak_pending: u64,
+    /// Virtual seconds simulated.
+    pub virtual_s: f64,
+    /// Wall-clock milliseconds — nondeterministic; bench rows only,
+    /// never report CSVs.
+    pub wall_ms: f64,
+}
+
+/// Run one grid cell to completion (streaming collection, timer-wheel
+/// queue — the scale-out defaults).
+pub fn run_cell(spec: &CampaignSpec, cell: &Cell) -> Result<CellOutcome> {
+    let cfg = cell_config(spec, cell)
+        .with_context(|| format!("cell {}", cell.label()))?;
+    let opts = RunOptions {
+        collect: CollectionMode::Stream,
+        queue: QueueKind::Wheel,
+        num_quanta: spec.num_quanta,
+        window_s: spec.window_s,
+    };
+    let r = run_experiment_opts(&cfg, opts);
+    let agg = r
+        .stream
+        .as_ref()
+        .expect("streaming collection always aggregates");
+    let out = analysis::output_from_binned(&agg.binned);
+    let churn = analysis::churn_from_stream(agg, &r.data.testers);
+    let knee = analysis::capacity_knee(&out.load, &out.tput, 0.05);
+    Ok(CellOutcome {
+        cell: cell.clone(),
+        knee,
+        rt_quantiles: [
+            agg.rt_p50.value(),
+            agg.rt_p90.value(),
+            agg.rt_p99.value(),
+        ],
+        samples: agg.samples_seen,
+        events: r.events,
+        faults: r.faults,
+        stalls: r.stalls,
+        peak_pending: r.peak_pending,
+        virtual_s: r.data.duration_s,
+        wall_ms: r.wall_ms,
+        out,
+        churn,
+    })
+}
+
+/// Execute every cell across `jobs` worker threads; outcomes come back
+/// in grid order regardless of scheduling.
+pub fn run_cells(
+    spec: &CampaignSpec,
+    cells: &[Cell],
+    jobs: usize,
+) -> Result<Vec<CellOutcome>> {
+    let jobs = jobs.clamp(1, cells.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<CellOutcome>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_cell(spec, &cells[i]);
+                *slots[i].lock().expect("slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, m)| {
+            m.into_inner()
+                .expect("slot poisoned")
+                .with_context(|| format!("cell {} never ran", cells[i].label()))?
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{grid, spec};
+    use super::*;
+
+    fn tiny_spec() -> CampaignSpec {
+        let mut s = CampaignSpec::new("tiny");
+        s.loads = vec![2, 3];
+        s.duration_s = 40.0;
+        s.lan = true;
+        s.num_quanta = 64;
+        s.window_s = 10.0;
+        s.validate().unwrap();
+        s
+    }
+
+    #[test]
+    fn one_cell_runs_and_aggregates() {
+        let s = tiny_spec();
+        let cells = grid::expand(&s);
+        let o = run_cell(&s, &cells[0]).unwrap();
+        assert!(o.samples > 10, "samples {}", o.samples);
+        assert!(o.events > 100);
+        assert_eq!(o.out.load.len(), s.num_quanta);
+        assert!(o.out.totals[0] > 0.0, "no completions");
+    }
+
+    #[test]
+    fn pool_matches_serial_execution() {
+        let s = spec::by_name("campaign_smoke", 5)
+            .map(|mut s| {
+                // shrink the smoke preset further for a unit test
+                s.duration_s = 60.0;
+                s.loads = vec![2, 4];
+                s.validate().unwrap();
+                s
+            })
+            .unwrap();
+        let cells = grid::expand(&s);
+        let serial = run_cells(&s, &cells, 1).unwrap();
+        let parallel = run_cells(&s, &cells, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.cell, b.cell);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.samples, b.samples);
+            for (x, y) in a.out.tput.iter().zip(&b.out.tput) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.out.rt_mean.iter().zip(&b.out.rt_mean) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

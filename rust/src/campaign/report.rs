@@ -1,0 +1,248 @@
+//! Campaign reports: the cross-service comparison CSVs (paper
+//! Figures 4–9 as load-response data), the per-service model-error
+//! table, serialized fitted models, and the terminal summary.
+//!
+//! Byte-determinism contract: every function here is a pure fold over
+//! cell outcomes in grid order with fixed-precision formatting, and
+//! none of them may include wall-clock (or any other host-dependent)
+//! values — `rust/tests/campaign.rs` diffs the bytes across `--jobs`
+//! counts.
+
+use std::fmt::Write as _;
+
+use super::pool::CellOutcome;
+use super::spec::CampaignSpec;
+use super::{Campaign, ServiceModelReport};
+
+fn opt(v: Option<f64>) -> String {
+    v.map_or(String::new(), |x| format!("{x:.3}"))
+}
+
+/// One row per grid cell, in grid order: the full cross-service
+/// comparison table.
+pub fn comparison_csv(cells: &[CellOutcome]) -> String {
+    let mut s = String::from(
+        "service,scenario,testers,seed,samples,completions,failures,\
+         mean_rt_s,rt_p50_s,rt_p90_s,rt_p99_s,peak_load,peak_tput,\
+         knee_load,jain_fairness,mean_availability,min_availability,\
+         evicted,rejoins,stalls,faults,events\n",
+    );
+    for o in cells {
+        let t = &o.out.totals;
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{:.0},{:.0},{:.4},{:.4},{:.4},{:.4},{:.3},\
+             {:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{}",
+            o.cell.service.label(),
+            o.cell.scenario,
+            o.cell.load,
+            o.cell.seed,
+            o.samples,
+            t[0],
+            t[1],
+            t[2],
+            o.rt_quantiles[0],
+            o.rt_quantiles[1],
+            o.rt_quantiles[2],
+            t[3],
+            t[4],
+            opt(o.knee),
+            o.churn.jain_fairness,
+            o.churn.mean_availability,
+            o.churn.min_availability,
+            o.churn.evicted,
+            o.churn.rejoins,
+            o.stalls,
+            o.faults,
+            o.events,
+        );
+    }
+    s
+}
+
+/// Per-(service, load) aggregate curves — throughput/RT/fairness vs
+/// offered load, averaged over the scenario and seed axes.  This is
+/// the campaign twin of the paper's Figure 4–9 per-service summaries,
+/// with one service per row group for direct comparison.
+pub fn load_response_csv(spec: &CampaignSpec, cells: &[CellOutcome]) -> String {
+    let mut s = String::from(
+        "service,testers,cells,peak_load,peak_tput,mean_rt_s,\
+         jain_fairness,mean_availability\n",
+    );
+    for &service in &spec.services {
+        for &load in &spec.loads {
+            let mine: Vec<&CellOutcome> = cells
+                .iter()
+                .filter(|o| o.cell.service == service && o.cell.load == load)
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            let n = mine.len() as f64;
+            let mean = |f: &dyn Fn(&CellOutcome) -> f64| -> f64 {
+                mine.iter().map(|&o| f(o)).sum::<f64>() / n
+            };
+            let _ = writeln!(
+                s,
+                "{},{},{},{:.3},{:.3},{:.4},{:.4},{:.4}",
+                service.label(),
+                load,
+                mine.len(),
+                mean(&|o| o.out.totals[3]),
+                mean(&|o| o.out.totals[4]),
+                mean(&|o| o.out.totals[2]),
+                mean(&|o| o.churn.jain_fairness),
+                mean(&|o| o.churn.mean_availability),
+            );
+        }
+    }
+    s
+}
+
+/// Per-service model-validation table: what was trained on, what was
+/// held out, and how wrong the predictions were.
+pub fn model_error_csv(models: &[ServiceModelReport]) -> String {
+    let mut s = String::from(
+        "service,train_loads,holdout_loads,holdout_weight,rt_mae_s,\
+         rt_rms_s,rt_rel_err,knee_model,knee_truth,knee_step,\
+         knee_within_step\n",
+    );
+    for m in models {
+        let fmt_loads = |ls: &[usize]| -> String {
+            ls.iter()
+                .map(|l| l.to_string())
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        let _ = writeln!(
+            s,
+            "{},{},{},{:.1},{:.4},{:.4},{:.4},{},{},{:.1},{}",
+            m.service,
+            fmt_loads(&m.train_loads),
+            fmt_loads(&m.holdout_loads),
+            m.err.weight,
+            m.err.mae_s,
+            m.err.rms_s,
+            m.err.rel,
+            opt(m.model.knee),
+            opt(m.knee_truth),
+            m.knee_step,
+            m.knee_agree.map_or(String::new(), |b| b.to_string()),
+        );
+    }
+    s
+}
+
+/// Every fitted per-service model as one JSON document (the schema the
+/// `predict` layer's [`crate::predict::PerfModel::from_json`] reads
+/// back per entry).
+pub fn models_json(name: &str, models: &[ServiceModelReport]) -> String {
+    let mut s = format!(
+        "{{\n  \"schema\": \"diperf-campaign-models-v1\",\n  \
+         \"campaign\": \"{name}\",\n  \"services\": [\n"
+    );
+    for (i, m) in models.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"service\":\"{}\",\"model\":{}}}",
+            m.service,
+            m.model.to_json()
+        );
+        s.push_str(if i + 1 < models.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Human-readable campaign summary (stdout and `summary.txt`).  The
+/// wall clock appears here — and only here.
+pub fn summary(c: &Campaign) -> String {
+    let mut s = format!(
+        "campaign          {}\n\
+         grid              {} services x {} scenarios x {} loads x {} seeds = {} cells\n\
+         jobs              {}\n\
+         events            {}\n\
+         samples           {}\n\
+         virtual time      {:.0} s total\n\
+         wall time         {:.2} s ({:.1} cells/s)\n",
+        c.spec.name,
+        c.spec.services.len(),
+        c.spec.scenarios.len(),
+        c.spec.loads.len(),
+        c.spec.seeds.len(),
+        c.cells.len(),
+        c.jobs,
+        c.cells.iter().map(|o| o.events).sum::<u64>(),
+        c.cells.iter().map(|o| o.samples).sum::<u64>(),
+        c.cells.iter().map(|o| o.virtual_s).sum::<f64>(),
+        c.wall_s,
+        c.cells.len() as f64 / c.wall_s.max(1e-9),
+    );
+    for m in &c.models {
+        let knee = match (m.model.knee, m.knee_truth) {
+            (Some(k), Some(t)) => format!(
+                "knee {:.1} vs truth {:.1} ({})",
+                k,
+                t,
+                if m.knee_agree == Some(true) {
+                    "within one load step"
+                } else {
+                    "OFF by more than one load step"
+                }
+            ),
+            _ => "knee not detected".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "model {:<18} held-out rt MAE {:.3} s / RMS {:.3} s / rel {:.1}%  {}",
+            m.service,
+            m.err.mae_s,
+            m.err.rms_s,
+            m.err.rel * 100.0,
+            knee,
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::CampaignSpec;
+    use super::super::{grid, pool};
+    use super::*;
+
+    fn outcomes() -> (CampaignSpec, Vec<CellOutcome>) {
+        let mut s = CampaignSpec::new("rep");
+        s.loads = vec![2, 3];
+        s.duration_s = 40.0;
+        s.lan = true;
+        s.num_quanta = 64;
+        s.window_s = 10.0;
+        s.validate().unwrap();
+        let cells = grid::expand(&s);
+        let outs = pool::run_cells(&s, &cells, 2).unwrap();
+        (s, outs)
+    }
+
+    #[test]
+    fn csvs_have_one_row_per_cell_and_group() {
+        let (spec, outs) = outcomes();
+        let comparison = comparison_csv(&outs);
+        assert_eq!(comparison.trim().lines().count(), 1 + outs.len());
+        assert!(comparison.contains("apache-cgi,none,2,42"));
+        let lr = load_response_csv(&spec, &outs);
+        // one service x two loads
+        assert_eq!(lr.trim().lines().count(), 1 + 2);
+        // no wall-clock column anywhere
+        for doc in [&comparison, &lr] {
+            assert!(!doc.contains("wall"), "wall clock leaked into CSV");
+        }
+    }
+
+    #[test]
+    fn models_json_renders_empty_and_full() {
+        let doc = models_json("x", &[]);
+        assert!(doc.contains("diperf-campaign-models-v1"));
+        assert!(doc.contains("\"services\": [\n  ]"));
+    }
+}

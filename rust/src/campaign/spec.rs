@@ -1,0 +1,304 @@
+//! The declarative campaign specification: which services, which load
+//! levels, which fault scenarios, which seeds — plus the per-cell
+//! experiment knobs every cell shares.
+//!
+//! A spec is pure data; [`crate::campaign::grid`] expands it into the
+//! cross-product of cells and builds each cell's
+//! [`crate::experiment::ExperimentConfig`].  Specs come from a shipped
+//! preset ([`by_name`]) or a `[campaign]` TOML section
+//! ([`crate::config::campaign_from_toml`]).
+
+use anyhow::{bail, Result};
+
+use crate::experiment::ServiceKind;
+use crate::scenario;
+use crate::services::gram_prews::GramPrewsParams;
+use crate::services::gram_ws::GramWsParams;
+use crate::services::http::HttpParams;
+
+/// A target service selected by name on the campaign's service axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceSel {
+    /// GT3.2 pre-WS GRAM (default calibration).
+    GramPrews,
+    /// GT3.2 WS GRAM (default calibration).
+    GramWs,
+    /// Apache + CGI (default calibration).
+    Http,
+}
+
+/// Service names accepted on the campaign `services` axis.
+pub const SERVICE_NAMES: [&str; 3] = ["gram_prews", "gram_ws", "http"];
+
+impl ServiceSel {
+    /// Parse a service-axis name; errors list the accepted names.
+    pub fn parse(name: &str) -> Result<ServiceSel> {
+        Ok(match name {
+            "gram_prews" => ServiceSel::GramPrews,
+            "gram_ws" => ServiceSel::GramWs,
+            "http" => ServiceSel::Http,
+            other => bail!(
+                "unknown service {other:?}; available services: {}",
+                SERVICE_NAMES.join(", ")
+            ),
+        })
+    }
+
+    /// Build the service (default calibration; a campaign compares
+    /// services as shipped, per-cell calibration overrides are not an
+    /// axis).
+    pub fn kind(self) -> ServiceKind {
+        match self {
+            ServiceSel::GramPrews => ServiceKind::GramPrews(GramPrewsParams::default()),
+            ServiceSel::GramWs => ServiceKind::GramWs(GramWsParams::default()),
+            ServiceSel::Http => ServiceKind::Http(HttpParams::default()),
+        }
+    }
+
+    /// Stable label used in report CSVs (matches
+    /// [`ServiceKind::label`]).
+    pub fn label(self) -> &'static str {
+        self.kind().label()
+    }
+
+    /// The axis name this variant parses from.
+    pub fn name(self) -> &'static str {
+        match self {
+            ServiceSel::GramPrews => "gram_prews",
+            ServiceSel::GramWs => "gram_ws",
+            ServiceSel::Http => "http",
+        }
+    }
+}
+
+/// A declarative multi-experiment sweep: the four grid axes plus the
+/// per-cell experiment knobs all cells share.
+///
+/// Grid semantics: the campaign runs one independent experiment per
+/// element of `services × scenarios × loads × seeds` (that exact
+/// nesting order, outermost first).  A load level is a tester-pool
+/// size — the paper's offered-load axis.  Cells with the same seed
+/// share their random draws per pool size (common random numbers), so
+/// cross-service differences at one grid point are service effects,
+/// not sampling noise.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    /// Campaign name (labels the run directory and report rows).
+    pub name: String,
+    /// Service axis.
+    pub services: Vec<ServiceSel>,
+    /// Offered-load axis: tester-pool sizes, strictly increasing after
+    /// [`validate`](Self::validate) normalizes them.
+    pub loads: Vec<usize>,
+    /// Scenario axis: names accepted by [`scenario::by_name`].
+    pub scenarios: Vec<String>,
+    /// Seed axis: each seed is used verbatim as the cell's master seed.
+    pub seeds: Vec<u64>,
+    /// Per-tester test duration in each cell (seconds).
+    pub duration_s: f64,
+    /// Ramp stagger between tester starts (seconds).
+    pub stagger_s: f64,
+    /// Interval between a tester's client invocations (seconds).
+    pub client_interval_s: f64,
+    /// Clock-sync interval (seconds).
+    pub sync_interval_s: f64,
+    /// Per-client invocation rate cap (per second; infinite disables).
+    pub rate_cap_per_s: f64,
+    /// Tester-side client timeout (seconds).
+    pub timeout_s: f64,
+    /// Tester gives up after this many consecutive failures (0 = never).
+    pub give_up_failures: u32,
+    /// Controller evicts after this many consecutive failures (0 =
+    /// never).
+    pub eviction_failures: u32,
+    /// Controller evicts a tester silent for this long (seconds).
+    pub silence_timeout_s: f64,
+    /// Use the quiet LAN testbed instead of the default WAN population
+    /// (tests and CI smoke runs).
+    pub lan: bool,
+    /// Extra time after the last tester's duration (seconds).
+    pub grace_s: f64,
+    /// Analysis-grid resolution per cell (quanta).
+    pub num_quanta: usize,
+    /// Moving-average window per cell (seconds).
+    pub window_s: f64,
+}
+
+impl CampaignSpec {
+    /// A neutral single-cell spec to grow from: quick HTTP, one load
+    /// level, no faults, seed 42.
+    pub fn new(name: impl Into<String>) -> CampaignSpec {
+        CampaignSpec {
+            name: name.into(),
+            services: vec![ServiceSel::Http],
+            loads: vec![8],
+            scenarios: vec!["none".to_string()],
+            seeds: vec![42],
+            duration_s: 120.0,
+            stagger_s: 2.0,
+            client_interval_s: 0.5,
+            sync_interval_s: 30.0,
+            rate_cap_per_s: f64::INFINITY,
+            timeout_s: 30.0,
+            give_up_failures: 0,
+            eviction_failures: 0,
+            silence_timeout_s: 120.0,
+            lan: false,
+            grace_s: 30.0,
+            num_quanta: 256,
+            window_s: 60.0,
+        }
+    }
+
+    /// Number of grid cells the spec expands into.
+    pub fn num_cells(&self) -> usize {
+        self.services.len() * self.scenarios.len() * self.loads.len() * self.seeds.len()
+    }
+
+    /// Normalize and reject specs that cannot run: every axis must be
+    /// non-empty, scenario names must exist, the load axis is sorted
+    /// and deduplicated (grid order — and therefore report order — is
+    /// part of the determinism contract).
+    pub fn validate(&mut self) -> Result<()> {
+        if self.services.is_empty() {
+            bail!("campaign needs at least one service");
+        }
+        if self.loads.is_empty() {
+            bail!("campaign needs at least one load level");
+        }
+        if self.seeds.is_empty() {
+            bail!("campaign needs at least one seed");
+        }
+        if self.scenarios.is_empty() {
+            self.scenarios.push("none".to_string());
+        }
+        if self.loads.iter().any(|&l| l == 0) {
+            bail!("load levels must be >= 1 tester");
+        }
+        self.loads.sort_unstable();
+        self.loads.dedup();
+        if self.duration_s <= 0.0 {
+            bail!("duration_s must be positive");
+        }
+        if self.sync_interval_s <= 0.0 {
+            bail!("sync_interval_s must be positive");
+        }
+        if self.num_quanta == 0 {
+            bail!("num_quanta must be >= 1");
+        }
+        for s in &self.scenarios {
+            scenario::by_name(s, self.duration_s)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Names accepted by [`by_name`].
+pub const CAMPAIGN_PRESETS: [&str; 2] = ["gram_comparison", "campaign_smoke"];
+
+/// Instantiate a shipped campaign preset.  `seed` is the base of the
+/// seed axis (presets with several seeds use `seed, seed+1, ...`).
+pub fn by_name(name: &str, seed: u64) -> Result<CampaignSpec> {
+    let mut spec = match name {
+        // The paper's §4 comparison as one campaign: pre-WS GRAM vs WS
+        // GRAM vs Apache/CGI across a tester-count ramp, quiet WAN.
+        // Figures 3-9 come from the per-cell series; the campaign adds
+        // the cross-service load-response CSV and validated models.
+        "gram_comparison" => CampaignSpec {
+            services: vec![
+                ServiceSel::GramPrews,
+                ServiceSel::GramWs,
+                ServiceSel::Http,
+            ],
+            loads: vec![4, 8, 16, 24, 32],
+            scenarios: vec!["none".to_string()],
+            seeds: vec![seed, seed + 1],
+            duration_s: 600.0,
+            stagger_s: 10.0,
+            client_interval_s: 1.0,
+            timeout_s: 120.0,
+            silence_timeout_s: 600.0,
+            grace_s: 60.0,
+            ..CampaignSpec::new("gram_comparison")
+        },
+        // CI smoke: a 2-service × 3-load grid under churn on the quiet
+        // LAN testbed — small enough for every push, hostile enough to
+        // exercise the fault machinery and the under-churn model fit.
+        "campaign_smoke" => CampaignSpec {
+            services: vec![ServiceSel::GramPrews, ServiceSel::Http],
+            loads: vec![3, 6, 9],
+            scenarios: vec!["churn".to_string()],
+            seeds: vec![seed],
+            duration_s: 240.0,
+            stagger_s: 4.0,
+            client_interval_s: 0.5,
+            timeout_s: 30.0,
+            silence_timeout_s: 60.0,
+            lan: true,
+            ..CampaignSpec::new("campaign_smoke")
+        },
+        other => bail!(
+            "unknown campaign preset {other:?}; available campaign presets: {}",
+            CAMPAIGN_PRESETS.join(", ")
+        ),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_count() {
+        let g = by_name("gram_comparison", 42).unwrap();
+        assert_eq!(g.num_cells(), 3 * 1 * 5 * 2);
+        assert_eq!(g.seeds, vec![42, 43]);
+        let s = by_name("campaign_smoke", 1).unwrap();
+        assert_eq!(s.num_cells(), 2 * 1 * 3 * 1);
+        assert!(s.lan);
+        assert_eq!(s.scenarios, vec!["churn".to_string()]);
+    }
+
+    #[test]
+    fn unknown_names_list_the_alternatives() {
+        let e = by_name("zzz", 1).unwrap_err().to_string();
+        for p in CAMPAIGN_PRESETS {
+            assert!(e.contains(p), "{e}");
+        }
+        let e = ServiceSel::parse("apache").unwrap_err().to_string();
+        for s in SERVICE_NAMES {
+            assert!(e.contains(s), "{e}");
+        }
+    }
+
+    #[test]
+    fn service_names_round_trip() {
+        for name in SERVICE_NAMES {
+            assert_eq!(ServiceSel::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(ServiceSel::Http.label(), "apache-cgi");
+    }
+
+    #[test]
+    fn validate_normalizes_and_rejects() {
+        let mut s = CampaignSpec::new("t");
+        s.loads = vec![8, 4, 8, 2];
+        s.scenarios.clear();
+        s.validate().unwrap();
+        assert_eq!(s.loads, vec![2, 4, 8]);
+        assert_eq!(s.scenarios, vec!["none".to_string()]);
+
+        let mut bad = CampaignSpec::new("t");
+        bad.loads = vec![0];
+        assert!(bad.validate().is_err());
+        let mut bad = CampaignSpec::new("t");
+        bad.scenarios = vec!["zzz".to_string()];
+        assert!(bad.validate().is_err());
+        let mut bad = CampaignSpec::new("t");
+        bad.seeds.clear();
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,8 +1,12 @@
-//! Command-line interface: `diperf run|analyze|predict|selftest|presets`.
+//! Command-line interface:
+//! `diperf run|campaign|analyze|predict|selftest|presets`.
 //!
 //! `run` is the paper's workflow end to end: deploy → staggered ramp →
 //! collection → reconciliation → automated analysis → figure CSVs +
-//! terminal charts.
+//! terminal charts.  `campaign` lifts that to a parallel grid of
+//! experiments with a cross-service comparison report and validated
+//! per-service performance models (`--jobs N` worker threads; see
+//! [`crate::campaign`] and `docs/CAMPAIGNS.md`).
 //!
 //! Collection defaults to **streaming** (memory O(testers + quanta),
 //! native analysis only).  Pass `--retain-samples` for the classic
@@ -38,10 +42,11 @@ pub const WINDOW_S: f64 = 160.0;
 
 const COMMANDS: &[(&str, &str)] = &[
     ("run", "run a DiPerF experiment and its automated analysis"),
+    ("campaign", "run a parallel multi-experiment sweep with cross-service report"),
     ("analyze", "re-run the analysis over a saved run directory"),
     ("predict", "fit an empirical performance model from a run"),
     ("selftest", "quick experiment + XLA-vs-native analysis check"),
-    ("presets", "list shipped experiment presets"),
+    ("presets", "list shipped experiment, campaign and scenario presets"),
     ("help", "this message"),
 ];
 
@@ -62,7 +67,8 @@ fn spec() -> Vec<Spec> {
         Spec { name: "quiet", takes_value: false, help: "suppress charts" },
         Spec { name: "retain-samples", takes_value: false, help: "keep every sample in memory (writes samples.csv, enables XLA)" },
         Spec { name: "queue", takes_value: true, help: "event queue: wheel (default) | heap" },
-        Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path" },
+        Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path (campaign: append)" },
+        Spec { name: "jobs", takes_value: true, help: "campaign worker threads (default: all cores)" },
     ]
 }
 
@@ -99,12 +105,13 @@ pub fn main(argv: &[String]) -> Result<i32> {
             Ok(0)
         }
         "presets" => {
-            for name in [
-                "prews_fig3", "ws_fig6", "ws_overload", "http_sec43",
-                "quick_http", "scalability", "churn_study", "spike_study",
-                "soak", "bench_scale",
-            ] {
+            for name in crate::experiment::presets::NAMES {
                 println!("{name}");
+            }
+            println!();
+            println!("campaigns (campaign --preset <name>):");
+            for name in crate::campaign::CAMPAIGN_PRESETS {
+                println!("  {name}");
             }
             println!();
             println!("scenarios (run --scenario <name>):");
@@ -114,6 +121,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             Ok(0)
         }
         "run" => cmd_run(&a),
+        "campaign" => cmd_campaign(&a),
         "analyze" => cmd_analyze(&a),
         "predict" => cmd_predict(&a),
         "selftest" => cmd_selftest(&a),
@@ -332,6 +340,92 @@ fn cmd_run(a: &Args) -> Result<i32> {
             "{}",
             report::ascii_chart(&out.rt_ma, 72, 6, "response time (s)")
         );
+    }
+    Ok(0)
+}
+
+/// Default campaign parallelism: every core.
+fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+fn cmd_campaign(a: &Args) -> Result<i32> {
+    use crate::campaign::{self, report as creport};
+    let seed = a.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let mut spec = if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        config::campaign_from_toml(&text)?
+    } else {
+        let preset = a.get("preset").unwrap_or("gram_comparison");
+        campaign::spec::by_name(preset, seed)?
+    };
+    // An explicit --seed rebases the seed axis wherever the spec came
+    // from: N axis slots become seed, seed+1, ... (for the shipped
+    // presets this matches what by_name(seed) builds, and it must not
+    // be silently ignored on the --config path).
+    if a.get("seed").is_some() {
+        spec.seeds = (0..spec.seeds.len() as u64).map(|i| seed + i).collect();
+    }
+    let jobs = a.get_parsed::<usize>("jobs")?.unwrap_or_else(default_jobs);
+    eprintln!(
+        "[diperf] campaign {:?}: {} cells across {} jobs",
+        spec.name,
+        spec.num_cells(),
+        jobs.max(1),
+    );
+    let c = campaign::run(&spec, jobs)?;
+
+    let default = format!("runs/campaign-{}", c.spec.name);
+    let dir_name = a.get("out").unwrap_or(&default);
+    let rd = RunDir::create(".", dir_name)?;
+    rd.write("comparison.csv", &creport::comparison_csv(&c.cells))?;
+    rd.write("load_response.csv", &creport::load_response_csv(&c.spec, &c.cells))?;
+    rd.write("model_error.csv", &creport::model_error_csv(&c.models))?;
+    rd.write("models.json", &creport::models_json(&c.spec.name, &c.models))?;
+    rd.write("summary.txt", &creport::summary(&c))?;
+
+    if let Some(path) = a.get("bench-json") {
+        let row = c.bench_row();
+        let doc = match std::fs::read_to_string(path) {
+            Ok(existing) => crate::bench_util::append_scale_rows(&existing, &[row.clone()])
+                .unwrap_or_else(|| crate::bench_util::scale_json(&[row], &[])),
+            Err(_) => crate::bench_util::scale_json(&[row], &[]),
+        };
+        std::fs::write(path, doc).with_context(|| format!("writing {path}"))?;
+    }
+
+    print!("{}", creport::summary(&c));
+    println!("campaign directory {}", rd.path.display());
+    if !a.has("quiet") {
+        // mean-rt-vs-load curve per service, from the aggregate CSV data
+        for &service in &c.spec.services {
+            let series: Vec<f64> = c
+                .spec
+                .loads
+                .iter()
+                .map(|&l| {
+                    let mine: Vec<&crate::campaign::CellOutcome> = c
+                        .cells
+                        .iter()
+                        .filter(|o| o.cell.service == service && o.cell.load == l)
+                        .collect();
+                    mine.iter().map(|o| o.out.totals[2]).sum::<f64>()
+                        / mine.len().max(1) as f64
+                })
+                .collect();
+            print!(
+                "{}",
+                report::ascii_chart(
+                    &series,
+                    72,
+                    5,
+                    &format!("{} mean rt vs load (s)", service.label()),
+                )
+            );
+        }
     }
     Ok(0)
 }

@@ -76,6 +76,14 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Coerce to bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
 }
 
 /// Parsed document: `sections[""]` holds top-level keys.
@@ -160,9 +168,8 @@ pub fn preset_by_name(name: &str, seed: u64) -> Result<ExperimentConfig> {
         "soak" => presets::soak(20, 900.0, seed),
         "bench_scale" => presets::bench_scale(1000, 300.0, seed),
         other => bail!(
-            "unknown preset {other:?} (try prews_fig3, ws_fig6, \
-             ws_overload, http_sec43, quick_http, scalability, \
-             churn_study, spike_study, soak, bench_scale)"
+            "unknown preset {other:?}; available presets: {}",
+            presets::NAMES.join(", ")
         ),
     })
 }
@@ -285,6 +292,113 @@ fn apply_service_overrides(
         }
     }
     Ok(())
+}
+
+/// Build a [`CampaignSpec`](crate::campaign::CampaignSpec) from a
+/// config file's `[campaign]` section.
+///
+/// The TOML subset has no arrays, so grid axes are comma-separated
+/// strings:
+///
+/// ```toml
+/// [campaign]
+/// preset = "gram_comparison"       # optional starting point
+/// services = "gram_prews,gram_ws"  # axis overrides
+/// loads = "4,8,16"
+/// scenarios = "none,churn"
+/// seeds = "42,43"
+/// duration_s = 300.0
+/// lan = true
+/// ```
+///
+/// With no `preset`, overrides grow from the neutral
+/// [`CampaignSpec::new`](crate::campaign::CampaignSpec::new) single-cell
+/// default.
+pub fn campaign_from_toml(text: &str) -> Result<crate::campaign::CampaignSpec> {
+    use crate::campaign::{spec as cspec, CampaignSpec, ServiceSel};
+    let doc = parse(text)?;
+    let sec = doc
+        .get("campaign")
+        .context("config has no [campaign] section")?;
+    // base of the seed axis: `[campaign] seed` wins over top-level
+    let seed = sec
+        .get("seed")
+        .or_else(|| doc.get("").and_then(|top| top.get("seed")))
+        .map(|v| v.as_u64().context("seed must be a non-negative int"))
+        .transpose()?
+        .unwrap_or(42);
+    let mut spec = match sec.get("preset") {
+        Some(v) => {
+            let name = v.as_str().context("campaign preset must be a string")?;
+            cspec::by_name(name, seed)?
+        }
+        None => CampaignSpec::new("config"),
+    };
+    if let Some(v) = sec.get("name") {
+        spec.name = v
+            .as_str()
+            .context("campaign name must be a string")?
+            .to_string();
+    }
+    if let Some(v) = sec.get("services") {
+        let s = v.as_str().context("services must be a string list")?;
+        spec.services = csv_items(s)?
+            .iter()
+            .map(|n| ServiceSel::parse(n))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = sec.get("loads") {
+        let s = v.as_str().context("loads must be a string list")?;
+        spec.loads = csv_parsed(s, "loads")?;
+    }
+    if let Some(v) = sec.get("scenarios") {
+        let s = v.as_str().context("scenarios must be a string list")?;
+        spec.scenarios = csv_items(s)?;
+    }
+    if let Some(v) = sec.get("seeds") {
+        let s = v.as_str().context("seeds must be a string list")?;
+        spec.seeds = csv_parsed(s, "seeds")?;
+    }
+    set_f64(sec, "duration_s", &mut spec.duration_s)?;
+    set_f64(sec, "stagger_s", &mut spec.stagger_s)?;
+    set_f64(sec, "client_interval_s", &mut spec.client_interval_s)?;
+    set_f64(sec, "sync_interval_s", &mut spec.sync_interval_s)?;
+    set_f64(sec, "rate_cap_per_s", &mut spec.rate_cap_per_s)?;
+    set_f64(sec, "timeout_s", &mut spec.timeout_s)?;
+    set_u32(sec, "give_up_failures", &mut spec.give_up_failures)?;
+    set_u32(sec, "eviction_failures", &mut spec.eviction_failures)?;
+    set_f64(sec, "silence_timeout_s", &mut spec.silence_timeout_s)?;
+    set_f64(sec, "grace_s", &mut spec.grace_s)?;
+    set_usize(sec, "num_quanta", &mut spec.num_quanta)?;
+    set_f64(sec, "window_s", &mut spec.window_s)?;
+    if let Some(v) = sec.get("lan") {
+        spec.lan = v.as_bool().context("lan must be a boolean")?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Split a comma-separated list, trimming items and rejecting empties.
+fn csv_items(s: &str) -> Result<Vec<String>> {
+    let items: Vec<String> = s
+        .split(',')
+        .map(|t| t.trim().to_string())
+        .filter(|t| !t.is_empty())
+        .collect();
+    if items.is_empty() {
+        bail!("empty list {s:?}");
+    }
+    Ok(items)
+}
+
+fn csv_parsed<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>> {
+    csv_items(s)?
+        .iter()
+        .map(|t| {
+            t.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("{what}: bad item {t:?}"))
+        })
+        .collect()
 }
 
 fn set_f64(m: &HashMap<String, Value>, k: &str, dst: &mut f64) -> Result<()> {
@@ -423,5 +537,46 @@ mod tests {
         let cfg = experiment_from_toml("").unwrap();
         assert_eq!(cfg.seed, 42);
         assert!(matches!(cfg.service, ServiceKind::Http(_)));
+    }
+
+    #[test]
+    fn unknown_preset_error_lists_alternatives() {
+        let e = preset_by_name("zzz", 1).unwrap_err().to_string();
+        for name in crate::experiment::presets::NAMES {
+            assert!(e.contains(name), "{e} missing {name}");
+        }
+    }
+
+    #[test]
+    fn campaign_section_parses_axes_and_overrides() {
+        use crate::campaign::ServiceSel;
+        let spec = campaign_from_toml(
+            "seed = 9\n[campaign]\npreset = \"campaign_smoke\"\n\
+             services = \"http, gram_ws\"\nloads = \"8,2,4\"\n\
+             scenarios = \"none\"\nseeds = \"1,2\"\nduration_s = 90.0\n\
+             lan = false\n",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "campaign_smoke");
+        assert_eq!(spec.services, vec![ServiceSel::Http, ServiceSel::GramWs]);
+        assert_eq!(spec.loads, vec![2, 4, 8], "sorted by validate");
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.duration_s, 90.0);
+        assert!(!spec.lan);
+        // a seed key inside [campaign] seeds the preset's axis
+        let spec = campaign_from_toml(
+            "[campaign]\nseed = 5\npreset = \"campaign_smoke\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.seeds, vec![5]);
+        // no [campaign] section is loud
+        assert!(campaign_from_toml("preset = \"quick_http\"\n").is_err());
+        // bad axis entries are loud and name the alternatives
+        let e = campaign_from_toml("[campaign]\nservices = \"apache\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("gram_prews"), "{e}");
+        assert!(campaign_from_toml("[campaign]\nloads = \"4,x\"\n").is_err());
+        assert!(campaign_from_toml("[campaign]\nlan = 3\n").is_err());
     }
 }

@@ -3,12 +3,29 @@
 
 use super::{ExperimentConfig, ServiceKind};
 use crate::cluster::TestbedParams;
+
 use crate::controller::ControllerConfig;
 use crate::scenario::{self, Scenario};
 use crate::services::gram_prews::GramPrewsParams;
 use crate::services::gram_ws::GramWsParams;
 use crate::services::http::HttpParams;
 use crate::transport::{ClientCode, TestDescription};
+
+/// Canonical list of shipped experiment presets — the single source for
+/// `diperf presets`, help output and unknown-name error messages
+/// ([`crate::config::preset_by_name`]).
+pub const NAMES: [&str; 10] = [
+    "prews_fig3",
+    "ws_fig6",
+    "ws_overload",
+    "http_sec43",
+    "quick_http",
+    "scalability",
+    "churn_study",
+    "spike_study",
+    "soak",
+    "bench_scale",
+];
 
 /// E1–E3: the §4.1 pre-WS GRAM run — 89 testers, 25 s stagger, one hour
 /// each, 1 s client interval, 5 min syncs (5800 s total).

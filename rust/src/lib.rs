@@ -58,12 +58,27 @@
 //!
 //! `rust/benches/bench_scale.rs` tracks the resulting perf trajectory
 //! in `BENCH_scale.json`; `ARCHITECTURE.md` maps the layers end to end.
+//!
+//! ## Campaigns
+//!
+//! The [`campaign`] layer turns single experiments into orchestrated
+//! sweeps: a declarative [`campaign::CampaignSpec`] expands into a
+//! `services × scenarios × loads × seeds` grid, cells execute in
+//! parallel across worker threads (`diperf campaign --jobs N`; each
+//! cell is an independent seeded engine, so the report bytes are
+//! identical for every thread count), and the merge emits
+//! cross-service comparison CSVs plus per-service
+//! [`predict::PerfModel`]s fitted on alternate load levels and scored
+//! on the held-out ones — the paper's §5 predictive-model claim as a
+//! measured number.  See `docs/CAMPAIGNS.md` and
+//! `examples/gram_comparison.rs`.
 
 #![warn(missing_docs)]
 
 pub mod analysis;
 pub mod baseline;
 pub mod bench_util;
+pub mod campaign;
 pub mod cli;
 pub mod client;
 pub mod config;

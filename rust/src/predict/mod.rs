@@ -6,10 +6,38 @@
 //! input by a resource scheduler to increase resource utilization while
 //! maintaining desired quality of service levels."
 //!
-//! [`PerfModel::fit`] builds exactly that estimator from the analysis
-//! series: weighted polynomial fits of RT(load) and TPut(load) over the
-//! observed load range, plus the capacity knee.  [`PerfModel::max_load_for_rt`]
-//! answers the scheduler's QoS question.
+//! [`PerfModel::fit`] builds exactly that estimator from one run's
+//! analysis series — weighted polynomial fits of RT(load) and
+//! TPut(load) over the observed load range, plus the capacity knee —
+//! and [`PerfModel::max_load_for_rt`] answers the scheduler's QoS
+//! question:
+//!
+//! ```
+//! use diperf::analysis::AnalysisOutput;
+//! use diperf::predict::PerfModel;
+//!
+//! // a synthetic run: rt = 0.5 + 0.1·load, tput saturates at 30
+//! let mut out = AnalysisOutput::default();
+//! for i in 0..128 {
+//!     let load = i as f64 * 0.5;
+//!     out.load.push(load);
+//!     out.rt_mean.push(0.5 + 0.1 * load);
+//!     out.tput.push(load.min(30.0) + 1.0);
+//! }
+//! let m = PerfModel::fit(&out);
+//! // fit → QoS query round trip: "rt ≤ 2 s" inverts to "load ≤ ~15"
+//! let l = m.max_load_for_rt(2.0).expect("target is reachable");
+//! assert!((l - 15.0).abs() < 2.0, "load {l}");
+//! assert!(m.predict_rt(l) <= 2.0 + 1e-9);
+//! ```
+//!
+//! The §5 accuracy story is made testable by the campaign layer
+//! ([`crate::campaign`]): [`PerfModel::fit_series`] pools the
+//! per-quantum series of *several* runs (a load ramp of grid cells),
+//! [`PerfModel::holdout_error`] scores the model on cells it never saw
+//! (MAE/RMS/relative error), and [`PerfModel::to_json`] /
+//! [`PerfModel::from_json`] persist the fitted surface so a scheduler —
+//! or a later campaign — can reuse it without refitting.
 
 use crate::analysis::{capacity_knee, AnalysisOutput};
 use crate::util::linalg;
@@ -35,23 +63,36 @@ pub struct PerfModel {
 }
 
 impl PerfModel {
-    /// Fit from analysis series (quantum-aligned load/rt/tput, weighted
-    /// by per-quantum completion counts so idle quanta don't distort).
+    /// Fit from one run's analysis series (quantum-aligned
+    /// load/rt/tput, weighted by per-quantum completion counts so idle
+    /// quanta don't distort).
     pub fn fit(out: &AnalysisOutput) -> PerfModel {
-        let load = &out.load;
+        PerfModel::fit_series(&out.load, &out.rt_mean, &out.tput)
+    }
+
+    /// Fit from raw quantum-aligned columns.  This is [`fit`](Self::fit)
+    /// with the series exposed, so several runs' series (e.g. a
+    /// campaign's load ramp of grid cells) can be concatenated into one
+    /// training set — the columns need not come from a single
+    /// [`AnalysisOutput`], only be index-aligned.
+    ///
+    /// Weighting is as in [`fit`](Self::fit): the RT surface is
+    /// weighted by per-quantum completions (`tput`), the throughput
+    /// surface uniformly over quanta with offered load.
+    pub fn fit_series(load: &[f64], rt: &[f64], tput: &[f64]) -> PerfModel {
         let (lo, hi) = load_range(load);
         let xs: Vec<f64> = load.iter().map(|&l| normalize(l, lo, hi)).collect();
-        let w: Vec<f64> = out.tput.clone();
-        let rt_coef = linalg::polyfit(&xs, &out.rt_mean, &w, MODEL_DEGREE);
+        let w: Vec<f64> = tput.to_vec();
+        let rt_coef = linalg::polyfit(&xs, rt, &w, MODEL_DEGREE);
         // throughput fit weights: any quantum with offered load
         let w_t: Vec<f64> = load.iter().map(|&l| if l > 0.0 { 1.0 } else { 0.0 }).collect();
-        let tput_coef = linalg::polyfit(&xs, &out.tput, &w_t, MODEL_DEGREE);
+        let tput_coef = linalg::polyfit(&xs, tput, &w_t, MODEL_DEGREE);
         // residuals
         let mut se = 0.0;
         let mut n = 0.0;
         for i in 0..load.len() {
             if w[i] > 0.0 {
-                let e = linalg::polyval(&rt_coef, xs[i]) - out.rt_mean[i];
+                let e = linalg::polyval(&rt_coef, xs[i]) - rt[i];
                 se += w[i] * e * e;
                 n += w[i];
             }
@@ -60,7 +101,7 @@ impl PerfModel {
             rt_coef,
             tput_coef,
             load_range: (lo, hi),
-            knee: capacity_knee(load, &out.tput, 0.05),
+            knee: capacity_knee(load, tput, 0.05),
             rt_rms: (se / n.max(1.0)).sqrt(),
         }
     }
@@ -106,16 +147,151 @@ impl PerfModel {
     /// hold-out set — used to validate models across runs (§5 future
     /// work, implemented).
     pub fn validation_error(&self, load: &[f64], rt: &[f64], w: &[f64]) -> f64 {
-        let mut err = 0.0;
+        self.holdout_error(load, rt, w).rel
+    }
+
+    /// Score RT predictions against a weighted (load, rt) hold-out set
+    /// the model was not fitted on.  Quanta with zero weight or
+    /// non-positive observed RT are skipped (idle bins carry no signal).
+    ///
+    /// This is the campaign layer's per-service model-error metric: fit
+    /// on a subset of load cells, call this with the remaining cells'
+    /// concatenated series.
+    pub fn holdout_error(&self, load: &[f64], rt: &[f64], w: &[f64]) -> HoldoutError {
+        let mut abs = 0.0;
+        let mut sq = 0.0;
+        let mut rel = 0.0;
         let mut n = 0.0;
         for i in 0..load.len() {
             if w[i] > 0.0 && rt[i] > 0.0 {
-                err += w[i] * ((self.predict_rt(load[i]) - rt[i]) / rt[i]).abs();
+                let e = self.predict_rt(load[i]) - rt[i];
+                abs += w[i] * e.abs();
+                sq += w[i] * e * e;
+                rel += w[i] * (e / rt[i]).abs();
                 n += w[i];
             }
         }
-        err / n.max(1.0)
+        HoldoutError {
+            mae_s: abs / n.max(1.0),
+            rms_s: (sq / n.max(1.0)).sqrt(),
+            rel: rel / n.max(1.0),
+            weight: n,
+        }
     }
+
+    /// Serialize the fitted model as one JSON object, parseable back by
+    /// [`from_json`](Self::from_json).  Coefficients round-trip exactly
+    /// (shortest-representation float formatting).
+    ///
+    /// ```
+    /// use diperf::analysis::AnalysisOutput;
+    /// use diperf::predict::PerfModel;
+    ///
+    /// let mut out = AnalysisOutput::default();
+    /// for i in 0..64 {
+    ///     let load = i as f64;
+    ///     out.load.push(load);
+    ///     out.rt_mean.push(1.0 + 0.05 * load);
+    ///     out.tput.push(load.min(20.0) + 1.0);
+    /// }
+    /// let m = PerfModel::fit(&out);
+    /// let back = PerfModel::from_json(&m.to_json()).unwrap();
+    /// assert_eq!(m.rt_coef, back.rt_coef);
+    /// assert_eq!(m.load_range, back.load_range);
+    /// assert_eq!(m.max_load_for_rt(2.0), back.max_load_for_rt(2.0));
+    /// ```
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rt_coef\":{},\"tput_coef\":{},\"load_min\":{:?},\
+             \"load_max\":{:?},\"knee\":{},\"rt_rms\":{:?}}}",
+            json_arr_str(&self.rt_coef),
+            json_arr_str(&self.tput_coef),
+            self.load_range.0,
+            self.load_range.1,
+            self.knee.map_or("null".to_string(), |k| format!("{k:?}")),
+            self.rt_rms,
+        )
+    }
+
+    /// Parse a model serialized by [`to_json`](Self::to_json).
+    pub fn from_json(doc: &str) -> Result<PerfModel, String> {
+        Ok(PerfModel {
+            rt_coef: json_arr(doc, "rt_coef")?,
+            tput_coef: json_arr(doc, "tput_coef")?,
+            load_range: (json_num(doc, "load_min")?, json_num(doc, "load_max")?),
+            knee: json_opt_num(doc, "knee")?,
+            rt_rms: json_num(doc, "rt_rms")?,
+        })
+    }
+}
+
+/// Weighted hold-out prediction error (the campaign report's
+/// model-accuracy row).  All three metrics weight each hold-out quantum
+/// by its completion count, so busy quanta dominate as they do in the
+/// fit itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HoldoutError {
+    /// Mean absolute RT error (seconds).
+    pub mae_s: f64,
+    /// Root-mean-square RT error (seconds).
+    pub rms_s: f64,
+    /// Mean relative RT error (|err| / observed rt).
+    pub rel: f64,
+    /// Total weight scored (0.0 means the hold-out set was empty).
+    pub weight: f64,
+}
+
+fn json_arr_str(xs: &[f64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("{x:?}")).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn json_field<'a>(doc: &'a str, key: &str) -> Result<&'a str, String> {
+    let pat = format!("\"{key}\":");
+    let i = doc
+        .find(&pat)
+        .ok_or_else(|| format!("missing field {key:?}"))?;
+    Ok(doc[i + pat.len()..].trim_start())
+}
+
+fn json_num(doc: &str, key: &str) -> Result<f64, String> {
+    let s = json_field(doc, key)?;
+    let end = s
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(s.len());
+    s[..end]
+        .parse()
+        .map_err(|_| format!("field {key:?}: bad number {:?}", &s[..end]))
+}
+
+fn json_opt_num(doc: &str, key: &str) -> Result<Option<f64>, String> {
+    let s = json_field(doc, key)?;
+    if s.starts_with("null") {
+        Ok(None)
+    } else {
+        json_num(doc, key).map(Some)
+    }
+}
+
+fn json_arr(doc: &str, key: &str) -> Result<Vec<f64>, String> {
+    let s = json_field(doc, key)?;
+    let s = s
+        .strip_prefix('[')
+        .ok_or_else(|| format!("field {key:?}: expected an array"))?;
+    let end = s
+        .find(']')
+        .ok_or_else(|| format!("field {key:?}: unterminated array"))?;
+    let body = s[..end].trim();
+    if body.is_empty() {
+        return Ok(Vec::new());
+    }
+    body.split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|_| format!("field {key:?}: bad number {t:?}"))
+        })
+        .collect()
 }
 
 fn load_range(load: &[f64]) -> (f64, f64) {
@@ -192,5 +368,59 @@ mod tests {
         let w = vec![1.0; s.load.len()];
         let e = m.validation_error(&s.load, &s.rt_mean, &w);
         assert!(e < 0.05, "validation error {e}");
+    }
+
+    #[test]
+    fn fit_series_equals_fit() {
+        let s = synthetic();
+        let a = PerfModel::fit(&s);
+        let b = PerfModel::fit_series(&s.load, &s.rt_mean, &s.tput);
+        assert_eq!(a.rt_coef, b.rt_coef);
+        assert_eq!(a.tput_coef, b.tput_coef);
+        assert_eq!(a.load_range, b.load_range);
+        assert_eq!(a.knee, b.knee);
+        assert_eq!(a.rt_rms, b.rt_rms);
+    }
+
+    #[test]
+    fn holdout_error_metrics_are_consistent() {
+        let s = synthetic();
+        let m = PerfModel::fit(&s);
+        let w = vec![1.0; s.load.len()];
+        let e = m.holdout_error(&s.load, &s.rt_mean, &w);
+        assert!(e.weight > 0.0);
+        assert!(e.mae_s <= e.rms_s + 1e-12, "mae {} rms {}", e.mae_s, e.rms_s);
+        assert!(e.mae_s < 0.1, "mae {}", e.mae_s);
+        // offset predictions by a constant: mae grows by about that much
+        let mut worse = m.clone();
+        worse.rt_coef[0] += 1.0;
+        let we = worse.holdout_error(&s.load, &s.rt_mean, &w);
+        assert!(we.mae_s > 0.8, "mae {}", we.mae_s);
+        // empty hold-out is all zeros, not NaN
+        let empty = m.holdout_error(&[], &[], &[]);
+        assert_eq!(empty, HoldoutError::default());
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let m = PerfModel::fit(&synthetic());
+        let doc = m.to_json();
+        let back = PerfModel::from_json(&doc).unwrap();
+        assert_eq!(m.rt_coef, back.rt_coef);
+        assert_eq!(m.tput_coef, back.tput_coef);
+        assert_eq!(m.load_range, back.load_range);
+        assert_eq!(m.knee, back.knee);
+        assert_eq!(m.rt_rms, back.rt_rms);
+        // a model without a knee serializes null and parses back
+        let mut no_knee = m.clone();
+        no_knee.knee = None;
+        let back = PerfModel::from_json(&no_knee.to_json()).unwrap();
+        assert_eq!(back.knee, None);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(PerfModel::from_json("{}").is_err());
+        assert!(PerfModel::from_json("{\"rt_coef\":[1,oops]}").is_err());
     }
 }

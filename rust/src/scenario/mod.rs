@@ -593,8 +593,8 @@ pub fn by_name(name: &str, duration_s: f64) -> Result<Scenario, String> {
         },
         other => {
             return Err(format!(
-                "unknown scenario {other:?} (try none, churn, spike, soak, \
-                 partition, flaky-service)"
+                "unknown scenario {other:?}; available scenarios: {}",
+                NAMES.join(", ")
             ))
         }
     })

@@ -1,0 +1,154 @@
+//! Campaign determinism suite: the byte-identity contract under
+//! parallelism, model-validation determinism per seed, and the
+//! end-to-end held-out accuracy story on a grid that actually
+//! saturates its service.
+
+use diperf::campaign::{self, report, CampaignSpec, ServiceSel};
+use diperf::config;
+
+/// A small hostile grid: two services, three load levels, churn, LAN.
+fn small_spec() -> CampaignSpec {
+    let mut s = campaign::spec::by_name("campaign_smoke", 7).unwrap();
+    s.duration_s = 120.0;
+    s.validate().unwrap();
+    s
+}
+
+#[test]
+fn jobs_do_not_change_the_report_bytes() {
+    let spec = small_spec();
+    let serial = campaign::run(&spec, 1).unwrap();
+    let parallel = campaign::run(&spec, 8).unwrap();
+    assert_eq!(serial.cells.len(), spec.num_cells());
+    assert_eq!(
+        report::comparison_csv(&serial.cells),
+        report::comparison_csv(&parallel.cells),
+        "comparison CSV must be byte-identical across job counts"
+    );
+    assert_eq!(
+        report::load_response_csv(&serial.spec, &serial.cells),
+        report::load_response_csv(&parallel.spec, &parallel.cells),
+    );
+    assert_eq!(
+        report::model_error_csv(&serial.models),
+        report::model_error_csv(&parallel.models),
+        "model-error CSV must be byte-identical across job counts"
+    );
+    assert_eq!(
+        report::models_json(&serial.spec.name, &serial.models),
+        report::models_json(&parallel.spec.name, &parallel.models),
+        "serialized models must be byte-identical across job counts"
+    );
+}
+
+#[test]
+fn model_error_is_deterministic_per_seed_and_moves_with_it() {
+    let spec = small_spec();
+    let a = campaign::run(&spec, 3).unwrap();
+    let b = campaign::run(&spec, 2).unwrap();
+    assert!(!a.models.is_empty());
+    for (x, y) in a.models.iter().zip(&b.models) {
+        assert_eq!(x.service, y.service);
+        assert_eq!(x.err.mae_s.to_bits(), y.err.mae_s.to_bits());
+        assert_eq!(x.err.rms_s.to_bits(), y.err.rms_s.to_bits());
+        assert_eq!(x.err.rel.to_bits(), y.err.rel.to_bits());
+        assert_eq!(x.model.rt_coef, y.model.rt_coef);
+    }
+    // a different seed axis is a different (but still deterministic)
+    // campaign
+    let mut other = spec.clone();
+    other.seeds = vec![8];
+    let c = campaign::run(&other, 3).unwrap();
+    assert_ne!(
+        report::comparison_csv(&a.cells),
+        report::comparison_csv(&c.cells),
+        "seed must matter"
+    );
+}
+
+#[test]
+fn campaign_reports_per_service_holdout_error() {
+    let spec = small_spec();
+    let c = campaign::run(&spec, 4).unwrap();
+    // both services got a validated model: fit on {3,9}, scored on {6}
+    assert_eq!(c.models.len(), 2);
+    for m in &c.models {
+        assert_eq!(m.train_loads, vec![3, 9]);
+        assert_eq!(m.holdout_loads, vec![6]);
+        assert!(m.err.weight > 0.0, "{}: empty hold-out", m.service);
+        assert!(
+            m.err.mae_s.is_finite() && m.err.rms_s.is_finite(),
+            "{}: non-finite error",
+            m.service
+        );
+    }
+    // the summary carries the per-service error lines
+    let s = report::summary(&c);
+    for m in &c.models {
+        assert!(s.contains(m.service), "summary misses {}", m.service);
+    }
+    assert!(s.contains("held-out rt MAE"));
+}
+
+#[test]
+fn saturating_http_grid_validates_with_a_knee() {
+    // Apache/CGI with default calibration CPU-saturates well inside a
+    // 20-tester ramp at 5 req/s each; the model fitted on alternate
+    // load levels must predict the held-out levels' RT within a loose
+    // bound.  (The exact-knee agreement bound lives in the
+    // synthetic-service unit test, campaign::tests::
+    // holdout_validation_on_a_known_knee, where ground truth is known
+    // by construction.)
+    let mut spec = CampaignSpec::new("http_knee");
+    spec.services = vec![ServiceSel::Http];
+    spec.loads = vec![4, 8, 12, 16, 20];
+    spec.seeds = vec![11];
+    spec.duration_s = 180.0;
+    spec.stagger_s = 3.0;
+    spec.client_interval_s = 0.2;
+    spec.lan = true;
+    spec.validate().unwrap();
+    let c = campaign::run(&spec, 4).unwrap();
+    assert_eq!(c.models.len(), 1);
+    let m = &c.models[0];
+    assert!(m.err.weight > 0.0);
+    assert!(
+        m.err.rel < 0.6,
+        "held-out relative RT error too large: {}",
+        m.err.rel
+    );
+    // models serialize and come back bit-exact
+    let back =
+        diperf::predict::PerfModel::from_json(&m.model.to_json()).unwrap();
+    assert_eq!(m.model.rt_coef, back.rt_coef);
+    assert_eq!(m.model.knee, back.knee);
+}
+
+#[test]
+fn campaign_toml_round_trips_through_the_runner() {
+    let spec = config::campaign_from_toml(
+        "[campaign]\npreset = \"campaign_smoke\"\nloads = \"2,4\"\n\
+         duration_s = 60.0\nscenarios = \"none\"\n",
+    )
+    .unwrap();
+    assert_eq!(spec.loads, vec![2, 4]);
+    let c = campaign::run(&spec, 2).unwrap();
+    assert_eq!(c.cells.len(), 2 * 2);
+    let csv = report::comparison_csv(&c.cells);
+    // grid order: gram_prews rows before http rows, loads ascending
+    let lines: Vec<&str> = csv.trim().lines().collect();
+    assert_eq!(lines.len(), 1 + 4);
+    assert!(lines[1].starts_with("gt3.2-prews-gram,none,2,"));
+    assert!(lines[2].starts_with("gt3.2-prews-gram,none,4,"));
+    assert!(lines[3].starts_with("apache-cgi,none,2,"));
+}
+
+#[test]
+fn unknown_axis_names_fail_loudly_with_the_alternatives() {
+    let e = campaign::spec::by_name("zzz", 1).unwrap_err().to_string();
+    assert!(e.contains("gram_comparison") && e.contains("campaign_smoke"), "{e}");
+    let e = config::preset_by_name("zzz", 1).unwrap_err().to_string();
+    assert!(e.contains("quick_http") && e.contains("bench_scale"), "{e}");
+    let e = diperf::scenario::by_name("zzz", 60.0).unwrap_err();
+    assert!(e.contains("churn") && e.contains("flaky-service"), "{e}");
+}
