@@ -241,6 +241,18 @@ pub fn append_scale_rows(doc: &str, rows: &[ScaleRow]) -> Option<String> {
     Some(format!("{}{}{}", &doc[..body_end], insert, &doc[close..]))
 }
 
+/// Append rows to the `BENCH_scale.json` document at `path`, creating
+/// (or wholesale rewriting) a fresh document when the file is missing
+/// or unrecognizable — the shared tail of every `--bench-json` flag.
+pub fn append_or_init(path: &str, rows: &[ScaleRow]) -> std::io::Result<()> {
+    let doc = match std::fs::read_to_string(path) {
+        Ok(existing) => append_scale_rows(&existing, rows)
+            .unwrap_or_else(|| scale_json(rows, &[])),
+        Err(_) => scale_json(rows, &[]),
+    };
+    std::fs::write(path, doc)
+}
+
 /// Overwrite one top-level summary field's value in an existing
 /// `BENCH_scale.json` document, whatever it currently holds (`null` or
 /// a previous measurement).  `value` must be already-rendered JSON.
@@ -417,6 +429,36 @@ mod tests {
         assert_eq!(filled.matches(']').count(), 1);
         // unrecognizable docs are a None, not a panic
         assert!(append_scale_rows("{}", &[row]).is_none());
+    }
+
+    #[test]
+    fn append_or_init_creates_then_grows() {
+        let path = std::env::temp_dir().join(format!(
+            "diperf_bench_append_{}.json",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap();
+        std::fs::remove_file(&path).ok();
+        let row = ScaleRow {
+            label: "live-2-agent_throughput".into(),
+            testers: 2,
+            queue: "live",
+            collection: "stream",
+            virtual_s: 10.0,
+            wall_s: 11.0,
+            events: 100,
+            events_per_sec: 9.1,
+            peak_pending: 0,
+            peak_rss_kb: 0,
+            samples: 90,
+        };
+        append_or_init(path_s, std::slice::from_ref(&row)).unwrap();
+        let once = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(once.matches("\"label\"").count(), 1);
+        append_or_init(path_s, std::slice::from_ref(&row)).unwrap();
+        let twice = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(twice.matches("\"label\"").count(), 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

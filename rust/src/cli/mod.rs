@@ -42,6 +42,7 @@ pub const WINDOW_S: f64 = 160.0;
 
 const COMMANDS: &[(&str, &str)] = &[
     ("run", "run a DiPerF experiment and its automated analysis"),
+    ("live", "run the harness over real sockets against a real target"),
     ("campaign", "run a parallel multi-experiment sweep with cross-service report"),
     ("analyze", "re-run the analysis over a saved run directory"),
     ("predict", "fit an empirical performance model from a run"),
@@ -69,6 +70,10 @@ fn spec() -> Vec<Spec> {
         Spec { name: "queue", takes_value: true, help: "event queue: wheel (default) | heap" },
         Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path (campaign: append)" },
         Spec { name: "jobs", takes_value: true, help: "campaign worker threads (default: all cores)" },
+        Spec { name: "agents", takes_value: true, help: "live agent thread count override" },
+        Spec { name: "target", takes_value: true, help: "live in-process target kind: ps | http" },
+        Spec { name: "target-addr", takes_value: true, help: "live external endpoint (host:port); disables crossval" },
+        Spec { name: "crossval-bound", takes_value: true, help: "fail if live-vs-sim throughput divergence exceeds this fraction" },
     ]
 }
 
@@ -118,9 +123,20 @@ pub fn main(argv: &[String]) -> Result<i32> {
             for name in crate::scenario::NAMES {
                 println!("  {name}");
             }
+            println!();
+            println!("live presets (live --preset <name>):");
+            for name in crate::live::NAMES {
+                println!("  {name}");
+            }
+            println!();
+            println!("live targets (live --target <name>):");
+            for name in crate::live::TARGET_NAMES {
+                println!("  {name}");
+            }
             Ok(0)
         }
         "run" => cmd_run(&a),
+        "live" => cmd_live(&a),
         "campaign" => cmd_campaign(&a),
         "analyze" => cmd_analyze(&a),
         "predict" => cmd_predict(&a),
@@ -344,6 +360,170 @@ fn cmd_run(a: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Build the live configuration from flags (and `--config`'s `[live]`
+/// section when given).
+fn build_live_config(a: &Args) -> Result<(crate::live::LiveConfig, String)> {
+    use crate::live::{self, TargetSel};
+    let seed = a.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let (mut cfg, name) = if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        (config::live_from_toml(&text)?, "config".to_string())
+    } else {
+        let preset = a.get("preset").unwrap_or("live_smoke");
+        (live::by_name(preset, seed)?, preset.to_string())
+    };
+    if a.get("seed").is_some() {
+        cfg.seed = seed;
+    }
+    if let Some(n) = a.get_parsed::<usize>("agents")? {
+        cfg.agents = n;
+    }
+    if let Some(d) = a.get_parsed::<f64>("duration")? {
+        cfg.controller.desc.duration_s = d;
+    }
+    if let Some(t) = a.get("target") {
+        cfg.target = TargetSel::InProcess(live::target_by_name(t)?);
+    }
+    if let Some(addr) = a.get("target-addr") {
+        cfg.target = TargetSel::External(addr.to_string());
+    }
+    live::validate(&cfg)?;
+    Ok((cfg, name))
+}
+
+fn live_summary(
+    r: &crate::live::LiveResult,
+    cv: Option<&crate::live::crossval::CrossVal>,
+) -> String {
+    let agg = &r.stream;
+    let failed = (agg.binned.total_valid - agg.binned.total_ok) as u64;
+    let mut s = format!(
+        "target            {}\n\
+         agents            {} connected / {} requested\n\
+         wall time         {:.1} s\n\
+         samples           {} ({} ok / {failed} failed, {} unsynced dropped)\n\
+         agent throughput  {:.1} samples/s/agent\n\
+         controller ingest {:.0} frames/s ({} frames)\n\
+         rt quantiles      p50 {:.4} s / p90 {:.4} s / p99 {:.4} s (P² online)\n",
+        r.target_label,
+        r.connected,
+        r.data.testers.len(),
+        r.wall_s,
+        r.samples(),
+        agg.binned.total_ok as u64,
+        r.data.dropped_unsynced,
+        r.agent_throughput(),
+        r.ingest_per_s(),
+        r.frames,
+        agg.rt_p50.value(),
+        agg.rt_p90.value(),
+        agg.rt_p99.value(),
+    );
+    if let Some(st) = &r.service_stats {
+        s.push_str(&format!(
+            "target counters   {} submitted / {} ok / {} denied / {} errored\n",
+            st.submitted, st.completed, st.denied, st.errored,
+        ));
+    }
+    let syncs: u64 = r.agent_reports.iter().map(|a| a.syncs).sum();
+    let dropped = r
+        .agent_reports
+        .iter()
+        .filter(|a| a.session_dropped)
+        .count();
+    s.push_str(&format!(
+        "sync exchanges    {syncs} across the pool ({dropped} sessions dropped)\n"
+    ));
+    if let Some(cv) = cv {
+        s.push_str(&crate::live::crossval::summary(cv));
+    }
+    s
+}
+
+fn cmd_live(a: &Args) -> Result<i32> {
+    use crate::live;
+    let (cfg, name) = build_live_config(a)?;
+    eprintln!(
+        "[diperf] live {name:?}: {} agents x {:.0}s against {} \
+         (seed {}, real sockets)",
+        cfg.agents,
+        cfg.controller.desc.duration_s,
+        cfg.target.label(),
+        cfg.seed,
+    );
+    let r = live::run_live(&cfg)?;
+    anyhow::ensure!(
+        r.samples() > 0,
+        "live run produced no reconciled samples ({} agents connected)",
+        r.connected
+    );
+    let out = analysis::output_from_binned(&r.stream.binned);
+    let churn = analysis::churn_from_stream(&r.stream, &r.data.testers);
+    let cv = live::crossval::compare(&cfg, &r)?;
+
+    let default = format!("runs/live-{}-{}", name, cfg.seed);
+    let dir_name = a.get("out").unwrap_or(&default);
+    let rd = RunDir::create(".", dir_name)?;
+    rd.write_figures("fig", &out, &r.data, r.grid.t0, r.grid.quantum)?;
+    rd.write_churn("fig", &churn, r.grid.t0, r.grid.quantum)?;
+    if let Some(cv) = &cv {
+        rd.write("crossval.csv", &live::crossval::csv(cv))?;
+        rd.write("crossval_curve.csv", &live::crossval::curve_csv(cv))?;
+    }
+    let summary = live_summary(&r, cv.as_ref());
+    rd.write("summary.txt", &summary)?;
+
+    if let Some(path) = a.get("bench-json") {
+        let row = crate::bench_util::ScaleRow {
+            label: format!("{}-{}-agent_throughput", name, cfg.agents),
+            testers: cfg.agents,
+            queue: "live",
+            collection: "stream",
+            virtual_s: cfg.controller.desc.duration_s,
+            wall_s: r.wall_s,
+            events: r.frames,
+            events_per_sec: r.ingest_per_s(),
+            peak_pending: 0,
+            peak_rss_kb: crate::bench_util::peak_rss_kb(),
+            samples: r.samples(),
+        };
+        crate::bench_util::append_or_init(path, &[row])
+            .with_context(|| format!("writing {path}"))?;
+    }
+
+    print!("{summary}");
+    println!("run directory     {}", rd.path.display());
+    if !a.has("quiet") {
+        print!(
+            "{}",
+            report::ascii_chart(&out.load_ma, 72, 6, "offered load")
+        );
+        print!(
+            "{}",
+            report::ascii_chart(&out.tput_ma, 72, 6, "throughput (jobs/quantum)")
+        );
+        print!(
+            "{}",
+            report::ascii_chart(&out.rt_ma, 72, 6, "response time (s)")
+        );
+    }
+    if let (Some(cv), Some(bound)) =
+        (cv.as_ref(), a.get_parsed::<f64>("crossval-bound")?)
+    {
+        anyhow::ensure!(
+            cv.divergence <= bound,
+            "sim-vs-live throughput divergence {:.3} exceeds the bound {bound}",
+            cv.divergence
+        );
+        println!(
+            "crossval          divergence {:.3} within bound {bound}",
+            cv.divergence
+        );
+    }
+    Ok(0)
+}
+
 /// Default campaign parallelism: every core.
 fn default_jobs() -> usize {
     std::thread::available_parallelism()
@@ -388,13 +568,8 @@ fn cmd_campaign(a: &Args) -> Result<i32> {
     rd.write("summary.txt", &creport::summary(&c))?;
 
     if let Some(path) = a.get("bench-json") {
-        let row = c.bench_row();
-        let doc = match std::fs::read_to_string(path) {
-            Ok(existing) => crate::bench_util::append_scale_rows(&existing, &[row.clone()])
-                .unwrap_or_else(|| crate::bench_util::scale_json(&[row], &[])),
-            Err(_) => crate::bench_util::scale_json(&[row], &[]),
-        };
-        std::fs::write(path, doc).with_context(|| format!("writing {path}"))?;
+        crate::bench_util::append_or_init(path, &[c.bench_row()])
+            .with_context(|| format!("writing {path}"))?;
     }
 
     print!("{}", creport::summary(&c));
@@ -584,6 +759,35 @@ mod tests {
         )
         .unwrap();
         assert!(build_config(&a).is_err());
+    }
+
+    #[test]
+    fn build_live_config_applies_overrides() {
+        let a = Args::parse(
+            &sv(&["live", "--preset", "live_ps", "--agents", "3",
+                  "--duration", "4", "--seed", "9"]),
+            &spec(),
+        )
+        .unwrap();
+        let (cfg, name) = build_live_config(&a).unwrap();
+        assert_eq!(name, "live_ps");
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.agents, 3);
+        assert_eq!(cfg.controller.desc.duration_s, 4.0);
+
+        // unknown live presets and targets fail listing alternatives
+        let a = Args::parse(&sv(&["live", "--preset", "zzz"]), &spec()).unwrap();
+        let e = build_live_config(&a).unwrap_err().to_string();
+        assert!(e.contains("live_smoke"), "{e}");
+        let a = Args::parse(&sv(&["live", "--target", "apache"]), &spec())
+            .unwrap();
+        assert!(build_live_config(&a).is_err());
+
+        // --target-addr switches to an external endpoint
+        let a = Args::parse(&sv(&["live", "--target-addr", "h:1"]), &spec())
+            .unwrap();
+        let (cfg, _) = build_live_config(&a).unwrap();
+        assert!(matches!(cfg.target, crate::live::TargetSel::External(_)));
     }
 
     #[test]

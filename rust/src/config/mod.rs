@@ -378,6 +378,65 @@ pub fn campaign_from_toml(text: &str) -> Result<crate::campaign::CampaignSpec> {
     Ok(spec)
 }
 
+/// Build a [`LiveConfig`](crate::live::LiveConfig) from a config file's
+/// `[live]` section.
+///
+/// ```toml
+/// [live]
+/// preset = "live_smoke"   # optional starting point
+/// agents = 16
+/// duration_s = 20.0
+/// client_interval_s = 0.1
+/// target = "ps"           # in-process target kind (ps | http)
+/// # target_addr = "svc.example.org:8080"   # external endpoint instead
+/// skew_max_s = 500.0
+/// ```
+pub fn live_from_toml(text: &str) -> Result<crate::live::LiveConfig> {
+    use crate::live::{self, TargetSel};
+    let doc = parse(text)?;
+    let sec = doc.get("live").context("config has no [live] section")?;
+    let seed = sec
+        .get("seed")
+        .or_else(|| doc.get("").and_then(|top| top.get("seed")))
+        .map(|v| v.as_u64().context("seed must be a non-negative int"))
+        .transpose()?
+        .unwrap_or(42);
+    let preset = sec
+        .get("preset")
+        .map(|v| v.as_str().context("live preset must be a string"))
+        .transpose()?
+        .unwrap_or("live_smoke");
+    let mut cfg = live::by_name(preset, seed)?;
+    set_usize(sec, "agents", &mut cfg.agents)?;
+    {
+        let d = &mut cfg.controller.desc;
+        set_f64(sec, "duration_s", &mut d.duration_s)?;
+        set_f64(sec, "client_interval_s", &mut d.client_interval_s)?;
+        set_f64(sec, "sync_interval_s", &mut d.sync_interval_s)?;
+        set_f64(sec, "rate_cap_per_s", &mut d.rate_cap_per_s)?;
+        set_f64(sec, "timeout_s", &mut d.timeout_s)?;
+        set_u32(sec, "give_up_failures", &mut d.give_up_failures)?;
+    }
+    set_f64(sec, "stagger_s", &mut cfg.controller.stagger_s)?;
+    set_u32(sec, "eviction_failures", &mut cfg.controller.eviction_failures)?;
+    set_f64(sec, "silence_timeout_s", &mut cfg.controller.silence_timeout_s)?;
+    set_f64(sec, "grace_s", &mut cfg.grace_s)?;
+    set_usize(sec, "num_quanta", &mut cfg.num_quanta)?;
+    set_f64(sec, "window_s", &mut cfg.window_s)?;
+    set_f64(sec, "skew_max_s", &mut cfg.skew_max_s)?;
+    set_f64(sec, "drift_max", &mut cfg.drift_max)?;
+    if let Some(v) = sec.get("target") {
+        let name = v.as_str().context("target must be a string")?;
+        cfg.target = TargetSel::InProcess(live::target_by_name(name)?);
+    }
+    if let Some(v) = sec.get("target_addr") {
+        let addr = v.as_str().context("target_addr must be a string")?;
+        cfg.target = TargetSel::External(addr.to_string());
+    }
+    live::validate(&cfg)?;
+    Ok(cfg)
+}
+
 /// Split a comma-separated list, trimming items and rejecting empties.
 fn csv_items(s: &str) -> Result<Vec<String>> {
     let items: Vec<String> = s
@@ -545,6 +604,39 @@ mod tests {
         for name in crate::experiment::presets::NAMES {
             assert!(e.contains(name), "{e} missing {name}");
         }
+    }
+
+    #[test]
+    fn live_section_parses_and_overrides() {
+        use crate::live::TargetSel;
+        let cfg = live_from_toml(
+            "seed = 3\n[live]\npreset = \"live_smoke\"\nagents = 16\n\
+             duration_s = 20.0\ntarget = \"ps\"\nskew_max_s = 500.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.agents, 16);
+        assert_eq!(cfg.controller.desc.duration_s, 20.0);
+        assert_eq!(cfg.skew_max_s, 500.0);
+        match &cfg.target {
+            TargetSel::InProcess(k) => assert_eq!(k.label(), "ps"),
+            other => panic!("wrong target {other:?}"),
+        }
+        // target_addr wins over target and becomes external
+        let cfg = live_from_toml(
+            "[live]\ntarget = \"http\"\ntarget_addr = \"svc:8080\"\n",
+        )
+        .unwrap();
+        assert!(matches!(cfg.target, TargetSel::External(ref a) if a == "svc:8080"));
+        // loud failures: missing section, bad preset, bad target name,
+        // degenerate values
+        assert!(live_from_toml("preset = \"quick_http\"\n").is_err());
+        assert!(live_from_toml("[live]\npreset = \"zzz\"\n").is_err());
+        let e = live_from_toml("[live]\ntarget = \"apache\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ps") && e.contains("http"), "{e}");
+        assert!(live_from_toml("[live]\nagents = 0\n").is_err());
     }
 
     #[test]

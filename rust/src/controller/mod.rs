@@ -304,6 +304,24 @@ impl Controller {
         }
     }
 
+    /// The transport session to a tester disconnected (live harness:
+    /// TCP reset/EOF; sim: the world observed the teardown).  Per §3
+    /// the controller drops that agent's load immediately: the session
+    /// is deleted from the reporter list without waiting for the
+    /// silence timeout.  Returns true when a running session was
+    /// actually dropped (a Done/Evicted slot is left untouched, so a
+    /// clean Goodbye followed by the socket closing is not an eviction).
+    pub fn session_dropped(&mut self, t: TesterId, now: f64) -> bool {
+        let s = &mut self.slots[t.index()];
+        if s.state == SessionState::Running {
+            s.state = SessionState::Evicted;
+            s.stopped_at = now;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Periodic liveness sweep; evicts silent testers.
     pub fn check_liveness(&mut self, now: f64) -> Vec<CtrlAction> {
         let mut actions = Vec::new();
@@ -473,6 +491,29 @@ mod tests {
         // tester 0 silent since t=0 -> evicted; tester 1 heard at 500
         assert_eq!(actions, vec![CtrlAction::Evict(TesterId(0))]);
         assert_eq!(c.live_testers(), 1);
+    }
+
+    #[test]
+    fn session_drop_evicts_running_but_not_done() {
+        let mut c = controller(2);
+        for i in 0..2u32 {
+            c.deploy_finished(TesterId(i), true, 0.0);
+            c.mark_started(TesterId(i), 0.0);
+        }
+        // tester 0's session dies mid-run: load dropped immediately
+        assert!(c.session_dropped(TesterId(0), 50.0));
+        assert_eq!(c.live_testers(), 1);
+        assert!(c.is_evicted(TesterId(0)));
+        // its late reports are ignored (deleted from the reporter list)
+        assert!(c.on_msg(51.0, TesterId(0), sample(0, 0, true, 51.0)).is_none());
+        // tester 1 says Goodbye, then its socket closes: not an eviction
+        c.on_msg(60.0, TesterId(1), TesterMsg::Goodbye(GoodbyeReason::Finished));
+        assert!(!c.session_dropped(TesterId(1), 60.1));
+        let rd = c.finalize(100.0);
+        assert!(rd.testers[0].evicted);
+        assert_eq!(rd.testers[0].stopped_at, 50.0);
+        assert!(!rd.testers[1].evicted);
+        assert_eq!(rd.testers[0].samples, 0);
     }
 
     #[test]

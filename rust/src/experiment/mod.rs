@@ -276,6 +276,13 @@ struct World {
     /// down (a restart applies only if its token still matches; `None`
     /// after a permanent testbed failure so nothing revives it).
     crash_token: Vec<Option<u64>>,
+    /// Controller-side session teardown per tester (set on eviction).
+    /// Transport sessions are connection-oriented: even when the Stop
+    /// payload is lost, the teardown itself is observable — the
+    /// tester's next *delivered* write hits a closed session (TCP RST /
+    /// dead ssh channel) and the tester stops issuing clients on the
+    /// spot (§3).  A Hello opens a fresh session and clears the flag.
+    session_closed: Vec<bool>,
     /// Active weather spells per tester node (token -> patch).  A node
     /// under several overlapping spells gets their *combined* effect;
     /// each clear removes only its own spell.
@@ -310,6 +317,17 @@ impl World {
             return;
         }
         if self.net.lost(node, self.bed.controller, &mut self.rng_net) {
+            return;
+        }
+        if matches!(msg, TesterMsg::Hello) {
+            // re-registration rides a fresh connection
+            self.session_closed[i] = false;
+        } else if self.session_closed[i] {
+            // The controller tore this session down (eviction).  The
+            // write that just got through is answered with a reset, and
+            // the tester stops issuing clients immediately — §3's
+            // "an unmonitored client never loads the service".
+            self.testers[i].session_lost();
             return;
         }
         let lat = self
@@ -786,6 +804,9 @@ impl World {
                     msg,
                 );
                 if let Some(CtrlAction::Evict(t)) = action {
+                    // eviction tears the session down; the Stop payload
+                    // may still be lost, but the teardown is observable
+                    self.session_closed[t.index()] = true;
                     self.send_to_tester(t.index(), CtrlMsg::Stop);
                 }
             }
@@ -802,6 +823,7 @@ impl World {
                 let now = self.eng.now().as_secs_f64();
                 for a in self.controller.check_liveness(now) {
                     let CtrlAction::Evict(t) = a;
+                    self.session_closed[t.index()] = true;
                     self.send_to_tester(t.index(), CtrlMsg::Stop);
                 }
                 // Tester-side re-registration loop: a running tester the
@@ -890,6 +912,7 @@ pub fn run_experiment_opts(
         svc_wake: None,
         faults: Vec::new(),
         crash_token: vec![None; n],
+        session_closed: vec![false; n],
         weather_spells: vec![Vec::new(); n],
         degrade_spells: Vec::new(),
         bed,
@@ -1251,6 +1274,37 @@ mod tests {
             .filter(|s| s.outcome.ok() && s.t_end > 80.0)
             .count();
         assert!(after_ok > 0, "no recovery after the partition lifted");
+    }
+
+    #[test]
+    fn dropped_session_stops_tester_even_when_stop_is_lost() {
+        // §3 regression: the controller evicts a partitioned-but-alive
+        // tester for silence; the Stop message is lost inside the
+        // partition.  The tester must still stop issuing clients the
+        // moment it *discovers* the dead session — its first delivered
+        // write after the partition heals — instead of testing
+        // unmonitored until the next Hello re-registers it.
+        let mut cfg = presets::quick_http(1, 120.0, 19);
+        cfg.controller.silence_timeout_s = 15.0;
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            // heal at t=61, just after the t=60 liveness tick, so the
+            // tester's next delivered frame is a sample, not a Hello
+            at_s: 10.0,
+            action: crate::scenario::Action::Weather {
+                frac: 1.0,
+                patch: crate::scenario::WeatherPatch::partition(),
+                duration_s: 51.0,
+            },
+        }];
+        let r = run_experiment(&cfg);
+        let t = &r.data.testers[0];
+        assert!(t.evicted, "silence eviction must have fired");
+        assert_eq!(t.rejoins, 0, "a reset session must not auto-rejoin");
+        let late = r.data.samples.iter().filter(|s| s.t_end > 90.0).count();
+        assert_eq!(
+            late, 0,
+            "tester kept loading the service after its session dropped"
+        );
     }
 
     #[test]

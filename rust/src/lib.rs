@@ -72,6 +72,22 @@
 //! on the held-out ones — the paper's §5 predictive-model claim as a
 //! measured number.  See `docs/CAMPAIGNS.md` and
 //! `examples/gram_comparison.rs`.
+//!
+//! ## Live harness
+//!
+//! The [`live`] layer runs the same control plane over OS threads and
+//! real TCP sockets: a controller accepting agent sessions over a
+//! length-prefixed wire codec of the [`transport`] vocabulary, agent
+//! threads executing [`transport::TestDescription`]s with real
+//! `Instant` timing on deliberately skewed clocks, a genuine
+//! time-stamp server feeding the [`timesync`] math, and an in-process
+//! TCP target implementing the simulated services' queueing
+//! disciplines (plus a `--target-addr` escape hatch for any real
+//! endpoint).  Live samples flow through the same
+//! [`metrics::StreamAgg`] pipeline and report CSVs as simulation runs,
+//! and [`live::crossval`] quantifies sim-vs-live divergence on the
+//! same load spec.  See `docs/LIVE.md` and `diperf live --preset
+//! live_smoke`.
 
 #![warn(missing_docs)]
 
@@ -87,6 +103,7 @@ pub mod controller;
 pub mod experiment;
 pub mod experiments;
 pub mod ids;
+pub mod live;
 pub mod metrics;
 pub mod net;
 pub mod predict;

@@ -1,0 +1,370 @@
+//! The live tester agent: one OS thread that faithfully executes a
+//! [`TestDescription`] against a real target over real sockets.
+//!
+//! The agent reuses the simulator's [`crate::tester::Tester`] state
+//! machine — launch pacing (client interval *and* rate cap), sequential
+//! clients, consecutive-failure give-up, the §4 response-time
+//! adjustment — and drives it with wall-clock readings from its (
+//! deliberately skewed) [`LiveClock`] instead of virtual time.  Samples
+//! are timestamped in *local* seconds and batched upstream; the
+//! controller maps them onto the common base via the time-stamp
+//! server's sync points, exactly as in the simulation.
+//!
+//! Session semantics (§3): a dedicated monitor thread watches the
+//! controller connection.  The moment the session yields `Stop`, EOF or
+//! an error, the agent stops issuing clients — it never tests
+//! unmonitored.  Equally, any failed upstream write stops the loop.
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::ids::{NodeId, RequestId, TesterId};
+use crate::live::target::{self, OUT_DENIED, OUT_OK};
+use crate::live::timeserver::{sync_exchange, LiveClock};
+use crate::live::wire::{self, WireUp};
+use crate::metrics::{CallSample, SampleOutcome};
+use crate::tester::Tester;
+use crate::transport::{CtrlMsg, GoodbyeReason, TestDescription};
+
+/// Samples per upstream batch frame (well under [`wire::MAX_BATCH`]).
+const BATCH: usize = 32;
+
+/// Longest uninterruptible sleep, so Stop/disconnect is noticed fast.
+const SLEEP_SLICE: Duration = Duration::from_millis(20);
+
+/// How the agent calls the target service.
+#[derive(Clone, Debug)]
+pub enum CallMode {
+    /// The in-process target's 1-byte request/outcome protocol over a
+    /// held-open connection ([`crate::live::target`]).
+    Framed(SocketAddr),
+    /// Any real endpoint (`--target-addr`): each client is a TCP
+    /// connect probe — success is an accepted connection within the
+    /// timeout.  The most generic client that works against arbitrary
+    /// services, in the spirit of §3's "clients are full blown
+    /// executables".
+    ConnectProbe(String),
+}
+
+/// Everything one agent thread needs.
+#[derive(Clone, Debug)]
+pub struct AgentParams {
+    /// Roster index assigned by the harness.
+    pub id: u32,
+    /// Controller listener.
+    pub ctrl_addr: SocketAddr,
+    /// Time-stamp server.
+    pub ts_addr: SocketAddr,
+    /// Target call mode.
+    pub call: CallMode,
+    /// This agent's (skewed, drifting) local clock.
+    pub clock: LiveClock,
+}
+
+/// What an agent thread reports back to the harness when it exits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AgentReport {
+    /// Clients launched.
+    pub calls: u64,
+    /// Samples successfully written upstream.
+    pub samples_sent: u64,
+    /// Completed sync exchanges.
+    pub syncs: u64,
+    /// The controller session died under the agent.
+    pub session_dropped: bool,
+    /// The agent ran its full duration and said Goodbye(Finished).
+    pub finished: bool,
+}
+
+fn send(ctrl: &mut TcpStream, msg: &WireUp) -> io::Result<()> {
+    wire::write_frame(ctrl, &wire::encode_up(msg))
+}
+
+fn flush(
+    ctrl: &mut TcpStream,
+    buf: &mut Vec<CallSample>,
+    rep: &mut AgentReport,
+) -> io::Result<()> {
+    if buf.is_empty() {
+        return Ok(());
+    }
+    let batch = std::mem::take(buf);
+    let n = batch.len() as u64;
+    send(ctrl, &WireUp::Samples(batch))?;
+    rep.samples_sent += n;
+    Ok(())
+}
+
+fn call_timeout(timeout_s: f64) -> Duration {
+    Duration::from_secs_f64(timeout_s.clamp(0.001, 3600.0))
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// One client invocation against the target; `conn` caches the framed
+/// connection across calls (dropped to resynchronize after a timeout,
+/// because the stale response byte would otherwise answer the *next*
+/// request).
+fn do_call(
+    mode: &CallMode,
+    probe_addr: Option<SocketAddr>,
+    conn: &mut Option<TcpStream>,
+    timeout_s: f64,
+) -> SampleOutcome {
+    let timeout = call_timeout(timeout_s);
+    match mode {
+        CallMode::Framed(addr) => {
+            if conn.is_none() {
+                match TcpStream::connect_timeout(addr, timeout) {
+                    Ok(c) => {
+                        let _ = c.set_nodelay(true);
+                        *conn = Some(c);
+                    }
+                    Err(e) if is_timeout(&e) => return SampleOutcome::Timeout,
+                    Err(_) => return SampleOutcome::ServiceError,
+                }
+            }
+            let c = conn.as_mut().expect("connection established above");
+            let _ = c.set_read_timeout(Some(timeout));
+            match target::call(c) {
+                Ok(OUT_OK) => SampleOutcome::Success,
+                Ok(OUT_DENIED) => SampleOutcome::Denied,
+                Ok(_) => SampleOutcome::ServiceError,
+                Err(e) => {
+                    *conn = None;
+                    if is_timeout(&e) {
+                        SampleOutcome::Timeout
+                    } else {
+                        SampleOutcome::ServiceError
+                    }
+                }
+            }
+        }
+        CallMode::ConnectProbe(_) => {
+            let Some(addr) = probe_addr else {
+                // the address never resolved: a local client failure
+                return SampleOutcome::StartFailure;
+            };
+            match TcpStream::connect_timeout(&addr, timeout) {
+                Ok(_) => SampleOutcome::Success,
+                Err(e) if is_timeout(&e) => SampleOutcome::Timeout,
+                Err(_) => SampleOutcome::ServiceError,
+            }
+        }
+    }
+}
+
+/// Measure one connect round trip to seed the tester's network-latency
+/// estimate; for the framed mode the connection is kept for calls.
+fn probe(
+    mode: &CallMode,
+    probe_addr: Option<SocketAddr>,
+) -> (f64, Option<TcpStream>) {
+    let addr = match mode {
+        CallMode::Framed(a) => Some(*a),
+        CallMode::ConnectProbe(_) => probe_addr,
+    };
+    let Some(addr) = addr else { return (0.0, None) };
+    let t0 = Instant::now();
+    match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+        Ok(c) => {
+            let _ = c.set_nodelay(true);
+            let rtt = t0.elapsed().as_secs_f64();
+            match mode {
+                CallMode::Framed(_) => (rtt, Some(c)),
+                CallMode::ConnectProbe(_) => (rtt, None),
+            }
+        }
+        Err(_) => (0.0, None),
+    }
+}
+
+/// Run one agent to completion; returns its counters.  Never panics on
+/// I/O — a dead controller, time server or target degrades into the
+/// matching report flags, mirroring how a real PlanetLab node would
+/// just go silent.
+pub fn run_agent(p: AgentParams) -> AgentReport {
+    let mut rep = AgentReport::default();
+    let Ok(mut ctrl) = TcpStream::connect(p.ctrl_addr) else {
+        rep.session_dropped = true;
+        return rep;
+    };
+    let _ = ctrl.set_nodelay(true);
+    if send(&mut ctrl, &WireUp::Hello { agent: p.id }).is_err()
+        || send(&mut ctrl, &WireUp::DeployDone).is_err()
+    {
+        rep.session_dropped = true;
+        return rep;
+    }
+
+    // block until the controller streams our test description down
+    let desc: TestDescription = loop {
+        let Ok(payload) = wire::read_frame(&mut ctrl) else {
+            rep.session_dropped = true;
+            return rep;
+        };
+        match wire::decode_ctrl(&payload) {
+            Ok(CtrlMsg::Start(d)) => break d,
+            Ok(CtrlMsg::Stop) => return rep,
+            Err(_) => {
+                rep.session_dropped = true;
+                return rep;
+            }
+        }
+    };
+
+    // Session monitor: Stop, EOF and errors all raise `stop`; only the
+    // non-Stop cases are a *drop*.  The client loop below checks `stop`
+    // at every step, so load is shed the moment the session dies.
+    let stop = Arc::new(AtomicBool::new(false));
+    let dropped = Arc::new(AtomicBool::new(false));
+    // raised just before the agent shuts its own socket down, so the
+    // monitor can tell a remote session death from our clean exit
+    let closing = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let stop = Arc::clone(&stop);
+        let dropped = Arc::clone(&dropped);
+        let closing = Arc::clone(&closing);
+        let Ok(mut rd) = ctrl.try_clone() else {
+            rep.session_dropped = true;
+            return rep;
+        };
+        std::thread::spawn(move || loop {
+            match wire::read_frame(&mut rd) {
+                Ok(payload) => {
+                    if matches!(wire::decode_ctrl(&payload), Ok(CtrlMsg::Stop)) {
+                        stop.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+                Err(_) => {
+                    if !closing.load(Ordering::SeqCst) {
+                        dropped.store(true, Ordering::SeqCst);
+                    }
+                    stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+            }
+        })
+    };
+
+    let probe_addr = match &p.call {
+        CallMode::ConnectProbe(s) => {
+            s.to_socket_addrs().ok().and_then(|mut it| it.next())
+        }
+        CallMode::Framed(a) => Some(*a),
+    };
+
+    let mut t = Tester::new(TesterId(p.id), NodeId(p.id));
+    t.start(p.clock.now_s(), desc);
+    let (rtt, mut target_conn) = probe(&p.call, probe_addr);
+    t.latency_estimate_s = rtt / 2.0;
+
+    let mut ts_conn: Option<TcpStream> = TcpStream::connect(p.ts_addr).ok();
+    let mut buf: Vec<CallSample> = Vec::new();
+    let mut last_sync_local = f64::NEG_INFINITY;
+    let mut goodbye: Option<GoodbyeReason> = None;
+
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            t.session_lost();
+            break;
+        }
+        let now_local = p.clock.now_s();
+        if now_local - last_sync_local >= desc.sync_interval_s {
+            // flush first: every buffered sample must precede the sync
+            // point that will release it at the controller
+            if flush(&mut ctrl, &mut buf, &mut rep).is_err() {
+                t.session_lost();
+                break;
+            }
+            last_sync_local = now_local;
+            let mut reconnect = false;
+            match ts_conn.as_mut() {
+                Some(c) => match sync_exchange(c, &p.clock) {
+                    Ok(pt) => {
+                        t.record_sync(pt);
+                        rep.syncs += 1;
+                        if send(&mut ctrl, &WireUp::Sync(pt)).is_err() {
+                            t.session_lost();
+                            break;
+                        }
+                    }
+                    Err(_) => reconnect = true,
+                },
+                None => {
+                    // keep the session visibly alive while resyncing
+                    let _ = send(&mut ctrl, &WireUp::Heartbeat);
+                    reconnect = true;
+                }
+            }
+            if reconnect {
+                ts_conn = TcpStream::connect(p.ts_addr).ok();
+            }
+        }
+        if t.duration_elapsed(p.clock.now_s()) {
+            goodbye = Some(GoodbyeReason::Finished);
+            break;
+        }
+        if t.clock.is_empty() {
+            // never report unsynchronized samples: wait for the first
+            // sync to complete (§3.1.2), like the simulated tester
+            std::thread::sleep(SLEEP_SLICE);
+            continue;
+        }
+        let now_local = p.clock.now_s();
+        let next = t.next_launch_local(now_local);
+        if next > now_local + 1e-4 {
+            let wait = Duration::from_secs_f64((next - now_local).min(1.0));
+            std::thread::sleep(wait.min(SLEEP_SLICE));
+            continue;
+        }
+        let launch_local = p.clock.now_s();
+        if t.duration_elapsed(launch_local) {
+            goodbye = Some(GoodbyeReason::Finished);
+            break;
+        }
+        let req = RequestId(t.seq);
+        t.launch(launch_local, req);
+        rep.calls += 1;
+        let outcome =
+            do_call(&p.call, probe_addr, &mut target_conn, desc.timeout_s);
+        let done_local = p.clock.now_s();
+        if let Some(s) = t.record_result(done_local, req, outcome, 0.0) {
+            buf.push(s);
+            if buf.len() >= BATCH && flush(&mut ctrl, &mut buf, &mut rep).is_err()
+            {
+                t.session_lost();
+                break;
+            }
+        }
+        if t.should_give_up(desc.give_up_failures) {
+            goodbye = Some(GoodbyeReason::TooManyFailures);
+            break;
+        }
+    }
+
+    // best-effort final flush + Goodbye; both fail silently if the
+    // session is already dead
+    let flushed = flush(&mut ctrl, &mut buf, &mut rep).is_ok();
+    if let (true, Some(reason)) = (flushed, goodbye) {
+        if send(&mut ctrl, &WireUp::Goodbye(reason)).is_ok() {
+            rep.finished = reason == GoodbyeReason::Finished;
+        }
+    }
+    // unblock and reap the monitor, then read its verdict: only after
+    // the join can `dropped` reflect everything the monitor observed
+    closing.store(true, Ordering::SeqCst);
+    let _ = ctrl.shutdown(Shutdown::Both);
+    let _ = monitor.join();
+    rep.session_dropped = dropped.load(Ordering::SeqCst);
+    rep
+}

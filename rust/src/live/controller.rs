@@ -1,0 +1,326 @@
+//! The live controller: the existing [`crate::controller::Controller`]
+//! control plane run over real TCP sessions.
+//!
+//! One thread owns the pure state machine; one reader thread per agent
+//! session turns wire frames into [`TesterMsg`]s delivered over a
+//! channel.  Everything the simulator's controller does happens here
+//! with real inputs: deploy bookkeeping, the staggered ramp (Start
+//! frames streamed down on schedule), per-sample failure accounting,
+//! silence eviction sweeps, and streaming reconciliation of samples
+//! onto the common time base via each agent's sync points
+//! ([`crate::metrics::StreamAgg`]).
+//!
+//! Session semantics (§3): when a session's reader hits EOF or an
+//! error, the agent's load is dropped immediately
+//! ([`crate::controller::Controller::session_dropped`]); when the
+//! controller evicts an agent, it tears the socket down, which the
+//! agent observes at once.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::controller::{Controller, ControllerConfig, CtrlAction};
+use crate::ids::{NodeId, TesterId};
+use crate::live::timeserver::LiveClock;
+use crate::live::wire::{self, WireUp};
+use crate::metrics::{AnalysisGrid, RunData, StreamAgg};
+use crate::transport::{CtrlMsg, TesterMsg};
+
+/// How long the controller waits for the full agent pool to connect.
+const ACCEPT_WINDOW: Duration = Duration::from_secs(15);
+
+/// Everything a finished live run's control plane produces.
+pub struct LiveOutcome {
+    /// Per-tester records + counters (samples live in `stream`).
+    pub data: RunData,
+    /// The streaming aggregation state (same pipeline as the sim).
+    pub stream: StreamAgg,
+    /// The analysis grid fixed at ramp time.
+    pub grid: AnalysisGrid,
+    /// Wire frames ingested across all sessions.
+    pub frames: u64,
+    /// Agents that actually connected.
+    pub connected: usize,
+}
+
+enum EvKind {
+    Up(WireUp),
+    Disconnected,
+}
+
+struct CtrlEvent {
+    agent: usize,
+    kind: EvKind,
+}
+
+struct Session {
+    writer: Option<TcpStream>,
+    open: bool,
+}
+
+/// Accept one agent session: read its Hello to learn the roster index.
+fn accept_session(
+    stream: TcpStream,
+    agents: usize,
+) -> Result<(usize, TcpStream)> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("read timeout")?;
+    let mut s = stream;
+    let payload = wire::read_frame(&mut s).context("reading Hello")?;
+    let WireUp::Hello { agent } = wire::decode_up(&payload)? else {
+        anyhow::bail!("session did not open with Hello");
+    };
+    let idx = agent as usize;
+    anyhow::ensure!(idx < agents, "agent index {idx} out of roster");
+    s.set_read_timeout(None).context("clearing read timeout")?;
+    Ok((idx, s))
+}
+
+fn spawn_reader(
+    mut stream: TcpStream,
+    agent: usize,
+    tx: mpsc::Sender<CtrlEvent>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let kind = match wire::read_frame(&mut stream) {
+            Ok(payload) => match wire::decode_up(&payload) {
+                Ok(msg) => EvKind::Up(msg),
+                Err(_) => EvKind::Disconnected, // corrupt peer: drop it
+            },
+            Err(_) => EvKind::Disconnected,
+        };
+        let ended = matches!(kind, EvKind::Disconnected);
+        if tx.send(CtrlEvent { agent, kind }).is_err() || ended {
+            return;
+        }
+    })
+}
+
+/// Send Stop and tear the session down (the agent observes the
+/// teardown immediately, even if it never reads the Stop payload).
+fn close_session(s: &mut Session) {
+    if let Some(mut w) = s.writer.take() {
+        let _ = wire::write_frame(&mut w, &wire::encode_ctrl(&CtrlMsg::Stop));
+        let _ = w.shutdown(Shutdown::Both);
+    }
+}
+
+/// Run the control plane over `listener` until every session closes (or
+/// the planned horizon passes).  `clock` is the common time base — the
+/// same clock the time-stamp server hands out, so controller-side
+/// times and reconciled sample times are directly comparable.
+pub fn run_controller(
+    listener: TcpListener,
+    clock: LiveClock,
+    cfg: &ControllerConfig,
+    agents: usize,
+    num_quanta: usize,
+    window_s: f64,
+    grace_s: f64,
+) -> Result<LiveOutcome> {
+    let n = agents;
+    let nodes: Vec<NodeId> = (0..n).map(|i| NodeId(i as u32)).collect();
+    let mut controller = Controller::new(cfg.clone(), &nodes);
+    let (tx, rx) = mpsc::channel::<CtrlEvent>();
+
+    // -- accept phase ------------------------------------------------
+    listener
+        .set_nonblocking(true)
+        .context("listener nonblocking")?;
+    let mut sessions: Vec<Session> = (0..n)
+        .map(|_| Session {
+            writer: None,
+            open: false,
+        })
+        .collect();
+    let mut readers: Vec<JoinHandle<()>> = Vec::with_capacity(n);
+    let accept_start = Instant::now();
+    let mut connected = 0usize;
+    // Handshakes run off-thread so one silent connection cannot stall
+    // the accept loop (its read timeout bounds the stray thread's life).
+    let (hs_tx, hs_rx) = mpsc::channel::<(usize, TcpStream)>();
+    while connected < n && accept_start.elapsed() < ACCEPT_WINDOW {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(false).ok();
+                let hs_tx = hs_tx.clone();
+                std::thread::spawn(move || {
+                    if let Ok((idx, s)) = accept_session(stream, n) {
+                        let _ = hs_tx.send((idx, s));
+                    }
+                    // bad handshakes just drop the connection
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
+        while let Ok((idx, s)) = hs_rx.try_recv() {
+            if sessions[idx].open {
+                continue; // duplicate roster index: refuse the newcomer
+            }
+            // a clone failure (fd exhaustion) must fail the whole
+            // handshake — a writer-less open session could never be
+            // started or torn down and would hang the reader join
+            let Ok(writer) = s.try_clone() else { continue };
+            sessions[idx].writer = Some(writer);
+            sessions[idx].open = true;
+            connected += 1;
+            readers.push(spawn_reader(s, idx, tx.clone()));
+        }
+    }
+    // last-moment handshakes that landed as the window closed
+    while let Ok((idx, s)) = hs_rx.try_recv() {
+        if connected < n && !sessions[idx].open {
+            let Ok(writer) = s.try_clone() else { continue };
+            sessions[idx].writer = Some(writer);
+            sessions[idx].open = true;
+            connected += 1;
+            readers.push(spawn_reader(s, idx, tx.clone()));
+        }
+    }
+    drop(hs_rx); // stragglers' sends fail and their threads exit
+
+    // -- ramp schedule + streaming grid ------------------------------
+    let ramp0 = clock.now_s();
+    for (i, s) in sessions.iter().enumerate() {
+        controller.deploy_finished(TesterId(i as u32), s.open, ramp0);
+    }
+    let duration = cfg.desc.duration_s;
+    let last = controller.start_time(n.saturating_sub(1), ramp0);
+    let planned = last + duration + grace_s.max(0.0);
+    let (w0, w1) = if ramp0 + duration > last {
+        (last, ramp0 + duration)
+    } else {
+        // no all-up window exists: fall back to the middle half of the
+        // run, anchored at the ramp (never before any agent started)
+        let span = planned - ramp0;
+        (ramp0 + 0.25 * span, ramp0 + 0.75 * span)
+    };
+    let grid =
+        AnalysisGrid::planned(num_quanta, n, window_s, w0, w1, planned);
+    controller.set_streaming(StreamAgg::new(grid));
+
+    // -- main loop ---------------------------------------------------
+    let deadline = planned + 5.0;
+    let mut open: usize = sessions.iter().filter(|s| s.open).count();
+    let mut started = 0usize;
+    let mut last_sweep = ramp0;
+    let mut frames: u64 = 0;
+    while open > 0 {
+        let now = clock.now_s();
+        if now > deadline {
+            break;
+        }
+        while started < n && controller.start_time(started, ramp0) <= now {
+            let i = started;
+            started += 1;
+            controller.mark_started(TesterId(i as u32), now);
+            let msg = wire::encode_ctrl(&CtrlMsg::Start(cfg.desc));
+            let write_ok = match sessions[i].writer.as_mut() {
+                Some(w) => wire::write_frame(w, &msg).is_ok(),
+                None => true, // never connected: nothing to start
+            };
+            if !write_ok {
+                close_session(&mut sessions[i]);
+                controller.session_dropped(TesterId(i as u32), now);
+            }
+        }
+        if now - last_sweep >= 1.0 {
+            last_sweep = now;
+            for a in controller.check_liveness(now) {
+                let CtrlAction::Evict(t) = a;
+                close_session(&mut sessions[t.index()]);
+            }
+        }
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(ev) => {
+                let now = clock.now_s();
+                let i = ev.agent;
+                let t = TesterId(i as u32);
+                match ev.kind {
+                    EvKind::Disconnected => {
+                        if sessions[i].open {
+                            sessions[i].open = false;
+                            open -= 1;
+                        }
+                        close_session(&mut sessions[i]);
+                        // §3: the load of a dead session is dropped now
+                        controller.session_dropped(t, now);
+                    }
+                    EvKind::Up(msg) => {
+                        frames += 1;
+                        let mut evict = false;
+                        match msg {
+                            WireUp::Hello { .. } => {
+                                controller.on_msg(now, t, TesterMsg::Hello);
+                            }
+                            WireUp::DeployDone => {
+                                controller
+                                    .on_msg(now, t, TesterMsg::DeployDone);
+                            }
+                            WireUp::Samples(samples) => {
+                                for s in samples {
+                                    if controller
+                                        .on_msg(now, t, TesterMsg::Sample(s))
+                                        .is_some()
+                                    {
+                                        evict = true;
+                                    }
+                                }
+                            }
+                            WireUp::Sync(p) => {
+                                controller.on_msg(now, t, TesterMsg::Sync(p));
+                            }
+                            WireUp::Heartbeat => {
+                                controller
+                                    .on_msg(now, t, TesterMsg::Heartbeat);
+                            }
+                            WireUp::Goodbye(reason) => {
+                                controller.on_msg(
+                                    now,
+                                    t,
+                                    TesterMsg::Goodbye(reason),
+                                );
+                            }
+                        }
+                        if evict {
+                            close_session(&mut sessions[i]);
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+
+    // shut down whatever is still connected, then reap the readers
+    for s in sessions.iter_mut() {
+        close_session(s);
+    }
+    drop(tx);
+    for h in readers {
+        let _ = h.join();
+    }
+
+    let duration_s = clock.now_s();
+    let data = controller.finalize(duration_s);
+    let stream = controller
+        .take_stream()
+        .expect("streaming was installed before the ramp");
+    Ok(LiveOutcome {
+        data,
+        stream,
+        grid,
+        frames,
+        connected,
+    })
+}

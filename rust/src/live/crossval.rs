@@ -1,0 +1,330 @@
+//! Sim-vs-live cross-validation: run the simulator on the *same load
+//! spec* a live run executed and quantify the divergence.
+//!
+//! "Automated System Performance Testing at MongoDB" (Ingo & Daly,
+//! 2020) argues a performance harness is only trustworthy enough to
+//! gate changes on when its results are validated against an
+//! independent reference; here each mode validates the other.  The
+//! in-process target's disciplines are the simulator's service models
+//! run in real time ([`crate::live::target`]), so a healthy harness
+//! should produce closely matching throughput curves — a large gap
+//! means a bug in one of the twins (lost samples, broken pacing, clock
+//! misreconciliation), not a property of the service.
+//!
+//! The comparison is deliberately scale-free: both runs' throughput
+//! series are trimmed to their active window and resampled onto a
+//! common normalized axis, so the sim's longer planned grid (it budgets
+//! for WAN deploy time) does not skew the numbers.
+
+use anyhow::Result;
+
+use crate::experiment::{
+    run_experiment_opts, ExperimentConfig, RunOptions, ServiceKind,
+};
+use crate::cluster::TestbedParams;
+use crate::live::{LiveConfig, LiveResult, TargetSel};
+use crate::metrics::{Binned, CollectionMode};
+use crate::scenario::Scenario;
+use crate::transport::ClientCode;
+
+/// Resampled points on the normalized throughput-curve axis.
+pub const CURVE_POINTS: usize = 24;
+
+/// One compared metric.
+#[derive(Clone, Copy, Debug)]
+pub struct CvRow {
+    /// Metric name (stable CSV key).
+    pub metric: &'static str,
+    /// Simulator value.
+    pub sim: f64,
+    /// Live-harness value.
+    pub live: f64,
+}
+
+impl CvRow {
+    /// Symmetric relative difference in [0, 1].
+    pub fn rel_diff(&self) -> f64 {
+        let scale = self.sim.abs().max(self.live.abs());
+        if scale < 1e-12 {
+            0.0
+        } else {
+            (self.sim - self.live).abs() / scale
+        }
+    }
+}
+
+/// The full sim-vs-live comparison.
+#[derive(Clone, Debug)]
+pub struct CrossVal {
+    /// Scalar metric rows.
+    pub rows: Vec<CvRow>,
+    /// `(fraction-of-active-window, sim jobs/s, live jobs/s)`.
+    pub curve: Vec<(f64, f64, f64)>,
+    /// Headline divergence: the relative throughput-rate gap.
+    pub divergence: f64,
+}
+
+/// The simulator configuration that mirrors a live spec: same agent
+/// count, controller policy and test description, the in-process
+/// target's calibration as the service model, and a quiet LAN testbed
+/// (the live run is loopback).  `None` for an external target — there
+/// is no model to validate against.
+pub fn sim_twin(cfg: &LiveConfig) -> Option<ExperimentConfig> {
+    let TargetSel::InProcess(kind) = &cfg.target else {
+        return None;
+    };
+    Some(ExperimentConfig {
+        seed: cfg.seed,
+        service: ServiceKind::Http(kind.http_params()),
+        testbed: TestbedParams::lan(cfg.agents),
+        controller: cfg.controller.clone(),
+        code: ClientCode::Custom(10_000),
+        grace_s: cfg.grace_s,
+        scenario: Scenario::none(),
+    })
+}
+
+/// Scalar signature of one run's binned statistics:
+/// `(completions, jobs-per-active-second, mean rt, peak load)`.
+fn signature(b: &Binned) -> (f64, f64, f64, f64) {
+    let quantum = b.grid.quantum.max(1e-9);
+    let active_quanta = b.tput.iter().filter(|&&x| x > 0.0).count();
+    let active_s = (active_quanta as f64 * quantum).max(1e-9);
+    let rate = b.total_ok / active_s;
+    let mean_rt = b.rt_total / b.total_ok.max(1.0);
+    let peak_load = b.load.iter().cloned().fold(0.0, f64::max);
+    (b.total_ok, rate, mean_rt, peak_load)
+}
+
+/// Trim a series to its nonzero span and mean-resample to `k` points.
+fn resample_active(series: &[f64], k: usize) -> Vec<f64> {
+    let first = series.iter().position(|&x| x > 0.0);
+    let last = series.iter().rposition(|&x| x > 0.0);
+    let (Some(lo), Some(hi)) = (first, last) else {
+        return vec![0.0; k];
+    };
+    let active = &series[lo..=hi];
+    (0..k)
+        .map(|c| {
+            let a = c * active.len() / k;
+            let b = (((c + 1) * active.len()) / k).max(a + 1);
+            let slice = &active[a..b.min(active.len())];
+            slice.iter().sum::<f64>() / slice.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Build the comparison from the two runs' binned statistics.
+pub fn build(sim: &Binned, live: &Binned) -> CrossVal {
+    let (s_done, s_rate, s_rt, s_load) = signature(sim);
+    let (l_done, l_rate, l_rt, l_load) = signature(live);
+    let rows = vec![
+        CvRow {
+            metric: "completions",
+            sim: s_done,
+            live: l_done,
+        },
+        CvRow {
+            metric: "throughput_per_s",
+            sim: s_rate,
+            live: l_rate,
+        },
+        CvRow {
+            metric: "mean_rt_s",
+            sim: s_rt,
+            live: l_rt,
+        },
+        CvRow {
+            metric: "peak_load",
+            sim: s_load,
+            live: l_load,
+        },
+    ];
+    let divergence = rows[1].rel_diff();
+    let sq = sim.grid.quantum.max(1e-9);
+    let lq = live.grid.quantum.max(1e-9);
+    let s_curve = resample_active(&sim.tput, CURVE_POINTS);
+    let l_curve = resample_active(&live.tput, CURVE_POINTS);
+    let curve = s_curve
+        .iter()
+        .zip(&l_curve)
+        .enumerate()
+        .map(|(i, (&s, &l))| {
+            (
+                (i as f64 + 0.5) / CURVE_POINTS as f64,
+                s / sq,
+                l / lq,
+            )
+        })
+        .collect();
+    CrossVal {
+        rows,
+        curve,
+        divergence,
+    }
+}
+
+/// Run the sim twin of `cfg` and compare it with the live result.
+/// `None` when the live run hit an external target.
+pub fn compare(cfg: &LiveConfig, live: &LiveResult) -> Result<Option<CrossVal>> {
+    let Some(twin) = sim_twin(cfg) else {
+        return Ok(None);
+    };
+    crate::config::validate(&twin)?;
+    let opts = RunOptions {
+        collect: CollectionMode::Stream,
+        num_quanta: cfg.num_quanta,
+        window_s: cfg.window_s,
+        ..RunOptions::default()
+    };
+    let r = run_experiment_opts(&twin, opts);
+    let sim = r
+        .stream
+        .expect("streaming collection was requested for the twin");
+    Ok(Some(build(&sim.binned, &live.stream.binned)))
+}
+
+/// `crossval.csv`: one row per compared metric.  The headline
+/// divergence is the `throughput_per_s` row's `rel_diff` (also echoed
+/// in [`summary`]), so every row keeps the same column semantics.
+pub fn csv(cv: &CrossVal) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("metric,sim,live,rel_diff\n");
+    for r in &cv.rows {
+        let _ = writeln!(
+            s,
+            "{},{:.6},{:.6},{:.4}",
+            r.metric,
+            r.sim,
+            r.live,
+            r.rel_diff()
+        );
+    }
+    s
+}
+
+/// `crossval_curve.csv`: the two normalized throughput curves.
+pub fn curve_csv(cv: &CrossVal) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("frac,sim_tput_per_s,live_tput_per_s\n");
+    for &(f, sim, live) in &cv.curve {
+        let _ = writeln!(s, "{f:.4},{sim:.4},{live:.4}");
+    }
+    s
+}
+
+/// One-paragraph summary for `summary.txt`.
+pub fn summary(cv: &CrossVal) -> String {
+    use std::fmt::Write as _;
+    let mut s = format!(
+        "crossval          throughput divergence {:.1}%\n",
+        cv.divergence * 100.0
+    );
+    for r in &cv.rows {
+        let _ = writeln!(
+            s,
+            "  {:<16} sim {:>10.3}   live {:>10.3}   Δ {:>5.1}%",
+            r.metric,
+            r.sim,
+            r.live,
+            r.rel_diff() * 100.0
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::AnalysisGrid;
+
+    fn binned_with(tput: &[f64], quantum: f64) -> Binned {
+        let grid = AnalysisGrid::new(
+            0.0,
+            quantum,
+            tput.len(),
+            4,
+            1.0,
+            0.0,
+            tput.len() as f64 * quantum,
+            tput.len() as f64 * quantum,
+        );
+        let mut b = Binned::new(grid);
+        for (i, &x) in tput.iter().enumerate() {
+            b.tput[i] = x;
+            b.total_ok += x;
+            b.rt_total += x * 0.5; // 0.5 s mean rt
+        }
+        b
+    }
+
+    #[test]
+    fn identical_runs_have_zero_divergence() {
+        let a = binned_with(&[0.0, 4.0, 8.0, 8.0, 4.0, 0.0], 1.0);
+        let cv = build(&a, &a);
+        assert!(cv.divergence < 1e-12);
+        for r in &cv.rows {
+            assert!(r.rel_diff() < 1e-12, "{} diverged", r.metric);
+        }
+        assert_eq!(cv.curve.len(), CURVE_POINTS);
+    }
+
+    #[test]
+    fn divergence_tracks_throughput_gap() {
+        let a = binned_with(&[0.0, 4.0, 8.0, 8.0, 4.0, 0.0], 1.0);
+        let b = binned_with(&[0.0, 2.0, 4.0, 4.0, 2.0, 0.0], 1.0);
+        let cv = build(&a, &b);
+        assert!(
+            (cv.divergence - 0.5).abs() < 1e-9,
+            "divergence {}",
+            cv.divergence
+        );
+    }
+
+    #[test]
+    fn curves_are_quantum_normalized_and_alignment_free() {
+        // same workload binned at different quantum widths must produce
+        // the same per-second curve
+        let a = binned_with(&[0.0, 4.0, 4.0, 4.0, 0.0, 0.0], 1.0);
+        let b = binned_with(&[0.0, 0.0, 2.0, 2.0, 2.0, 0.0], 0.5);
+        let cv = build(&a, &b);
+        for &(_, s, l) in &cv.curve {
+            assert!((s - 4.0).abs() < 1e-9, "sim point {s}");
+            assert!((l - 4.0).abs() < 1e-9, "live point {l}");
+        }
+    }
+
+    #[test]
+    fn sim_twin_mirrors_the_spec_and_skips_external() {
+        let cfg = crate::live::live_smoke(5);
+        let twin = sim_twin(&cfg).expect("in-process target has a twin");
+        assert_eq!(twin.seed, 5);
+        assert_eq!(twin.testbed.num_testers, cfg.agents);
+        assert_eq!(
+            twin.controller.desc.duration_s,
+            cfg.controller.desc.duration_s
+        );
+        assert!(matches!(twin.service, ServiceKind::Http(_)));
+
+        let mut ext = cfg;
+        ext.target = TargetSel::External("127.0.0.1:9".into());
+        assert!(sim_twin(&ext).is_none());
+    }
+
+    #[test]
+    fn csv_schemas_are_stable() {
+        let a = binned_with(&[1.0, 2.0], 1.0);
+        let cv = build(&a, &a);
+        let c = csv(&cv);
+        assert!(c.starts_with("metric,sim,live,rel_diff\n"));
+        assert!(c.contains("throughput_per_s"));
+        // every row keeps the metric,sim,live,rel_diff shape
+        for line in c.trim().lines().skip(1) {
+            assert_eq!(line.split(',').count(), 4, "row: {line}");
+        }
+        let k = curve_csv(&cv);
+        assert!(k.starts_with("frac,sim_tput_per_s,live_tput_per_s\n"));
+        assert_eq!(k.trim().lines().count(), 1 + CURVE_POINTS);
+        assert!(summary(&cv).contains("crossval"));
+    }
+}

@@ -1,0 +1,397 @@
+//! The live harness: DiPerF's control plane on OS threads and real TCP
+//! sockets.
+//!
+//! Everything else in this crate measures a *simulated* world; this
+//! module runs the same framework against real sockets and real clocks,
+//! the shape of the paper's actual deployment (§3):
+//!
+//! * a **controller** thread accepts agent sessions over a
+//!   length-prefixed wire encoding of the [`crate::transport`] message
+//!   vocabulary ([`wire`]), streams test descriptions down on the
+//!   staggered ramp schedule, ingests `CallSample` batches and sync
+//!   points back, evicts failing/silent agents, and drops an agent's
+//!   load the moment its session disconnects ([`controller`]);
+//! * **agent** threads execute the [`crate::transport::TestDescription`]
+//!   faithfully — client interval, rate cap, timeout, give-up — with
+//!   real `Instant`-based timing on deliberately skewed local clocks
+//!   ([`agent`]);
+//! * a **time-stamp server** answers clock queries so the existing
+//!   [`crate::timesync`] math maps local samples onto the common base
+//!   from genuine readings ([`timeserver`]);
+//! * an in-process TCP **target** implements the queueing/overhead
+//!   disciplines of the simulated services so CI needs no external
+//!   dependency ([`target`]); `--target-addr` points the agents at any
+//!   real endpoint instead.
+//!
+//! Live samples flow through the same
+//! [`crate::metrics::StreamAgg`]/[`crate::metrics::AnalysisGrid`]
+//! pipeline and report CSVs as simulation runs, so `diperf live
+//! --preset live_smoke` and the simulator produce directly comparable
+//! figures — and [`crossval`] quantifies sim-vs-live divergence on the
+//! same load spec.  Unlike everywhere else in the crate, wall-clock
+//! speed here *is* the measured product: the CI smoke appends an
+//! `agent_throughput` row to `BENCH_scale.json`.
+
+pub mod agent;
+pub mod controller;
+pub mod crossval;
+pub mod target;
+pub mod timeserver;
+pub mod wire;
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::controller::ControllerConfig;
+use crate::metrics::{AnalysisGrid, RunData, StreamAgg};
+use crate::services::http::HttpParams;
+use crate::services::ServiceStats;
+use crate::transport::TestDescription;
+use crate::util::Pcg64;
+
+pub use agent::{AgentParams, AgentReport, CallMode};
+pub use target::{target_by_name, PsTargetParams, Target, TargetKind, TARGET_NAMES};
+pub use timeserver::{LiveClock, TimeServer};
+
+/// Canonical list of shipped live presets — the single source for
+/// `diperf presets`, help output and unknown-name errors ([`by_name`]).
+pub const NAMES: [&str; 3] = ["live_smoke", "live_ps", "live_http"];
+
+/// Where the agents' load goes.
+#[derive(Clone, Debug)]
+pub enum TargetSel {
+    /// Spawn the in-process TCP target (CI needs no external service).
+    InProcess(TargetKind),
+    /// Call an existing endpoint (`host:port`); clients are connect
+    /// probes, and no sim cross-validation is possible.
+    External(String),
+}
+
+impl TargetSel {
+    /// Stable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            TargetSel::InProcess(k) => format!("in-process:{}", k.label()),
+            TargetSel::External(addr) => format!("external:{addr}"),
+        }
+    }
+}
+
+/// Full live-run specification (the live twin of
+/// [`crate::experiment::ExperimentConfig`]).
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    /// Master seed: derives agent clock skews and target demand streams.
+    pub seed: u64,
+    /// Agent (tester) thread count.
+    pub agents: usize,
+    /// Controller policy: stagger, eviction, silence timeout, and the
+    /// test description streamed to every agent.
+    pub controller: ControllerConfig,
+    /// Target selection.
+    pub target: TargetSel,
+    /// Extra collection time after the last agent's duration.
+    pub grace_s: f64,
+    /// Streaming-grid resolution.
+    pub num_quanta: usize,
+    /// Moving-average window (seconds).
+    pub window_s: f64,
+    /// Agent clocks get a uniform skew in ±this many seconds, so the
+    /// timesync pipeline does real work (PlanetLab's clocks were off by
+    /// "thousands of seconds").
+    pub skew_max_s: f64,
+    /// Agent clocks get a uniform frequency drift in ±this fraction.
+    pub drift_max: f64,
+}
+
+/// Everything a finished live run produces.
+pub struct LiveResult {
+    /// Per-agent records + counters (samples live in `stream`).
+    pub data: RunData,
+    /// Streaming aggregation — the same figures pipeline as the sim.
+    pub stream: StreamAgg,
+    /// The analysis grid fixed at ramp time.
+    pub grid: AnalysisGrid,
+    /// Wire frames the controller ingested.
+    pub frames: u64,
+    /// Wall-clock seconds the control plane ran.
+    pub wall_s: f64,
+    /// Agents that connected.
+    pub connected: usize,
+    /// Per-agent thread reports, in roster order.
+    pub agent_reports: Vec<AgentReport>,
+    /// In-process target counters (None for an external target).
+    pub service_stats: Option<ServiceStats>,
+    /// Target label for reports.
+    pub target_label: String,
+}
+
+impl LiveResult {
+    /// Samples that reached the streaming aggregator.
+    pub fn samples(&self) -> u64 {
+        self.stream.samples_seen
+    }
+
+    /// Reconciled samples per wall second per agent thread — the live
+    /// harness' headline performance number.
+    pub fn agent_throughput(&self) -> f64 {
+        self.samples() as f64
+            / self.wall_s.max(1e-9)
+            / self.data.testers.len().max(1) as f64
+    }
+
+    /// Controller ingest rate (frames per wall second).
+    pub fn ingest_per_s(&self) -> f64 {
+        self.frames as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// The CI smoke: 8 agents hammer the in-process Apache-shaped target
+/// for ~10 s over loopback sockets.
+pub fn live_smoke(seed: u64) -> LiveConfig {
+    LiveConfig {
+        seed,
+        agents: 8,
+        controller: ControllerConfig {
+            stagger_s: 0.25,
+            eviction_failures: 0,
+            silence_timeout_s: 30.0,
+            desc: TestDescription {
+                duration_s: 10.0,
+                client_interval_s: 0.05,
+                sync_interval_s: 1.0,
+                rate_cap_per_s: f64::INFINITY,
+                timeout_s: 5.0,
+                give_up_failures: 0,
+            },
+        },
+        target: TargetSel::InProcess(TargetKind::Http(HttpParams {
+            cgi_demand_s: 0.004,
+            demand_spread: 1.10,
+            overhead_s: 0.001,
+            max_concurrent: 150,
+            speed: 1.0,
+        })),
+        grace_s: 2.0,
+        num_quanta: 128,
+        window_s: 2.0,
+        skew_max_s: 300.0,
+        drift_max: 100e-6,
+    }
+}
+
+/// Pure processor sharing at saturation: 8 closed-loop agents against a
+/// 20 ms-demand PS core (offered demand ≈ 8× capacity), the pre-WS GRAM
+/// signature measured over real sockets.
+pub fn live_ps(seed: u64) -> LiveConfig {
+    let mut cfg = live_smoke(seed);
+    cfg.agents = 8;
+    cfg.controller.stagger_s = 0.5;
+    cfg.controller.desc.duration_s = 15.0;
+    cfg.controller.desc.client_interval_s = 0.02;
+    cfg.controller.desc.sync_interval_s = 2.0;
+    cfg.controller.desc.timeout_s = 10.0;
+    cfg.target = TargetSel::InProcess(TargetKind::Ps(PsTargetParams {
+        demand_s: 0.020,
+        spread: 1.10,
+        speed: 1.0,
+    }));
+    cfg
+}
+
+/// The §4.3 shape: rate-capped agents against a worker-capped HTTP
+/// target, so denials appear at saturation.
+pub fn live_http(seed: u64) -> LiveConfig {
+    let mut cfg = live_smoke(seed);
+    cfg.agents = 12;
+    cfg.controller.desc.duration_s = 15.0;
+    cfg.controller.desc.client_interval_s = 0.0;
+    cfg.controller.desc.rate_cap_per_s = 5.0;
+    cfg.controller.desc.sync_interval_s = 2.0;
+    cfg.target = TargetSel::InProcess(TargetKind::Http(HttpParams {
+        cgi_demand_s: 0.030,
+        demand_spread: 1.15,
+        overhead_s: 0.002,
+        max_concurrent: 6,
+        speed: 1.0,
+    }));
+    cfg
+}
+
+/// Resolve a live preset by name; unknown names error listing the
+/// alternatives (the [`crate::experiment::presets::NAMES`] pattern).
+pub fn by_name(name: &str, seed: u64) -> Result<LiveConfig> {
+    Ok(match name {
+        "live_smoke" => live_smoke(seed),
+        "live_ps" => live_ps(seed),
+        "live_http" => live_http(seed),
+        other => bail!(
+            "unknown live preset {other:?}; available live presets: {}",
+            NAMES.join(", ")
+        ),
+    })
+}
+
+/// Reject configurations that cannot run.
+pub fn validate(cfg: &LiveConfig) -> Result<()> {
+    if cfg.agents == 0 {
+        bail!("agents must be >= 1");
+    }
+    if cfg.controller.desc.duration_s <= 0.0 {
+        bail!("duration_s must be positive");
+    }
+    if cfg.controller.desc.sync_interval_s <= 0.0 {
+        bail!("sync_interval_s must be positive");
+    }
+    if cfg.controller.stagger_s < 0.0 {
+        bail!("stagger_s must be non-negative");
+    }
+    if cfg.num_quanta == 0 {
+        bail!("num_quanta must be >= 1");
+    }
+    if cfg.skew_max_s < 0.0 {
+        bail!("skew_max_s must be non-negative");
+    }
+    if !(0.0..0.5).contains(&cfg.drift_max) {
+        // a drift of -1 would run a clock backwards; real hardware is
+        // parts-per-million, so anything near 1 is a config typo
+        bail!("drift_max must be in [0, 0.5)");
+    }
+    if let TargetSel::External(addr) = &cfg.target {
+        if addr.is_empty() {
+            bail!("target address must not be empty");
+        }
+    }
+    Ok(())
+}
+
+/// Run a complete live experiment: spawn the time-stamp server, the
+/// in-process target (unless external), the agent threads, and the
+/// controller; block until the run finishes and hand back the same
+/// streaming state a simulated run produces.
+pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
+    validate(cfg)?;
+    let base = LiveClock::ideal();
+    let mut ts = TimeServer::spawn(base).context("spawning time server")?;
+    let mut target_handle: Option<Target> = None;
+    let call = match &cfg.target {
+        TargetSel::InProcess(kind) => {
+            let t = Target::spawn(kind, cfg.seed).context("spawning target")?;
+            let addr = t.addr;
+            target_handle = Some(t);
+            CallMode::Framed(addr)
+        }
+        TargetSel::External(addr) => CallMode::ConnectProbe(addr.clone()),
+    };
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding controller")?;
+    let ctrl_addr = listener.local_addr()?;
+    let ts_addr = ts.addr;
+
+    let mut root = Pcg64::seed_from(cfg.seed);
+    let handles: Vec<std::thread::JoinHandle<AgentReport>> = (0..cfg.agents)
+        .map(|i| {
+            let mut rng = root.split(500 + i as u64);
+            let skew = rng.uniform(-cfg.skew_max_s, cfg.skew_max_s);
+            let drift = rng.uniform(-cfg.drift_max, cfg.drift_max);
+            let p = AgentParams {
+                id: i as u32,
+                ctrl_addr,
+                ts_addr,
+                call: call.clone(),
+                clock: LiveClock::anchored(Instant::now(), skew, drift),
+            };
+            std::thread::spawn(move || agent::run_agent(p))
+        })
+        .collect();
+
+    let wall = Instant::now();
+    let out = controller::run_controller(
+        listener,
+        base,
+        &cfg.controller,
+        cfg.agents,
+        cfg.num_quanta,
+        cfg.window_s,
+        cfg.grace_s,
+    )?;
+    let wall_s = wall.elapsed().as_secs_f64();
+    let agent_reports: Vec<AgentReport> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap_or_default())
+        .collect();
+    let service_stats = target_handle.as_ref().map(|t| t.stats());
+    if let Some(mut t) = target_handle {
+        t.shutdown();
+    }
+    ts.shutdown();
+
+    Ok(LiveResult {
+        data: out.data,
+        stream: out.stream,
+        grid: out.grid,
+        frames: out.frames,
+        wall_s,
+        connected: out.connected,
+        agent_reports,
+        service_stats,
+        target_label: cfg.target.label(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in NAMES {
+            let cfg = by_name(name, 7).unwrap();
+            validate(&cfg).unwrap();
+            assert_eq!(cfg.seed, 7);
+            assert!(cfg.agents >= 8);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_lists_alternatives() {
+        let e = by_name("zzz", 1).unwrap_err().to_string();
+        for name in NAMES {
+            assert!(e.contains(name), "{e} missing {name}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let mut cfg = live_smoke(1);
+        cfg.agents = 0;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = live_smoke(1);
+        cfg.controller.desc.duration_s = 0.0;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = live_smoke(1);
+        cfg.controller.desc.sync_interval_s = 0.0;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = live_smoke(1);
+        cfg.target = TargetSel::External(String::new());
+        assert!(validate(&cfg).is_err());
+        // a drift near 1 would run agent clocks backwards
+        let mut cfg = live_smoke(1);
+        cfg.drift_max = 1.5;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = live_smoke(1);
+        cfg.skew_max_s = -1.0;
+        assert!(validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn target_labels() {
+        assert_eq!(
+            live_ps(1).target.label(),
+            "in-process:ps".to_string()
+        );
+        assert!(TargetSel::External("x:1".into()).label().contains("x:1"));
+    }
+}

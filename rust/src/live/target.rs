@@ -1,0 +1,479 @@
+//! The in-process TCP target service: the live twin of the simulated
+//! services, so CI can run a real-socket experiment with no external
+//! dependency.
+//!
+//! Two disciplines are shipped, mirroring [`crate::services`]:
+//!
+//! * **`ps`** — a pure processor-sharing server: every in-flight
+//!   request shares one CPU of `speed` demand-seconds/second.  This is
+//!   the substrate the paper diagnoses under pre-WS GRAM (§4.1), and it
+//!   reuses the simulator's exact [`crate::services::ps::PsQueue`] —
+//!   driven by the wall clock instead of virtual time — so the live
+//!   target's queueing math is *identical* to the simulated one.
+//! * **`http`** — the §4.3 Apache+CGI shape: a fixed parse/connect
+//!   overhead, lognormal CGI demand on the shared PS core, and a worker
+//!   cap that denies admission beyond `max_concurrent`.
+//!
+//! Protocol: an agent holds one connection and writes a 1-byte request;
+//! the target answers with a 1-byte outcome ([`OUT_OK`] /
+//! [`OUT_DENIED`] / [`OUT_ERROR`]) once the request leaves the queue.
+//! Real services live elsewhere: `diperf live --target-addr host:port`
+//! skips this module entirely (see [`crate::live::agent`]).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::ids::RequestId;
+use crate::services::http::HttpParams;
+use crate::services::ps::PsQueue;
+use crate::services::ServiceStats;
+use crate::sim::SimTime;
+use crate::util::dist::lognormal_median;
+use crate::util::Pcg64;
+
+/// Canonical list of in-process target kinds — the single source for
+/// help output and unknown-name errors ([`target_by_name`]).
+pub const TARGET_NAMES: [&str; 2] = ["ps", "http"];
+
+/// Outcome byte: request served.
+pub const OUT_OK: u8 = 0;
+/// Outcome byte: admission refused (worker cap).
+pub const OUT_DENIED: u8 = 1;
+/// Outcome byte: accepted but failed (target shutting down mid-call).
+pub const OUT_ERROR: u8 = 2;
+
+/// Calibration of the pure processor-sharing target.
+#[derive(Clone, Copy, Debug)]
+pub struct PsTargetParams {
+    /// Median per-request CPU demand (dedicated-CPU seconds).
+    pub demand_s: f64,
+    /// Lognormal demand spread (1.0 + ε = deterministic).
+    pub spread: f64,
+    /// CPU capacity in demand-seconds per wall second.
+    pub speed: f64,
+}
+
+impl Default for PsTargetParams {
+    fn default() -> PsTargetParams {
+        PsTargetParams {
+            demand_s: 0.020,
+            spread: 1.10,
+            speed: 1.0,
+        }
+    }
+}
+
+/// Which queueing/overhead discipline the in-process target runs.
+#[derive(Clone, Debug)]
+pub enum TargetKind {
+    /// Pure processor sharing (the pre-WS GRAM substrate).
+    Ps(PsTargetParams),
+    /// Apache+CGI shape: overhead + PS demand + worker cap (§4.3).
+    Http(HttpParams),
+}
+
+impl TargetKind {
+    /// Stable label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TargetKind::Ps(_) => "ps",
+            TargetKind::Http(_) => "http",
+        }
+    }
+
+    /// The simulator calibration that models this target — the bridge
+    /// the sim-vs-live cross-validation runs over
+    /// ([`crate::live::crossval`]).
+    pub fn http_params(&self) -> HttpParams {
+        match self {
+            TargetKind::Ps(p) => HttpParams {
+                cgi_demand_s: p.demand_s,
+                demand_spread: p.spread,
+                overhead_s: 0.0,
+                max_concurrent: usize::MAX,
+                speed: p.speed,
+            },
+            TargetKind::Http(p) => p.clone(),
+        }
+    }
+}
+
+/// Resolve a target kind by name; unknown names error listing the
+/// alternatives (the [`crate::experiment::presets::NAMES`] pattern).
+pub fn target_by_name(name: &str) -> Result<TargetKind> {
+    Ok(match name {
+        "ps" => TargetKind::Ps(PsTargetParams::default()),
+        "http" => TargetKind::Http(HttpParams::default()),
+        other => bail!(
+            "unknown target {other:?}; available targets: {}",
+            TARGET_NAMES.join(", ")
+        ),
+    })
+}
+
+/// The discipline constants shared by every connection handler.
+#[derive(Clone, Copy, Debug)]
+struct Discipline {
+    overhead_s: f64,
+    max_concurrent: usize,
+    demand_s: f64,
+    spread: f64,
+}
+
+/// Scheduler state: the wall-clock-driven PS queue plus one completion
+/// channel per in-service request.
+struct Sched {
+    cpu: PsQueue,
+    epoch: Instant,
+    waiters: HashMap<u32, mpsc::Sender<()>>,
+    next_req: u32,
+}
+
+struct Shared {
+    st: Mutex<Sched>,
+    cv: Condvar,
+    disc: Discipline,
+    in_flight: AtomicUsize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    denied: AtomicU64,
+    errored: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// Deliver any jobs the PS queue has completed by `now`.
+    fn drain(st: &mut Sched, now: SimTime) {
+        for (req, _at) in st.cpu.advance(now) {
+            if let Some(tx) = st.waiters.remove(&req.0) {
+                let _ = tx.send(());
+            }
+        }
+    }
+
+    /// Admission control against the worker cap.
+    fn admit(&self) -> bool {
+        let max = self.disc.max_concurrent;
+        let mut cur = self.in_flight.load(Ordering::SeqCst);
+        loop {
+            if cur >= max {
+                return false;
+            }
+            match self.in_flight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Run one request through the discipline; returns the outcome byte.
+    fn serve_one(&self, rng: &mut Pcg64) -> u8 {
+        if !self.admit() {
+            self.denied.fetch_add(1, Ordering::Relaxed);
+            return OUT_DENIED;
+        }
+        if self.disc.overhead_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(self.disc.overhead_s));
+        }
+        let demand =
+            lognormal_median(rng, self.disc.demand_s, self.disc.spread).max(1e-6);
+        let rx = {
+            let mut st = self.st.lock().expect("target lock");
+            if self.stop.load(Ordering::SeqCst) {
+                // the scheduler is gone; enqueueing now would hang us
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.errored.fetch_add(1, Ordering::Relaxed);
+                return OUT_ERROR;
+            }
+            let now = SimTime::from_secs_f64(st.epoch.elapsed().as_secs_f64());
+            Shared::drain(&mut st, now);
+            let id = st.next_req;
+            st.next_req = st.next_req.wrapping_add(1);
+            let (tx, rx) = mpsc::channel();
+            st.cpu.push(now, RequestId(id), demand);
+            st.waiters.insert(id, tx);
+            self.cv.notify_all();
+            rx
+        };
+        // block until the shared CPU finishes our demand (the scheduler
+        // thread wakes at the exact PS completion horizon)
+        let ok = rx.recv().is_ok();
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            OUT_OK
+        } else {
+            // scheduler shut down under us
+            self.errored.fetch_add(1, Ordering::Relaxed);
+            OUT_ERROR
+        }
+    }
+}
+
+/// The PS completion pump: sleeps until the queue's next completion
+/// horizon (or an arrival pokes it) and delivers finished requests.
+fn scheduler(sh: Arc<Shared>) {
+    let mut st = sh.st.lock().expect("target lock");
+    loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            // fail whatever is still in service so no caller hangs
+            for req in st.cpu.drain_all() {
+                if let Some(tx) = st.waiters.remove(&req.0) {
+                    drop(tx); // recv() errors -> OUT_ERROR
+                }
+            }
+            st.waiters.clear();
+            return;
+        }
+        let now = SimTime::from_secs_f64(st.epoch.elapsed().as_secs_f64());
+        Shared::drain(&mut st, now);
+        let wait_s = match st.cpu.next_completion() {
+            Some(at) => {
+                (at.as_secs_f64() - st.epoch.elapsed().as_secs_f64())
+                    .clamp(0.0005, 0.050)
+            }
+            None => 0.050,
+        };
+        let (guard, _) = sh
+            .cv
+            .wait_timeout(st, Duration::from_secs_f64(wait_s))
+            .expect("target lock");
+        st = guard;
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, sh: Arc<Shared>, mut rng: Pcg64) {
+    let _ = stream.set_nodelay(true);
+    let mut req = [0u8; 1];
+    loop {
+        if stream.read_exact(&mut req).is_err() {
+            return; // agent closed its connection
+        }
+        sh.submitted.fetch_add(1, Ordering::Relaxed);
+        let outcome = sh.serve_one(&mut rng);
+        if stream.write_all(&[outcome]).is_err() {
+            return;
+        }
+    }
+}
+
+/// A running in-process target.  Dropping it shuts everything down.
+pub struct Target {
+    /// The bound address agents should call.
+    pub addr: SocketAddr,
+    sh: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    sched: Option<JoinHandle<()>>,
+}
+
+impl Target {
+    /// Bind `127.0.0.1:0` and serve the given discipline.  `seed`
+    /// derives the per-connection demand streams.
+    pub fn spawn(kind: &TargetKind, seed: u64) -> std::io::Result<Target> {
+        let disc = match kind {
+            TargetKind::Ps(p) => Discipline {
+                overhead_s: 0.0,
+                max_concurrent: usize::MAX,
+                demand_s: p.demand_s,
+                spread: p.spread,
+            },
+            TargetKind::Http(p) => Discipline {
+                overhead_s: p.overhead_s,
+                max_concurrent: p.max_concurrent,
+                demand_s: p.cgi_demand_s,
+                spread: p.demand_spread,
+            },
+        };
+        let speed = match kind {
+            TargetKind::Ps(p) => p.speed,
+            TargetKind::Http(p) => p.speed,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let sh = Arc::new(Shared {
+            st: Mutex::new(Sched {
+                cpu: PsQueue::new(speed.max(1e-6)),
+                epoch: Instant::now(),
+                waiters: HashMap::new(),
+                next_req: 0,
+            }),
+            cv: Condvar::new(),
+            disc,
+            in_flight: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            denied: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let sched = {
+            let sh = Arc::clone(&sh);
+            std::thread::spawn(move || scheduler(sh))
+        };
+        let accept = {
+            let sh = Arc::clone(&sh);
+            let mut master = Pcg64::seed_from(seed ^ 0x7a72_6765_74);
+            std::thread::spawn(move || {
+                let mut conn_idx = 0u64;
+                for conn in listener.incoming() {
+                    if sh.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let rng = master.split(conn_idx);
+                    conn_idx += 1;
+                    let sh = Arc::clone(&sh);
+                    std::thread::spawn(move || serve_conn(stream, sh, rng));
+                }
+            })
+        };
+        Ok(Target {
+            addr,
+            sh,
+            accept: Some(accept),
+            sched: Some(sched),
+        })
+    }
+
+    /// Lifetime counters, in the simulator's [`ServiceStats`] shape.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.sh.submitted.load(Ordering::Relaxed),
+            completed: self.sh.completed.load(Ordering::Relaxed),
+            denied: self.sh.denied.load(Ordering::Relaxed),
+            errored: self.sh.errored.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the scheduler and the accept loop.  Idempotent.
+    pub fn shutdown(&mut self) {
+        self.sh.stop.store(true, Ordering::SeqCst);
+        self.sh.cv.notify_all();
+        if let Some(h) = self.sched.take() {
+            let _ = h.join();
+        }
+        let _ = TcpStream::connect(self.addr); // poke accept()
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Target {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One blocking call against an in-process target over an established
+/// connection; returns the outcome byte.
+pub fn call(stream: &mut TcpStream) -> std::io::Result<u8> {
+    stream.write_all(&[1u8])?;
+    stream.flush()?;
+    let mut out = [0u8; 1];
+    stream.read_exact(&mut out)?;
+    Ok(out[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_resolve_and_unknown_lists_alternatives() {
+        assert_eq!(target_by_name("ps").unwrap().label(), "ps");
+        assert_eq!(target_by_name("http").unwrap().label(), "http");
+        let e = target_by_name("apache").unwrap_err().to_string();
+        for name in TARGET_NAMES {
+            assert!(e.contains(name), "{e} missing {name}");
+        }
+    }
+
+    #[test]
+    fn ps_target_serves_one_call_in_about_demand_seconds() {
+        let kind = TargetKind::Ps(PsTargetParams {
+            demand_s: 0.030,
+            spread: 1.0 + 1e-9,
+            speed: 1.0,
+        });
+        let mut target = Target::spawn(&kind, 1).unwrap();
+        let mut conn = TcpStream::connect(target.addr).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(call(&mut conn).unwrap(), OUT_OK);
+        let dt = t0.elapsed().as_secs_f64();
+        // 30 ms of demand; allow generous scheduler slack on CI
+        assert!((0.025..1.0).contains(&dt), "call took {dt}s");
+        let st = target.stats();
+        assert_eq!(st.submitted, 1);
+        assert_eq!(st.completed, 1);
+        target.shutdown();
+    }
+
+    #[test]
+    fn http_cap_denies_excess_immediately() {
+        let kind = TargetKind::Http(HttpParams {
+            cgi_demand_s: 0.5,
+            demand_spread: 1.0 + 1e-9,
+            overhead_s: 0.0,
+            max_concurrent: 1,
+            speed: 1.0,
+        });
+        let mut target = Target::spawn(&kind, 2).unwrap();
+        let addr = target.addr;
+        // first call occupies the single worker for ~500 ms
+        let busy = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            call(&mut conn).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(call(&mut conn).unwrap(), OUT_DENIED);
+        assert!(t0.elapsed().as_secs_f64() < 0.25, "denial must be instant");
+        assert_eq!(busy.join().unwrap(), OUT_OK);
+        let st = target.stats();
+        assert_eq!(st.denied, 1);
+        assert_eq!(st.completed, 1);
+        target.shutdown();
+    }
+
+    #[test]
+    fn concurrent_calls_share_the_cpu() {
+        // two simultaneous 80 ms jobs on a shared CPU finish together in
+        // ~160 ms — the PS signature, measured over real sockets
+        let kind = TargetKind::Ps(PsTargetParams {
+            demand_s: 0.080,
+            spread: 1.0 + 1e-9,
+            speed: 1.0,
+        });
+        let target = Target::spawn(&kind, 3).unwrap();
+        let addr = target.addr;
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    call(&mut conn).unwrap()
+                })
+            })
+            .collect();
+        for w in workers {
+            assert_eq!(w.join().unwrap(), OUT_OK);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.130, "PS sharing should stretch both jobs: {dt}s");
+        assert!(dt < 1.5, "calls took too long: {dt}s");
+    }
+}

@@ -1,0 +1,187 @@
+//! The central time-stamp server (§3.1.2), over a real socket.
+//!
+//! The paper found platform clocks off by "thousands of seconds" and ran
+//! its own lightweight time service: testers query it periodically,
+//! timestamp locally, and the offsets are applied at aggregation time.
+//! This is that server for the live harness: a TCP listener that answers
+//! every 1-byte ping with its 8-byte clock reading.  One request/reply
+//! over a held-open connection keeps the exchange inside a single RTT —
+//! the same property Cristian's algorithm needs for its error bound.
+//!
+//! [`LiveClock`] is the wall-clock twin of the simulator's
+//! [`crate::cluster::LocalClock`]: monotonic (`Instant`-based) seconds
+//! with a configurable constant skew and frequency drift.  The harness
+//! gives every agent a deliberately skewed clock so the
+//! [`crate::timesync`] pipeline does real work on real sockets instead
+//! of being handed pre-aligned timestamps.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::timesync::SyncPoint;
+
+/// A wall clock with configurable skew and drift, read as f64 seconds.
+///
+/// `now_s = elapsed * (1 + drift) + skew_s`, exactly the simulator's
+/// [`crate::cluster::LocalClock`] law with `Instant::elapsed` as the
+/// true time source.  `Instant` is monotonic, so local timestamps never
+/// run backwards — which [`crate::timesync::ClockMap::record`] relies
+/// on.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveClock {
+    epoch: Instant,
+    skew_s: f64,
+    drift: f64,
+}
+
+impl LiveClock {
+    /// An unskewed, drift-free clock starting at 0 now.
+    pub fn ideal() -> LiveClock {
+        LiveClock::anchored(Instant::now(), 0.0, 0.0)
+    }
+
+    /// A clock with the given constant skew (seconds) and fractional
+    /// frequency drift (e.g. `50e-6` = 50 ppm), anchored at `epoch`.
+    pub fn anchored(epoch: Instant, skew_s: f64, drift: f64) -> LiveClock {
+        LiveClock {
+            epoch,
+            skew_s,
+            drift,
+        }
+    }
+
+    /// The clock's current reading in seconds.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * (1.0 + self.drift) + self.skew_s
+    }
+}
+
+/// A running time-stamp server.  Dropping it shuts the listener down.
+pub struct TimeServer {
+    /// The bound address agents should query.
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TimeServer {
+    /// Bind `127.0.0.1:0` and serve `clock` readings until shutdown.
+    pub fn spawn(clock: LiveClock) -> std::io::Result<TimeServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                // per-connection responder; exits on peer EOF
+                std::thread::spawn(move || serve_conn(stream, clock));
+            }
+        });
+        Ok(TimeServer {
+            addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// Stop accepting and join the accept loop.  Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the blocked accept() so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TimeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, clock: LiveClock) {
+    let _ = stream.set_nodelay(true);
+    let mut ping = [0u8; 1];
+    loop {
+        if stream.read_exact(&mut ping).is_err() {
+            return; // peer closed (or the harness shut down)
+        }
+        let stamp = clock.now_s().to_bits().to_be_bytes();
+        if stream.write_all(&stamp).is_err() {
+            return;
+        }
+    }
+}
+
+/// One Cristian exchange over an established connection: timestamp the
+/// request (`l1`) and the reply (`l2`) on `clock`, carry the server's
+/// reading between them.
+pub fn sync_exchange(
+    stream: &mut TcpStream,
+    clock: &LiveClock,
+) -> std::io::Result<SyncPoint> {
+    let l1 = clock.now_s();
+    stream.write_all(&[1u8])?;
+    stream.flush()?;
+    let mut stamp = [0u8; 8];
+    stream.read_exact(&mut stamp)?;
+    let l2 = clock.now_s();
+    let server = f64::from_bits(u64::from_be_bytes(stamp));
+    Ok(SyncPoint { l1, server, l2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_applies_skew_and_drift() {
+        let epoch = Instant::now();
+        let skewed = LiveClock::anchored(epoch, 500.0, 0.0);
+        let ideal = LiveClock::anchored(epoch, 0.0, 0.0);
+        let d = skewed.now_s() - ideal.now_s();
+        assert!((d - 500.0).abs() < 1e-3, "skew delta {d}");
+        let fast = LiveClock::anchored(epoch, 0.0, 0.5);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let ratio = fast.now_s() / ideal.now_s().max(1e-9);
+        assert!(ratio > 1.2, "drift ratio {ratio}");
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let c = LiveClock::ideal();
+        let mut last = c.now_s();
+        for _ in 0..1000 {
+            let now = c.now_s();
+            assert!(now >= last);
+            last = now;
+        }
+    }
+
+    #[test]
+    fn server_answers_pings_and_shuts_down() {
+        let mut srv = TimeServer::spawn(LiveClock::ideal()).unwrap();
+        let clock = LiveClock::anchored(Instant::now(), 100.0, 0.0);
+        let mut conn = TcpStream::connect(srv.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        for _ in 0..3 {
+            let p = sync_exchange(&mut conn, &clock).unwrap();
+            assert!(p.l2 >= p.l1);
+            // loopback rtt is tiny; the offset must recover the -100 s
+            // skew to well within a second
+            assert!((p.offset() + 100.0).abs() < 1.0, "offset {}", p.offset());
+        }
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+    }
+}

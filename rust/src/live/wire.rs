@@ -1,0 +1,531 @@
+//! Length-prefixed binary codec for the [`crate::transport`] message
+//! vocabulary over real sockets.
+//!
+//! The environment ships no `serde`, so the encoding is hand-rolled and
+//! deliberately boring: every frame is a 4-byte big-endian length
+//! followed by that many payload bytes; the payload is a 1-byte tag and
+//! fixed-width big-endian fields (`f64` as IEEE-754 bit patterns, so
+//! `INFINITY` rate caps survive the trip).  Sample reports are batched
+//! into one frame — the per-message overhead is what the paper's §3.1.1
+//! ssh channels amortize too.
+//!
+//! Robustness rules, enforced by the decoders and tested below:
+//! * frames longer than [`MAX_FRAME`] are rejected before allocation
+//!   (a garbage length prefix must not OOM the controller);
+//! * truncated payloads are an error, never a partial decode;
+//! * trailing bytes after a complete message are an error (catches
+//!   framing bugs instead of silently resynchronizing);
+//! * unknown tags / enum bytes are an error (a newer or corrupt peer is
+//!   rejected loudly).
+//!
+//! ```
+//! use diperf::live::wire::{decode_ctrl, encode_ctrl};
+//! use diperf::transport::{CtrlMsg, TestDescription};
+//!
+//! let msg = CtrlMsg::Start(TestDescription::default());
+//! let bytes = encode_ctrl(&msg);
+//! match decode_ctrl(&bytes).unwrap() {
+//!     CtrlMsg::Start(d) => assert_eq!(d.duration_s, 3600.0),
+//!     CtrlMsg::Stop => unreachable!(),
+//! }
+//! ```
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::ids::TesterId;
+use crate::metrics::{CallSample, SampleOutcome};
+use crate::timesync::SyncPoint;
+use crate::transport::{CtrlMsg, GoodbyeReason, TestDescription};
+
+/// Hard ceiling on a frame's payload size.  Large enough for a
+/// [`MAX_BATCH`]-sample batch, small enough that a corrupt length
+/// prefix cannot make a peer allocate gigabytes.
+pub const MAX_FRAME: usize = 64 * 1024;
+
+/// Encoded size of one [`CallSample`] in a batch frame.
+pub const SAMPLE_BYTES: usize = 4 + 4 + 8 + 8 + 8 + 1;
+
+/// Most samples one batch frame can carry.
+pub const MAX_BATCH: usize = (MAX_FRAME - 5) / SAMPLE_BYTES;
+
+const TAG_START: u8 = 0x01;
+const TAG_STOP: u8 = 0x02;
+const TAG_HELLO: u8 = 0x10;
+const TAG_DEPLOY_DONE: u8 = 0x11;
+const TAG_SAMPLES: u8 = 0x12;
+const TAG_SYNC: u8 = 0x13;
+const TAG_HEARTBEAT: u8 = 0x14;
+const TAG_GOODBYE: u8 = 0x15;
+
+/// Agent -> controller messages as they appear on the wire: the
+/// [`crate::transport::TesterMsg`] vocabulary with samples batched.
+#[derive(Clone, Debug)]
+pub enum WireUp {
+    /// Session registration (first frame of every connection; also the
+    /// §3 late-join re-registration).
+    Hello {
+        /// The agent's roster index.
+        agent: u32,
+    },
+    /// Client code unpacked; ready for Start.
+    DeployDone,
+    /// A batch of timed client invocations, in launch order.
+    Samples(Vec<CallSample>),
+    /// One completed clock-sync exchange.
+    Sync(SyncPoint),
+    /// Liveness signal when no samples flow.
+    Heartbeat,
+    /// Clean shutdown notice.
+    Goodbye(GoodbyeReason),
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_be_bytes());
+}
+
+fn outcome_byte(o: SampleOutcome) -> u8 {
+    match o {
+        SampleOutcome::Success => 0,
+        SampleOutcome::Timeout => 1,
+        SampleOutcome::StartFailure => 2,
+        SampleOutcome::Denied => 3,
+        SampleOutcome::ServiceError => 4,
+    }
+}
+
+fn outcome_from(b: u8) -> Option<SampleOutcome> {
+    Some(match b {
+        0 => SampleOutcome::Success,
+        1 => SampleOutcome::Timeout,
+        2 => SampleOutcome::StartFailure,
+        3 => SampleOutcome::Denied,
+        4 => SampleOutcome::ServiceError,
+        _ => return None,
+    })
+}
+
+/// Strict big-endian field reader over one frame's payload.
+struct Rd<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let Some((&x, rest)) = self.b.split_first() else {
+            bail!("truncated frame: wanted 1 more byte");
+        };
+        self.b = rest;
+        Ok(x)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        if self.b.len() < 4 {
+            bail!("truncated frame: wanted 4 bytes, have {}", self.b.len());
+        }
+        let (head, rest) = self.b.split_at(4);
+        self.b = rest;
+        Ok(u32::from_be_bytes(head.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        if self.b.len() < 8 {
+            bail!("truncated frame: wanted 8 bytes, have {}", self.b.len());
+        }
+        let (head, rest) = self.b.split_at(8);
+        self.b = rest;
+        Ok(f64::from_bits(u64::from_be_bytes(
+            head.try_into().expect("8 bytes"),
+        )))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if !self.b.is_empty() {
+            bail!("{} trailing bytes after message", self.b.len());
+        }
+        Ok(())
+    }
+}
+
+/// Encode a controller -> agent message (payload only; the length
+/// prefix is added by [`write_frame`]).
+pub fn encode_ctrl(msg: &CtrlMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(48);
+    match msg {
+        CtrlMsg::Start(d) => {
+            out.push(TAG_START);
+            put_f64(&mut out, d.duration_s);
+            put_f64(&mut out, d.client_interval_s);
+            put_f64(&mut out, d.sync_interval_s);
+            put_f64(&mut out, d.rate_cap_per_s);
+            put_f64(&mut out, d.timeout_s);
+            put_u32(&mut out, d.give_up_failures);
+        }
+        CtrlMsg::Stop => out.push(TAG_STOP),
+    }
+    out
+}
+
+/// Decode a controller -> agent payload.
+pub fn decode_ctrl(payload: &[u8]) -> Result<CtrlMsg> {
+    let mut rd = Rd::new(payload);
+    let msg = match rd.u8()? {
+        TAG_START => CtrlMsg::Start(TestDescription {
+            duration_s: rd.f64()?,
+            client_interval_s: rd.f64()?,
+            sync_interval_s: rd.f64()?,
+            rate_cap_per_s: rd.f64()?,
+            timeout_s: rd.f64()?,
+            give_up_failures: rd.u32()?,
+        }),
+        TAG_STOP => CtrlMsg::Stop,
+        t => bail!("unknown control tag 0x{t:02x}"),
+    };
+    rd.finish()?;
+    Ok(msg)
+}
+
+fn put_sample(out: &mut Vec<u8>, s: &CallSample) {
+    put_u32(out, s.tester.0);
+    put_u32(out, s.seq);
+    put_f64(out, s.t_submit_local);
+    put_f64(out, s.t_done_local);
+    put_f64(out, s.rt_s);
+    out.push(outcome_byte(s.outcome));
+}
+
+fn take_sample(rd: &mut Rd<'_>) -> Result<CallSample> {
+    let tester = TesterId(rd.u32()?);
+    let seq = rd.u32()?;
+    let t_submit_local = rd.f64()?;
+    let t_done_local = rd.f64()?;
+    let rt_s = rd.f64()?;
+    let b = rd.u8()?;
+    let Some(outcome) = outcome_from(b) else {
+        bail!("unknown sample outcome byte 0x{b:02x}");
+    };
+    Ok(CallSample {
+        tester,
+        seq,
+        t_submit_local,
+        t_done_local,
+        rt_s,
+        outcome,
+    })
+}
+
+/// Encode an agent -> controller message (payload only).
+///
+/// Panics if a sample batch exceeds [`MAX_BATCH`] — callers flush their
+/// buffers long before that (the agent flushes every few dozen calls).
+pub fn encode_up(msg: &WireUp) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    match msg {
+        WireUp::Hello { agent } => {
+            out.push(TAG_HELLO);
+            put_u32(&mut out, *agent);
+        }
+        WireUp::DeployDone => out.push(TAG_DEPLOY_DONE),
+        WireUp::Samples(samples) => {
+            assert!(samples.len() <= MAX_BATCH, "batch too large for a frame");
+            out.reserve(5 + samples.len() * SAMPLE_BYTES);
+            out.push(TAG_SAMPLES);
+            put_u32(&mut out, samples.len() as u32);
+            for s in samples {
+                put_sample(&mut out, s);
+            }
+        }
+        WireUp::Sync(p) => {
+            out.push(TAG_SYNC);
+            put_f64(&mut out, p.l1);
+            put_f64(&mut out, p.server);
+            put_f64(&mut out, p.l2);
+        }
+        WireUp::Heartbeat => out.push(TAG_HEARTBEAT),
+        WireUp::Goodbye(reason) => {
+            out.push(TAG_GOODBYE);
+            out.push(reason.as_u8());
+        }
+    }
+    out
+}
+
+/// Decode an agent -> controller payload.
+pub fn decode_up(payload: &[u8]) -> Result<WireUp> {
+    let mut rd = Rd::new(payload);
+    let msg = match rd.u8()? {
+        TAG_HELLO => WireUp::Hello { agent: rd.u32()? },
+        TAG_DEPLOY_DONE => WireUp::DeployDone,
+        TAG_SAMPLES => {
+            let count = rd.u32()? as usize;
+            if count > MAX_BATCH {
+                bail!("sample batch of {count} exceeds the frame limit");
+            }
+            let mut samples = Vec::with_capacity(count);
+            for _ in 0..count {
+                samples.push(take_sample(&mut rd)?);
+            }
+            WireUp::Samples(samples)
+        }
+        TAG_SYNC => WireUp::Sync(SyncPoint {
+            l1: rd.f64()?,
+            server: rd.f64()?,
+            l2: rd.f64()?,
+        }),
+        TAG_HEARTBEAT => WireUp::Heartbeat,
+        TAG_GOODBYE => {
+            let b = rd.u8()?;
+            let Some(reason) = GoodbyeReason::from_u8(b) else {
+                bail!("unknown goodbye reason byte 0x{b:02x}");
+            };
+            WireUp::Goodbye(reason)
+        }
+        t => bail!("unknown report tag 0x{t:02x}"),
+    };
+    rd.finish()?;
+    Ok(msg)
+}
+
+/// Write one frame: 4-byte big-endian payload length, then the payload.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME, "frame over the size cap");
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload.  Oversized length prefixes are rejected
+/// *before* allocating; a short read surfaces as `UnexpectedEof`.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("oversized frame: {n} bytes (cap {MAX_FRAME})"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seq: u32, outcome: SampleOutcome) -> CallSample {
+        CallSample {
+            tester: TesterId(3),
+            seq,
+            t_submit_local: 1234.5,
+            t_done_local: 1235.625,
+            rt_s: 1.0625,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn ctrl_messages_round_trip() {
+        let desc = TestDescription {
+            duration_s: 12.5,
+            client_interval_s: 0.05,
+            sync_interval_s: 1.0,
+            rate_cap_per_s: f64::INFINITY,
+            timeout_s: 5.0,
+            give_up_failures: 7,
+        };
+        let bytes = encode_ctrl(&CtrlMsg::Start(desc));
+        match decode_ctrl(&bytes).unwrap() {
+            CtrlMsg::Start(d) => {
+                assert_eq!(d.duration_s, 12.5);
+                assert_eq!(d.client_interval_s, 0.05);
+                assert_eq!(d.sync_interval_s, 1.0);
+                assert!(d.rate_cap_per_s.is_infinite());
+                assert_eq!(d.timeout_s, 5.0);
+                assert_eq!(d.give_up_failures, 7);
+            }
+            CtrlMsg::Stop => panic!("wrong message"),
+        }
+        assert!(matches!(
+            decode_ctrl(&encode_ctrl(&CtrlMsg::Stop)).unwrap(),
+            CtrlMsg::Stop
+        ));
+    }
+
+    #[test]
+    fn up_messages_round_trip() {
+        let outcomes = [
+            SampleOutcome::Success,
+            SampleOutcome::Timeout,
+            SampleOutcome::StartFailure,
+            SampleOutcome::Denied,
+            SampleOutcome::ServiceError,
+        ];
+        let batch: Vec<CallSample> = outcomes
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| sample(i as u32, o))
+            .collect();
+        let msgs = [
+            WireUp::Hello { agent: 9 },
+            WireUp::DeployDone,
+            WireUp::Samples(batch),
+            WireUp::Sync(SyncPoint {
+                l1: 1.5,
+                server: 100.25,
+                l2: 1.75,
+            }),
+            WireUp::Heartbeat,
+            WireUp::Goodbye(GoodbyeReason::TooManyFailures),
+        ];
+        for msg in &msgs {
+            let bytes = encode_up(msg);
+            let back = decode_up(&bytes).unwrap();
+            match (msg, &back) {
+                (WireUp::Hello { agent: a }, WireUp::Hello { agent: b }) => {
+                    assert_eq!(a, b)
+                }
+                (WireUp::DeployDone, WireUp::DeployDone) => {}
+                (WireUp::Samples(a), WireUp::Samples(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.tester, y.tester);
+                        assert_eq!(x.seq, y.seq);
+                        assert_eq!(
+                            x.t_submit_local.to_bits(),
+                            y.t_submit_local.to_bits()
+                        );
+                        assert_eq!(
+                            x.t_done_local.to_bits(),
+                            y.t_done_local.to_bits()
+                        );
+                        assert_eq!(x.rt_s.to_bits(), y.rt_s.to_bits());
+                        assert_eq!(x.outcome, y.outcome);
+                    }
+                }
+                (WireUp::Sync(a), WireUp::Sync(b)) => {
+                    assert_eq!(a.l1, b.l1);
+                    assert_eq!(a.server, b.server);
+                    assert_eq!(a.l2, b.l2);
+                }
+                (WireUp::Heartbeat, WireUp::Heartbeat) => {}
+                (WireUp::Goodbye(a), WireUp::Goodbye(b)) => assert_eq!(a, b),
+                other => panic!("mismatched round trip: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let frames = [
+            encode_ctrl(&CtrlMsg::Start(TestDescription::default())),
+            encode_up(&WireUp::Samples(vec![
+                sample(0, SampleOutcome::Success),
+                sample(1, SampleOutcome::Timeout),
+            ])),
+            encode_up(&WireUp::Sync(SyncPoint {
+                l1: 1.0,
+                server: 2.0,
+                l2: 3.0,
+            })),
+            encode_up(&WireUp::Goodbye(GoodbyeReason::Finished)),
+        ];
+        for f in &frames {
+            for cut in 0..f.len() {
+                let part = &f[..cut];
+                assert!(
+                    decode_ctrl(part).is_err() && decode_up(part).is_err(),
+                    "prefix of {cut} bytes decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut f = encode_up(&WireUp::Heartbeat);
+        f.push(0);
+        assert!(decode_up(&f).is_err());
+        let mut f = encode_ctrl(&CtrlMsg::Stop);
+        f.push(0);
+        assert!(decode_ctrl(&f).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_and_bytes_are_rejected() {
+        assert!(decode_ctrl(&[0x7f]).is_err());
+        assert!(decode_up(&[0x7f]).is_err());
+        // goodbye with a bogus reason byte
+        assert!(decode_up(&[super::TAG_GOODBYE, 9]).is_err());
+        // sample with a bogus outcome byte
+        let mut f = encode_up(&WireUp::Samples(vec![sample(
+            0,
+            SampleOutcome::Success,
+        )]));
+        let last = f.len() - 1;
+        f[last] = 0xee;
+        assert!(decode_up(&f).is_err());
+    }
+
+    #[test]
+    fn batch_count_lies_are_rejected() {
+        // count says 2, body carries 1 sample
+        let mut f = vec![super::TAG_SAMPLES];
+        f.extend_from_slice(&2u32.to_be_bytes());
+        let mut one = Vec::new();
+        put_sample(&mut one, &sample(0, SampleOutcome::Success));
+        f.extend_from_slice(&one);
+        assert!(decode_up(&f).is_err());
+        // count says 1, body carries 2
+        let mut f = vec![super::TAG_SAMPLES];
+        f.extend_from_slice(&1u32.to_be_bytes());
+        f.extend_from_slice(&one);
+        f.extend_from_slice(&one);
+        assert!(decode_up(&f).is_err());
+        // absurd count is rejected before any allocation
+        let mut f = vec![super::TAG_SAMPLES];
+        f.extend_from_slice(&u32::MAX.to_be_bytes());
+        assert!(decode_up(&f).is_err());
+    }
+
+    #[test]
+    fn frame_io_round_trips_and_rejects_oversize() {
+        let payload = encode_up(&WireUp::Hello { agent: 4 });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        assert_eq!(buf.len(), 4 + payload.len());
+        let mut cur = io::Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), payload);
+
+        // a hostile length prefix is refused before allocation
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&(u32::MAX).to_be_bytes());
+        let mut cur = io::Cursor::new(&evil);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // a truncated stream surfaces as UnexpectedEof
+        let mut cut = buf.clone();
+        cut.truncate(buf.len() - 2);
+        let mut cur = io::Cursor::new(&cut);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn batch_capacity_fits_the_frame_cap() {
+        assert!(5 + MAX_BATCH * SAMPLE_BYTES <= MAX_FRAME);
+        assert!(MAX_BATCH > 500, "batching must actually amortize");
+    }
+}

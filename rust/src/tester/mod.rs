@@ -103,6 +103,15 @@ impl Tester {
         self.outstanding = None;
     }
 
+    /// The controller session died under the agent (TCP reset, ssh
+    /// channel teardown).  Per §3 an unmonitored client must never load
+    /// the service, so the tester stops issuing clients *immediately* —
+    /// not at the next sync point or duration check.  The in-flight
+    /// invocation (if any) is abandoned unreported: nobody is listening.
+    pub fn session_lost(&mut self) {
+        self.stop();
+    }
+
     /// The node died under the agent.
     pub fn kill(&mut self) {
         if self.phase != Phase::Dead {
@@ -391,6 +400,17 @@ mod tests {
         t.kill();
         assert_eq!(t.crashes, 1);
         assert_eq!(t.revive(), Phase::Running);
+    }
+
+    #[test]
+    fn session_loss_stops_client_issue_immediately() {
+        let mut t = tester();
+        t.launch(100.0, RequestId(0));
+        t.session_lost();
+        assert_eq!(t.phase, Phase::Stopped);
+        assert!(t.outstanding.is_none());
+        // well inside the configured duration, yet no further launches
+        assert!(!t.can_launch(100.5));
     }
 
     #[test]

@@ -80,6 +80,27 @@ pub enum GoodbyeReason {
     TooManyFailures,
 }
 
+impl GoodbyeReason {
+    /// Stable single-byte wire encoding (the live harness' framed codec
+    /// and any future persistence share it).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            GoodbyeReason::Finished => 0,
+            GoodbyeReason::TooManyFailures => 1,
+        }
+    }
+
+    /// Decode the wire byte; `None` for unknown values (a corrupt or
+    /// newer-protocol frame must be rejected, not misread).
+    pub fn from_u8(b: u8) -> Option<GoodbyeReason> {
+        match b {
+            0 => Some(GoodbyeReason::Finished),
+            1 => Some(GoodbyeReason::TooManyFailures),
+            _ => None,
+        }
+    }
+}
+
 /// Tester -> controller messages.
 #[derive(Clone, Copy, Debug)]
 pub enum TesterMsg {
@@ -192,6 +213,14 @@ mod tests {
     fn client_code_sizes() {
         assert!(ClientCode::Jar.bytes() > ClientCode::NativeBinary.bytes());
         assert_eq!(ClientCode::Custom(7).bytes(), 7);
+    }
+
+    #[test]
+    fn goodbye_reason_wire_byte_round_trips() {
+        for r in [GoodbyeReason::Finished, GoodbyeReason::TooManyFailures] {
+            assert_eq!(GoodbyeReason::from_u8(r.as_u8()), Some(r));
+        }
+        assert_eq!(GoodbyeReason::from_u8(7), None);
     }
 
     #[test]

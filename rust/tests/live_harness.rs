@@ -1,0 +1,273 @@
+//! Live-harness integration tests: real sockets, real clocks, real
+//! threads.
+//!
+//! Timing assertions are deliberately generous — CI runners stall — but
+//! every *correctness* property (sync error inside the Cristian bound,
+//! disconnect semantics, pipeline conservation) is exact.
+
+use std::net::{Shutdown, TcpListener};
+use std::time::{Duration, Instant};
+
+use diperf::live::{
+    self, agent::{run_agent, AgentParams, CallMode},
+    crossval,
+    target::{PsTargetParams, Target, TargetKind},
+    timeserver::{sync_exchange, LiveClock, TimeServer},
+    wire::{self, WireUp},
+    TargetSel,
+};
+use diperf::timesync::ClockMap;
+use diperf::transport::{CtrlMsg, TestDescription};
+
+/// §3.1.2 over a loopback socket: the offset estimate from a real
+/// exchange must recover a known skew to within the measured round-trip
+/// asymmetry bound (|error| <= rtt/2).
+#[test]
+fn loopback_sync_error_stays_within_rtt_bound() {
+    let epoch = Instant::now();
+    let server_clock = LiveClock::anchored(epoch, 0.0, 0.0);
+    let mut srv = TimeServer::spawn(server_clock).unwrap();
+    // the agent clock is 4242 s ahead; both anchored at the same epoch,
+    // so the true offset is exactly -4242
+    let skew = 4242.0;
+    let clock = LiveClock::anchored(epoch, skew, 0.0);
+    let mut conn = std::net::TcpStream::connect(srv.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    for _ in 0..20 {
+        let p = sync_exchange(&mut conn, &clock).unwrap();
+        let err = (p.offset() - (-skew)).abs();
+        assert!(
+            err <= p.rtt() / 2.0 + 1e-6,
+            "sync error {err} exceeds the rtt/2 bound ({})",
+            p.rtt() / 2.0
+        );
+    }
+    srv.shutdown();
+}
+
+/// Drift interpolation over >= 3 real sync points: piecewise-linear
+/// offsets absorb a 5% frequency error that a single-point map cannot.
+#[test]
+fn drift_interpolation_across_real_sync_points() {
+    let epoch = Instant::now();
+    let mut srv = TimeServer::spawn(LiveClock::anchored(epoch, 0.0, 0.0)).unwrap();
+    let skew = 5.0;
+    let drift = 0.05; // 5%: huge, so the effect dominates loopback noise
+    let clock = LiveClock::anchored(epoch, skew, drift);
+    let mut conn = std::net::TcpStream::connect(srv.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+
+    let mut map = ClockMap::new();
+    let mut single = ClockMap::new();
+    for i in 0..4 {
+        let p = sync_exchange(&mut conn, &clock).unwrap();
+        map.record(p);
+        if i == 0 {
+            single.record(p);
+        }
+        std::thread::sleep(Duration::from_millis(120));
+    }
+    // a local reading strictly inside the synced range: truth follows
+    // from the shared epoch: local = elapsed*(1+drift)+skew
+    std::thread::sleep(Duration::from_millis(30));
+    let local = clock.now_s();
+    let p_last = sync_exchange(&mut conn, &clock).unwrap();
+    map.record(p_last);
+    let truth = (local - skew) / (1.0 + drift);
+
+    let err = (map.to_global(local).unwrap() - truth).abs();
+    assert!(err < 0.005, "interpolated error {err}s");
+    // the single-point map carries ~5% of ~450 ms of elapsed time
+    let err1 = (single.to_global(local).unwrap() - truth).abs();
+    assert!(err1 > 0.010, "single-point error only {err1}s");
+    assert!(map.len() >= 3, "need at least 3 sync points, got {}", map.len());
+    srv.shutdown();
+}
+
+/// The full stack end to end at miniature scale: agents, controller,
+/// time server and the in-process target, all over loopback, feeding
+/// the same streaming pipeline as the simulator — plus the sim-vs-live
+/// crossval report on the identical load spec.
+#[test]
+fn live_run_end_to_end_with_crossval() {
+    let mut cfg = live::live_smoke(11);
+    cfg.agents = 3;
+    cfg.controller.stagger_s = 0.1;
+    cfg.controller.desc.duration_s = 2.0;
+    cfg.controller.desc.client_interval_s = 0.04;
+    cfg.controller.desc.sync_interval_s = 0.5;
+    cfg.grace_s = 1.0;
+    let r = live::run_live(&cfg).unwrap();
+
+    assert_eq!(r.connected, 3, "all agents must connect");
+    assert_eq!(r.data.testers.len(), 3);
+    assert!(r.samples() > 20, "only {} samples", r.samples());
+    assert_eq!(r.data.dropped_unsynced, 0, "first sync precedes first launch");
+    assert!(
+        r.agent_reports.iter().all(|a| a.finished),
+        "every agent should finish its duration: {:?}",
+        r.agent_reports
+    );
+    let sent: u64 = r.agent_reports.iter().map(|a| a.samples_sent).sum();
+    assert_eq!(sent, r.samples(), "every sent sample must be aggregated");
+    assert!(r.stream.binned.total_ok > 0.0, "no successful calls");
+    assert!(r.agent_throughput() > 0.0);
+    let st = r.service_stats.expect("in-process target counters");
+    assert!(st.completed > 0);
+    assert!(
+        st.completed >= r.stream.binned.total_ok as u64,
+        "agents cannot see more completions than the target served"
+    );
+
+    // the same spec through the simulator: generous agreement bound
+    let cv = crossval::compare(&cfg, &r).unwrap().expect("in-process twin");
+    assert!(
+        cv.divergence < 0.9,
+        "sim-vs-live throughput divergence {}",
+        cv.divergence
+    );
+    let csv = crossval::csv(&cv);
+    assert!(csv.starts_with("metric,sim,live,rel_diff\n"), "{csv}");
+    assert!(csv.contains("throughput_per_s"));
+    assert_eq!(
+        crossval::curve_csv(&cv).trim().lines().count(),
+        1 + crossval::CURVE_POINTS
+    );
+}
+
+/// The CLI end to end: `diperf live` writes the simulator's report CSV
+/// schema plus the crossval reports, enforces `--crossval-bound`, and
+/// appends an `agent_throughput` row to the bench trajectory.
+#[test]
+fn cli_live_writes_reports_and_bench_row() {
+    let dir = std::env::temp_dir()
+        .join(format!("diperf_live_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("liverun");
+    let bench = dir.join("bench.json");
+    let argv: Vec<String> = [
+        "live", "--preset", "live_smoke", "--agents", "2", "--duration",
+        "1.5", "--seed", "3", "--out", out.to_str().unwrap(),
+        "--bench-json", bench.to_str().unwrap(), "--crossval-bound",
+        "0.95", "--quiet",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(diperf::cli::main(&argv).unwrap(), 0);
+
+    // same figure schema as a simulated run, plus the crossval reports
+    let timeline =
+        std::fs::read_to_string(out.join("fig_timeline.csv")).unwrap();
+    assert!(timeline
+        .starts_with("time_s,load,load_ma,throughput,throughput_ma,rt_mean_s,rt_ma_s\n"));
+    assert!(out.join("fig_per_client.csv").exists());
+    assert!(out.join("fig_availability.csv").exists());
+    let cv = std::fs::read_to_string(out.join("crossval.csv")).unwrap();
+    assert!(cv.starts_with("metric,sim,live,rel_diff\n"), "{cv}");
+    assert!(out.join("crossval_curve.csv").exists());
+    let summary = std::fs::read_to_string(out.join("summary.txt")).unwrap();
+    assert!(summary.contains("agent throughput"), "{summary}");
+    assert!(summary.contains("crossval"), "{summary}");
+    let json = std::fs::read_to_string(&bench).unwrap();
+    assert!(json.contains("agent_throughput"), "{json}");
+    assert!(json.contains("\"queue\":\"live\""), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// §3 disconnect semantics, live: the agent stops issuing clients the
+/// moment its controller session is torn down, orders of magnitude
+/// before its 60 s test duration would end.
+#[test]
+fn agent_stops_the_moment_its_session_drops() {
+    let ts = TimeServer::spawn(LiveClock::ideal()).unwrap();
+    let target = Target::spawn(
+        &TargetKind::Ps(PsTargetParams {
+            demand_s: 0.002,
+            spread: 1.0 + 1e-9,
+            speed: 1.0,
+        }),
+        3,
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let ctrl_addr = listener.local_addr().unwrap();
+    let p = AgentParams {
+        id: 0,
+        ctrl_addr,
+        ts_addr: ts.addr,
+        call: CallMode::Framed(target.addr),
+        clock: LiveClock::ideal(),
+    };
+    let agent = std::thread::spawn(move || run_agent(p));
+
+    // controller side of the handshake, by hand
+    let (mut sess, _) = listener.accept().unwrap();
+    for _ in 0..2 {
+        let frame = wire::read_frame(&mut sess).unwrap();
+        match wire::decode_up(&frame).unwrap() {
+            WireUp::Hello { agent } => assert_eq!(agent, 0),
+            WireUp::DeployDone => {}
+            other => panic!("unexpected handshake frame {other:?}"),
+        }
+    }
+    let desc = TestDescription {
+        duration_s: 60.0,
+        client_interval_s: 0.01,
+        sync_interval_s: 0.2,
+        rate_cap_per_s: f64::INFINITY,
+        timeout_s: 5.0,
+        give_up_failures: 0,
+    };
+    wire::write_frame(&mut sess, &wire::encode_ctrl(&CtrlMsg::Start(desc)))
+        .unwrap();
+
+    // let it test for a moment, then kill the session without a Stop
+    std::thread::sleep(Duration::from_millis(500));
+    sess.shutdown(Shutdown::Both).unwrap();
+    let t0 = Instant::now();
+    let rep = agent.join().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(dt < 10.0, "agent took {dt}s to notice the dead session");
+    assert!(rep.session_dropped, "drop must be reported: {rep:?}");
+    assert!(!rep.finished);
+    assert!(rep.calls > 0, "the agent should have been testing");
+}
+
+/// Controller-side teardown: consecutive-failure eviction closes the
+/// session, which stops the agent — the whole run winds down long
+/// before the configured duration.
+#[test]
+fn eviction_drops_sessions_and_ends_the_run_early() {
+    // a port with nothing behind it: every probe is ConnectionRefused
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let mut cfg = live::live_smoke(13);
+    cfg.agents = 2;
+    cfg.controller.stagger_s = 0.05;
+    cfg.controller.desc.duration_s = 30.0;
+    cfg.controller.desc.client_interval_s = 0.05;
+    cfg.controller.desc.sync_interval_s = 0.3;
+    cfg.controller.eviction_failures = 2;
+    cfg.grace_s = 0.5;
+    cfg.target = TargetSel::External(dead_addr.to_string());
+    let t0 = Instant::now();
+    let r = live::run_live(&cfg).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(dt < 25.0, "eviction should end the run early, took {dt}s");
+    assert!(
+        r.data.testers.iter().all(|t| t.evicted),
+        "every failing agent must be evicted: {:?}",
+        r.data
+            .testers
+            .iter()
+            .map(|t| (t.id, t.evicted))
+            .collect::<Vec<_>>()
+    );
+    assert!(r.samples() > 0, "the failing samples still get aggregated");
+    assert_eq!(r.stream.binned.total_ok, 0.0, "nothing can have succeeded");
+    // no sim twin exists for an external target
+    assert!(crossval::compare(&cfg, &r).unwrap().is_none());
+}
