@@ -1,0 +1,333 @@
+"""Numerical mirror of ``rust/src/analysis/changepoint.rs``.
+
+The authoring environment has no Rust toolchain (the repo's standing
+caveat; CI compiles the tree), so the deterministic assertions in
+``rust/tests/changepoint.rs`` and the changepoint unit tests are
+validated here instead: this file ports Pcg64 (bit-exact integer
+arithmetic) and the E-Divisive detector (same summation structure) and
+replays every seeded test scenario, failing loudly on any mismatch with
+the asserted outcomes.
+
+Run:  python3 python/mirror/changepoint_mirror.py
+"""
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MULT = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
+
+
+class Pcg64:
+    """Bit-exact port of ``diperf::util::Pcg64`` (PCG XSL-RR 128/64)."""
+
+    def __init__(self, seed, stream):
+        self.inc = ((stream << 1) | 1) & MASK128
+        self.state = 0
+        self._step()
+        self.state = (self.state + (seed & MASK64)) & MASK128
+        self._step()
+
+    @classmethod
+    def seed_from(cls, seed):
+        return cls(seed, 0xDA3E_39CB_94B9_5BDB)
+
+    def _step(self):
+        self.state = (self.state * PCG_MULT + self.inc) & MASK128
+
+    def next_u64(self):
+        self._step()
+        xored = ((self.state >> 64) ^ (self.state & MASK64)) & MASK64
+        rot = self.state >> 122
+        return ((xored >> rot) | (xored << (64 - rot))) & MASK64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.next_f64()
+
+    def next_below(self, bound):
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & MASK64
+            if lo >= bound or lo >= ((1 << 64) - bound) % bound:
+                return m >> 64
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+def best_split(xs, min_segment):
+    """Mirror of the O(n²) incremental Q(τ) sweep."""
+    n = len(xs)
+    min_segment = max(min_segment, 1)
+    if n < 2 * min_segment:
+        return None
+    within_x = 0.0
+    within_y = sum(
+        abs(xs[i] - xs[j]) for i in range(n) for j in range(i + 1, n)
+    )
+    between = 0.0
+    best = None
+    for tau in range(1, n):
+        moved = xs[tau - 1]
+        cross_left = sum(abs(x - moved) for x in xs[: tau - 1])
+        cross_right = sum(abs(y - moved) for y in xs[tau:])
+        within_x += cross_left
+        within_y -= cross_right
+        between += cross_right - cross_left
+        if tau < min_segment or n - tau < min_segment:
+            continue
+        m, k = float(tau), float(n - tau)
+        e = 2.0 * between / (m * k)
+        if tau > 1:
+            e -= 2.0 * within_x / (m * (m - 1.0))
+        if n - tau > 1:
+            e -= 2.0 * within_y / (k * (k - 1.0))
+        q = m * k / (m + k) * e
+        if best is None or q > best[1]:
+            best = (tau, q)
+    return best
+
+
+class Detector:
+    def __init__(self, permutations=199, alpha=0.05, min_segment=3,
+                 seed=0x5EED_CAFE, max_changepoints=8):
+        self.permutations = permutations
+        self.alpha = alpha
+        self.min_segment = min_segment
+        self.seed = seed
+        self.max_changepoints = max_changepoints
+
+    def p_value(self, xs, observed, rng):
+        shuffled = list(xs)
+        reached = 0
+        for _ in range(self.permutations):
+            rng.shuffle(shuffled)
+            got = best_split(shuffled, self.min_segment)
+            if got is not None and got[1] >= observed:
+                reached += 1
+        return (reached + 1) / (self.permutations + 1)
+
+    def _detect_segment(self, xs, offset, out):
+        if len(out) >= self.max_changepoints:
+            return
+        got = best_split(xs, self.min_segment)
+        if got is None:
+            return
+        tau, q = got
+        rng = Pcg64(self.seed, ((offset << 32) | len(xs)) & MASK64)
+        p = self.p_value(xs, q, rng)
+        if p > self.alpha:
+            return
+        out.append({
+            "index": offset + tau,
+            "stat": q,
+            "p_value": p,
+            "before_mean": sum(xs[:tau]) / tau,
+            "after_mean": sum(xs[tau:]) / (len(xs) - tau),
+        })
+        self._detect_segment(xs[:tau], offset, out)
+        self._detect_segment(xs[tau:], offset + tau, out)
+
+    def detect(self, xs):
+        out = []
+        self._detect_segment(list(xs), 0, out)
+        out.sort(key=lambda c: c["index"])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Replay of the seeded Rust test scenarios
+# ---------------------------------------------------------------------------
+
+FAILURES = []
+
+
+def check(name, ok, detail=""):
+    tag = "PASS" if ok else "FAIL"
+    print(f"[{tag}] {name}" + (f"  {detail}" if detail else ""))
+    if not ok:
+        FAILURES.append(name)
+
+
+def step_series(n, at, lo, hi, noise, seed=7):
+    rng = Pcg64.seed_from(seed)
+    return [
+        (lo if i < at else hi) + rng.uniform(-noise, noise) for i in range(n)
+    ]
+
+
+def rust_pcg_vectors():
+    # sanity-lock the generator against its Rust unit-test behavior
+    a, b = Pcg64(42, 7), Pcg64(42, 7)
+    check("pcg: deterministic", all(a.next_u64() == b.next_u64()
+                                    for _ in range(100)))
+    r = Pcg64.seed_from(3)
+    ok = all(0.0 <= r.next_f64() < 1.0 for _ in range(10_000))
+    check("pcg: f64 in [0,1)", ok)
+    r = Pcg64.seed_from(4)
+    mean = sum(r.next_f64() for _ in range(100_000)) / 100_000
+    check("pcg: f64 mean ~ 0.5", abs(mean - 0.5) < 0.01, f"mean={mean:.4f}")
+    r = Pcg64.seed_from(10)
+    v = list(range(50))
+    r.shuffle(v)
+    check("pcg: shuffle is a permutation",
+          sorted(v) == list(range(50)) and v != list(range(50)))
+
+
+def unit_best_split_clean_step():
+    xs = step_series(40, 20, 10.0, 20.0, 0.5)
+    tau, q = best_split(xs, 3)
+    check("unit: clean step found at tau=20, q>10",
+          tau == 20 and q > 10.0, f"tau={tau} q={q:.2f}")
+
+
+def unit_best_split_matches_naive():
+    xs = step_series(24, 9, 3.0, 5.0, 1.0)
+    n, min_seg = len(xs), 2
+
+    def naive(tau):
+        x, y = xs[:tau], xs[tau:]
+        m, k = float(len(x)), float(len(y))
+        between = sum(abs(a - b) for a in x for b in y)
+
+        def within(s):
+            return sum(abs(s[i] - s[j]) for i in range(len(s))
+                       for j in range(i + 1, len(s)))
+
+        e = 2.0 * between / (m * k)
+        if len(x) > 1:
+            e -= 2.0 * within(x) / (m * (m - 1.0))
+        if len(y) > 1:
+            e -= 2.0 * within(y) / (k * (k - 1.0))
+        return m * k / (m + k) * e
+
+    bt, bq = best_split(xs, min_seg)
+    max_naive = max(naive(t) for t in range(min_seg, n - min_seg + 1))
+    check("unit: incremental Q == naive Q",
+          abs(bq - max_naive) < 1e-9 and abs(naive(bt) - bq) < 1e-9,
+          f"inc={bq:.6f} naive={max_naive:.6f}")
+
+
+def unit_detector_step_and_null():
+    det = Detector()
+    xs = step_series(50, 25, 100.0, 140.0, 3.0)
+    cps = det.detect(xs)
+    ok = cps and any(abs(c["index"] - 25) <= 1 for c in cps)
+    check("unit: 50-pt step detected at 25±1", bool(ok),
+          f"indices={[c['index'] for c in cps]} "
+          f"p={[round(c['p_value'], 3) for c in cps]}")
+    rng = Pcg64.seed_from(11)
+    null = [rng.uniform(100.0, 106.0) for _ in range(50)]
+    cps = det.detect(null)
+    check("unit: null series (seed 11) quiet", not cps,
+          f"spurious={[(c['index'], round(c['p_value'], 3)) for c in cps]}")
+
+
+def unit_hierarchical_two_shifts():
+    xs = step_series(30, 15, 10.0, 30.0, 0.5) + step_series(
+        15, 0, 60.0, 60.0, 0.5
+    )
+    cps = Detector().detect(xs)
+    idx = [c["index"] for c in cps]
+    ok = (len(cps) >= 2 and any(abs(i - 15) <= 1 for i in idx)
+          and any(abs(i - 30) <= 1 for i in idx))
+    check("unit: hierarchical finds shifts at 15 and 30", ok, f"idx={idx}")
+
+
+def integ_shift_50pts():
+    rng = Pcg64.seed_from(1234)
+    all_ok = True
+    detail = []
+    for shift_at, lo, hi, noise in [(25, 100.0, 130.0, 4.0),
+                                    (25, 1.0e6, 0.8e6, 0.02e6)]:
+        xs = [(lo if i < shift_at else hi) + rng.uniform(-noise, noise)
+              for i in range(50)]
+        cps = Detector().detect(xs)
+        idx = [c["index"] for c in cps]
+        ok = cps and any(abs(i - shift_at) <= 1 for i in idx)
+        detail.append(f"{lo}->{hi}: idx={idx}")
+        all_ok = all_ok and bool(ok)
+    check("integ: injected shifts at 25±1 (both polarities)", all_ok,
+          "; ".join(detail))
+
+
+def integ_null_seeds():
+    det = Detector()
+    bad = []
+    for seed in [2, 3, 5, 8, 13]:
+        rng = Pcg64.seed_from(seed)
+        xs = [rng.uniform(95.0, 105.0) for _ in range(50)]
+        cps = det.detect(xs)
+        if cps:
+            bad.append((seed, [(c["index"], round(c["p_value"], 3))
+                               for c in cps]))
+    check("integ: null seeds 2,3,5,8,13 all quiet", not bad, f"bad={bad}")
+
+
+def integ_fixture():
+    import json
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    fx = os.path.join(root, "rust", "tests", "fixtures", "perf_gate")
+
+    def eps_series(*names):
+        out = {}
+        for name in names:
+            doc = json.load(open(os.path.join(fx, name)))
+            for row in doc["rows"]:
+                for metric in ("wall_s", "events_per_sec", "peak_pending",
+                               "peak_rss_kb"):
+                    key = f"{row['label']}/{metric}"
+                    out.setdefault(key, []).append(float(row[metric]))
+        return out
+
+    det = Detector()
+    healthy = eps_series("history_good.json")
+    noisy = {k: det.detect(v) for k, v in healthy.items()}
+    quiet = all(not v for v in noisy.values())
+    check("integ: healthy fixture quiet on every series", quiet,
+          f"alarms={[(k, [c['index'] for c in v]) for k, v in noisy.items() if v]}")
+
+    both = eps_series("history_good.json", "history_regression.json")
+    eps = both["churn-1000-wheel/events_per_sec"]
+    check("integ: fixture series length 13", len(eps) == 13, f"n={len(eps)}")
+    cps = det.detect(eps)
+    idx = [c["index"] for c in cps]
+    ok = cps and any(abs(i - 10) <= 1 for i in idx)
+    check("integ: regression detected at 10±1", bool(ok),
+          f"idx={idx} p={[round(c['p_value'], 3) for c in cps]}")
+    if cps:
+        c = [c for c in cps if abs(c["index"] - 10) <= 1][0]
+        check("integ: regression direction down",
+              c["before_mean"] > c["after_mean"])
+        check("integ: regression fresh (window 5)",
+              c["index"] + 5 >= len(eps))
+    wall = both["churn-1000-wheel/wall_s"]
+    cps_w = det.detect(wall)
+    check("integ: wall_s shift detected too", bool(cps_w),
+          f"idx={[c['index'] for c in cps_w]}")
+
+
+def main():
+    rust_pcg_vectors()
+    unit_best_split_clean_step()
+    unit_best_split_matches_naive()
+    unit_detector_step_and_null()
+    unit_hierarchical_two_shifts()
+    integ_shift_50pts()
+    integ_null_seeds()
+    integ_fixture()
+    print()
+    if FAILURES:
+        print(f"{len(FAILURES)} scenario(s) FAILED: {FAILURES}")
+        raise SystemExit(1)
+    print("all changepoint scenarios validated")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@
 //! Grid size: `DIPERF_CAMPAIGN_LOADS=3,6,9` overrides the load axis
 //! (CI smoke keeps the default).
 
-use diperf::bench_util::{append_scale_rows, scale_json, set_scale_field};
+use diperf::bench_util::{append_scale_rows, scale_json, upsert_scale_field};
 use diperf::campaign::{self, report};
 
 fn main() -> anyhow::Result<()> {
@@ -68,18 +68,34 @@ fn main() -> anyhow::Result<()> {
     ];
     let doc = match std::fs::read_to_string("BENCH_scale.json") {
         Ok(existing) => {
-            // overwrite the summary fields whatever they hold (null or
-            // a previous run's value), then append the fresh rows
-            let mut patched = existing;
+            // set the summary fields whatever they hold (null, a
+            // previous run's value, or absent in the fresh per-run
+            // documents CI starts from), then append the fresh rows
+            let mut patched = existing.clone();
             for (k, v) in &summary {
-                if let Some(p) = set_scale_field(&patched, k, v) {
+                if let Some(p) = upsert_scale_field(&patched, k, v) {
                     patched = p;
                 }
             }
-            append_scale_rows(&patched, &rows)
-                .unwrap_or_else(|| scale_json(&rows, &summary))
+            match append_scale_rows(&patched, &rows) {
+                Some(doc) => doc,
+                None => {
+                    // same contract as bench_util::append_or_init: the
+                    // accumulated rows are the perf trajectory, so an
+                    // unrecognizable document is preserved, not rebuilt
+                    std::fs::write("BENCH_scale.json.bak", &existing)?;
+                    anyhow::bail!(
+                        "BENCH_scale.json has no recognizable \"rows\" \
+                         array; refusing to overwrite the perf trajectory \
+                         (original preserved as BENCH_scale.json.bak)"
+                    );
+                }
+            }
         }
-        Err(_) => scale_json(&rows, &summary),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            scale_json(&rows, &summary)
+        }
+        Err(e) => return Err(e.into()),
     };
     std::fs::write("BENCH_scale.json", doc)?;
     println!("\nappended campaign rows to BENCH_scale.json");

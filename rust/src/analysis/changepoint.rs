@@ -1,0 +1,697 @@
+//! E-Divisive mean-shift detection over the perf trajectory.
+//!
+//! `BENCH_scale.json` accumulates one row per measured configuration on
+//! every bench/smoke run; this module turns that accumulation into a
+//! *gate*.  Fixed bounds ("fail if events/s < X") rot as hardware and
+//! workloads drift; instead, following the approach MongoDB described
+//! for their CI (arXiv:2004.08425, itself built on Matteson & James'
+//! E-Divisive), we ask a statistical question: *did the distribution of
+//! this metric shift somewhere in its history?*
+//!
+//! The pipeline:
+//! 1. [`SeriesSet::ingest_path`] parses `BENCH_scale.json` documents
+//!    (and campaign `load_response.csv` reports) in chronological order
+//!    into per-metric series keyed by `"<row label>/<metric>"`;
+//! 2. [`Detector::detect`] locates the split τ maximizing the
+//!    divergence statistic Q(τ) (the scaled energy distance between
+//!    the two sides, α = 1), judges it with a permutation test, and
+//!    recurses on both sides — hierarchical (binary-segmentation)
+//!    multi-shift detection;
+//! 3. [`report_csv`] renders `perf_changepoints.csv`, classifying each
+//!    shift by per-metric polarity ([`metric_polarity`]) as an
+//!    improvement or a regression, and flagging *fresh* shifts (regime
+//!    starting within the last `fresh_window` points) — the condition
+//!    `diperf analyze changepoints --fail-on-fresh` turns into a CI
+//!    failure.
+//!
+//! Determinism: the permutation test draws from [`Pcg64`] seeded per
+//! segment from the detector seed, so a given history always yields the
+//! same verdict.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Pcg64;
+
+/// Per-row metrics lifted from a `BENCH_scale.json` row into series.
+pub const ROW_METRICS: [&str; 4] =
+    ["wall_s", "events_per_sec", "peak_pending", "peak_rss_kb"];
+
+/// Top-level summary fields lifted into series (when non-null).
+pub const SUMMARY_METRICS: [&str; 4] = [
+    "wheel_vs_heap_experiment",
+    "wheel_vs_heap_queue_only",
+    "queue_only_resident",
+    "campaign_speedup",
+];
+
+/// Columns of a campaign `load_response.csv` lifted into series.
+pub const CSV_METRICS: [&str; 4] =
+    ["peak_tput", "mean_rt_s", "jain_fairness", "mean_availability"];
+
+/// Which direction of a mean shift counts as a regression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Polarity {
+    /// Shifting down is a regression (throughput, ratios, fairness).
+    HigherIsBetter,
+    /// Shifting up is a regression (wall time, memory, response time).
+    LowerIsBetter,
+    /// Context metric — shifts are reported but never gate.
+    Neutral,
+}
+
+/// Polarity of a series key (`"<label>/<metric>"`), decided by its
+/// metric suffix.  Unknown metrics are [`Polarity::Neutral`] so a new
+/// column can never fail the gate before someone classifies it.
+pub fn metric_polarity(key: &str) -> Polarity {
+    let metric = key.rsplit('/').next().unwrap_or(key);
+    match metric {
+        "events_per_sec" | "samples" | "peak_tput" | "jain_fairness"
+        | "mean_availability" | "wheel_vs_heap_experiment"
+        | "wheel_vs_heap_queue_only" | "campaign_speedup" => {
+            Polarity::HigherIsBetter
+        }
+        "wall_s" | "peak_rss_kb" | "mean_rt_s" => Polarity::LowerIsBetter,
+        // peak_pending / queue_only_resident describe the workload's
+        // resident population, not a cost to minimize
+        _ => Polarity::Neutral,
+    }
+}
+
+/// Ordered per-metric history: one value per ingested observation, in
+/// ingestion order (= chronological order of the input documents).
+#[derive(Clone, Debug, Default)]
+pub struct SeriesSet {
+    /// `"<row label>/<metric>"` → values in time order.
+    pub series: BTreeMap<String, Vec<f64>>,
+    /// Documents ingested (time steps seen).
+    pub docs: usize,
+}
+
+impl SeriesSet {
+    /// Empty set.
+    pub fn new() -> SeriesSet {
+        SeriesSet::default()
+    }
+
+    fn push(&mut self, key: String, value: f64) {
+        self.series.entry(key).or_default().push(value);
+    }
+
+    /// Ingest one file, dispatching on its extension: `.json` is a
+    /// `BENCH_scale.json` document, `.csv` a campaign
+    /// `load_response.csv`.
+    pub fn ingest_path(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        if path.ends_with(".csv") {
+            self.ingest_load_response(&text)
+                .with_context(|| format!("parsing {path}"))
+        } else {
+            self.ingest_scale_json(&text)
+                .with_context(|| format!("parsing {path}"))
+        }
+    }
+
+    /// Ingest a `BENCH_scale.json` document: every row contributes one
+    /// observation per [`ROW_METRICS`] metric to the series keyed by
+    /// its label; non-null [`SUMMARY_METRICS`] fields contribute under
+    /// `"summary/<field>"`.  A single document may carry several rows
+    /// with the same label (the append-per-push mode); they land in
+    /// the series in document order, preserving their chronology.
+    pub fn ingest_scale_json(&mut self, doc: &str) -> Result<()> {
+        let Some(rows_at) = doc.find("\"rows\": [") else {
+            bail!("no \"rows\" array (not a diperf-bench-scale document)");
+        };
+        let head = &doc[..rows_at];
+        for key in SUMMARY_METRICS {
+            if let Some(v) = scan_number(head, key) {
+                self.push(format!("summary/{key}"), v);
+            }
+        }
+        let body_start = rows_at + "\"rows\": [".len();
+        let body_end = body_start
+            + doc[body_start..]
+                .find(']')
+                .context("unterminated \"rows\" array")?;
+        let mut body = &doc[body_start..body_end];
+        // row objects are flat (no nested braces), so `{ .. }` scanning
+        // is exact — the invariant append_scale_rows relies on too
+        while let Some(open) = body.find('{') {
+            let close = body[open..]
+                .find('}')
+                .context("unterminated row object")?;
+            let obj = &body[open..open + close + 1];
+            let label = scan_string(obj, "label")
+                .context("row without a \"label\"")?;
+            for metric in ROW_METRICS {
+                let v = scan_number(obj, metric).with_context(|| {
+                    format!("row {label:?} missing numeric {metric:?}")
+                })?;
+                self.push(format!("{label}/{metric}"), v);
+            }
+            body = &body[open + close + 1..];
+        }
+        self.docs += 1;
+        Ok(())
+    }
+
+    /// Ingest a campaign `load_response.csv`: each data line
+    /// contributes one observation per [`CSV_METRICS`] column to the
+    /// series keyed by `"<service>-load<testers>/<column>"`.
+    pub fn ingest_load_response(&mut self, text: &str) -> Result<()> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty CSV")?;
+        let cols: Vec<&str> = header.trim().split(',').collect();
+        let idx = |name: &str| -> Result<usize> {
+            cols.iter().position(|c| *c == name).with_context(|| {
+                format!("load_response.csv without a {name:?} column")
+            })
+        };
+        let (ci_service, ci_testers) = (idx("service")?, idx("testers")?);
+        let metric_cols: Vec<(usize, &str)> = CSV_METRICS
+            .iter()
+            .map(|m| idx(m).map(|i| (i, *m)))
+            .collect::<Result<_>>()?;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            let service = *fields
+                .get(ci_service)
+                .with_context(|| format!("short CSV line {line:?}"))?;
+            let testers = *fields
+                .get(ci_testers)
+                .with_context(|| format!("short CSV line {line:?}"))?;
+            for &(i, metric) in &metric_cols {
+                let raw = fields
+                    .get(i)
+                    .with_context(|| format!("short CSV line {line:?}"))?;
+                let v: f64 = raw.parse().with_context(|| {
+                    format!("bad {metric} value {raw:?} in line {line:?}")
+                })?;
+                self.push(format!("{service}-load{testers}/{metric}"), v);
+            }
+        }
+        self.docs += 1;
+        Ok(())
+    }
+}
+
+/// Scan a flat JSON fragment for `"key": <number>`; `null` and missing
+/// both yield `None`.
+fn scan_number(fragment: &str, key: &str) -> Option<f64> {
+    let raw = scan_raw(fragment, key)?;
+    raw.parse().ok()
+}
+
+/// Scan a flat JSON fragment for `"key": "<string>"`.
+fn scan_string(fragment: &str, key: &str) -> Option<String> {
+    let raw = scan_raw(fragment, key)?;
+    let inner = raw.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+/// The raw value token after `"key":` (whitespace-tolerant), cut at the
+/// next `,`, `}` or newline.  Good enough for the writer-controlled
+/// documents this module ingests; not a general JSON parser.
+fn scan_raw<'a>(fragment: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = fragment.find(&pat)? + pat.len();
+    let rest = fragment[at..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c == '\n')
+        .unwrap_or(rest.len());
+    Some(rest[..end].trim_end())
+}
+
+/// One detected mean shift within a series.
+#[derive(Clone, Debug)]
+pub struct Changepoint {
+    /// First index of the new regime (the series is `0..n`; points
+    /// `index..` behave differently from the points before them).
+    pub index: usize,
+    /// The divergence statistic Q at the split.
+    pub stat: f64,
+    /// Permutation-test p-value of the split within its segment.
+    pub p_value: f64,
+    /// Mean of the segment points before the split.
+    pub before_mean: f64,
+    /// Mean of the segment points from the split on.
+    pub after_mean: f64,
+}
+
+impl Changepoint {
+    /// Did the mean move up?
+    pub fn shifted_up(&self) -> bool {
+        self.after_mean > self.before_mean
+    }
+
+    /// Is this shift a regression for a series of the given polarity?
+    pub fn is_regression(&self, polarity: Polarity) -> bool {
+        match polarity {
+            Polarity::HigherIsBetter => !self.shifted_up(),
+            Polarity::LowerIsBetter => self.shifted_up(),
+            Polarity::Neutral => false,
+        }
+    }
+}
+
+/// All shifts found in one series, sorted by index.
+#[derive(Clone, Debug)]
+pub struct SeriesFindings {
+    /// Series key (`"<label>/<metric>"`).
+    pub key: String,
+    /// Series length (observations).
+    pub n: usize,
+    /// Detected shifts, ascending by index.
+    pub changepoints: Vec<Changepoint>,
+}
+
+/// E-Divisive detector configuration.
+#[derive(Clone, Debug)]
+pub struct Detector {
+    /// Permutations per significance test (p-value resolution is
+    /// `1 / (permutations + 1)`).
+    pub permutations: usize,
+    /// Significance level: a split survives when `p <= alpha`.
+    pub alpha: f64,
+    /// Fewest points allowed on either side of a split.
+    pub min_segment: usize,
+    /// Seed for the permutation draws (fixed ⇒ reproducible verdicts).
+    pub seed: u64,
+    /// Cap on shifts reported per series (binary-segmentation depth
+    /// guard; generously above anything a real trajectory produces).
+    pub max_changepoints: usize,
+}
+
+impl Default for Detector {
+    fn default() -> Detector {
+        Detector {
+            permutations: 199,
+            alpha: 0.05,
+            min_segment: 3,
+            seed: 0x5eed_cafe,
+            max_changepoints: 8,
+        }
+    }
+}
+
+/// Q(τ): the scaled sample divergence between `xs[..tau]` and
+/// `xs[tau..]` (Matteson & James' ε̂ with α = 1, scaled by
+/// `m·n/(m+n)`).  Computed for every admissible τ in one O(n²) sweep;
+/// returns the argmax `(tau, q)`, or `None` when the series is too
+/// short to split.
+fn best_split(xs: &[f64], min_segment: usize) -> Option<(usize, f64)> {
+    let n = xs.len();
+    let min_segment = min_segment.max(1);
+    if n < 2 * min_segment {
+        return None;
+    }
+    // Running pairwise-distance sums for the split at τ, updated as the
+    // point at τ-1 moves from the right side to the left.
+    let mut within_x = 0.0; // Σ |xi − xk| over pairs inside xs[..tau]
+    let mut within_y: f64 = // Σ over pairs inside xs[tau..]
+        (0..n)
+            .map(|i| {
+                ((i + 1)..n).map(|j| (xs[i] - xs[j]).abs()).sum::<f64>()
+            })
+            .sum();
+    let mut between = 0.0; // Σ |xi − yj| across the split
+    let mut best: Option<(usize, f64)> = None;
+    for tau in 1..n {
+        let moved = xs[tau - 1];
+        let cross_left: f64 =
+            xs[..tau - 1].iter().map(|x| (x - moved).abs()).sum();
+        let cross_right: f64 =
+            xs[tau..].iter().map(|y| (y - moved).abs()).sum();
+        // moved's distances to the left side were between-pairs and are
+        // now within-X; its distances to the remaining right side were
+        // within-Y and are now between-pairs
+        within_x += cross_left;
+        within_y -= cross_right;
+        between += cross_right - cross_left;
+        if tau < min_segment || n - tau < min_segment {
+            continue;
+        }
+        let (m, k) = (tau as f64, (n - tau) as f64);
+        let mut e = 2.0 * between / (m * k);
+        if tau > 1 {
+            e -= 2.0 * within_x / (m * (m - 1.0));
+        }
+        if n - tau > 1 {
+            e -= 2.0 * within_y / (k * (k - 1.0));
+        }
+        let q = m * k / (m + k) * e;
+        if best.is_none_or(|(_, bq)| q > bq) {
+            best = Some((tau, q));
+        }
+    }
+    best
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+impl Detector {
+    /// Permutation-test p-value for an observed max-Q on `xs`: the
+    /// fraction of random reorderings whose own max-Q reaches it (with
+    /// the +1 correction, so p is never 0).
+    fn p_value(&self, xs: &[f64], observed: f64, rng: &mut Pcg64) -> f64 {
+        let mut shuffled = xs.to_vec();
+        let mut reached = 0usize;
+        for _ in 0..self.permutations {
+            rng.shuffle(&mut shuffled);
+            if let Some((_, q)) = best_split(&shuffled, self.min_segment) {
+                if q >= observed {
+                    reached += 1;
+                }
+            }
+        }
+        (reached + 1) as f64 / (self.permutations + 1) as f64
+    }
+
+    fn detect_segment(
+        &self,
+        xs: &[f64],
+        offset: usize,
+        out: &mut Vec<Changepoint>,
+    ) {
+        if out.len() >= self.max_changepoints {
+            return;
+        }
+        let Some((tau, q)) = best_split(xs, self.min_segment) else {
+            return;
+        };
+        // Per-segment stream keeps the draw sequence independent of
+        // sibling segments (and of visit order).
+        let mut rng =
+            Pcg64::new(self.seed, ((offset as u64) << 32) | xs.len() as u64);
+        let p = self.p_value(xs, q, &mut rng);
+        if p > self.alpha {
+            return;
+        }
+        out.push(Changepoint {
+            index: offset + tau,
+            stat: q,
+            p_value: p,
+            before_mean: mean(&xs[..tau]),
+            after_mean: mean(&xs[tau..]),
+        });
+        self.detect_segment(&xs[..tau], offset, out);
+        self.detect_segment(&xs[tau..], offset + tau, out);
+    }
+
+    /// Hierarchically detect every significant mean shift in a series.
+    pub fn detect(&self, xs: &[f64]) -> Vec<Changepoint> {
+        let mut out = Vec::new();
+        self.detect_segment(xs, 0, &mut out);
+        out.sort_by_key(|c| c.index);
+        out
+    }
+
+    /// Run [`detect`](Self::detect) over every series in a set.
+    /// Series shorter than one split are skipped.  Findings come back
+    /// for *every* examined series (empty `changepoints` included), so
+    /// callers can report coverage as well as alarms.
+    pub fn detect_all(&self, set: &SeriesSet) -> Vec<SeriesFindings> {
+        set.series
+            .iter()
+            .map(|(key, xs)| SeriesFindings {
+                key: key.clone(),
+                n: xs.len(),
+                changepoints: self.detect(xs),
+            })
+            .collect()
+    }
+}
+
+/// Is a shift *fresh* — did its new regime start within the last
+/// `fresh_window` points of the series?
+pub fn is_fresh(c: &Changepoint, n: usize, fresh_window: usize) -> bool {
+    c.index + fresh_window >= n
+}
+
+/// Render `perf_changepoints.csv`: one line per detected shift.
+///
+/// Columns: `series,n,index,stat,p_value,before_mean,after_mean,
+/// direction,regression,fresh` — `direction` is `up`/`down`,
+/// `regression` applies [`metric_polarity`], `fresh` applies
+/// [`is_fresh`] with the given window.  See `docs/BENCH_scale.md`.
+pub fn report_csv(findings: &[SeriesFindings], fresh_window: usize) -> String {
+    let mut s = String::from(
+        "series,n,index,stat,p_value,before_mean,after_mean,\
+         direction,regression,fresh\n",
+    );
+    for f in findings {
+        let polarity = metric_polarity(&f.key);
+        for c in &f.changepoints {
+            s.push_str(&format!(
+                "{},{},{},{:.4},{:.4},{:.4},{:.4},{},{},{}\n",
+                f.key,
+                f.n,
+                c.index,
+                c.stat,
+                c.p_value,
+                c.before_mean,
+                c.after_mean,
+                if c.shifted_up() { "up" } else { "down" },
+                c.is_regression(polarity),
+                is_fresh(c, f.n, fresh_window),
+            ));
+        }
+    }
+    s
+}
+
+/// The fresh regressions in a set of findings — the condition
+/// `--fail-on-fresh` gates on.
+pub fn fresh_regressions<'a>(
+    findings: &'a [SeriesFindings],
+    fresh_window: usize,
+) -> Vec<(&'a SeriesFindings, &'a Changepoint)> {
+    findings
+        .iter()
+        .flat_map(|f| {
+            let polarity = metric_polarity(&f.key);
+            f.changepoints
+                .iter()
+                .filter(move |c| {
+                    c.is_regression(polarity) && is_fresh(c, f.n, fresh_window)
+                })
+                .map(move |c| (f, c))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_series(n: usize, at: usize, lo: f64, hi: f64, noise: f64) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from(7);
+        (0..n)
+            .map(|i| {
+                let base = if i < at { lo } else { hi };
+                base + rng.uniform(-noise, noise)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn best_split_finds_a_clean_step() {
+        let xs = step_series(40, 20, 10.0, 20.0, 0.5);
+        let (tau, q) = best_split(&xs, 3).unwrap();
+        assert_eq!(tau, 20);
+        assert!(q > 10.0, "q = {q}");
+    }
+
+    #[test]
+    fn best_split_matches_naive_q() {
+        // the O(n²) incremental sweep must agree with the textbook
+        // O(n³) formula at every admissible τ
+        let xs = step_series(24, 9, 3.0, 5.0, 1.0);
+        let n = xs.len();
+        let min_seg = 2;
+        let naive = |tau: usize| -> f64 {
+            let (x, y) = xs.split_at(tau);
+            let (m, k) = (x.len() as f64, y.len() as f64);
+            let between: f64 = x
+                .iter()
+                .map(|a| y.iter().map(|b| (a - b).abs()).sum::<f64>())
+                .sum();
+            let within = |s: &[f64]| -> f64 {
+                (0..s.len())
+                    .map(|i| {
+                        ((i + 1)..s.len())
+                            .map(|j| (s[i] - s[j]).abs())
+                            .sum::<f64>()
+                    })
+                    .sum()
+            };
+            let mut e = 2.0 * between / (m * k);
+            if x.len() > 1 {
+                e -= 2.0 * within(x) / (m * (m - 1.0));
+            }
+            if y.len() > 1 {
+                e -= 2.0 * within(y) / (k * (k - 1.0));
+            }
+            m * k / (m + k) * e
+        };
+        let (best_tau, best_q) = best_split(&xs, min_seg).unwrap();
+        let mut max_naive = f64::NEG_INFINITY;
+        for tau in min_seg..=(n - min_seg) {
+            max_naive = max_naive.max(naive(tau));
+        }
+        assert!(
+            (best_q - max_naive).abs() < 1e-9,
+            "incremental {best_q} vs naive {max_naive}"
+        );
+        assert!((naive(best_tau) - best_q).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detector_flags_step_and_spares_null() {
+        let det = Detector::default();
+        let xs = step_series(50, 25, 100.0, 140.0, 3.0);
+        let cps = det.detect(&xs);
+        assert!(!cps.is_empty(), "step not detected");
+        assert!(
+            cps.iter().any(|c| (c.index as i64 - 25).abs() <= 1),
+            "indices: {:?}",
+            cps.iter().map(|c| c.index).collect::<Vec<_>>()
+        );
+        // pure noise must stay quiet
+        let mut rng = Pcg64::seed_from(11);
+        let null: Vec<f64> =
+            (0..50).map(|_| rng.uniform(100.0, 106.0)).collect();
+        assert!(det.detect(&null).is_empty());
+    }
+
+    #[test]
+    fn detection_is_deterministic() {
+        let det = Detector::default();
+        let xs = step_series(40, 13, 5.0, 9.0, 0.8);
+        let a = det.detect(&xs);
+        let b = det.detect(&xs);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.p_value, y.p_value);
+        }
+    }
+
+    #[test]
+    fn hierarchical_finds_two_shifts() {
+        let mut xs = step_series(30, 15, 10.0, 30.0, 0.5);
+        xs.extend(step_series(15, 0, 60.0, 60.0, 0.5));
+        let det = Detector::default();
+        let cps = det.detect(&xs);
+        assert!(cps.len() >= 2, "found {}", cps.len());
+        assert!(cps.iter().any(|c| (c.index as i64 - 15).abs() <= 1));
+        assert!(cps.iter().any(|c| (c.index as i64 - 30).abs() <= 1));
+    }
+
+    #[test]
+    fn polarity_and_regression_classification() {
+        assert_eq!(
+            metric_polarity("churn-1000-wheel/events_per_sec"),
+            Polarity::HigherIsBetter
+        );
+        assert_eq!(
+            metric_polarity("churn-1000-wheel/wall_s"),
+            Polarity::LowerIsBetter
+        );
+        assert_eq!(
+            metric_polarity("summary/campaign_speedup"),
+            Polarity::HigherIsBetter
+        );
+        assert_eq!(
+            metric_polarity("churn-1000-wheel/peak_pending"),
+            Polarity::Neutral
+        );
+        let down = Changepoint {
+            index: 9,
+            stat: 1.0,
+            p_value: 0.01,
+            before_mean: 10.0,
+            after_mean: 5.0,
+        };
+        assert!(down.is_regression(Polarity::HigherIsBetter));
+        assert!(!down.is_regression(Polarity::LowerIsBetter));
+        assert!(!down.is_regression(Polarity::Neutral));
+        assert!(is_fresh(&down, 10, 1));
+        assert!(!is_fresh(&down, 20, 5));
+    }
+
+    #[test]
+    fn ingests_scale_json_rows_and_summary() {
+        let doc = r#"{
+  "schema": "diperf-bench-scale-v1",
+  "note": "x",
+  "virtual_s": 300.0,
+  "seed": 42,
+  "wheel_vs_heap_experiment": 1.8,
+  "wheel_vs_heap_queue_only": null,
+  "campaign_speedup": 2.5,
+  "rows": [
+    {"label":"churn-1000-wheel","testers":1000,"queue":"wheel","collection":"stream","virtual_s":300.0,"wall_s":1.2500,"events":4000000,"events_per_sec":3200000.0,"peak_pending":2048,"peak_rss_kb":51200,"samples":250000},
+    {"label":"churn-1000-heap","testers":1000,"queue":"heap","collection":"stream","virtual_s":300.0,"wall_s":2.0000,"events":4000000,"events_per_sec":2000000.0,"peak_pending":2048,"peak_rss_kb":60000,"samples":250000}
+  ]
+}"#;
+        let mut set = SeriesSet::new();
+        set.ingest_scale_json(doc).unwrap();
+        set.ingest_scale_json(doc).unwrap();
+        assert_eq!(set.docs, 2);
+        assert_eq!(
+            set.series["churn-1000-wheel/events_per_sec"],
+            vec![3.2e6, 3.2e6]
+        );
+        assert_eq!(set.series["churn-1000-heap/wall_s"], vec![2.0, 2.0]);
+        assert_eq!(set.series["summary/wheel_vs_heap_experiment"], vec![1.8, 1.8]);
+        assert_eq!(set.series["summary/campaign_speedup"], vec![2.5, 2.5]);
+        // null summary fields contribute nothing
+        assert!(!set.series.contains_key("summary/wheel_vs_heap_queue_only"));
+        // junk is rejected, not misread
+        assert!(SeriesSet::new().ingest_scale_json("{}").is_err());
+    }
+
+    #[test]
+    fn ingests_load_response_csv() {
+        let csv = "service,testers,cells,peak_load,peak_tput,mean_rt_s,jain_fairness,mean_availability\n\
+                   gram-prews,8,2,7.5,3.1,1.25,0.97,0.99\n\
+                   apache-cgi,8,2,7.9,6.2,0.40,0.95,1.00\n";
+        let mut set = SeriesSet::new();
+        set.ingest_load_response(csv).unwrap();
+        set.ingest_load_response(csv).unwrap();
+        assert_eq!(set.series["gram-prews-load8/peak_tput"], vec![3.1, 3.1]);
+        assert_eq!(set.series["apache-cgi-load8/mean_rt_s"], vec![0.4, 0.4]);
+        assert!(SeriesSet::new().ingest_load_response("a,b\n1,2\n").is_err());
+    }
+
+    #[test]
+    fn report_csv_classifies_shifts() {
+        let findings = vec![SeriesFindings {
+            key: "churn-1000-wheel/events_per_sec".into(),
+            n: 12,
+            changepoints: vec![Changepoint {
+                index: 10,
+                stat: 5.5,
+                p_value: 0.005,
+                before_mean: 3.0e6,
+                after_mean: 2.0e6,
+            }],
+        }];
+        let csv = report_csv(&findings, 3);
+        let mut lines = csv.lines();
+        assert!(lines.next().unwrap().starts_with("series,n,index"));
+        let row = lines.next().unwrap();
+        assert!(row.contains("down,true,true"), "{row}");
+        assert_eq!(fresh_regressions(&findings, 3).len(), 1);
+        assert!(fresh_regressions(&findings, 1).is_empty());
+    }
+}

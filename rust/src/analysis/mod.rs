@@ -15,6 +15,13 @@
 //! into the full output.  [`churn_report_grid`]/[`churn_from_stream`]
 //! are the grid-aligned churn views that let the two modes be compared
 //! bin for bin.
+//!
+//! The crate's *own* performance is analyzed here too: [`changepoint`]
+//! runs E-Divisive mean-shift detection over the accumulated
+//! `BENCH_scale.json` trajectory, replacing fixed CI perf bounds with a
+//! statistical gate (`diperf analyze changepoints`).
+
+pub mod changepoint;
 
 use crate::metrics::{AnalysisGrid, Binned, RunData, StreamAgg, TesterRecord};
 use crate::util::linalg;

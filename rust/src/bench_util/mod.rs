@@ -241,14 +241,37 @@ pub fn append_scale_rows(doc: &str, rows: &[ScaleRow]) -> Option<String> {
     Some(format!("{}{}{}", &doc[..body_end], insert, &doc[close..]))
 }
 
-/// Append rows to the `BENCH_scale.json` document at `path`, creating
-/// (or wholesale rewriting) a fresh document when the file is missing
-/// or unrecognizable — the shared tail of every `--bench-json` flag.
+/// Append rows to the `BENCH_scale.json` document at `path`, creating a
+/// fresh document when the file does not exist — the shared tail of
+/// every `--bench-json` flag.
+///
+/// An *existing but unrecognizable* document is never rewritten: the
+/// accumulated rows are the perf trajectory the change-point detector
+/// ingests, and clobbering them on a parse hiccup would silently erase
+/// history.  Instead the old content is preserved verbatim as
+/// `<path>.bak` and the call errors, so the damage surfaces in CI
+/// rather than as a quietly restarted trajectory.
 pub fn append_or_init(path: &str, rows: &[ScaleRow]) -> std::io::Result<()> {
     let doc = match std::fs::read_to_string(path) {
-        Ok(existing) => append_scale_rows(&existing, rows)
-            .unwrap_or_else(|| scale_json(rows, &[])),
-        Err(_) => scale_json(rows, &[]),
+        Ok(existing) => match append_scale_rows(&existing, rows) {
+            Some(doc) => doc,
+            None => {
+                let bak = format!("{path}.bak");
+                std::fs::write(&bak, existing)?;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "{path} has no recognizable \"rows\" array; \
+                         refusing to overwrite the perf trajectory \
+                         (original preserved as {bak})"
+                    ),
+                ));
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            scale_json(rows, &[])
+        }
+        Err(e) => return Err(e),
     };
     std::fs::write(path, doc)
 }
@@ -266,6 +289,19 @@ pub fn set_scale_field(doc: &str, key: &str, value: &str) -> Option<String> {
             .find(|c: char| c == ',' || c == '\n')
             .unwrap_or(doc.len() - start);
     Some(format!("{}{}{}", &doc[..start], value, &doc[end..]))
+}
+
+/// As [`set_scale_field`], but *inserts* the field (right after the
+/// `"schema"` line) when the document does not contain the key yet —
+/// the fresh per-run documents CI accumulates for the perf gate start
+/// from [`append_or_init`] and carry no summary fields.
+pub fn upsert_scale_field(doc: &str, key: &str, value: &str) -> Option<String> {
+    if let Some(out) = set_scale_field(doc, key, value) {
+        return Some(out);
+    }
+    let anchor = "\"diperf-bench-scale-v1\",\n";
+    let at = doc.find(anchor)? + anchor.len();
+    Some(format!("{}  \"{key}\": {value},\n{}", &doc[..at], &doc[at..]))
 }
 
 /// Assemble the `BENCH_scale.json` document from measured rows plus
@@ -396,6 +432,25 @@ mod tests {
     }
 
     #[test]
+    fn upsert_scale_field_sets_or_inserts() {
+        let doc = "{\n  \"schema\": \"diperf-bench-scale-v1\",\n  \"campaign_speedup\": null,\n  \"rows\": []\n}\n";
+        // existing key: behaves like set_scale_field
+        let set = upsert_scale_field(doc, "campaign_speedup", "1.500").unwrap();
+        assert!(set.contains("\"campaign_speedup\": 1.500,"), "{set}");
+        // missing key: inserted after the schema line
+        let ins = upsert_scale_field(doc, "campaign_jobs", "4").unwrap();
+        assert!(
+            ins.contains("\"diperf-bench-scale-v1\",\n  \"campaign_jobs\": 4,\n"),
+            "{ins}"
+        );
+        // still a balanced document with the old fields intact
+        assert!(ins.contains("\"campaign_speedup\": null"));
+        assert_eq!(ins.matches('{').count(), 1);
+        // no schema line -> nothing to anchor on
+        assert!(upsert_scale_field("{}", "x", "1").is_none());
+    }
+
+    #[test]
     fn append_extends_fresh_and_empty_docs() {
         let row = ScaleRow {
             label: "campaign-smoke-jobs4".into(),
@@ -459,6 +514,39 @@ mod tests {
         let twice = std::fs::read_to_string(&path).unwrap();
         assert_eq!(twice.matches("\"label\"").count(), 2);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_or_init_preserves_unrecognizable_docs() {
+        let path = std::env::temp_dir().join(format!(
+            "diperf_bench_preserve_{}.json",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap();
+        let bak = format!("{path_s}.bak");
+        let garbage = "{\"not\": \"the bench schema\"}";
+        std::fs::write(&path, garbage).unwrap();
+        let row = ScaleRow {
+            label: "x".into(),
+            testers: 1,
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: 1.0,
+            wall_s: 1.0,
+            events: 1,
+            events_per_sec: 1.0,
+            peak_pending: 1,
+            peak_rss_kb: 0,
+            samples: 1,
+        };
+        let err = append_or_init(path_s, &[row]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains(".bak"), "{err}");
+        // the original document survives in place AND as the sidecar
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), garbage);
+        assert_eq!(std::fs::read_to_string(&bak).unwrap(), garbage);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bak).ok();
     }
 
     #[test]

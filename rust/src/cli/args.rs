@@ -1,8 +1,10 @@
 //! Hand-rolled argument parser (no `clap` in the environment).
 //!
-//! Grammar: `diperf <command> [--flag value]... [--switch]...`.
-//! Flags may appear in any order; unknown flags are an error so typos
-//! fail loudly.
+//! Grammar: `diperf <command> [positional]... [--flag value]...
+//! [--switch]...`.  Flags may appear in any order; unknown flags are an
+//! error so typos fail loudly.  Positionals after the command are
+//! collected in order — commands that take none reject them
+//! (see [`crate::cli::main`]).
 
 use std::collections::HashMap;
 
@@ -13,6 +15,9 @@ use anyhow::{bail, Context, Result};
 pub struct Args {
     /// The subcommand (first positional).
     pub command: String,
+    /// Positional arguments after the command, in order (e.g.
+    /// `analyze changepoints <history files>`).
+    pub positional: Vec<String>,
     /// `--key value` pairs.
     flags: HashMap<String, String>,
     /// Bare `--switch` flags.
@@ -42,7 +47,8 @@ impl Args {
         }
         while let Some(tok) = it.next() {
             let Some(name) = tok.strip_prefix("--") else {
-                bail!("unexpected positional argument: {tok}");
+                out.positional.push(tok.clone());
+                continue;
             };
             let s = spec
                 .iter()
@@ -123,6 +129,19 @@ mod tests {
         assert_eq!(a.get_parsed::<u64>("seed").unwrap(), Some(7));
         assert!(a.has("xla"));
         assert!(!a.has("native"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn collects_positionals_in_order() {
+        let a = Args::parse(
+            &sv(&["analyze", "changepoints", "a.json", "--seed", "7", "b.json"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.command, "analyze");
+        assert_eq!(a.positional, sv(&["changepoints", "a.json", "b.json"]));
+        assert_eq!(a.get("seed"), Some("7"));
     }
 
     #[test]

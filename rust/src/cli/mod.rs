@@ -44,7 +44,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("run", "run a DiPerF experiment and its automated analysis"),
     ("live", "run the harness over real sockets against a real target"),
     ("campaign", "run a parallel multi-experiment sweep with cross-service report"),
-    ("analyze", "re-run the analysis over a saved run directory"),
+    ("analyze", "re-run analysis over a run dir; `analyze changepoints <files...>` gates the perf trajectory"),
     ("predict", "fit an empirical performance model from a run"),
     ("selftest", "quick experiment + XLA-vs-native analysis check"),
     ("presets", "list shipped experiment, campaign and scenario presets"),
@@ -74,6 +74,11 @@ fn spec() -> Vec<Spec> {
         Spec { name: "target", takes_value: true, help: "live in-process target kind: ps | http" },
         Spec { name: "target-addr", takes_value: true, help: "live external endpoint (host:port); disables crossval" },
         Spec { name: "crossval-bound", takes_value: true, help: "fail if live-vs-sim throughput divergence exceeds this fraction" },
+        Spec { name: "alpha", takes_value: true, help: "changepoints: permutation-test significance level (default 0.05)" },
+        Spec { name: "permutations", takes_value: true, help: "changepoints: permutations per significance test (default 199)" },
+        Spec { name: "min-segment", takes_value: true, help: "changepoints: fewest points on either side of a split (default 3)" },
+        Spec { name: "fresh-window", takes_value: true, help: "changepoints: a shift within the last N points is fresh (default 5)" },
+        Spec { name: "fail-on-fresh", takes_value: false, help: "changepoints: exit 2 when a fresh regression is detected" },
     ]
 }
 
@@ -104,6 +109,13 @@ fn run_opts(a: &Args) -> Result<RunOptions> {
 /// CLI entry point; returns the process exit code.
 pub fn main(argv: &[String]) -> Result<i32> {
     let a = Args::parse(argv, &spec())?;
+    // only `analyze` takes positionals (its changepoints sub-mode);
+    // everywhere else a stray word is a typo that must fail loudly
+    if a.command != "analyze" {
+        if let Some(p) = a.positional.first() {
+            anyhow::bail!("unexpected positional argument: {p}");
+        }
+    }
     match a.command.as_str() {
         "" | "help" => {
             println!("{}", args::help(COMMANDS, &spec()));
@@ -612,7 +624,93 @@ fn load_run(a: &Args) -> Result<RunData> {
     report::parse_samples_csv(&text)
 }
 
+/// `diperf analyze changepoints <history files...>`: ingest the perf
+/// trajectory in argument order and run E-Divisive mean-shift
+/// detection over every series (see [`crate::analysis::changepoint`]).
+/// Writes `perf_changepoints.csv` (or `--out <path>`); with
+/// `--fail-on-fresh`, exits 2 when any series shows a fresh shift in
+/// its bad direction — the CI perf gate.
+fn cmd_changepoints(a: &Args) -> Result<i32> {
+    use crate::analysis::changepoint as cp;
+    let paths = &a.positional[1..];
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "analyze changepoints needs at least one BENCH_scale.json / \
+         load_response.csv history file (in chronological order)"
+    );
+    let mut set = cp::SeriesSet::new();
+    for p in paths {
+        set.ingest_path(p)?;
+    }
+    let mut det = cp::Detector::default();
+    if let Some(v) = a.get_parsed::<f64>("alpha")? {
+        anyhow::ensure!(0.0 < v && v < 1.0, "--alpha must be in (0, 1)");
+        det.alpha = v;
+    }
+    if let Some(v) = a.get_parsed::<usize>("permutations")? {
+        anyhow::ensure!(v > 0, "--permutations must be >= 1");
+        det.permutations = v;
+    }
+    if let Some(v) = a.get_parsed::<usize>("min-segment")? {
+        anyhow::ensure!(v >= 2, "--min-segment must be >= 2");
+        det.min_segment = v;
+    }
+    let fresh_window = a.get_parsed::<usize>("fresh-window")?.unwrap_or(5);
+
+    let findings = det.detect_all(&set);
+    let out_path = a.get("out").unwrap_or("perf_changepoints.csv");
+    std::fs::write(out_path, cp::report_csv(&findings, fresh_window))
+        .with_context(|| format!("writing {out_path}"))?;
+
+    let series_n = findings.len();
+    let shifts: usize = findings.iter().map(|f| f.changepoints.len()).sum();
+    println!(
+        "ingested {} documents -> {series_n} series; {shifts} mean \
+         shift(s) detected (alpha {}, {} permutations)",
+        set.docs, det.alpha, det.permutations
+    );
+    for f in &findings {
+        let polarity = cp::metric_polarity(&f.key);
+        for c in &f.changepoints {
+            println!(
+                "  {}  n={} shift at {}: {:.4} -> {:.4} (p={:.3}{}{})",
+                f.key,
+                f.n,
+                c.index,
+                c.before_mean,
+                c.after_mean,
+                c.p_value,
+                if c.is_regression(polarity) { ", regression" } else { "" },
+                if cp::is_fresh(c, f.n, fresh_window) { ", fresh" } else { "" },
+            );
+        }
+    }
+    println!("changepoint report {out_path}");
+
+    let fresh = cp::fresh_regressions(&findings, fresh_window);
+    if !fresh.is_empty() && a.has("fail-on-fresh") {
+        for (f, c) in &fresh {
+            eprintln!(
+                "perf gate: fresh regression in {} at index {} \
+                 ({:.4} -> {:.4}, p={:.3})",
+                f.key, c.index, c.before_mean, c.after_mean, c.p_value
+            );
+        }
+        return Ok(2);
+    }
+    Ok(0)
+}
+
 fn cmd_analyze(a: &Args) -> Result<i32> {
+    if a.positional.first().map(String::as_str) == Some("changepoints") {
+        return cmd_changepoints(a);
+    }
+    if let Some(p) = a.positional.first() {
+        anyhow::bail!(
+            "unexpected positional argument: {p} (did you mean \
+             `analyze changepoints`?)"
+        );
+    }
     let rd = load_run(a)?;
     let inp = AnalysisInput::from_run(&rd, NUM_QUANTA, WINDOW_S);
     let (out, path_label) = run_analysis(&inp, a)?;
@@ -719,6 +817,17 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(main(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn stray_positionals_are_rejected() {
+        assert!(main(&sv(&["run", "oops"])).is_err());
+        assert!(main(&sv(&["analyze", "oops"])).is_err());
+        // the changepoints sub-mode without history files is an error
+        assert!(main(&sv(&["analyze", "changepoints"])).is_err());
+        // and so is an unreadable history file
+        assert!(main(&sv(&["analyze", "changepoints", "/nonexistent.json"]))
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! End-to-end tests for the E-Divisive perf gate: synthetic-shift
+//! detection accuracy, the null-series false-positive bound, bench
+//! writer → ingester round-trips, the checked-in perf-gate fixture, and
+//! the `diperf analyze changepoints` CLI surface.
+
+use diperf::analysis::changepoint::{
+    fresh_regressions, is_fresh, metric_polarity, report_csv, Detector,
+    Polarity, SeriesSet,
+};
+use diperf::bench_util::{scale_json, ScaleRow};
+use diperf::util::Pcg64;
+
+fn fixture(name: &str) -> String {
+    format!(
+        "{}/rust/tests/fixtures/perf_gate/{name}",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+/// The acceptance criterion: a mean shift injected at index 25 of a
+/// 50-point series is found at the correct index ±1.
+#[test]
+fn injected_shift_on_50_points_is_located_within_one_index() {
+    let mut rng = Pcg64::seed_from(1234);
+    for (shift_at, lo, hi, noise) in
+        [(25usize, 100.0, 130.0, 4.0), (25, 1.0e6, 0.8e6, 0.02e6)]
+    {
+        let xs: Vec<f64> = (0..50)
+            .map(|i| {
+                let base = if i < shift_at { lo } else { hi };
+                base + rng.uniform(-noise, noise)
+            })
+            .collect();
+        let cps = Detector::default().detect(&xs);
+        assert!(!cps.is_empty(), "shift {lo}->{hi} not detected");
+        assert!(
+            cps.iter().any(|c| (c.index as i64 - shift_at as i64).abs() <= 1),
+            "shift {lo}->{hi} located at {:?}, wanted {shift_at}±1",
+            cps.iter().map(|c| c.index).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// The false-positive bound: pure-noise series must yield zero
+/// detections (several independent draws, not just one lucky seed).
+#[test]
+fn null_series_yield_zero_detections() {
+    let det = Detector::default();
+    for seed in [2u64, 3, 5, 8, 13] {
+        let mut rng = Pcg64::seed_from(seed);
+        let xs: Vec<f64> = (0..50).map(|_| rng.uniform(95.0, 105.0)).collect();
+        let cps = det.detect(&xs);
+        assert!(
+            cps.is_empty(),
+            "seed {seed}: spurious changepoints {:?}",
+            cps.iter().map(|c| (c.index, c.p_value)).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// Round-trip: the exact document `bench_scale` writes parses through
+/// the ingester with every metric value intact.
+#[test]
+fn bench_writer_output_round_trips_through_the_ingester() {
+    let rows = vec![
+        ScaleRow {
+            label: "churn-1000-wheel".into(),
+            testers: 1000,
+            queue: "wheel",
+            collection: "stream",
+            virtual_s: 300.0,
+            wall_s: 1.2579,
+            events: 4_000_000,
+            events_per_sec: 3_180_000.0,
+            peak_pending: 2048,
+            peak_rss_kb: 51200,
+            samples: 250_000,
+        },
+        ScaleRow {
+            label: "churn-1000-heap".into(),
+            testers: 1000,
+            queue: "heap",
+            collection: "stream",
+            virtual_s: 300.0,
+            wall_s: 2.5,
+            events: 4_000_000,
+            events_per_sec: 1_600_000.0,
+            peak_pending: 4096,
+            peak_rss_kb: 64000,
+            samples: 250_000,
+        },
+    ];
+    let doc = scale_json(
+        &rows,
+        &[
+            ("note", "\"round trip\"".into()),
+            ("wheel_vs_heap_experiment", "1.988".into()),
+            ("campaign_speedup", "null".into()),
+        ],
+    );
+    let mut set = SeriesSet::new();
+    set.ingest_scale_json(&doc).unwrap();
+    assert_eq!(set.docs, 1);
+    for r in &rows {
+        assert_eq!(set.series[&format!("{}/wall_s", r.label)], vec![r.wall_s]);
+        assert_eq!(
+            set.series[&format!("{}/events_per_sec", r.label)],
+            vec![r.events_per_sec]
+        );
+        assert_eq!(
+            set.series[&format!("{}/peak_pending", r.label)],
+            vec![r.peak_pending as f64]
+        );
+        assert_eq!(
+            set.series[&format!("{}/peak_rss_kb", r.label)],
+            vec![r.peak_rss_kb as f64]
+        );
+    }
+    assert_eq!(set.series["summary/wheel_vs_heap_experiment"], vec![1.988]);
+    assert!(!set.series.contains_key("summary/campaign_speedup"));
+}
+
+/// The checked-in CI fixture: the healthy history alone is quiet; with
+/// the injected-regression document appended, the throughput collapse
+/// is found at the regime boundary, classified as a fresh regression.
+#[test]
+fn perf_gate_fixture_flags_the_injected_regression() {
+    // healthy history only: no alarms on any series
+    let mut healthy = SeriesSet::new();
+    healthy.ingest_path(&fixture("history_good.json")).unwrap();
+    let det = Detector::default();
+    let findings = det.detect_all(&healthy);
+    assert!(findings.iter().all(|f| f.changepoints.is_empty()));
+    assert!(fresh_regressions(&findings, 5).is_empty());
+
+    // healthy + regression: the gate trips
+    let mut set = SeriesSet::new();
+    set.ingest_path(&fixture("history_good.json")).unwrap();
+    set.ingest_path(&fixture("history_regression.json")).unwrap();
+    let eps = &set.series["churn-1000-wheel/events_per_sec"];
+    assert_eq!(eps.len(), 13, "10 good + 3 regressed points");
+    let findings = det.detect_all(&set);
+    let fresh = fresh_regressions(&findings, 5);
+    assert!(!fresh.is_empty(), "regression not flagged");
+    let (f, c) = fresh
+        .iter()
+        .find(|(f, _)| f.key == "churn-1000-wheel/events_per_sec")
+        .expect("throughput series must trip the gate");
+    assert!((c.index as i64 - 10).abs() <= 1, "index {}", c.index);
+    assert!(c.before_mean > c.after_mean);
+    assert!(is_fresh(c, f.n, 5));
+    assert_eq!(metric_polarity(&f.key), Polarity::HigherIsBetter);
+
+    // the CSV report carries the alarm
+    let csv = report_csv(&findings, 5);
+    assert!(csv.lines().next().unwrap().starts_with("series,n,index"));
+    let alarm = csv
+        .lines()
+        .find(|l| l.starts_with("churn-1000-wheel/events_per_sec"))
+        .expect("alarm row");
+    assert!(alarm.ends_with("down,true,true"), "{alarm}");
+}
+
+/// The CLI surface: `diperf analyze changepoints` over the fixtures
+/// exits 0 on the healthy history and 2 with `--fail-on-fresh` once
+/// the regression document lands, writing the report both times.
+#[test]
+fn cli_gate_exits_by_verdict() {
+    let tmp = std::env::temp_dir().join(format!(
+        "diperf_cp_cli_{}.csv",
+        std::process::id()
+    ));
+    let out = tmp.to_str().unwrap().to_string();
+    let sv = |xs: &[&str]| -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    };
+
+    let code = diperf::cli::main(&sv(&[
+        "analyze",
+        "changepoints",
+        &fixture("history_good.json"),
+        "--fail-on-fresh",
+        "--out",
+        &out,
+    ]))
+    .unwrap();
+    assert_eq!(code, 0, "healthy history must pass the gate");
+
+    let code = diperf::cli::main(&sv(&[
+        "analyze",
+        "changepoints",
+        &fixture("history_good.json"),
+        &fixture("history_regression.json"),
+        "--fail-on-fresh",
+        "--out",
+        &out,
+    ]))
+    .unwrap();
+    assert_eq!(code, 2, "regression history must fail the gate");
+    let report = std::fs::read_to_string(&tmp).unwrap();
+    assert!(report.contains("churn-1000-wheel/events_per_sec"));
+    std::fs::remove_file(&tmp).ok();
+
+    // without --fail-on-fresh the same history reports but passes
+    let code = diperf::cli::main(&sv(&[
+        "analyze",
+        "changepoints",
+        &fixture("history_good.json"),
+        &fixture("history_regression.json"),
+        "--out",
+        &out,
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    std::fs::remove_file(&tmp).ok();
+}
