@@ -70,7 +70,9 @@ fn spec() -> Vec<Spec> {
         Spec { name: "queue", takes_value: true, help: "event queue: wheel (default) | heap" },
         Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path (campaign: append)" },
         Spec { name: "jobs", takes_value: true, help: "campaign worker threads (default: all cores)" },
-        Spec { name: "agents", takes_value: true, help: "live agent thread count override" },
+        Spec { name: "agents", takes_value: true, help: "live agent count override" },
+        Spec { name: "agent-backend", takes_value: true, help: "live agent hosting: thread (default) | reactor" },
+        Spec { name: "workers", takes_value: true, help: "reactor worker threads (default: one per core)" },
         Spec { name: "target", takes_value: true, help: "live in-process target kind: ps | http" },
         Spec { name: "target-addr", takes_value: true, help: "live external endpoint (host:port); disables crossval" },
         Spec { name: "crossval-bound", takes_value: true, help: "fail if live-vs-sim throughput divergence exceeds this fraction" },
@@ -391,6 +393,12 @@ fn build_live_config(a: &Args) -> Result<(crate::live::LiveConfig, String)> {
     if let Some(n) = a.get_parsed::<usize>("agents")? {
         cfg.agents = n;
     }
+    if let Some(b) = a.get("agent-backend") {
+        cfg.backend = live::AgentBackend::parse(b)?;
+    }
+    if let Some(w) = a.get_parsed::<usize>("workers")? {
+        cfg.workers = w;
+    }
     if let Some(d) = a.get_parsed::<f64>("duration")? {
         cfg.controller.desc.duration_s = d;
     }
@@ -457,9 +465,10 @@ fn cmd_live(a: &Args) -> Result<i32> {
     use crate::live;
     let (cfg, name) = build_live_config(a)?;
     eprintln!(
-        "[diperf] live {name:?}: {} agents x {:.0}s against {} \
+        "[diperf] live {name:?}: {} agents ({} backend) x {:.0}s against {} \
          (seed {}, real sockets)",
         cfg.agents,
+        cfg.backend.label(),
         cfg.controller.desc.duration_s,
         cfg.target.label(),
         cfg.seed,
@@ -487,7 +496,7 @@ fn cmd_live(a: &Args) -> Result<i32> {
     rd.write("summary.txt", &summary)?;
 
     if let Some(path) = a.get("bench-json") {
-        let row = crate::bench_util::ScaleRow {
+        let mut rows = vec![crate::bench_util::ScaleRow {
             label: format!("{}-{}-agent_throughput", name, cfg.agents),
             testers: cfg.agents,
             queue: "live",
@@ -499,8 +508,26 @@ fn cmd_live(a: &Args) -> Result<i32> {
             peak_pending: 0,
             peak_rss_kb: crate::bench_util::peak_rss_kb(),
             samples: r.samples(),
-        };
-        crate::bench_util::append_or_init(path, &[row])
+        }];
+        if cfg.backend == live::AgentBackend::Reactor {
+            // the reactor's headline scaling figure: how many live
+            // agents each worker core actually carried to completion
+            let workers = live::effective_workers(cfg.workers, cfg.agents);
+            rows.push(crate::bench_util::ScaleRow {
+                label: format!("{}-{}-live_agents_per_core", name, cfg.agents),
+                testers: cfg.agents,
+                queue: "live",
+                collection: "stream",
+                virtual_s: cfg.controller.desc.duration_s,
+                wall_s: r.wall_s,
+                events: r.connected as u64,
+                events_per_sec: r.connected as f64 / workers as f64,
+                peak_pending: workers as u64,
+                peak_rss_kb: crate::bench_util::peak_rss_kb(),
+                samples: r.samples(),
+            });
+        }
+        crate::bench_util::append_or_init(path, &rows)
             .with_context(|| format!("writing {path}"))?;
     }
 
@@ -874,7 +901,8 @@ mod tests {
     fn build_live_config_applies_overrides() {
         let a = Args::parse(
             &sv(&["live", "--preset", "live_ps", "--agents", "3",
-                  "--duration", "4", "--seed", "9"]),
+                  "--duration", "4", "--seed", "9",
+                  "--agent-backend", "reactor", "--workers", "2"]),
             &spec(),
         )
         .unwrap();
@@ -883,6 +911,20 @@ mod tests {
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.agents, 3);
         assert_eq!(cfg.controller.desc.duration_s, 4.0);
+        assert_eq!(cfg.backend, crate::live::AgentBackend::Reactor);
+        assert_eq!(cfg.workers, 2);
+
+        // the default backend stays thread-per-agent
+        let a = Args::parse(&sv(&["live"]), &spec()).unwrap();
+        let (cfg, _) = build_live_config(&a).unwrap();
+        assert_eq!(cfg.backend, crate::live::AgentBackend::Thread);
+        assert_eq!(cfg.workers, 0);
+        let a = Args::parse(
+            &sv(&["live", "--agent-backend", "fibers"]),
+            &spec(),
+        )
+        .unwrap();
+        assert!(build_live_config(&a).is_err());
 
         // unknown live presets and targets fail listing alternatives
         let a = Args::parse(&sv(&["live", "--preset", "zzz"]), &spec()).unwrap();

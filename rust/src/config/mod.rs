@@ -390,6 +390,8 @@ pub fn campaign_from_toml(text: &str) -> Result<crate::campaign::CampaignSpec> {
 /// target = "ps"           # in-process target kind (ps | http)
 /// # target_addr = "svc.example.org:8080"   # external endpoint instead
 /// skew_max_s = 500.0
+/// backend = "reactor"     # agent hosting: thread (default) | reactor
+/// workers = 4             # reactor event-loop threads (0 = per core)
 /// ```
 pub fn live_from_toml(text: &str) -> Result<crate::live::LiveConfig> {
     use crate::live::{self, TargetSel};
@@ -425,6 +427,11 @@ pub fn live_from_toml(text: &str) -> Result<crate::live::LiveConfig> {
     set_f64(sec, "window_s", &mut cfg.window_s)?;
     set_f64(sec, "skew_max_s", &mut cfg.skew_max_s)?;
     set_f64(sec, "drift_max", &mut cfg.drift_max)?;
+    if let Some(v) = sec.get("backend") {
+        let name = v.as_str().context("backend must be a string")?;
+        cfg.backend = live::AgentBackend::parse(name)?;
+    }
+    set_usize(sec, "workers", &mut cfg.workers)?;
     if let Some(v) = sec.get("target") {
         let name = v.as_str().context("target must be a string")?;
         cfg.target = TargetSel::InProcess(live::target_by_name(name)?);
@@ -611,13 +618,16 @@ mod tests {
         use crate::live::TargetSel;
         let cfg = live_from_toml(
             "seed = 3\n[live]\npreset = \"live_smoke\"\nagents = 16\n\
-             duration_s = 20.0\ntarget = \"ps\"\nskew_max_s = 500.0\n",
+             duration_s = 20.0\ntarget = \"ps\"\nskew_max_s = 500.0\n\
+             backend = \"reactor\"\nworkers = 4\n",
         )
         .unwrap();
         assert_eq!(cfg.seed, 3);
         assert_eq!(cfg.agents, 16);
         assert_eq!(cfg.controller.desc.duration_s, 20.0);
         assert_eq!(cfg.skew_max_s, 500.0);
+        assert_eq!(cfg.backend, crate::live::AgentBackend::Reactor);
+        assert_eq!(cfg.workers, 4);
         match &cfg.target {
             TargetSel::InProcess(k) => assert_eq!(k.label(), "ps"),
             other => panic!("wrong target {other:?}"),
@@ -637,6 +647,8 @@ mod tests {
             .to_string();
         assert!(e.contains("ps") && e.contains("http"), "{e}");
         assert!(live_from_toml("[live]\nagents = 0\n").is_err());
+        assert!(live_from_toml("[live]\nbackend = \"fibers\"\n").is_err());
+        assert!(live_from_toml("[live]\nbackend = 3\n").is_err());
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //! * **agent** threads execute the [`crate::transport::TestDescription`]
 //!   faithfully — client interval, rate cap, timeout, give-up — with
 //!   real `Instant`-based timing on deliberately skewed local clocks
-//!   ([`agent`]);
+//!   ([`agent`]); at scale, the readiness-driven [`reactor`] packs
+//!   thousands of those agents onto a few worker threads instead
+//!   (`--agent-backend reactor`);
 //! * a **time-stamp server** answers clock queries so the existing
 //!   [`crate::timesync`] math maps local samples onto the common base
 //!   from genuine readings ([`timeserver`]);
@@ -35,6 +37,7 @@
 pub mod agent;
 pub mod controller;
 pub mod crossval;
+pub mod reactor;
 pub mod target;
 pub mod timeserver;
 pub mod wire;
@@ -58,6 +61,39 @@ pub use timeserver::{LiveClock, TimeServer};
 /// Canonical list of shipped live presets — the single source for
 /// `diperf presets`, help output and unknown-name errors ([`by_name`]).
 pub const NAMES: [&str; 3] = ["live_smoke", "live_ps", "live_http"];
+
+/// How agents are hosted on this machine.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum AgentBackend {
+    /// One OS thread (plus a session-reader thread) per agent — simple,
+    /// fully independent timing, caps out at a few hundred agents.
+    Thread,
+    /// Readiness-driven event loops ([`reactor`]): a few worker
+    /// threads each own an unshared slice of nonblocking agents, so
+    /// one machine sustains thousands (the paper's §3 packing).
+    Reactor,
+}
+
+impl AgentBackend {
+    /// Stable label for reports and CLI round-trips.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AgentBackend::Thread => "thread",
+            AgentBackend::Reactor => "reactor",
+        }
+    }
+
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<AgentBackend> {
+        match s {
+            "thread" => Ok(AgentBackend::Thread),
+            "reactor" => Ok(AgentBackend::Reactor),
+            other => bail!(
+                "unknown agent backend {other:?}; expected thread or reactor"
+            ),
+        }
+    }
+}
 
 /// Where the agents' load goes.
 #[derive(Clone, Debug)]
@@ -104,6 +140,11 @@ pub struct LiveConfig {
     pub skew_max_s: f64,
     /// Agent clocks get a uniform frequency drift in ±this fraction.
     pub drift_max: f64,
+    /// How agents are hosted: a thread per agent, or reactor workers.
+    pub backend: AgentBackend,
+    /// Reactor worker threads (0 = one per available core); ignored by
+    /// the thread backend.
+    pub workers: usize,
 }
 
 /// Everything a finished live run produces.
@@ -179,6 +220,8 @@ pub fn live_smoke(seed: u64) -> LiveConfig {
         window_s: 2.0,
         skew_max_s: 300.0,
         drift_max: 100e-6,
+        backend: AgentBackend::Thread,
+        workers: 0,
     }
 }
 
@@ -267,10 +310,30 @@ pub fn validate(cfg: &LiveConfig) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a `workers` request: 0 means one per available core, and
+/// no run uses more workers than agents.
+pub fn effective_workers(requested: usize, agents: usize) -> usize {
+    let base = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    base.clamp(1, agents.max(1))
+}
+
+/// Join handles of whichever backend hosts the agents.
+enum Pool {
+    Threads(Vec<std::thread::JoinHandle<AgentReport>>),
+    #[cfg(unix)]
+    Reactor(Vec<reactor::WorkerHandle>),
+}
+
 /// Run a complete live experiment: spawn the time-stamp server, the
-/// in-process target (unless external), the agent threads, and the
-/// controller; block until the run finishes and hand back the same
-/// streaming state a simulated run produces.
+/// in-process target (unless external), the agents (on the configured
+/// backend), and the controller; block until the run finishes and hand
+/// back the same streaming state a simulated run produces.
 pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
     validate(cfg)?;
     let base = LiveClock::ideal();
@@ -290,22 +353,63 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
     let ctrl_addr = listener.local_addr()?;
     let ts_addr = ts.addr;
 
+    // both backends derive skew/drift identically, so a run is
+    // bit-comparable across `--agent-backend` choices
     let mut root = Pcg64::seed_from(cfg.seed);
-    let handles: Vec<std::thread::JoinHandle<AgentReport>> = (0..cfg.agents)
+    let distortions: Vec<(f64, f64)> = (0..cfg.agents)
         .map(|i| {
             let mut rng = root.split(500 + i as u64);
             let skew = rng.uniform(-cfg.skew_max_s, cfg.skew_max_s);
             let drift = rng.uniform(-cfg.drift_max, cfg.drift_max);
-            let p = AgentParams {
-                id: i as u32,
-                ctrl_addr,
-                ts_addr,
-                call: call.clone(),
-                clock: LiveClock::anchored(Instant::now(), skew, drift),
-            };
-            std::thread::spawn(move || agent::run_agent(p))
+            (skew, drift)
         })
         .collect();
+    let pool = match cfg.backend {
+        AgentBackend::Thread => Pool::Threads(
+            distortions
+                .iter()
+                .enumerate()
+                .map(|(i, &(skew, drift))| {
+                    let p = AgentParams {
+                        id: i as u32,
+                        ctrl_addr,
+                        ts_addr,
+                        call: call.clone(),
+                        clock: LiveClock::anchored(
+                            Instant::now(),
+                            skew,
+                            drift,
+                        ),
+                    };
+                    std::thread::spawn(move || agent::run_agent(p))
+                })
+                .collect(),
+        ),
+        #[cfg(unix)]
+        AgentBackend::Reactor => {
+            let specs: Vec<reactor::AgentSpec> = distortions
+                .iter()
+                .enumerate()
+                .map(|(i, &(skew_s, drift))| reactor::AgentSpec {
+                    id: i as u32,
+                    skew_s,
+                    drift,
+                })
+                .collect();
+            let workers = effective_workers(cfg.workers, cfg.agents);
+            Pool::Reactor(reactor::run_pool(
+                workers,
+                specs,
+                ctrl_addr,
+                ts_addr,
+                call.clone(),
+            ))
+        }
+        #[cfg(not(unix))]
+        AgentBackend::Reactor => {
+            bail!("the reactor backend needs a unix platform (epoll/poll)")
+        }
+    };
 
     let wall = Instant::now();
     let out = controller::run_controller(
@@ -318,10 +422,24 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
         cfg.grace_s,
     )?;
     let wall_s = wall.elapsed().as_secs_f64();
-    let agent_reports: Vec<AgentReport> = handles
-        .into_iter()
-        .map(|h| h.join().unwrap_or_default())
-        .collect();
+    let agent_reports: Vec<AgentReport> = match pool {
+        Pool::Threads(handles) => handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_default())
+            .collect(),
+        #[cfg(unix)]
+        Pool::Reactor(handles) => {
+            let mut reports = vec![AgentReport::default(); cfg.agents];
+            for h in handles {
+                for (id, rep) in h.join().unwrap_or_default() {
+                    if let Some(slot) = reports.get_mut(id as usize) {
+                        *slot = rep;
+                    }
+                }
+            }
+            reports
+        }
+    };
     let service_stats = target_handle.as_ref().map(|t| t.stats());
     if let Some(mut t) = target_handle {
         t.shutdown();
@@ -384,6 +502,23 @@ mod tests {
         let mut cfg = live_smoke(1);
         cfg.skew_max_s = -1.0;
         assert!(validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn backend_labels_round_trip() {
+        for b in [AgentBackend::Thread, AgentBackend::Reactor] {
+            assert_eq!(AgentBackend::parse(b.label()).unwrap(), b);
+        }
+        assert!(AgentBackend::parse("fibers").is_err());
+        assert_eq!(live_smoke(1).backend, AgentBackend::Thread);
+    }
+
+    #[test]
+    fn effective_workers_resolves_auto_and_clamps() {
+        assert_eq!(effective_workers(4, 100), 4);
+        assert_eq!(effective_workers(16, 3), 3);
+        assert!(effective_workers(0, 1000) >= 1);
+        assert_eq!(effective_workers(0, 1), 1);
     }
 
     #[test]

@@ -1,0 +1,1834 @@
+//! Readiness-driven live agent pool: thousands of testers per machine
+//! on a handful of worker threads.
+//!
+//! The thread-per-agent pool in [`crate::live::agent`] caps one machine
+//! at a few hundred agents (two OS threads per agent, 20 ms sleep
+//! slices); the paper's §3 deployment packs many testers per physical
+//! node.  This module replaces the pool with an event loop:
+//!
+//! * **N workers, unshared slices.**  [`run_pool`] splits the roster
+//!   into contiguous chunks; each worker thread owns its agents'
+//!   nonblocking sockets and state machines outright, so there is no
+//!   cross-thread locking anywhere on the data path.
+//! * **The `EventSource`/`Clock` seam.**  The state machine calls
+//!   readiness, byte I/O and time through the [`EventSource`] and
+//!   [`Clock`] traits.  [`SocketSource`] backs them with the vendored
+//!   epoll binding ([`crate::runtime::poll`]); the [`testing`] module
+//!   backs them with scriptable in-memory fakes, so the *identical*
+//!   agent logic is driven deterministically in tests — no sockets, no
+//!   sleeps, bit-stable.
+//! * **Tester fidelity.**  Each agent wraps the simulator's
+//!   [`Tester`] exactly like the thread agent does: launch pacing via
+//!   `next_launch_local`, the consecutive-failure give-up, timeout
+//!   tokens, and the no-launch-before-first-sync rule (§3.1.2).
+//!   Timestamps run on a per-agent skewed/drifting local clock derived
+//!   affinely from the worker's monotonic clock, matching
+//!   [`crate::live::timeserver::LiveClock`]'s law.
+//! * **A timer wheel for deadlines.**  Launch pacing, sync intervals,
+//!   test durations, call timeouts and connect deadlines all live in
+//!   one [`TimerWheel`] per worker (the simulator's wheel, reused on
+//!   wall-clock microseconds).  The `epoll_wait` timeout is simply the
+//!   wheel's next expiry.
+//! * **Backpressure-aware batched flushes.**  Samples batch into
+//!   `Samples` frames (32 per flush, as in the thread agent) appended
+//!   to a per-agent write buffer.  If the controller stops draining and
+//!   the buffer passes a high watermark the agent stops *launching*
+//!   (never blocking the worker) until the buffer falls below the low
+//!   watermark.
+//!
+//! One divergence from the thread agent is worth noting:
+//! `AgentReport::samples_sent` counts samples when their frame is
+//! *queued*, not when the last byte hits the socket — a reactor never
+//! learns when the kernel drains the buffer.  A session that dies with
+//! frames still queued may therefore over-count by up to one batch;
+//! the controller-side reconciliation (which is what the metrics use)
+//! is unaffected.
+
+use std::collections::VecDeque;
+use std::io;
+use std::time::Instant;
+
+#[cfg(unix)]
+use std::net::SocketAddr;
+
+use crate::ids::{NodeId, RequestId, TesterId};
+use crate::live::agent::AgentReport;
+use crate::live::target::{OUT_DENIED, OUT_OK};
+use crate::live::wire::{self, FrameBuf, WireUp};
+use crate::metrics::{CallSample, SampleOutcome};
+use crate::sim::engine::Scheduled;
+use crate::sim::{SimTime, TimerWheel};
+use crate::tester::Tester;
+use crate::timesync::SyncPoint;
+use crate::transport::{CtrlMsg, GoodbyeReason, TestDescription};
+use crate::util::FxHashMap;
+
+#[cfg(unix)]
+use crate::live::agent::CallMode;
+
+/// Samples per upstream batch frame (mirrors the thread agent).
+const BATCH: usize = 32;
+
+/// Pending controller-bound bytes above which an agent stops launching.
+const HIGH_WATER: usize = 64 * 1024;
+
+/// Pending controller-bound bytes below which a paused agent resumes.
+const LOW_WATER: usize = 8 * 1024;
+
+/// Startup latency-probe connect deadline (the thread agent's 2 s).
+const PROBE_TIMEOUT_S: f64 = 2.0;
+
+/// Deadline for the controller TCP connect itself; Start may take
+/// arbitrarily longer (staggered ramp), so only the connect is gated.
+const HANDSHAKE_TIMEOUT_S: f64 = 20.0;
+
+/// Read chunk for control-plane sockets.
+const READ_CHUNK: usize = 4096;
+
+/// Identifies one registered connection within a worker.  Tokens are
+/// never reused: stale readiness reports for closed connections are
+/// dropped by lookup failure, not by careful ordering.
+pub type Token = u64;
+
+/// One readiness report from [`EventSource::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the connection was opened under.
+    pub token: Token,
+    /// Bytes can be read (or the peer closed: a read will return 0).
+    pub readable: bool,
+    /// The send buffer has room (or a pending connect resolved).
+    pub writable: bool,
+    /// Error or hangup; [`EventSource::connect_error`] distinguishes a
+    /// failed connect from a peer reset.
+    pub hangup: bool,
+}
+
+/// The three places an agent connects to, named symbolically so the
+/// state machine never touches addresses (the source owns them).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum Endpoint {
+    /// The controller session.
+    Ctrl,
+    /// The central time-stamp server.
+    TimeServer,
+    /// The service under test.
+    Target,
+}
+
+/// Monotonic time for the event loop, in seconds from an arbitrary
+/// epoch.  Real workers use [`WallClock`]; tests advance a
+/// [`testing::MockClock`] by hand.
+pub trait Clock {
+    /// Current monotonic reading (seconds).  Must never decrease.
+    fn mono_s(&self) -> f64;
+}
+
+/// [`Instant`]-backed [`Clock`] starting at 0 when constructed.
+#[derive(Clone, Copy, Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// A clock anchored now.
+    pub fn new() -> WallClock {
+        WallClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn mono_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+/// Nonblocking connection fabric for one worker.  The contract mirrors
+/// level-triggered epoll over nonblocking TCP:
+///
+/// * [`connect`](Self::connect) starts a nonblocking connect registered
+///   for read+write interest; completion is the first writable event,
+///   after which [`connect_error`](Self::connect_error) reports whether
+///   it actually succeeded.
+/// * [`read`](Self::read)/[`write`](Self::write) never block: they
+///   return `WouldBlock` instead, and `read` returns `Ok(0)` at EOF.
+/// * [`wait`](Self::wait) reports readiness *levels*: a connection with
+///   buffered inbound bytes keeps reporting readable until drained.
+pub trait EventSource {
+    /// Open a nonblocking connection to `ep` under `token`.
+    fn connect(&mut self, ep: Endpoint, token: Token) -> io::Result<()>;
+
+    /// The pending error of a just-completed connect, if it failed.
+    fn connect_error(&mut self, token: Token) -> Option<io::Error>;
+
+    /// Nonblocking read; `Ok(0)` means the peer closed.
+    fn read(&mut self, token: Token, buf: &mut [u8]) -> io::Result<usize>;
+
+    /// Nonblocking write of as many bytes as fit.
+    fn write(&mut self, token: Token, buf: &[u8]) -> io::Result<usize>;
+
+    /// Update the readiness interests for `token`.
+    fn set_interest(&mut self, token: Token, read: bool, write: bool);
+
+    /// Close and forget `token`.
+    fn close(&mut self, token: Token);
+
+    /// Block up to `timeout_s` (forever when `None`) and fill `out`
+    /// with readiness reports; `out` is cleared first.
+    fn wait(&mut self, timeout_s: Option<f64>, out: &mut Vec<Event>) -> io::Result<()>;
+}
+
+/// How calls hit the target (the reactor twin of
+/// [`crate::live::agent::CallMode`], minus the addresses — the
+/// [`EventSource`] owns those).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum TargetMode {
+    /// Held-open connection, 1-byte request / 1-byte outcome.
+    Framed,
+    /// Each call is a fresh TCP connect probe.
+    Probe,
+}
+
+/// Per-agent identity and clock distortion, fixed at spawn.
+#[derive(Clone, Copy, Debug)]
+pub struct AgentSpec {
+    /// Roster index assigned by the harness.
+    pub id: u32,
+    /// Constant local-clock skew (seconds).
+    pub skew_s: f64,
+    /// Fractional local-clock frequency drift (e.g. `50e-6`).
+    pub drift: f64,
+}
+
+/// Timer-wheel events; each carries enough to revalidate on expiry, so
+/// cancellation is never needed (stale timers no-op).
+#[derive(Clone, Copy, Debug)]
+enum Tev {
+    /// A paced client launch may be due.
+    Launch(usize),
+    /// Periodic clock-sync attempt.
+    Sync(usize),
+    /// The agent's test duration elapsed.
+    Duration(usize),
+    /// Tester-enforced call timeout (valid iff the token matches the
+    /// outstanding invocation).
+    CallTimeout(usize, u64),
+    /// The startup latency probe took too long.
+    ProbeDeadline(usize),
+    /// The controller TCP connect took too long.
+    Handshake(usize),
+}
+
+/// Agent lifecycle inside the worker (the reactor rendering of the
+/// thread agent's sequential script).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+enum Phase {
+    /// Controller connect in flight (Hello/DeployDone already queued).
+    Connecting,
+    /// Connected; waiting for the controller's Start.
+    AwaitStart,
+    /// Start received; measuring the latency probe.
+    Probing,
+    /// Launching clients.
+    Running,
+    /// Final frames queued; draining the write buffer, then closing.
+    Draining,
+    /// Finished; the report is final.
+    Done,
+}
+
+/// Who owns a token (lookup only — iteration order never matters).
+#[derive(Clone, Copy, Debug)]
+enum Owner {
+    Ctrl(usize),
+    Target(usize),
+    Ts,
+}
+
+/// One agent's connections, buffers and tester state machine.
+struct Agent {
+    t: Tester,
+    skew_s: f64,
+    drift: f64,
+    phase: Phase,
+    ctrl_tok: Token,
+    ctrl_open: bool,
+    ctrl_connected: bool,
+    ctrl_in: FrameBuf,
+    ctrl_out: Vec<u8>,
+    ctrl_want_write: bool,
+    tgt_tok: Option<Token>,
+    tgt_connected: bool,
+    tgt_out: Vec<u8>,
+    await_reply: bool,
+    probe_started: f64,
+    paused: bool,
+    launch_armed: bool,
+    sync_pending: bool,
+    buf: Vec<CallSample>,
+    goodbye: Option<GoodbyeReason>,
+    rep: AgentReport,
+}
+
+impl Agent {
+    fn new(spec: &AgentSpec, ctrl_tok: Token) -> Agent {
+        Agent {
+            t: Tester::new(TesterId(spec.id), NodeId(spec.id)),
+            skew_s: spec.skew_s,
+            drift: spec.drift,
+            phase: Phase::Connecting,
+            ctrl_tok,
+            ctrl_open: false,
+            ctrl_connected: false,
+            ctrl_in: FrameBuf::new(),
+            ctrl_out: Vec::new(),
+            ctrl_want_write: true,
+            tgt_tok: None,
+            tgt_connected: false,
+            tgt_out: Vec::new(),
+            await_reply: false,
+            probe_started: 0.0,
+            paused: false,
+            launch_armed: false,
+            sync_pending: false,
+            buf: Vec::new(),
+            goodbye: None,
+            rep: AgentReport::default(),
+        }
+    }
+
+    /// This agent's local clock reading at worker-monotonic `mono`:
+    /// the [`crate::live::timeserver::LiveClock`] law, anchored at the
+    /// worker's epoch.
+    fn local(&self, mono: f64) -> f64 {
+        mono * (1.0 + self.drift) + self.skew_s
+    }
+
+    /// Worker-monotonic time at which this agent's clock reads `local`.
+    fn mono_of(&self, local: f64) -> f64 {
+        (local - self.skew_s) / (1.0 + self.drift)
+    }
+}
+
+/// The worker's single shared time-server link: sync requests from all
+/// of its agents go through one connection, FIFO, one in flight.
+struct TsLink {
+    tok: Token,
+    open: bool,
+    connected: bool,
+    want_write: bool,
+    out: Vec<u8>,
+    stamp: [u8; 8],
+    got: usize,
+    queue: VecDeque<usize>,
+    inflight: Option<(usize, f64)>,
+}
+
+impl TsLink {
+    fn new() -> TsLink {
+        TsLink {
+            tok: 0,
+            open: false,
+            connected: false,
+            want_write: true,
+            out: Vec::new(),
+            stamp: [0u8; 8],
+            got: 0,
+            queue: VecDeque::new(),
+            inflight: None,
+        }
+    }
+}
+
+/// Append one length-prefixed frame to a connection's write buffer.
+fn queue_frame(out: &mut Vec<u8>, msg: &WireUp) {
+    let payload = wire::encode_up(msg);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&payload);
+}
+
+fn would_block(e: &io::Error) -> bool {
+    e.kind() == io::ErrorKind::WouldBlock
+}
+
+fn interrupted(e: &io::Error) -> bool {
+    e.kind() == io::ErrorKind::Interrupted
+}
+
+/// One reactor worker: an unshared slice of agents, their sockets, and
+/// a timer wheel, driven by whatever [`EventSource`]/[`Clock`] pair it
+/// was built on.
+pub struct Worker<S, C> {
+    src: S,
+    clock: C,
+    mode: TargetMode,
+    wheel: TimerWheel<Tev>,
+    wheel_seq: u64,
+    now_us: u64,
+    agents: Vec<Agent>,
+    owners: FxHashMap<Token, Owner>,
+    next_token: Token,
+    ts: TsLink,
+    done: usize,
+    events: Vec<Event>,
+}
+
+impl<S: EventSource, C: Clock> Worker<S, C> {
+    /// Build a worker over `specs`: opens every controller connection
+    /// (with Hello/DeployDone pre-queued) plus the shared time-server
+    /// link, and arms the handshake deadlines.
+    pub fn new(src: S, clock: C, specs: &[AgentSpec], mode: TargetMode) -> Worker<S, C> {
+        let mut w = Worker {
+            src,
+            clock,
+            mode,
+            wheel: TimerWheel::new(),
+            wheel_seq: 0,
+            now_us: 0,
+            agents: Vec::with_capacity(specs.len()),
+            owners: FxHashMap::default(),
+            next_token: 1,
+            ts: TsLink::new(),
+            done: 0,
+            events: Vec::new(),
+        };
+        let now = w.clock.mono_s();
+        w.now_us = (now * 1e6).round() as u64;
+        for spec in specs {
+            let i = w.agents.len();
+            let tok = w.alloc_token();
+            let mut a = Agent::new(spec, tok);
+            queue_frame(&mut a.ctrl_out, &WireUp::Hello { agent: spec.id });
+            queue_frame(&mut a.ctrl_out, &WireUp::DeployDone);
+            w.agents.push(a);
+            match w.src.connect(Endpoint::Ctrl, tok) {
+                Ok(()) => {
+                    w.agents[i].ctrl_open = true;
+                    w.owners.insert(tok, Owner::Ctrl(i));
+                    w.sched(now + HANDSHAKE_TIMEOUT_S, Tev::Handshake(i));
+                }
+                Err(_) => {
+                    w.agents[i].rep.session_dropped = true;
+                    w.agents[i].phase = Phase::Done;
+                    w.done += 1;
+                }
+            }
+        }
+        w.ts_connect();
+        w
+    }
+
+    /// Have all agents reached their final report?
+    pub fn all_done(&self) -> bool {
+        self.done == self.agents.len()
+    }
+
+    /// Per-agent reports, in spec order.
+    pub fn reports(&self) -> Vec<AgentReport> {
+        self.agents.iter().map(|a| a.rep).collect()
+    }
+
+    /// One event-loop turn: wait (bounded by the wheel's next expiry
+    /// and `max_wait_s`), dispatch I/O readiness, then expire timers.
+    pub fn tick(&mut self, max_wait_s: Option<f64>) -> io::Result<()> {
+        let now0 = self.clock.mono_s();
+        let mut timeout = max_wait_s;
+        if let Some((at, _)) = self.wheel.peek() {
+            let until = (at.as_secs_f64() - now0).max(0.0);
+            timeout = Some(timeout.map_or(until, |w| until.min(w)));
+        }
+        let mut events = std::mem::take(&mut self.events);
+        let waited = self.src.wait(timeout, &mut events);
+        let now = self.clock.mono_s();
+        self.now_us = self.now_us.max((now * 1e6).round() as u64);
+        for ev in &events {
+            self.dispatch(*ev, now);
+        }
+        events.clear();
+        self.events = events;
+        self.expire(now);
+        waited
+    }
+
+    /// Run until every agent is done.  On an [`EventSource::wait`]
+    /// failure the remaining agents are marked dropped and the error
+    /// is returned.
+    pub fn run(&mut self) -> io::Result<()> {
+        while !self.all_done() {
+            if let Err(e) = self.tick(Some(1.0)) {
+                self.abandon();
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn abandon(&mut self) {
+        for i in 0..self.agents.len() {
+            if self.agents[i].phase != Phase::Done {
+                self.agents[i].rep.session_dropped = true;
+                self.close_agent(i);
+            }
+        }
+    }
+
+    fn alloc_token(&mut self) -> Token {
+        let t = self.next_token;
+        self.next_token += 1;
+        t
+    }
+
+    /// Schedule a timer at monotonic second `at_s`, clamped strictly
+    /// into the future (>= now + 1 µs) so same-tick reschedules can
+    /// never spin the expiry loop.
+    fn sched(&mut self, at_s: f64, event: Tev) {
+        let at = ((at_s.max(0.0) * 1e6).round() as u64).max(self.now_us + 1);
+        self.wheel.push(Scheduled {
+            at: SimTime(at),
+            seq: self.wheel_seq,
+            event,
+        });
+        self.wheel_seq += 1;
+    }
+
+    fn expire(&mut self, now: f64) {
+        while let Some((at, _)) = self.wheel.peek() {
+            if at.0 > self.now_us {
+                break;
+            }
+            let s = self.wheel.pop().expect("peeked event");
+            self.on_timer(s.event, now);
+        }
+    }
+
+    fn on_timer(&mut self, ev: Tev, now: f64) {
+        match ev {
+            Tev::Launch(i) => {
+                self.agents[i].launch_armed = false;
+                self.fire_launch(i, now);
+            }
+            Tev::Sync(i) => self.on_sync_timer(i, now),
+            Tev::Duration(i) => self.finish(i, GoodbyeReason::Finished, now),
+            Tev::CallTimeout(i, token) => self.on_call_timeout(i, token, now),
+            Tev::ProbeDeadline(i) => {
+                if self.agents[i].phase == Phase::Probing {
+                    self.close_target(i);
+                    self.finish_probe(i, now, 0.0);
+                }
+            }
+            Tev::Handshake(i) => {
+                if self.agents[i].phase == Phase::Connecting {
+                    self.ctrl_dead(i);
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, ev: Event, now: f64) {
+        match self.owners.get(&ev.token).copied() {
+            Some(Owner::Ctrl(i)) => self.ctrl_event(i, ev, now),
+            Some(Owner::Target(i)) => self.target_event(i, ev, now),
+            Some(Owner::Ts) => self.ts_event(ev, now),
+            None => {} // stale report for an already-closed token
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // controller session
+    // ---------------------------------------------------------------
+
+    fn ctrl_event(&mut self, i: usize, ev: Event, now: f64) {
+        if self.agents[i].phase == Phase::Done || !self.agents[i].ctrl_open {
+            return;
+        }
+        if !self.agents[i].ctrl_connected {
+            if !(ev.writable || ev.hangup) {
+                return;
+            }
+            let tok = self.agents[i].ctrl_tok;
+            if self.src.connect_error(tok).is_some() || !ev.writable {
+                self.ctrl_dead(i);
+                return;
+            }
+            self.agents[i].ctrl_connected = true;
+            if self.agents[i].phase == Phase::Connecting {
+                self.agents[i].phase = Phase::AwaitStart;
+            }
+            self.pump_ctrl(i, now);
+            if self.agents[i].phase == Phase::Done {
+                return;
+            }
+        }
+        if ev.readable || ev.hangup {
+            self.ctrl_read(i, now);
+            if self.agents[i].phase == Phase::Done {
+                return;
+            }
+        }
+        if ev.writable {
+            self.pump_ctrl(i, now);
+        }
+    }
+
+    fn ctrl_read(&mut self, i: usize, now: f64) {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            if self.agents[i].phase == Phase::Done || !self.agents[i].ctrl_open {
+                return;
+            }
+            let tok = self.agents[i].ctrl_tok;
+            match self.src.read(tok, &mut chunk) {
+                Ok(0) => {
+                    self.ctrl_dead(i);
+                    return;
+                }
+                Ok(n) => {
+                    self.agents[i].ctrl_in.push(&chunk[..n]);
+                    loop {
+                        match self.agents[i].ctrl_in.pop() {
+                            Ok(Some(payload)) => {
+                                match wire::decode_ctrl(&payload) {
+                                    Ok(CtrlMsg::Start(d)) => {
+                                        self.on_start(i, d, now)
+                                    }
+                                    Ok(CtrlMsg::Stop) => self.on_stop(i, now),
+                                    Err(_) => {
+                                        // corrupt session: same as death
+                                        self.ctrl_dead(i);
+                                        return;
+                                    }
+                                }
+                            }
+                            Ok(None) => break,
+                            Err(_) => {
+                                self.ctrl_dead(i);
+                                return;
+                            }
+                        }
+                        if self.agents[i].phase == Phase::Done {
+                            return;
+                        }
+                    }
+                }
+                Err(e) if would_block(&e) => return,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    self.ctrl_dead(i);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// The controller session died under the agent (per §3 it must stop
+    /// loading the service immediately).  During [`Phase::Draining`]
+    /// the agent was closing anyway, so it is not counted as a drop —
+    /// but `finished` stays false unless the Goodbye fully drained.
+    fn ctrl_dead(&mut self, i: usize) {
+        if self.agents[i].phase == Phase::Done {
+            return;
+        }
+        if self.agents[i].phase != Phase::Draining {
+            self.agents[i].t.session_lost();
+            self.agents[i].rep.session_dropped = true;
+        }
+        self.close_agent(i);
+    }
+
+    fn close_agent(&mut self, i: usize) {
+        if self.agents[i].ctrl_open {
+            let tok = self.agents[i].ctrl_tok;
+            self.src.close(tok);
+            self.owners.remove(&tok);
+            self.agents[i].ctrl_open = false;
+        }
+        self.close_target(i);
+        self.agents[i].sync_pending = false;
+        if self.agents[i].phase != Phase::Done {
+            self.agents[i].phase = Phase::Done;
+            self.done += 1;
+        }
+    }
+
+    fn pump_ctrl(&mut self, i: usize, now: f64) {
+        let mut died = false;
+        loop {
+            let a = &mut self.agents[i];
+            if !a.ctrl_open || !a.ctrl_connected || a.ctrl_out.is_empty() {
+                break;
+            }
+            match self.src.write(a.ctrl_tok, &a.ctrl_out) {
+                Ok(0) => {
+                    died = true;
+                    break;
+                }
+                Ok(n) => {
+                    a.ctrl_out.drain(..n);
+                }
+                Err(e) if would_block(&e) => break,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    died = true;
+                    break;
+                }
+            }
+        }
+        if died {
+            self.ctrl_dead(i);
+            return;
+        }
+        let a = &mut self.agents[i];
+        if !a.ctrl_open {
+            return;
+        }
+        let want = !a.ctrl_out.is_empty() || !a.ctrl_connected;
+        if want != a.ctrl_want_write {
+            a.ctrl_want_write = want;
+            self.src.set_interest(a.ctrl_tok, true, want);
+        }
+        let unpaused = a.paused && a.ctrl_out.len() <= LOW_WATER;
+        if unpaused {
+            a.paused = false;
+        }
+        if a.phase == Phase::Draining && a.ctrl_connected && a.ctrl_out.is_empty() {
+            self.agents[i].rep.finished = self.agents[i].goodbye == Some(GoodbyeReason::Finished);
+            self.close_agent(i);
+            return;
+        }
+        if unpaused {
+            self.arm_launch(i, now);
+        }
+    }
+
+    fn queue_up(&mut self, i: usize, msg: &WireUp) {
+        let a = &mut self.agents[i];
+        queue_frame(&mut a.ctrl_out, msg);
+        if a.ctrl_out.len() > HIGH_WATER {
+            a.paused = true;
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // test lifecycle
+    // ---------------------------------------------------------------
+
+    fn on_start(&mut self, i: usize, desc: TestDescription, now: f64) {
+        if self.agents[i].phase != Phase::AwaitStart {
+            return; // duplicate Start: ignore
+        }
+        let local = self.agents[i].local(now);
+        self.agents[i].t.start(local, desc);
+        let end = self.agents[i].mono_of(local + desc.duration_s);
+        self.sched(end, Tev::Duration(i));
+        self.agents[i].phase = Phase::Probing;
+        self.agents[i].probe_started = now;
+        match self.open_target(i) {
+            Ok(()) => self.sched(now + PROBE_TIMEOUT_S, Tev::ProbeDeadline(i)),
+            // an unconnectable target degrades to a zero latency
+            // estimate, exactly like the thread agent's failed probe
+            Err(_) => self.finish_probe(i, now, 0.0),
+        }
+    }
+
+    fn finish_probe(&mut self, i: usize, now: f64, rtt: f64) {
+        if self.agents[i].phase != Phase::Probing {
+            return;
+        }
+        self.agents[i].t.latency_estimate_s = rtt / 2.0;
+        self.agents[i].phase = Phase::Running;
+        // the thread agent's first loop iteration syncs immediately;
+        // launches stay gated until that first sync lands (§3.1.2)
+        self.on_sync_timer(i, now);
+    }
+
+    fn on_stop(&mut self, i: usize, now: f64) {
+        match self.agents[i].phase {
+            Phase::Connecting | Phase::AwaitStart => {
+                // Stop before Start: a clean no-run exit
+                self.close_agent(i);
+            }
+            Phase::Probing | Phase::Running => {
+                self.agents[i].t.session_lost();
+                self.close_target(i);
+                if !self.flush(i, now) {
+                    return;
+                }
+                // no Goodbye after a Stop (thread parity)
+                self.agents[i].goodbye = None;
+                self.agents[i].phase = Phase::Draining;
+                self.pump_ctrl(i, now);
+            }
+            Phase::Draining | Phase::Done => {}
+        }
+    }
+
+    fn finish(&mut self, i: usize, reason: GoodbyeReason, now: f64) {
+        if !matches!(self.agents[i].phase, Phase::Probing | Phase::Running) {
+            return;
+        }
+        self.close_target(i);
+        self.agents[i].t.stop();
+        if !self.flush(i, now) {
+            return;
+        }
+        self.agents[i].goodbye = Some(reason);
+        self.queue_up(i, &WireUp::Goodbye(reason));
+        self.agents[i].phase = Phase::Draining;
+        self.pump_ctrl(i, now);
+    }
+
+    // ---------------------------------------------------------------
+    // samples and launches
+    // ---------------------------------------------------------------
+
+    /// Queue the buffered samples as one batch frame.  Returns false
+    /// when the agent died flushing.
+    fn flush(&mut self, i: usize, now: f64) -> bool {
+        if self.agents[i].buf.is_empty() {
+            return self.agents[i].phase != Phase::Done;
+        }
+        let batch = std::mem::take(&mut self.agents[i].buf);
+        self.agents[i].rep.samples_sent += batch.len() as u64;
+        self.queue_up(i, &WireUp::Samples(batch));
+        self.pump_ctrl(i, now);
+        self.agents[i].phase != Phase::Done
+    }
+
+    /// Arm the launch timer if a client may be launched.  Launches are
+    /// never issued synchronously: the timer fires on a later tick,
+    /// which bounds re-entrancy (an instantly-failing target cannot
+    /// spin the expiry loop).
+    fn arm_launch(&mut self, i: usize, now: f64) {
+        let a = &self.agents[i];
+        if a.phase != Phase::Running || a.paused || a.launch_armed {
+            return;
+        }
+        if a.t.clock.is_empty() {
+            return; // never launch before the first sync (§3.1.2)
+        }
+        let local = a.local(now);
+        if !a.t.can_launch(local) {
+            return;
+        }
+        let at = a.mono_of(a.t.next_launch_local(local));
+        self.agents[i].launch_armed = true;
+        self.sched(at, Tev::Launch(i));
+    }
+
+    fn fire_launch(&mut self, i: usize, now: f64) {
+        let a = &self.agents[i];
+        if a.phase != Phase::Running || a.paused {
+            return;
+        }
+        if a.t.clock.is_empty() {
+            return;
+        }
+        let local = a.local(now);
+        if !a.t.can_launch(local) {
+            return;
+        }
+        let next = a.t.next_launch_local(local);
+        if next > local + 1e-4 {
+            // not due yet (e.g. re-armed after an unpause): re-arm
+            self.arm_launch(i, now);
+            return;
+        }
+        let req = RequestId(self.agents[i].t.seq);
+        let inv = self.agents[i].t.launch(local, req);
+        self.agents[i].rep.calls += 1;
+        let timeout = self.agents[i].t.desc.timeout_s.clamp(0.001, 3600.0);
+        self.sched(now + timeout, Tev::CallTimeout(i, inv.timeout_token));
+        self.issue_call(i, now);
+    }
+
+    fn on_call_timeout(&mut self, i: usize, token: u64, now: f64) {
+        let local = self.agents[i].local(now);
+        if let Some(s) = self.agents[i].t.record_timeout(local, token) {
+            // the framed connection may still deliver the stale
+            // response byte later; drop it so the next call is clean
+            self.close_target(i);
+            self.push_sample(i, s, now);
+        }
+    }
+
+    fn complete_call(&mut self, i: usize, now: f64, outcome: SampleOutcome) {
+        let local = self.agents[i].local(now);
+        let Some(inv) = self.agents[i].t.outstanding else {
+            return; // already timed out
+        };
+        let Some(s) = self.agents[i].t.record_result(local, inv.req, outcome, 0.0) else {
+            return;
+        };
+        self.push_sample(i, s, now);
+    }
+
+    fn push_sample(&mut self, i: usize, s: CallSample, now: f64) {
+        self.agents[i].buf.push(s);
+        if self.agents[i].buf.len() >= BATCH && !self.flush(i, now) {
+            return;
+        }
+        let k = self.agents[i].t.desc.give_up_failures;
+        if self.agents[i].t.should_give_up(k) {
+            self.finish(i, GoodbyeReason::TooManyFailures, now);
+            return;
+        }
+        self.arm_launch(i, now);
+    }
+
+    // ---------------------------------------------------------------
+    // target connection
+    // ---------------------------------------------------------------
+
+    fn open_target(&mut self, i: usize) -> io::Result<()> {
+        let tok = self.alloc_token();
+        self.src.connect(Endpoint::Target, tok)?;
+        self.owners.insert(tok, Owner::Target(i));
+        self.agents[i].tgt_tok = Some(tok);
+        self.agents[i].tgt_connected = false;
+        Ok(())
+    }
+
+    fn close_target(&mut self, i: usize) {
+        if let Some(tok) = self.agents[i].tgt_tok.take() {
+            self.src.close(tok);
+            self.owners.remove(&tok);
+        }
+        self.agents[i].tgt_connected = false;
+        self.agents[i].await_reply = false;
+        self.agents[i].tgt_out.clear();
+    }
+
+    fn issue_call(&mut self, i: usize, now: f64) {
+        match self.mode {
+            TargetMode::Framed => {
+                if self.agents[i].tgt_tok.is_none() && self.open_target(i).is_err() {
+                    self.complete_call(i, now, SampleOutcome::ServiceError);
+                    return;
+                }
+                self.agents[i].tgt_out.push(1u8);
+                self.pump_target(i, now);
+            }
+            TargetMode::Probe => {
+                // each probe call is a fresh connect; a leftover
+                // (hung) connection cannot answer it
+                self.close_target(i);
+                match self.open_target(i) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == io::ErrorKind::AddrNotAvailable => {
+                        // the address never resolved: a local failure
+                        self.complete_call(i, now, SampleOutcome::StartFailure);
+                    }
+                    Err(_) => {
+                        self.complete_call(i, now, SampleOutcome::ServiceError);
+                    }
+                }
+            }
+        }
+    }
+
+    fn target_event(&mut self, i: usize, ev: Event, now: f64) {
+        if self.agents[i].phase == Phase::Done || self.agents[i].tgt_tok.is_none() {
+            return;
+        }
+        if !self.agents[i].tgt_connected {
+            if !(ev.writable || ev.hangup) {
+                return;
+            }
+            let tok = self.agents[i].tgt_tok.expect("checked above");
+            if self.src.connect_error(tok).is_some() || !ev.writable {
+                self.target_connect_failed(i, now);
+                return;
+            }
+            self.agents[i].tgt_connected = true;
+            if self.agents[i].phase == Phase::Probing {
+                let rtt = now - self.agents[i].probe_started;
+                if self.mode == TargetMode::Probe {
+                    self.close_target(i);
+                }
+                self.finish_probe(i, now, rtt);
+                return;
+            }
+            if self.mode == TargetMode::Probe {
+                // connect probe: an accepted connection is a success
+                self.close_target(i);
+                self.complete_call(i, now, SampleOutcome::Success);
+                return;
+            }
+            self.pump_target(i, now);
+            if self.agents[i].phase == Phase::Done || self.agents[i].tgt_tok.is_none() {
+                return;
+            }
+        }
+        if ev.readable || ev.hangup {
+            self.target_read(i, now);
+        }
+        if self.agents[i].phase == Phase::Done {
+            return;
+        }
+        if ev.writable && self.agents[i].tgt_tok.is_some() {
+            self.pump_target(i, now);
+        }
+    }
+
+    fn target_connect_failed(&mut self, i: usize, now: f64) {
+        self.close_target(i);
+        match self.agents[i].phase {
+            Phase::Probing => self.finish_probe(i, now, 0.0),
+            Phase::Running => {
+                if self.agents[i].t.outstanding.is_some() {
+                    self.complete_call(i, now, SampleOutcome::ServiceError);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn pump_target(&mut self, i: usize, now: f64) {
+        let mut failed = false;
+        loop {
+            let a = &mut self.agents[i];
+            let Some(tok) = a.tgt_tok else { return };
+            if !a.tgt_connected || a.tgt_out.is_empty() {
+                break;
+            }
+            match self.src.write(tok, &a.tgt_out) {
+                Ok(0) => {
+                    failed = true;
+                    break;
+                }
+                Ok(n) => {
+                    a.tgt_out.drain(..n);
+                }
+                Err(e) if would_block(&e) => break,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            self.close_target(i);
+            self.complete_call(i, now, SampleOutcome::ServiceError);
+            return;
+        }
+        let a = &mut self.agents[i];
+        let Some(tok) = a.tgt_tok else { return };
+        if a.tgt_out.is_empty() && a.tgt_connected && a.t.outstanding.is_some() {
+            a.await_reply = true;
+        }
+        let want_w = !a.tgt_out.is_empty() || !a.tgt_connected;
+        self.src.set_interest(tok, true, want_w);
+    }
+
+    fn target_read(&mut self, i: usize, now: f64) {
+        if self.mode != TargetMode::Framed {
+            return;
+        }
+        let mut byte = [0u8; 1];
+        loop {
+            let a = &self.agents[i];
+            let Some(tok) = a.tgt_tok else { return };
+            if !a.tgt_connected {
+                return;
+            }
+            let inflight = a.await_reply;
+            match self.src.read(tok, &mut byte) {
+                Ok(0) => {
+                    // target closed: fail the in-flight call, or just
+                    // drop an idle connection (reconnect lazily)
+                    self.close_target(i);
+                    if inflight {
+                        self.complete_call(i, now, SampleOutcome::ServiceError);
+                    }
+                    return;
+                }
+                Ok(_) => {
+                    if !inflight {
+                        // unsolicited byte: resynchronize by dropping
+                        self.close_target(i);
+                        return;
+                    }
+                    self.agents[i].await_reply = false;
+                    let outcome = match byte[0] {
+                        OUT_OK => SampleOutcome::Success,
+                        OUT_DENIED => SampleOutcome::Denied,
+                        _ => SampleOutcome::ServiceError,
+                    };
+                    self.complete_call(i, now, outcome);
+                    return; // at most one reply is owed
+                }
+                Err(e) if would_block(&e) => return,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    self.close_target(i);
+                    if inflight {
+                        self.complete_call(i, now, SampleOutcome::ServiceError);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // clock sync
+    // ---------------------------------------------------------------
+
+    fn on_sync_timer(&mut self, i: usize, now: f64) {
+        if !matches!(self.agents[i].phase, Phase::Probing | Phase::Running) {
+            return; // the chain dies with the test
+        }
+        let local = self.agents[i].local(now);
+        let interval = self.agents[i].t.desc.sync_interval_s;
+        let next = self.agents[i].mono_of(local + interval);
+        self.sched(next, Tev::Sync(i));
+        // every buffered sample must precede the sync point that will
+        // release it at the controller (thread parity)
+        if !self.flush(i, now) {
+            return;
+        }
+        self.request_sync(i, now);
+    }
+
+    fn request_sync(&mut self, i: usize, now: f64) {
+        if self.agents[i].sync_pending {
+            return; // the previous request is still queued/in flight
+        }
+        if !self.ts.open {
+            // skip this round but keep the session visibly alive, and
+            // retry the connection for the next interval (thread
+            // parity: Heartbeat + reconnect)
+            self.queue_up(i, &WireUp::Heartbeat);
+            self.pump_ctrl(i, now);
+            self.ts_connect();
+            return;
+        }
+        self.agents[i].sync_pending = true;
+        self.ts.queue.push_back(i);
+        self.ts_service(now);
+    }
+
+    fn ts_connect(&mut self) {
+        let tok = self.alloc_token();
+        match self.src.connect(Endpoint::TimeServer, tok) {
+            Ok(()) => {
+                self.ts.tok = tok;
+                self.ts.open = true;
+                self.ts.connected = false;
+                self.ts.want_write = true;
+                self.ts.out.clear();
+                self.ts.got = 0;
+                self.owners.insert(tok, Owner::Ts);
+            }
+            Err(_) => {
+                self.ts.open = false;
+            }
+        }
+    }
+
+    /// Start the next queued sync exchange if the link is idle.
+    fn ts_service(&mut self, now: f64) {
+        if !self.ts.open || !self.ts.connected || self.ts.inflight.is_some() {
+            return;
+        }
+        let i = loop {
+            let Some(i) = self.ts.queue.pop_front() else {
+                return;
+            };
+            let active = matches!(self.agents[i].phase, Phase::Probing | Phase::Running);
+            if active && self.agents[i].sync_pending {
+                break i;
+            }
+            self.agents[i].sync_pending = false;
+        };
+        let l1 = self.agents[i].local(now);
+        self.ts.inflight = Some((i, l1));
+        self.ts.out.push(1u8);
+        self.pump_ts();
+    }
+
+    fn ts_event(&mut self, ev: Event, now: f64) {
+        if !self.ts.open {
+            return;
+        }
+        if !self.ts.connected {
+            if !(ev.writable || ev.hangup) {
+                return;
+            }
+            if self.src.connect_error(self.ts.tok).is_some() || !ev.writable {
+                self.ts_dead();
+                return;
+            }
+            self.ts.connected = true;
+            self.ts_service(now);
+            if !self.ts.open {
+                return;
+            }
+        }
+        if ev.readable || ev.hangup {
+            self.ts_read(now);
+            if !self.ts.open {
+                return;
+            }
+        }
+        if ev.writable {
+            self.pump_ts();
+        }
+    }
+
+    fn pump_ts(&mut self) {
+        let mut dead = false;
+        while self.ts.open && self.ts.connected && !self.ts.out.is_empty() {
+            match self.src.write(self.ts.tok, &self.ts.out) {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.ts.out.drain(..n);
+                }
+                Err(e) if would_block(&e) => break,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if dead {
+            self.ts_dead();
+            return;
+        }
+        if !self.ts.open {
+            return;
+        }
+        let want = !self.ts.out.is_empty() || !self.ts.connected;
+        if want != self.ts.want_write {
+            self.ts.want_write = want;
+            self.src.set_interest(self.ts.tok, true, want);
+        }
+    }
+
+    fn ts_read(&mut self, now: f64) {
+        loop {
+            if !self.ts.open {
+                return;
+            }
+            let got = self.ts.got;
+            let mut tmp = [0u8; 8];
+            match self.src.read(self.ts.tok, &mut tmp[..8 - got]) {
+                Ok(0) => {
+                    self.ts_dead();
+                    return;
+                }
+                Ok(n) => {
+                    self.ts.stamp[got..got + n].copy_from_slice(&tmp[..n]);
+                    self.ts.got += n;
+                    if self.ts.got == 8 {
+                        self.ts.got = 0;
+                        self.complete_sync(now);
+                    }
+                }
+                Err(e) if would_block(&e) => return,
+                Err(e) if interrupted(&e) => {}
+                Err(_) => {
+                    self.ts_dead();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn complete_sync(&mut self, now: f64) {
+        let Some((i, l1)) = self.ts.inflight.take() else {
+            return; // unsolicited stamp: ignore
+        };
+        let server = f64::from_bits(u64::from_be_bytes(self.ts.stamp));
+        let active = matches!(self.agents[i].phase, Phase::Probing | Phase::Running);
+        if active {
+            let l2 = self.agents[i].local(now);
+            let p = SyncPoint { l1, server, l2 };
+            self.agents[i].t.record_sync(p);
+            self.agents[i].rep.syncs += 1;
+            self.agents[i].sync_pending = false;
+            self.queue_up(i, &WireUp::Sync(p));
+            self.pump_ctrl(i, now);
+            if self.agents[i].phase != Phase::Done {
+                // the first sync unblocks launching
+                self.arm_launch(i, now);
+            }
+        }
+        self.ts_service(now);
+    }
+
+    /// The time-server link died: the in-flight and queued agents miss
+    /// this sync round (they retry at their next interval), and one
+    /// immediate reconnect is attempted.
+    fn ts_dead(&mut self) {
+        if self.ts.open {
+            self.src.close(self.ts.tok);
+            self.owners.remove(&self.ts.tok);
+            self.ts.open = false;
+            self.ts.connected = false;
+            self.ts.out.clear();
+            self.ts.got = 0;
+        }
+        if let Some((i, _)) = self.ts.inflight.take() {
+            self.agents[i].sync_pending = false;
+        }
+        while let Some(i) = self.ts.queue.pop_front() {
+            self.agents[i].sync_pending = false;
+        }
+        self.ts_connect();
+    }
+}
+
+// -------------------------------------------------------------------
+// real sockets
+// -------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sock {
+    use std::io::{self, Read, Write};
+    use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+    use std::os::fd::AsRawFd;
+    use std::time::Duration;
+
+    use super::{Endpoint, Event, EventSource, Token};
+    use crate::live::agent::CallMode;
+    use crate::runtime::poll::{self, PollEvent, Poller};
+    use crate::util::FxHashMap;
+
+    /// [`EventSource`] over real nonblocking TCP and the vendored
+    /// epoll binding ([`crate::runtime::poll`]).
+    pub struct SocketSource {
+        poller: Poller,
+        ctrl: SocketAddr,
+        ts: SocketAddr,
+        target: Option<SocketAddr>,
+        conns: FxHashMap<Token, TcpStream>,
+        scratch: Vec<PollEvent>,
+    }
+
+    impl SocketSource {
+        /// Build a source for real sockets.  The target address is
+        /// resolved once; a connect-probe name that does not resolve
+        /// makes every `Target` connect fail with `AddrNotAvailable`,
+        /// which the state machine reports as a start failure exactly
+        /// like the thread agent.
+        pub fn new(ctrl: SocketAddr, ts: SocketAddr, call: &CallMode) -> io::Result<Self> {
+            let target = match call {
+                CallMode::Framed(a) => Some(*a),
+                CallMode::ConnectProbe(s) => {
+                    s.to_socket_addrs().ok().and_then(|mut it| it.next())
+                }
+            };
+            Ok(SocketSource {
+                poller: Poller::new()?,
+                ctrl,
+                ts,
+                target,
+                conns: FxHashMap::default(),
+                scratch: Vec::new(),
+            })
+        }
+    }
+
+    impl EventSource for SocketSource {
+        fn connect(&mut self, ep: Endpoint, token: Token) -> io::Result<()> {
+            let addr = match ep {
+                Endpoint::Ctrl => self.ctrl,
+                Endpoint::TimeServer => self.ts,
+                Endpoint::Target => self.target.ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::AddrNotAvailable,
+                        "target address did not resolve",
+                    )
+                })?,
+            };
+            let s = poll::connect_nonblocking(&addr)?;
+            let _ = s.set_nodelay(true);
+            self.poller.register(s.as_raw_fd(), token, true, true)?;
+            self.conns.insert(token, s);
+            Ok(())
+        }
+
+        fn connect_error(&mut self, token: Token) -> Option<io::Error> {
+            let s = self.conns.get(&token)?;
+            s.take_error().ok().flatten()
+        }
+
+        fn read(&mut self, token: Token, buf: &mut [u8]) -> io::Result<usize> {
+            match self.conns.get_mut(&token) {
+                Some(s) => s.read(buf),
+                None => Err(io::Error::from(io::ErrorKind::NotConnected)),
+            }
+        }
+
+        fn write(&mut self, token: Token, buf: &[u8]) -> io::Result<usize> {
+            match self.conns.get_mut(&token) {
+                Some(s) => s.write(buf),
+                None => Err(io::Error::from(io::ErrorKind::NotConnected)),
+            }
+        }
+
+        fn set_interest(&mut self, token: Token, read: bool, write: bool) {
+            if let Some(s) = self.conns.get(&token) {
+                let _ = self.poller.modify(s.as_raw_fd(), token, read, write);
+            }
+        }
+
+        fn close(&mut self, token: Token) {
+            if let Some(s) = self.conns.remove(&token) {
+                let _ = self.poller.deregister(s.as_raw_fd());
+            }
+        }
+
+        fn wait(&mut self, timeout_s: Option<f64>, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            self.scratch.clear();
+            let timeout = timeout_s.map(|s| Duration::from_secs_f64(s.max(0.0)));
+            self.poller.wait(timeout, &mut self.scratch)?;
+            out.extend(self.scratch.iter().map(|e| Event {
+                token: e.token,
+                readable: e.readable,
+                writable: e.writable,
+                hangup: e.hangup,
+            }));
+            Ok(())
+        }
+    }
+}
+
+#[cfg(unix)]
+pub use sock::SocketSource;
+
+/// Join handle of one reactor worker thread: per-agent reports tagged
+/// with their roster ids.
+#[cfg(unix)]
+pub type WorkerHandle = std::thread::JoinHandle<Vec<(u32, AgentReport)>>;
+
+/// Spawn `workers` reactor threads covering `specs` in contiguous
+/// slices and return their join handles.  Callers join *after* the
+/// controller finishes — the controller closing its sessions is what
+/// unblocks any worker still waiting on I/O.
+#[cfg(unix)]
+pub fn run_pool(
+    workers: usize,
+    specs: Vec<AgentSpec>,
+    ctrl: SocketAddr,
+    ts: SocketAddr,
+    call: CallMode,
+) -> Vec<WorkerHandle> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let chunk = n.div_ceil(workers);
+    specs
+        .chunks(chunk)
+        .map(|slice| {
+            let slice = slice.to_vec();
+            let call = call.clone();
+            std::thread::spawn(move || run_worker(slice, ctrl, ts, call))
+        })
+        .collect()
+}
+
+#[cfg(unix)]
+fn run_worker(
+    specs: Vec<AgentSpec>,
+    ctrl: SocketAddr,
+    ts: SocketAddr,
+    call: CallMode,
+) -> Vec<(u32, AgentReport)> {
+    let mode = match call {
+        CallMode::Framed(_) => TargetMode::Framed,
+        CallMode::ConnectProbe(_) => TargetMode::Probe,
+    };
+    let src = match sock::SocketSource::new(ctrl, ts, &call) {
+        Ok(s) => s,
+        Err(_) => {
+            // no poller: every agent on this worker just goes silent,
+            // like a dead PlanetLab node
+            let dead = AgentReport {
+                session_dropped: true,
+                ..AgentReport::default()
+            };
+            return specs.iter().map(|s| (s.id, dead)).collect();
+        }
+    };
+    let mut w = Worker::new(src, WallClock::new(), &specs, mode);
+    let _ = w.run(); // a wait failure already marked agents dropped
+    specs
+        .iter()
+        .zip(w.reports())
+        .map(|(s, rep)| (s.id, rep))
+        .collect()
+}
+
+// -------------------------------------------------------------------
+// deterministic doubles
+// -------------------------------------------------------------------
+
+/// Deterministic in-memory doubles for the [`EventSource`]/[`Clock`]
+/// seam: a manually-advanced clock and a scriptable socket fabric.
+///
+/// Tests build a [`Worker`] over clones of a [`MockClock`]/[`MockNet`]
+/// pair, deliver bytes / advance time / tick the worker by hand, and
+/// assert on the captured outbound frames — no real sockets, no
+/// sleeps, bit-stable across runs.  The knobs cover the ugly corners a
+/// readiness loop must survive: 1-byte dribble reads and writes,
+/// spurious-wakeup EAGAIN storms, failed connects, and peers that die
+/// mid-frame.
+pub mod testing {
+    use std::cell::{Cell, RefCell};
+    use std::collections::VecDeque;
+    use std::io;
+    use std::rc::Rc;
+
+    use super::{Clock, Endpoint, Event, EventSource, Token};
+
+    /// A manually advanced [`Clock`]; clones observe the same time.
+    #[derive(Clone, Debug, Default)]
+    pub struct MockClock(Rc<Cell<f64>>);
+
+    impl MockClock {
+        /// A clock reading 0 s.
+        pub fn new() -> MockClock {
+            MockClock::default()
+        }
+
+        /// Advance the shared reading by `dt` seconds.
+        pub fn advance(&self, dt: f64) {
+            self.0.set(self.0.get() + dt);
+        }
+
+        /// The current shared reading.
+        pub fn now(&self) -> f64 {
+            self.0.get()
+        }
+    }
+
+    impl Clock for MockClock {
+        fn mono_s(&self) -> f64 {
+            self.0.get()
+        }
+    }
+
+    struct MockConn {
+        token: Token,
+        ep: Endpoint,
+        open: bool,
+        connect_pending: bool,
+        connect_err: Option<io::ErrorKind>,
+        read_int: bool,
+        write_int: bool,
+        inbound: VecDeque<u8>,
+        outbound: Vec<u8>,
+        peer_closed: bool,
+        max_read: usize,
+        max_write: usize,
+        eagain_reads: u32,
+        eagain_writes: u32,
+    }
+
+    #[derive(Default)]
+    struct NetState {
+        conns: Vec<MockConn>,
+        refuse: Vec<(Endpoint, io::ErrorKind)>,
+    }
+
+    impl NetState {
+        fn conn(&mut self, tok: Token) -> &mut MockConn {
+            self.conns
+                .iter_mut()
+                .find(|c| c.token == tok)
+                .expect("unknown mock token")
+        }
+    }
+
+    /// Scriptable in-memory socket fabric implementing [`EventSource`]
+    /// with level-triggered readiness.  Clones share state: hand one
+    /// clone to the [`super::Worker`] and drive the other from the
+    /// test.
+    #[derive(Clone, Default)]
+    pub struct MockNet {
+        st: Rc<RefCell<NetState>>,
+    }
+
+    impl MockNet {
+        /// An empty fabric.
+        pub fn new() -> MockNet {
+            MockNet::default()
+        }
+
+        /// Tokens of every connection ever opened to `ep`, oldest
+        /// first (closed ones included, so frames can still be
+        /// inspected post-mortem).
+        pub fn tokens(&self, ep: Endpoint) -> Vec<Token> {
+            self.st
+                .borrow()
+                .conns
+                .iter()
+                .filter(|c| c.ep == ep)
+                .map(|c| c.token)
+                .collect()
+        }
+
+        /// Queue bytes for the worker to read from `tok`.
+        pub fn deliver(&self, tok: Token, bytes: &[u8]) {
+            self.st.borrow_mut().conn(tok).inbound.extend(bytes);
+        }
+
+        /// Take everything the worker has written to `tok` so far.
+        pub fn take_outbound(&self, tok: Token) -> Vec<u8> {
+            std::mem::take(&mut self.st.borrow_mut().conn(tok).outbound)
+        }
+
+        /// Close the peer end: reads drain the queued bytes then
+        /// return EOF; writes fail with `BrokenPipe`.
+        pub fn close_peer(&self, tok: Token) {
+            self.st.borrow_mut().conn(tok).peer_closed = true;
+        }
+
+        /// Is the worker's end of `tok` still open?
+        pub fn is_open(&self, tok: Token) -> bool {
+            self.st.borrow_mut().conn(tok).open
+        }
+
+        /// Fail the pending nonblocking connect on `tok`: the next
+        /// wait reports a hangup and `connect_error` yields `kind`.
+        pub fn fail_connect(&self, tok: Token, kind: io::ErrorKind) {
+            self.st.borrow_mut().conn(tok).connect_err = Some(kind);
+        }
+
+        /// Make the next `connect()` to `ep` fail synchronously.
+        pub fn refuse_next_connect(&self, ep: Endpoint, kind: io::ErrorKind) {
+            self.st.borrow_mut().refuse.push((ep, kind));
+        }
+
+        /// Cap each read at `n` bytes (1 = byte-by-byte dribble).
+        pub fn set_max_read(&self, tok: Token, n: usize) {
+            self.st.borrow_mut().conn(tok).max_read = n.max(1);
+        }
+
+        /// Cap each write at `n` bytes (1 = byte-by-byte dribble).
+        pub fn set_max_write(&self, tok: Token, n: usize) {
+            self.st.borrow_mut().conn(tok).max_write = n.max(1);
+        }
+
+        /// The next `n` reads return `WouldBlock` even though `wait`
+        /// reported readable — a spurious-wakeup / EAGAIN storm.
+        pub fn storm_reads(&self, tok: Token, n: u32) {
+            self.st.borrow_mut().conn(tok).eagain_reads = n;
+        }
+
+        /// The next `n` writes return `WouldBlock`.
+        pub fn storm_writes(&self, tok: Token, n: u32) {
+            self.st.borrow_mut().conn(tok).eagain_writes = n;
+        }
+    }
+
+    impl EventSource for MockNet {
+        fn connect(&mut self, ep: Endpoint, token: Token) -> io::Result<()> {
+            let mut st = self.st.borrow_mut();
+            if let Some(pos) = st.refuse.iter().position(|(e, _)| *e == ep) {
+                let (_, kind) = st.refuse.remove(pos);
+                return Err(io::Error::from(kind));
+            }
+            st.conns.push(MockConn {
+                token,
+                ep,
+                open: true,
+                connect_pending: true,
+                connect_err: None,
+                read_int: true,
+                write_int: true,
+                inbound: VecDeque::new(),
+                outbound: Vec::new(),
+                peer_closed: false,
+                max_read: usize::MAX,
+                max_write: usize::MAX,
+                eagain_reads: 0,
+                eagain_writes: 0,
+            });
+            Ok(())
+        }
+
+        fn connect_error(&mut self, token: Token) -> Option<io::Error> {
+            let mut st = self.st.borrow_mut();
+            let c = st.conn(token);
+            c.connect_pending = false;
+            c.connect_err.take().map(io::Error::from)
+        }
+
+        fn read(&mut self, token: Token, buf: &mut [u8]) -> io::Result<usize> {
+            let mut st = self.st.borrow_mut();
+            let c = st.conn(token);
+            if c.eagain_reads > 0 {
+                c.eagain_reads -= 1;
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            let n = buf.len().min(c.max_read).min(c.inbound.len());
+            if n == 0 {
+                return if c.peer_closed {
+                    Ok(0)
+                } else {
+                    Err(io::Error::from(io::ErrorKind::WouldBlock))
+                };
+            }
+            for b in buf.iter_mut().take(n) {
+                *b = c.inbound.pop_front().expect("bounded by inbound len");
+            }
+            Ok(n)
+        }
+
+        fn write(&mut self, token: Token, buf: &[u8]) -> io::Result<usize> {
+            let mut st = self.st.borrow_mut();
+            let c = st.conn(token);
+            if c.eagain_writes > 0 {
+                c.eagain_writes -= 1;
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            if c.peer_closed {
+                return Err(io::Error::from(io::ErrorKind::BrokenPipe));
+            }
+            let n = buf.len().min(c.max_write);
+            c.outbound.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn set_interest(&mut self, token: Token, read: bool, write: bool) {
+            let mut st = self.st.borrow_mut();
+            let c = st.conn(token);
+            c.read_int = read;
+            c.write_int = write;
+        }
+
+        fn close(&mut self, token: Token) {
+            self.st.borrow_mut().conn(token).open = false;
+        }
+
+        fn wait(&mut self, _timeout_s: Option<f64>, out: &mut Vec<Event>) -> io::Result<()> {
+            out.clear();
+            let st = self.st.borrow();
+            for c in &st.conns {
+                if !c.open {
+                    continue;
+                }
+                let readable = c.read_int
+                    && (!c.inbound.is_empty() || c.peer_closed || c.eagain_reads > 0);
+                let failed = c.connect_err.is_some();
+                let writable = c.write_int && !failed;
+                let hangup = failed || (c.peer_closed && c.inbound.is_empty());
+                if readable || writable || hangup {
+                    out.push(Event {
+                        token: c.token,
+                        readable,
+                        writable,
+                        hangup,
+                    });
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::{MockClock, MockNet};
+    use super::*;
+
+    fn spec(id: u32) -> AgentSpec {
+        AgentSpec {
+            id,
+            skew_s: 0.0,
+            drift: 0.0,
+        }
+    }
+
+    fn decode_frames(bytes: &[u8]) -> Vec<WireUp> {
+        let mut fb = FrameBuf::new();
+        fb.push(bytes);
+        let mut out = Vec::new();
+        while let Some(p) = fb.pop().expect("well-formed frames") {
+            out.push(wire::decode_up(&p).expect("decodable frame"));
+        }
+        assert_eq!(fb.pending(), 0, "trailing partial frame");
+        out
+    }
+
+    #[test]
+    fn skewed_local_time_round_trips() {
+        let a = Agent::new(
+            &AgentSpec {
+                id: 0,
+                skew_s: 250.0,
+                drift: 40e-6,
+            },
+            1,
+        );
+        for mono in [0.0, 0.5, 17.25, 4000.0] {
+            let local = a.local(mono);
+            assert!((a.mono_of(local) - mono).abs() < 1e-9);
+        }
+        assert!((a.local(10.0) - (10.0 * 1.00004 + 250.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handshake_sends_hello_then_deploy_done() {
+        let net = MockNet::new();
+        let clock = MockClock::new();
+        let mut w = Worker::new(net.clone(), clock.clone(), &[spec(7)], TargetMode::Framed);
+        w.tick(None).unwrap();
+        let ctrl = net.tokens(Endpoint::Ctrl)[0];
+        let frames = decode_frames(&net.take_outbound(ctrl));
+        assert_eq!(frames.len(), 2);
+        assert!(matches!(frames[0], WireUp::Hello { agent: 7 }));
+        assert!(matches!(frames[1], WireUp::DeployDone));
+        assert!(!w.all_done());
+    }
+
+    #[test]
+    fn refused_controller_connect_is_a_drop() {
+        let net = MockNet::new();
+        net.refuse_next_connect(Endpoint::Ctrl, std::io::ErrorKind::ConnectionRefused);
+        let clock = MockClock::new();
+        let w = Worker::new(net.clone(), clock.clone(), &[spec(0)], TargetMode::Framed);
+        assert!(w.all_done());
+        let rep = w.reports()[0];
+        assert!(rep.session_dropped);
+        assert_eq!(rep.calls, 0);
+    }
+
+    #[test]
+    fn mock_net_dribbles_storms_and_eofs() {
+        let mut net = MockNet::new();
+        net.connect(Endpoint::Target, 9).unwrap();
+        net.deliver(9, b"abc");
+        net.set_max_read(9, 1);
+        net.storm_reads(9, 2);
+        let mut buf = [0u8; 8];
+        assert!(net.read(9, &mut buf).is_err()); // storm
+        assert!(net.read(9, &mut buf).is_err()); // storm
+        assert_eq!(net.read(9, &mut buf).unwrap(), 1); // dribble
+        assert_eq!(buf[0], b'a');
+        net.close_peer(9);
+        assert_eq!(net.read(9, &mut buf).unwrap(), 1);
+        assert_eq!(net.read(9, &mut buf).unwrap(), 1);
+        assert_eq!(net.read(9, &mut buf).unwrap(), 0); // EOF after drain
+        assert!(net.write(9, b"x").is_err()); // broken pipe
+    }
+}

@@ -303,6 +303,74 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
     w.flush()
 }
 
+/// Incremental frame decoder for nonblocking readers.
+///
+/// [`read_frame`] blocks until a whole frame arrives, which a reactor
+/// worker must never do: readiness-driven reads deliver byte dribbles
+/// that can split a frame (or even its 4-byte length prefix) at any
+/// offset.  `FrameBuf` accumulates those chunks and yields complete
+/// payloads as they materialize:
+///
+/// ```
+/// use diperf::live::wire::{encode_up, write_frame, FrameBuf, WireUp};
+///
+/// let mut framed = Vec::new();
+/// write_frame(&mut framed, &encode_up(&WireUp::Heartbeat)).unwrap();
+/// let mut fb = FrameBuf::new();
+/// for b in &framed[..framed.len() - 1] {
+///     fb.push(std::slice::from_ref(b));
+///     assert!(fb.pop().unwrap().is_none()); // still incomplete
+/// }
+/// fb.push(&framed[framed.len() - 1..]);
+/// assert!(fb.pop().unwrap().is_some());
+/// ```
+///
+/// The same robustness rules as [`read_frame`] apply: a length prefix
+/// over [`MAX_FRAME`] is an error *before* any payload is buffered, so
+/// a corrupt peer cannot balloon the buffer.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// An empty decoder.
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Feed bytes read off the socket.
+    pub fn push(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Pop the next complete frame payload, `Ok(None)` while one is
+    /// still incomplete, or an error on an oversized length prefix
+    /// (the connection should be treated as corrupt and closed).
+    pub fn pop(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let n = u32::from_be_bytes(
+            self.buf[..4].try_into().expect("4 bytes checked"),
+        ) as usize;
+        if n > MAX_FRAME {
+            bail!("oversized frame: {n} bytes (cap {MAX_FRAME})");
+        }
+        if self.buf.len() < 4 + n {
+            return Ok(None);
+        }
+        let payload = self.buf[4..4 + n].to_vec();
+        self.buf.drain(..4 + n);
+        Ok(Some(payload))
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
 /// Read one frame's payload.  Oversized length prefixes are rejected
 /// *before* allocating; a short read surfaces as `UnexpectedEof`.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
@@ -426,56 +494,229 @@ mod tests {
         }
     }
 
-    #[test]
-    fn every_truncation_is_rejected() {
-        let frames = [
-            encode_ctrl(&CtrlMsg::Start(TestDescription::default())),
-            encode_up(&WireUp::Samples(vec![
-                sample(0, SampleOutcome::Success),
-                sample(1, SampleOutcome::Timeout),
-            ])),
-            encode_up(&WireUp::Sync(SyncPoint {
-                l1: 1.0,
-                server: 2.0,
-                l2: 3.0,
-            })),
-            encode_up(&WireUp::Goodbye(GoodbyeReason::Finished)),
+    // ---- seeded random-frame corpus --------------------------------
+    //
+    // These property tests replace the old hand-enumerated truncation/
+    // trailing-byte/unknown-tag cases: every case below is drawn from a
+    // seeded corpus (replayable via the seed `util::proptest` prints on
+    // failure), so the decoders are exercised across the whole message
+    // space instead of four fixed examples.
+
+    use crate::util::proptest::{forall, gen_vec, prop};
+    use crate::util::Pcg64;
+
+    fn gen_sample(rng: &mut Pcg64) -> CallSample {
+        let outcomes = [
+            SampleOutcome::Success,
+            SampleOutcome::Timeout,
+            SampleOutcome::StartFailure,
+            SampleOutcome::Denied,
+            SampleOutcome::ServiceError,
         ];
-        for f in &frames {
-            for cut in 0..f.len() {
-                let part = &f[..cut];
-                assert!(
-                    decode_ctrl(part).is_err() && decode_up(part).is_err(),
-                    "prefix of {cut} bytes decoded"
-                );
-            }
+        CallSample {
+            tester: TesterId(rng.next_u64() as u32),
+            seq: rng.next_u64() as u32,
+            t_submit_local: rng.uniform(-1e7, 1e7),
+            t_done_local: rng.uniform(-1e7, 1e7),
+            rt_s: rng.uniform(0.0, 1e4),
+            outcome: outcomes[rng.next_below(5) as usize],
+        }
+    }
+
+    fn gen_up(rng: &mut Pcg64) -> WireUp {
+        match rng.next_below(6) {
+            0 => WireUp::Hello {
+                agent: rng.next_u64() as u32,
+            },
+            1 => WireUp::DeployDone,
+            2 => WireUp::Samples(gen_vec(rng, 0..40, gen_sample)),
+            3 => WireUp::Sync(SyncPoint {
+                l1: rng.uniform(-1e7, 1e7),
+                server: rng.uniform(-1e7, 1e7),
+                l2: rng.uniform(-1e7, 1e7),
+            }),
+            4 => WireUp::Heartbeat,
+            _ => WireUp::Goodbye(if rng.chance(0.5) {
+                GoodbyeReason::Finished
+            } else {
+                GoodbyeReason::TooManyFailures
+            }),
+        }
+    }
+
+    fn gen_ctrl(rng: &mut Pcg64) -> CtrlMsg {
+        if rng.chance(0.2) {
+            CtrlMsg::Stop
+        } else {
+            CtrlMsg::Start(TestDescription {
+                duration_s: rng.uniform(0.0, 1e5),
+                client_interval_s: rng.uniform(0.0, 100.0),
+                sync_interval_s: rng.uniform(0.0, 1e4),
+                rate_cap_per_s: if rng.chance(0.3) {
+                    f64::INFINITY
+                } else {
+                    rng.uniform(0.0, 1e4)
+                },
+                timeout_s: rng.uniform(0.0, 1e4),
+                give_up_failures: rng.next_u64() as u32,
+            })
         }
     }
 
     #[test]
-    fn trailing_bytes_are_rejected() {
-        let mut f = encode_up(&WireUp::Heartbeat);
-        f.push(0);
-        assert!(decode_up(&f).is_err());
-        let mut f = encode_ctrl(&CtrlMsg::Stop);
-        f.push(0);
-        assert!(decode_ctrl(&f).is_err());
+    fn prop_encode_decode_round_trips() {
+        forall(200, |rng| {
+            // bit-stable codec: re-encoding the decode reproduces the
+            // exact bytes, which covers every field of every variant
+            let up = encode_up(&gen_up(rng));
+            let ctrl = encode_ctrl(&gen_ctrl(rng));
+            prop(
+                encode_up(&decode_up(&up).expect("valid up frame")) == up,
+                "up frame re-encodes identically",
+            )?;
+            prop(
+                encode_ctrl(&decode_ctrl(&ctrl).expect("valid ctrl frame"))
+                    == ctrl,
+                "ctrl frame re-encodes identically",
+            )
+        });
     }
 
     #[test]
-    fn unknown_tags_and_bytes_are_rejected() {
-        assert!(decode_ctrl(&[0x7f]).is_err());
-        assert!(decode_up(&[0x7f]).is_err());
-        // goodbye with a bogus reason byte
-        assert!(decode_up(&[super::TAG_GOODBYE, 9]).is_err());
-        // sample with a bogus outcome byte
-        let mut f = encode_up(&WireUp::Samples(vec![sample(
-            0,
-            SampleOutcome::Success,
-        )]));
-        let last = f.len() - 1;
-        f[last] = 0xee;
-        assert!(decode_up(&f).is_err());
+    fn prop_every_truncation_is_rejected() {
+        forall(120, |rng| {
+            let frames = [encode_up(&gen_up(rng)), encode_ctrl(&gen_ctrl(rng))];
+            for f in &frames {
+                for cut in 0..f.len() {
+                    let part = &f[..cut];
+                    prop(
+                        decode_ctrl(part).is_err() && decode_up(part).is_err(),
+                        &format!("prefix of {cut}/{} bytes decoded", f.len()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_trailing_junk_is_rejected() {
+        forall(120, |rng| {
+            let mut up = encode_up(&gen_up(rng));
+            let mut ctrl = encode_ctrl(&gen_ctrl(rng));
+            let junk = gen_vec(rng, 1..8, |r| r.next_u64() as u8);
+            up.extend_from_slice(&junk);
+            ctrl.extend_from_slice(&junk);
+            prop(decode_up(&up).is_err(), "up frame with trailing bytes")?;
+            prop(
+                decode_ctrl(&ctrl).is_err(),
+                "ctrl frame with trailing bytes",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_unknown_tags_are_rejected() {
+        forall(200, |rng| {
+            let mut f = encode_up(&gen_up(rng));
+            // any first byte outside the assigned tag space must fail
+            let tag = loop {
+                let b = rng.next_u64() as u8;
+                if !(b == super::TAG_START
+                    || b == super::TAG_STOP
+                    || (super::TAG_HELLO..=super::TAG_GOODBYE).contains(&b))
+                {
+                    break b;
+                }
+            };
+            f[0] = tag;
+            prop(
+                decode_up(&f).is_err() && decode_ctrl(&f).is_err(),
+                &format!("tag 0x{tag:02x} decoded"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_decode_never_panics_on_random_bytes() {
+        forall(500, |rng| {
+            // pure fuzz: any byte soup must produce Ok or Err, never a
+            // panic or an unbounded allocation
+            let bytes = gen_vec(rng, 0..96, |r| r.next_u64() as u8);
+            let _ = decode_up(&bytes);
+            let _ = decode_ctrl(&bytes);
+            let mut fb = FrameBuf::new();
+            fb.push(&bytes);
+            while let Ok(Some(_)) = fb.pop() {}
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_corrupted_length_prefixes_are_contained() {
+        forall(200, |rng| {
+            let payload = encode_up(&gen_up(rng));
+            let mut framed = Vec::new();
+            write_frame(&mut framed, &payload).unwrap();
+            // smash the 4-byte length prefix with random bytes
+            let lie = rng.next_u64() as u32;
+            framed[..4].copy_from_slice(&lie.to_be_bytes());
+            let n = lie as usize;
+            let mut cur = io::Cursor::new(&framed);
+            let stream = read_frame(&mut cur);
+            let mut fb = FrameBuf::new();
+            fb.push(&framed);
+            let incremental = fb.pop();
+            if n > MAX_FRAME {
+                prop(
+                    stream.as_ref().is_err_and(|e| {
+                        e.kind() == io::ErrorKind::InvalidData
+                    }),
+                    "read_frame accepted an oversized prefix",
+                )?;
+                prop(
+                    incremental.is_err(),
+                    "FrameBuf accepted an oversized prefix",
+                )?;
+            } else {
+                // a small lie is indistinguishable from framing: both
+                // readers must agree on truncation vs. short frame
+                prop(
+                    stream.is_ok() == incremental.as_ref().is_ok_and(|f| f.is_some()),
+                    "blocking and incremental readers disagree",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_framebuf_dribble_matches_whole_feed() {
+        forall(150, |rng| {
+            // several frames, delivered in random-size chunks (down to
+            // 1-byte dribbles), must pop identically to one big feed
+            let payloads: Vec<Vec<u8>> = (0..1 + rng.next_below(4))
+                .map(|_| encode_up(&gen_up(rng)))
+                .collect();
+            let mut stream = Vec::new();
+            for p in &payloads {
+                write_frame(&mut stream, p).unwrap();
+            }
+            let mut fb = FrameBuf::new();
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            let mut off = 0usize;
+            while off < stream.len() {
+                let chunk = 1 + rng.next_below(7) as usize;
+                let end = (off + chunk).min(stream.len());
+                fb.push(&stream[off..end]);
+                off = end;
+                while let Some(f) = fb.pop().expect("well-formed stream") {
+                    got.push(f);
+                }
+            }
+            prop(got == payloads, "dribbled frames differ from originals")?;
+            prop(fb.pending() == 0, "bytes left over after a clean stream")
+        });
     }
 
     #[test]

@@ -1,6 +1,10 @@
-//! PJRT runtime: loads the AOT-compiled analysis artifacts and runs
-//! DiPerF's automated analysis on them — Python never touches the
-//! measurement path.
+//! Runtime bindings: the PJRT executor for the AOT-compiled analysis
+//! artifacts, plus the readiness-polling syscall binding ([`poll`])
+//! that backs the live reactor.
+//!
+//! The PJRT half loads the analysis artifacts and runs DiPerF's
+//! automated analysis on them — Python never touches the measurement
+//! path.
 //!
 //! `make artifacts` lowers `python/compile/model.py` once per sample-
 //! capacity variant to HLO *text* (see aot.py for why text, not
@@ -9,6 +13,9 @@
 //! environment has no serde), compiles each lazily on the PJRT CPU
 //! client, caches the executable, and marshals
 //! [`AnalysisInput`]/[`AnalysisOutput`] across the boundary.
+
+#[cfg(unix)]
+pub mod poll;
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,552 @@
+//! Minimal readiness-polling binding for the live reactor: Linux
+//! `epoll` with a portable `poll(2)` fallback on other Unixes.
+//!
+//! The environment vendors no `libc`/`mio`, so the handful of syscalls
+//! the reactor needs are declared here directly — `std` already links
+//! the platform libc, so the symbols resolve without any new
+//! dependency.  The surface is deliberately tiny: register/modify/
+//! deregister a file descriptor under a caller-chosen [`Token`], and
+//! [`Poller::wait`] for level-triggered readiness.
+//!
+//! Level-triggered semantics were chosen over edge-triggered on
+//! purpose: the reactor re-arms interest explicitly after every state
+//! change, and level triggering means a missed wakeup costs one extra
+//! `wait` round instead of a hang — the same robustness trade
+//! `poll(2)` makes, which keeps both backends behaviorally identical.
+//!
+//! [`connect_nonblocking`] starts a TCP connect without blocking the
+//! worker thread; completion (or refusal) is reported as writability on
+//! the socket, after which `TcpStream::take_error` reads `SO_ERROR` —
+//! the classic `EINPROGRESS` dance.
+
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// Caller-chosen identifier attached to a registered descriptor and
+/// echoed back in every [`PollEvent`].
+pub type Token = u64;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    /// The token the descriptor was registered under.
+    pub token: Token,
+    /// Data can be read (or the peer closed: a read will return 0).
+    pub readable: bool,
+    /// The socket accepts writes (or a pending connect resolved).
+    pub writable: bool,
+    /// Error or hang-up condition; check `take_error` / read to 0.
+    pub hangup: bool,
+}
+
+/// Clamp a wait timeout to the millisecond `int` the syscalls take.
+/// `None` means block indefinitely.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            // round up so a 0.4 ms deadline is not spun on at 0 ms
+            let ms = (d.as_secs_f64() * 1000.0).ceil();
+            ms.clamp(0.0, i32::MAX as f64) as i32
+        }
+    }
+}
+
+/// Begin a nonblocking TCP connect to `addr`.
+///
+/// On Linux the socket is created `SOCK_NONBLOCK` and `connect(2)`
+/// returns immediately (success or `EINPROGRESS`); register the stream
+/// for writability and call `take_error()` when it fires.  On other
+/// Unixes this falls back to a blocking `connect` followed by
+/// `set_nonblocking(true)` — correct, just not overlap-friendly.
+#[cfg(target_os = "linux")]
+pub fn connect_nonblocking(addr: &SocketAddr) -> io::Result<TcpStream> {
+    linux::connect_nonblocking(addr)
+}
+
+/// See the Linux variant; portable blocking-connect fallback.
+#[cfg(not(target_os = "linux"))]
+pub fn connect_nonblocking(addr: &SocketAddr) -> io::Result<TcpStream> {
+    let s = TcpStream::connect(addr)?;
+    s.set_nonblocking(true)?;
+    Ok(s)
+}
+
+/// A readiness poller over raw file descriptors.
+///
+/// Backed by `epoll` on Linux and by `poll(2)` elsewhere; both report
+/// level-triggered readiness through the same [`PollEvent`] shape, so
+/// callers never see which backend they run on.
+pub struct Poller {
+    imp: imp::Imp,
+}
+
+impl Poller {
+    /// Create an empty poller.
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { imp: imp::Imp::new()? })
+    }
+
+    /// Start watching `fd` under `token` for the given interests.
+    pub fn register(
+        &mut self,
+        fd: RawFd,
+        token: Token,
+        read: bool,
+        write: bool,
+    ) -> io::Result<()> {
+        self.imp.register(fd, token, read, write)
+    }
+
+    /// Change the interests (and token) of an already-watched `fd`.
+    pub fn modify(
+        &mut self,
+        fd: RawFd,
+        token: Token,
+        read: bool,
+        write: bool,
+    ) -> io::Result<()> {
+        self.imp.modify(fd, token, read, write)
+    }
+
+    /// Stop watching `fd`.  Must be called *before* the descriptor is
+    /// closed (a closed fd is removed from epoll automatically, but the
+    /// fallback keeps its own table).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.imp.deregister(fd)
+    }
+
+    /// Block up to `timeout` (forever if `None`) and append readiness
+    /// reports to `out`.  Returns the number of events appended; an
+    /// interrupted wait (`EINTR`) reports zero events instead of
+    /// erroring, so callers can treat every `Err` as fatal.
+    pub fn wait(
+        &mut self,
+        timeout: Option<Duration>,
+        out: &mut Vec<PollEvent>,
+    ) -> io::Result<usize> {
+        self.imp.wait(timeout_ms(timeout), out)
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::{PollEvent, Token};
+    use std::io;
+    use std::net::{SocketAddr, TcpStream};
+    use std::os::fd::{FromRawFd, RawFd};
+
+    // Values from the Linux UAPI headers (x86_64 and aarch64 agree on
+    // all of these).
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    const AF_INET: i32 = 2;
+    const AF_INET6: i32 = 10;
+    const SOCK_STREAM: i32 = 1;
+    const SOCK_NONBLOCK: i32 = 0o4000;
+    const SOCK_CLOEXEC: i32 = 0o2000000;
+    const EINPROGRESS: i32 = 115;
+
+    /// `struct epoll_event`.  The kernel ABI packs it on x86_64 only;
+    /// mirroring libc's layout here keeps the 12-byte stride the
+    /// syscall expects.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    #[repr(C)]
+    struct SockAddrIn {
+        family: u16,
+        port_be: u16,
+        addr: [u8; 4],
+        zero: [u8; 8],
+    }
+
+    #[repr(C)]
+    struct SockAddrIn6 {
+        family: u16,
+        port_be: u16,
+        flowinfo: u32,
+        addr: [u8; 16],
+        scope_id: u32,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn connect(fd: i32, addr: *const u8, len: u32) -> i32;
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub(super) fn connect_nonblocking(
+        addr: &SocketAddr,
+    ) -> io::Result<TcpStream> {
+        let domain = if addr.is_ipv4() { AF_INET } else { AF_INET6 };
+        let fd = cvt(unsafe {
+            socket(domain, SOCK_STREAM | SOCK_NONBLOCK | SOCK_CLOEXEC, 0)
+        })?;
+        let ret = match addr {
+            SocketAddr::V4(a) => {
+                let sa = SockAddrIn {
+                    family: AF_INET as u16,
+                    port_be: a.port().to_be(),
+                    addr: a.ip().octets(),
+                    zero: [0; 8],
+                };
+                unsafe {
+                    connect(
+                        fd,
+                        (&sa as *const SockAddrIn).cast(),
+                        std::mem::size_of::<SockAddrIn>() as u32,
+                    )
+                }
+            }
+            SocketAddr::V6(a) => {
+                let sa = SockAddrIn6 {
+                    family: AF_INET6 as u16,
+                    port_be: a.port().to_be(),
+                    flowinfo: a.flowinfo(),
+                    addr: a.ip().octets(),
+                    scope_id: a.scope_id(),
+                };
+                unsafe {
+                    connect(
+                        fd,
+                        (&sa as *const SockAddrIn6).cast(),
+                        std::mem::size_of::<SockAddrIn6>() as u32,
+                    )
+                }
+            }
+        };
+        if ret != 0 {
+            let err = io::Error::last_os_error();
+            if err.raw_os_error() != Some(EINPROGRESS) {
+                unsafe { close(fd) };
+                return Err(err);
+            }
+        }
+        // SAFETY: `fd` is a fresh, owned socket descriptor.
+        Ok(unsafe { TcpStream::from_raw_fd(fd) })
+    }
+
+    pub(super) struct Imp {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Imp {
+        pub(super) fn new() -> io::Result<Imp> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Imp {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(
+            &mut self,
+            op: i32,
+            fd: RawFd,
+            token: Token,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: EPOLLRDHUP
+                    | if read { EPOLLIN } else { 0 }
+                    | if write { EPOLLOUT } else { 0 },
+                data: token,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub(super) fn register(
+            &mut self,
+            fd: RawFd,
+            token: Token,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+        }
+
+        pub(super) fn modify(
+            &mut self,
+            fd: RawFd,
+            token: Token,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+        }
+
+        pub(super) fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub(super) fn wait(
+            &mut self,
+            timeout_ms: i32,
+            out: &mut Vec<PollEvent>,
+        ) -> io::Result<usize> {
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            let n = n as usize;
+            for ev in &self.buf[..n] {
+                // copy out of the (possibly packed) buffer entry
+                let ev = *ev;
+                let bits = ev.events;
+                out.push(PollEvent {
+                    token: ev.data,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(n)
+        }
+    }
+
+    impl Drop for Imp {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+use linux as imp;
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    use super::{PollEvent, Token};
+    use std::io;
+    use std::os::fd::RawFd;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    /// `poll(2)` rebuilds its descriptor array per wait from a small
+    /// interest table — O(n) per call, which is fine for the fallback
+    /// (the fast path is Linux epoll).
+    pub(super) struct Imp {
+        interest: Vec<(RawFd, Token, bool, bool)>,
+    }
+
+    impl Imp {
+        pub(super) fn new() -> io::Result<Imp> {
+            Ok(Imp { interest: Vec::new() })
+        }
+
+        pub(super) fn register(
+            &mut self,
+            fd: RawFd,
+            token: Token,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            if self.interest.iter().any(|e| e.0 == fd) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "fd already registered",
+                ));
+            }
+            self.interest.push((fd, token, read, write));
+            Ok(())
+        }
+
+        pub(super) fn modify(
+            &mut self,
+            fd: RawFd,
+            token: Token,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            for e in self.interest.iter_mut() {
+                if e.0 == fd {
+                    *e = (fd, token, read, write);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub(super) fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let before = self.interest.len();
+            self.interest.retain(|e| e.0 != fd);
+            if self.interest.len() == before {
+                return Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    "fd not registered",
+                ));
+            }
+            Ok(())
+        }
+
+        pub(super) fn wait(
+            &mut self,
+            timeout_ms: i32,
+            out: &mut Vec<PollEvent>,
+        ) -> io::Result<usize> {
+            let mut fds: Vec<PollFd> = self
+                .interest
+                .iter()
+                .map(|&(fd, _, read, write)| PollFd {
+                    fd,
+                    events: if read { POLLIN } else { 0 }
+                        | if write { POLLOUT } else { 0 },
+                    revents: 0,
+                })
+                .collect();
+            let n = unsafe {
+                poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            let mut pushed = 0usize;
+            for (pfd, &(_, token, _, _)) in
+                fds.iter().zip(self.interest.iter())
+            {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(PollEvent {
+                    token,
+                    readable: r & POLLIN != 0,
+                    writable: r & POLLOUT != 0,
+                    hangup: r & (POLLERR | POLLHUP) != 0,
+                });
+                pushed += 1;
+            }
+            Ok(pushed)
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+use fallback as imp;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn readiness_round_trip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = connect_nonblocking(&addr).unwrap();
+        let (mut srv, _) = listener.accept().unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.register(client.as_raw_fd(), 7, true, true).unwrap();
+
+        // a fresh connect reports writable
+        let mut evs = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !evs.iter().any(|e: &PollEvent| e.token == 7 && e.writable) {
+            assert!(std::time::Instant::now() < deadline, "no writability");
+            poller.wait(Some(Duration::from_millis(100)), &mut evs).unwrap();
+        }
+        assert!(client.take_error().unwrap().is_none());
+
+        // readable only once the peer sends
+        evs.clear();
+        poller.modify(client.as_raw_fd(), 7, true, false).unwrap();
+        srv.write_all(b"x").unwrap();
+        while !evs.iter().any(|e: &PollEvent| e.token == 7 && e.readable) {
+            assert!(std::time::Instant::now() < deadline, "no readability");
+            poller.wait(Some(Duration::from_millis(100)), &mut evs).unwrap();
+        }
+        let mut c = client;
+        c.set_nonblocking(true).unwrap();
+        let mut b = [0u8; 8];
+        assert_eq!(c.read(&mut b).unwrap(), 1);
+        assert_eq!(b[0], b'x');
+
+        poller.deregister(c.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn timeout_expires_without_events() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = connect_nonblocking(&addr).unwrap();
+        let (_srv, _) = listener.accept().unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        // read interest only: nothing arrives, so the wait times out
+        poller.register(client.as_raw_fd(), 1, true, false).unwrap();
+        let mut evs = Vec::new();
+        let n = poller.wait(Some(Duration::from_millis(20)), &mut evs).unwrap();
+        assert_eq!(n, 0);
+        assert!(evs.is_empty());
+    }
+}

@@ -1,0 +1,537 @@
+//! Deterministic tests for the live reactor (`live::reactor`).
+//!
+//! Every test drives the *real* agent state machine — the same code
+//! that runs under epoll in production — through the in-memory
+//! `EventSource`/`Clock` doubles.  No real sockets, no sleeps: time
+//! advances only when a test says so, readiness is scripted, and the
+//! whole run is bit-stable across executions.  The scenarios cover the
+//! corners a readiness loop must survive: 1-byte dribble reads and
+//! writes, EAGAIN storms (spurious wakeups), mid-frame disconnects,
+//! dead targets, tester timeouts, and time-server outages.
+
+use std::io::ErrorKind;
+
+use diperf::live::reactor::testing::{MockClock, MockNet};
+use diperf::live::reactor::{AgentSpec, Endpoint, TargetMode, Worker};
+use diperf::live::target::OUT_OK;
+use diperf::live::wire::{self, FrameBuf, WireUp};
+use diperf::metrics::SampleOutcome;
+use diperf::transport::{CtrlMsg, GoodbyeReason, TestDescription};
+
+/// One worker over the mock fabric plus the handles to script it.
+struct Rig {
+    net: MockNet,
+    clock: MockClock,
+    w: Worker<MockNet, MockClock>,
+}
+
+impl Rig {
+    fn new(agents: u32, mode: TargetMode) -> Rig {
+        let specs: Vec<AgentSpec> = (0..agents)
+            .map(|id| AgentSpec {
+                id,
+                skew_s: 0.0,
+                drift: 0.0,
+            })
+            .collect();
+        Rig::with_specs(&specs, mode)
+    }
+
+    fn with_specs(specs: &[AgentSpec], mode: TargetMode) -> Rig {
+        let net = MockNet::new();
+        let clock = MockClock::new();
+        let w = Worker::new(net.clone(), clock.clone(), specs, mode);
+        Rig { net, clock, w }
+    }
+
+    /// Advance time and run one event-loop turn.
+    fn step(&mut self, dt: f64) {
+        self.clock.advance(dt);
+        self.w.tick(None).expect("mock wait never fails");
+    }
+
+    /// Step in small increments until the worker is done (bounded, so
+    /// a livelock fails the test instead of hanging it).
+    fn settle(&mut self) {
+        for _ in 0..1000 {
+            if self.w.all_done() {
+                return;
+            }
+            self.step(0.001);
+        }
+        panic!("worker did not finish within 1000 steps");
+    }
+
+    fn ctrl(&self, i: usize) -> u64 {
+        self.net.tokens(Endpoint::Ctrl)[i]
+    }
+
+    fn ts(&self) -> u64 {
+        let toks = self.net.tokens(Endpoint::TimeServer);
+        *toks.last().expect("ts link exists")
+    }
+}
+
+/// A controller frame as it appears on the wire.
+fn ctrl_frame(msg: &CtrlMsg) -> Vec<u8> {
+    let p = wire::encode_ctrl(msg);
+    let mut out = (p.len() as u32).to_be_bytes().to_vec();
+    out.extend_from_slice(&p);
+    out
+}
+
+/// A time-server stamp as it appears on the wire.
+fn stamp(server_s: f64) -> [u8; 8] {
+    server_s.to_bits().to_be_bytes()
+}
+
+fn decode_frames(bytes: &[u8]) -> Vec<WireUp> {
+    let mut fb = FrameBuf::new();
+    fb.push(bytes);
+    let mut out = Vec::new();
+    while let Some(p) = fb.pop().expect("well-formed frames") {
+        out.push(wire::decode_up(&p).expect("decodable frame"));
+    }
+    assert_eq!(fb.pending(), 0, "trailing partial frame");
+    out
+}
+
+fn desc(duration_s: f64, give_up: u32) -> TestDescription {
+    TestDescription {
+        duration_s,
+        client_interval_s: 0.0,
+        sync_interval_s: 1.0,
+        rate_cap_per_s: f64::INFINITY,
+        timeout_s: 5.0,
+        give_up_failures: give_up,
+    }
+}
+
+/// Drive a fresh single-agent rig through handshake → Start → probe →
+/// first sync, leaving it Running with a launch armed.  Returns the
+/// (ctrl, target) tokens.
+fn to_running(rig: &mut Rig, d: TestDescription) -> (u64, u64) {
+    rig.step(0.001); // connects resolve, Hello + DeployDone drain
+    let ctrl = rig.ctrl(0);
+    let hs = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(matches!(hs[0], WireUp::Hello { agent: 0 }), "{hs:?}");
+    assert!(matches!(hs[1], WireUp::DeployDone), "{hs:?}");
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Start(d)));
+    rig.step(0.001); // Start read; latency probe begins
+    let tgt = *rig.net.tokens(Endpoint::Target).last().unwrap();
+    rig.step(0.001); // probe connect resolves; sync requested
+    assert_eq!(rig.net.take_outbound(rig.ts()), vec![1u8]);
+    rig.net.deliver(rig.ts(), &stamp(1000.0));
+    rig.step(0.001); // sync completes; first launch armed
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(
+        frames.iter().any(|f| matches!(f, WireUp::Sync(_))),
+        "expected a Sync frame, got {frames:?}"
+    );
+    (ctrl, tgt)
+}
+
+/// Collect every sample across all Samples frames.
+fn all_samples(frames: &[WireUp]) -> Vec<diperf::metrics::CallSample> {
+    frames
+        .iter()
+        .filter_map(|f| match f {
+            WireUp::Samples(v) => Some(v.clone()),
+            _ => None,
+        })
+        .flatten()
+        .collect()
+}
+
+#[test]
+fn full_lifecycle_success_timeout_and_goodbye() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let (ctrl, tgt) = to_running(&mut rig, desc(10.0, 0));
+
+    rig.step(0.001); // launch #1 fires
+    assert_eq!(rig.net.take_outbound(tgt), vec![1u8]);
+    for _ in 0..3 {
+        rig.net.deliver(tgt, &[OUT_OK]);
+        rig.step(0.001); // reply → sample; next launch armed
+        rig.step(0.001); // next launch fires
+        assert_eq!(rig.net.take_outbound(tgt), vec![1u8]);
+    }
+    // 4 launches, 3 replies; the 4th call never answers.  Jump past
+    // the call timeout and the test duration in one go: the timer
+    // wheel replays the deadlines in order (timeout, then duration).
+    rig.clock.advance(11.0);
+    rig.w.tick(None).unwrap();
+    rig.settle();
+
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    let samples = all_samples(&frames);
+    assert_eq!(samples.len(), 4);
+    let ok = samples
+        .iter()
+        .filter(|s| s.outcome == SampleOutcome::Success)
+        .count();
+    let timed_out = samples
+        .iter()
+        .filter(|s| s.outcome == SampleOutcome::Timeout)
+        .count();
+    assert_eq!((ok, timed_out), (3, 1), "{samples:?}");
+    // samples are in launch order with sane local timestamps
+    for w in samples.windows(2) {
+        assert!(w[0].seq < w[1].seq);
+        assert!(w[0].t_submit_local <= w[1].t_submit_local);
+    }
+    assert!(
+        matches!(frames.last(), Some(WireUp::Goodbye(GoodbyeReason::Finished))),
+        "{frames:?}"
+    );
+
+    let rep = rig.w.reports()[0];
+    assert_eq!(rep.calls, 4);
+    assert_eq!(rep.samples_sent, 4);
+    assert!(rep.syncs >= 1);
+    assert!(rep.finished);
+    assert!(!rep.session_dropped);
+    assert!(!rig.net.is_open(ctrl), "agent must close after Goodbye");
+}
+
+#[test]
+fn identical_runs_are_bit_stable() {
+    let run = || {
+        let mut rig = Rig::new(1, TargetMode::Framed);
+        let (ctrl, tgt) = to_running(&mut rig, desc(3.0, 0));
+        rig.step(0.001);
+        let mut tgt_bytes = rig.net.take_outbound(tgt);
+        for _ in 0..2 {
+            rig.net.deliver(tgt, &[OUT_OK]);
+            rig.step(0.001);
+            rig.step(0.001);
+            tgt_bytes.extend(rig.net.take_outbound(tgt));
+        }
+        rig.clock.advance(4.0);
+        rig.w.tick(None).unwrap();
+        rig.settle();
+        let ctrl_bytes = rig.net.take_outbound(ctrl);
+        (ctrl_bytes, tgt_bytes, format!("{:?}", rig.w.reports()))
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "controller byte stream must be bit-stable");
+    assert_eq!(a.1, b.1, "target byte stream must be bit-stable");
+    assert_eq!(a.2, b.2, "reports must be bit-stable");
+}
+
+#[test]
+fn one_byte_dribble_reads_and_writes_still_work() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let ctrl = rig.ctrl(0);
+    // every ctrl read and write moves one byte at a time
+    rig.net.set_max_read(ctrl, 1);
+    rig.net.set_max_write(ctrl, 1);
+    rig.step(0.001);
+    let hs = decode_frames(&rig.net.take_outbound(ctrl));
+    assert_eq!(hs.len(), 2, "handshake survives 1-byte writes: {hs:?}");
+
+    // deliver Start split into single bytes across separate ticks so
+    // the frame assembles incrementally over many partial reads
+    let frame = ctrl_frame(&CtrlMsg::Start(desc(5.0, 0)));
+    for b in &frame {
+        rig.net.deliver(ctrl, &[*b]);
+        rig.step(0.001);
+    }
+    assert_eq!(
+        rig.net.tokens(Endpoint::Target).len(),
+        1,
+        "Start must eventually parse and open the latency probe"
+    );
+}
+
+#[test]
+fn eagain_storms_are_survived() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let ctrl = rig.ctrl(0);
+    rig.net.storm_writes(ctrl, 4); // handshake pump hits WouldBlock
+    rig.step(0.001);
+    rig.step(0.001);
+    rig.step(0.001);
+    rig.step(0.001);
+    rig.step(0.001);
+    let hs = decode_frames(&rig.net.take_outbound(ctrl));
+    assert_eq!(hs.len(), 2, "handshake flushed after the storm: {hs:?}");
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Start(desc(5.0, 0))));
+    rig.net.storm_reads(ctrl, 4); // readable wakeups that yield EAGAIN
+    for _ in 0..6 {
+        rig.step(0.001);
+    }
+    assert_eq!(
+        rig.net.tokens(Endpoint::Target).len(),
+        1,
+        "Start processed once the read storm passes"
+    );
+}
+
+#[test]
+fn mid_frame_disconnect_drops_the_session() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let ctrl = rig.ctrl(0);
+    rig.step(0.001);
+    rig.net.take_outbound(ctrl);
+
+    // half a Start frame, then the controller dies mid-frame
+    let frame = ctrl_frame(&CtrlMsg::Start(desc(5.0, 0)));
+    rig.net.deliver(ctrl, &frame[..frame.len() / 2]);
+    rig.step(0.001);
+    rig.net.close_peer(ctrl);
+    rig.step(0.001);
+
+    assert!(rig.w.all_done());
+    let rep = rig.w.reports()[0];
+    assert!(rep.session_dropped);
+    assert!(!rep.finished);
+    assert_eq!(rep.calls, 0, "never started, never launched");
+}
+
+#[test]
+fn dead_target_gives_up_after_k_failures() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let (ctrl, tgt) = to_running(&mut rig, desc(30.0, 2));
+
+    rig.step(0.001); // launch #1 writes its request
+    assert_eq!(rig.net.take_outbound(tgt), vec![1u8]);
+    rig.net.close_peer(tgt); // target dies mid-call
+    rig.step(0.001); // EOF → ServiceError; relaunch armed
+    rig.step(0.001); // launch #2 opens a fresh target connection
+    let tgt2 = *rig.net.tokens(Endpoint::Target).last().unwrap();
+    assert_ne!(tgt, tgt2);
+    rig.step(0.001); // connect resolves, request written
+    assert_eq!(rig.net.take_outbound(tgt2), vec![1u8]);
+    rig.net.close_peer(tgt2);
+    rig.step(0.001); // second ServiceError → give-up
+    rig.settle();
+
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    let samples = all_samples(&frames);
+    assert_eq!(samples.len(), 2);
+    assert!(samples.iter().all(|s| s.outcome == SampleOutcome::ServiceError));
+    assert!(
+        matches!(
+            frames.last(),
+            Some(WireUp::Goodbye(GoodbyeReason::TooManyFailures))
+        ),
+        "{frames:?}"
+    );
+    let rep = rig.w.reports()[0];
+    assert!(!rep.finished, "TooManyFailures is not Finished");
+    assert!(!rep.session_dropped);
+}
+
+#[test]
+fn stop_mid_run_flushes_and_drains_without_goodbye() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let (ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001); // launch #1
+    rig.net.take_outbound(tgt);
+    rig.net.deliver(tgt, &[OUT_OK]);
+    rig.step(0.001); // one sample buffered
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Stop));
+    rig.step(0.001);
+    rig.settle();
+
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    let samples = all_samples(&frames);
+    assert_eq!(samples.len(), 1, "buffered sample flushed on Stop");
+    assert!(
+        !frames.iter().any(|f| matches!(f, WireUp::Goodbye(_))),
+        "a Stopped agent does not say Goodbye: {frames:?}"
+    );
+    let rep = rig.w.reports()[0];
+    assert!(!rep.finished);
+    assert!(!rep.session_dropped, "Stop is orderly, not a drop");
+    assert!(!rig.net.is_open(ctrl));
+}
+
+#[test]
+fn time_server_outage_heartbeats_then_recovers() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let (ctrl, _tgt) = to_running(&mut rig, desc(30.0, 0));
+    let ts1 = rig.ts();
+
+    // kill the time-server link and make the immediate reconnect fail
+    rig.net.refuse_next_connect(Endpoint::TimeServer, ErrorKind::ConnectionRefused);
+    rig.net.close_peer(ts1);
+    rig.step(0.001); // EOF on ts; reconnect refused → link down
+    rig.net.take_outbound(ctrl);
+
+    rig.clock.advance(1.1); // next sync interval
+    rig.w.tick(None).unwrap();
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(
+        frames.iter().any(|f| matches!(f, WireUp::Heartbeat)),
+        "a sync round without a time server heartbeats: {frames:?}"
+    );
+
+    // the retry reopened the link; the next round syncs normally
+    let ts2 = rig.ts();
+    assert_ne!(ts1, ts2);
+    rig.clock.advance(1.1);
+    rig.w.tick(None).unwrap();
+    rig.step(0.001);
+    assert_eq!(rig.net.take_outbound(ts2), vec![1u8]);
+    rig.net.deliver(ts2, &stamp(2000.0));
+    rig.step(0.001);
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(
+        frames.iter().any(|f| matches!(f, WireUp::Sync(_))),
+        "sync resumes after the outage: {frames:?}"
+    );
+    assert_eq!(rig.w.reports()[0].syncs, 2);
+}
+
+#[test]
+fn connect_probe_mode_counts_accepted_connections() {
+    let mut rig = Rig::new(1, TargetMode::Probe);
+    let (ctrl, _probe_conn) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001); // launch #1: a fresh connect probe
+    rig.step(0.001); // connect resolves → Success sample
+    rig.step(0.001); // launch #2
+    rig.step(0.001); // Success
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Stop));
+    rig.step(0.001);
+    rig.settle();
+
+    let samples = all_samples(&decode_frames(&rig.net.take_outbound(ctrl)));
+    assert!(samples.len() >= 2, "{samples:?}");
+    assert!(samples.iter().all(|s| s.outcome == SampleOutcome::Success));
+}
+
+#[test]
+fn skewed_agents_stamp_samples_in_local_time() {
+    let specs = [AgentSpec {
+        id: 0,
+        skew_s: 250.0,
+        drift: 50e-6,
+    }];
+    let mut rig = Rig::with_specs(&specs, TargetMode::Framed);
+    let (ctrl, tgt) = to_running(&mut rig, desc(10.0, 0));
+    rig.step(0.001);
+    rig.net.take_outbound(tgt);
+    rig.net.deliver(tgt, &[OUT_OK]);
+    rig.step(0.001);
+    rig.clock.advance(11.0);
+    rig.w.tick(None).unwrap();
+    rig.settle();
+
+    let samples = all_samples(&decode_frames(&rig.net.take_outbound(ctrl)));
+    assert!(!samples.is_empty());
+    // local clock = mono * (1 + drift) + skew, so every stamp sits just
+    // past the 250 s skew (mono time is a few milliseconds here)
+    for s in &samples {
+        assert!(
+            s.t_submit_local > 250.0 && s.t_submit_local < 251.0,
+            "sample not in the agent's local time: {s:?}"
+        );
+    }
+    assert!(rig.w.reports()[0].finished);
+}
+
+#[test]
+fn many_agents_share_one_worker_and_one_ts_link() {
+    let mut rig = Rig::new(3, TargetMode::Framed);
+    rig.step(0.001); // all handshakes drain
+    let ts = rig.ts();
+    for i in 0..3 {
+        let ctrl = rig.ctrl(i);
+        let hs = decode_frames(&rig.net.take_outbound(ctrl));
+        assert!(
+            matches!(hs[0], WireUp::Hello { agent } if agent == i as u32),
+            "agent {i}: {hs:?}"
+        );
+        rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Start(desc(5.0, 0))));
+    }
+    rig.step(0.001); // Starts read; probes begin
+    rig.step(0.001); // probes resolve; syncs queue FIFO on one link
+
+    // the shared link serializes: one request byte at a time
+    for k in 0..3 {
+        assert_eq!(rig.net.take_outbound(ts), vec![1u8], "sync {k}");
+        rig.net.deliver(ts, &stamp(1000.0 + k as f64));
+        rig.step(0.001);
+    }
+
+    // let every agent run a couple of calls, then finish by duration
+    for _ in 0..6 {
+        for t in rig.net.tokens(Endpoint::Target) {
+            if rig.net.is_open(t) && !rig.net.take_outbound(t).is_empty() {
+                rig.net.deliver(t, &[OUT_OK]);
+            }
+        }
+        rig.step(0.001);
+    }
+    rig.clock.advance(6.0);
+    rig.w.tick(None).unwrap();
+    rig.settle();
+
+    let reports = rig.w.reports();
+    assert_eq!(reports.len(), 3);
+    for (i, rep) in reports.iter().enumerate() {
+        assert!(rep.finished, "agent {i}: {rep:?}");
+        assert!(!rep.session_dropped, "agent {i}: {rep:?}");
+        assert!(rep.syncs >= 1, "agent {i}: {rep:?}");
+        let frames = decode_frames(&rig.net.take_outbound(rig.ctrl(i)));
+        assert!(
+            matches!(
+                frames.last(),
+                Some(WireUp::Goodbye(GoodbyeReason::Finished))
+            ),
+            "agent {i}: {frames:?}"
+        );
+    }
+}
+
+#[test]
+fn backpressure_pauses_launches_until_drained() {
+    let mut rig = Rig::new(1, TargetMode::Framed);
+    let (ctrl, tgt) = to_running(&mut rig, desc(300.0, 0));
+
+    // stop the controller from draining anything further, then let the
+    // agent try to push enough Samples frames to cross the high
+    // watermark (64 KiB ≈ 60 frames of 32 samples x 33 bytes + header)
+    rig.net.storm_writes(ctrl, u32::MAX);
+    rig.step(0.001); // launch #1 fires
+    let mut calls = 0u64;
+    for _ in 0..4000 {
+        let wrote = rig.net.take_outbound(tgt);
+        if wrote.is_empty() {
+            break; // paused: the launch gate is shut
+        }
+        calls += 1;
+        rig.net.deliver(tgt, &[OUT_OK]);
+        rig.step(0.001); // reply → sample (flush every 32nd)
+        rig.step(0.001); // next launch (or: paused, nothing happens)
+    }
+    let rep = rig.w.reports()[0];
+    assert!(
+        rep.calls < 3500,
+        "agent must pause under backpressure, ran {} calls",
+        rep.calls
+    );
+    assert!(calls > 32, "agent batched at least one full flush first");
+
+    // controller drains again: the agent resumes launching
+    rig.net.storm_writes(ctrl, 0);
+    rig.step(0.001); // wait reports writable; buffer drains; unpause
+    rig.step(0.001); // launch fires again
+    rig.step(0.001);
+    assert!(
+        !rig.net.take_outbound(ctrl).is_empty(),
+        "queued frames drain once the controller reads again"
+    );
+    assert!(
+        rig.w.reports()[0].calls > rep.calls,
+        "launching resumes after the drain"
+    );
+}

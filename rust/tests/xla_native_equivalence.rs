@@ -2,8 +2,21 @@
 //! kernels + L2 JAX graph, built by `make artifacts`) must agree with
 //! the native rust analysis on real experiment data.
 //!
-//! Skips (with a loud message) when `artifacts/` has not been built —
-//! `make test` always builds it first.
+//! Skip-with-reason policy (triaged): every test here funnels through
+//! the `xla()` helper, which returns `None` — printing a loud `SKIP:`
+//! line — whenever the AOT artifacts cannot be loaded. That covers two
+//! legitimate situations, neither of which is a product bug:
+//!
+//! 1. `artifacts/` has not been built (no JAX toolchain on the box);
+//!    `make artifacts` produces it where Python+JAX are available.
+//! 2. The build uses the vendored `xla` stub crate, whose
+//!    `PjRtClient::cpu()` intentionally errors at runtime. The native
+//!    rust analysis is the authority there, and everything that
+//!    consumes `XlaAnalyzer` already falls back to the native path.
+//!
+//! The equivalence asserts only run on hosts with real artifacts and a
+//! real PJRT client; everywhere else these tests pass as explicit,
+//! logged skips rather than failures.
 
 use diperf::analysis::{self, AnalysisInput};
 use diperf::experiment::{presets, run_experiment};
