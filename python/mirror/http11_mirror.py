@@ -1,0 +1,759 @@
+"""Structural mirror of ``rust/src/live/proto/http11.rs``.
+
+The authoring environment has no Rust toolchain (the repo's standing
+caveat; CI compiles the tree), so the deterministic assertions guarding
+the HTTP/1.1 codec — the unit tests in ``http11.rs`` and the
+fixture/property rings of ``rust/tests/http11_conformance.rs`` — are
+validated here instead.  This file ports the serializers, the streaming
+response parser (``RespParser``), the server-side request parser
+(``ReqParser``), Pcg64 (bit-exact integer arithmetic), and the
+``util::proptest`` seeding scheme, then:
+
+  * replays every seeded unit test from the ``http11.rs`` test module,
+  * parses the checked-in golden fixtures
+    (``rust/tests/fixtures/http11/*.bin``) whole, torn at **every** byte
+    boundary, and dribbled one byte at a time — asserting the
+    conformance suite's expectation table,
+  * re-serializes Content-Length transcripts byte-exactly,
+  * replays the two property tests with the exact RNG draw sequence
+    (same base seed 0xD1_7E2F, same stream 0x5eed, same Lemire
+    rejection loop), so a logic bug in the Rust parser's mirror-twin
+    fails loudly here before CI ever runs.
+
+Run:  python3 python/mirror/http11_mirror.py
+"""
+
+import os
+from collections import deque
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MULT = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
+
+FIXTURES = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "tests", "fixtures", "http11"
+)
+
+MAX_LINE = 8 * 1024
+MAX_HEADERS = 100
+
+
+class ProtoError(Exception):
+    """Mirror of ``proto::ProtoError`` — the only legal failure mode."""
+
+
+# ---------------------------------------------------------------------------
+# Pcg64 + proptest seeding (bit-exact ports of util::rng / util::proptest)
+# ---------------------------------------------------------------------------
+
+
+class Pcg64:
+    def __init__(self, seed, stream):
+        self.inc = ((stream << 1) | 1) & MASK128
+        self.state = 0
+        self._step()
+        self.state = (self.state + (seed & MASK64)) & MASK128
+        self._step()
+
+    def _step(self):
+        self.state = (self.state * PCG_MULT + self.inc) & MASK128
+
+    def next_u64(self):
+        self._step()
+        xored = ((self.state >> 64) ^ (self.state & MASK64)) & MASK64
+        rot = self.state >> 122
+        return ((xored >> rot) | (xored << (64 - rot))) & MASK64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, bound):
+        # Lemire multiply-shift with rejection — the loop must match the
+        # Rust draw count exactly or every later draw desynchronizes.
+        assert bound > 0
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & MASK64
+            if lo >= bound or lo >= ((-bound) & MASK64) % bound:
+                return (m >> 64) & MASK64
+
+    def chance(self, p):
+        return self.next_f64() < p
+
+
+def forall(cases, prop):
+    """util::proptest::forall — base seed 0xD1_7E2F, stream 0x5eed."""
+    for case in range(cases):
+        rng = Pcg64((0xD1_7E2F + case) & MASK64, 0x5EED)
+        msg = prop(rng)
+        if msg is not None:
+            raise AssertionError(f"property failed at case {case}: {msg}")
+
+
+def gen_vec(rng, lo, hi, gen):
+    span = max(hi - lo, 1)
+    length = lo + rng.next_below(span)
+    return [gen(rng) for _ in range(length)]
+
+
+# ---------------------------------------------------------------------------
+# Serializers
+# ---------------------------------------------------------------------------
+
+
+def reason_phrase(status):
+    return {
+        100: "Continue",
+        200: "OK",
+        204: "No Content",
+        400: "Bad Request",
+        404: "Not Found",
+        500: "Internal Server Error",
+        503: "Service Unavailable",
+    }.get(status, "Status")
+
+
+def write_request(seq, close):
+    conn = "close" if close else "keep-alive"
+    return (
+        f"GET /diperf?seq={seq} HTTP/1.1\r\nHost: diperf\r\n"
+        f"User-Agent: diperf-agent\r\nConnection: {conn}\r\n\r\n"
+    ).encode()
+
+
+def write_response(status, body, close):
+    conn = "close" if close else "keep-alive"
+    head = (
+        f"HTTP/1.1 {status} {reason_phrase(status)}\r\n"
+        f"Content-Length: {len(body)}\r\nConnection: {conn}\r\n\r\n"
+    ).encode()
+    return head + bytes(body)
+
+
+# ---------------------------------------------------------------------------
+# Response parser (client side)
+# ---------------------------------------------------------------------------
+
+# states
+STATUS_LINE, HEADERS, BODY_FIXED, BODY_UNTIL_EOF, CHUNK_SIZE, CHUNK_DATA, CHUNK_DATA_END, TRAILERS = range(8)
+LINE_STATES = {STATUS_LINE, HEADERS, CHUNK_SIZE, CHUNK_DATA_END, TRAILERS}
+
+
+def _trim(b):
+    return b.strip(b" \t")
+
+
+def _parse_decimal(b):
+    if not b or len(b) > 18 or not b.isdigit():
+        return None
+    return int(b, 10)
+
+
+def _parse_hex(b):
+    if not b or len(b) > 15:
+        return None
+    try:
+        return int(b, 16)
+    except ValueError:
+        return None
+
+
+class Response:
+    def __init__(self, status, close, body_len, interim, body):
+        self.status = status
+        self.close = close
+        self.body_len = body_len
+        self.interim = interim
+        self.body = body
+
+    def key(self):
+        return (self.status, self.close, self.body_len, self.interim, self.body)
+
+
+class RespParser:
+    def __init__(self, capture=False):
+        self.capture = capture
+        self.done = deque()
+        self.state = STATUS_LINE
+        self.line = bytearray()
+        self.interim = 0
+        self._clear_scratch()
+
+    def _clear_scratch(self):
+        self.status = 0
+        self.http10 = False
+        self.saw_close = False
+        self.saw_keepalive = False
+        self.content_length = None
+        self.chunked = False
+        self.headers = 0
+        self.remaining = 0
+        self.body_len = 0
+        self.body = bytearray()
+
+    def feed(self, data):
+        i = 0
+        while i < len(data):
+            if self.state in LINE_STATES:
+                b = data[i]
+                i += 1
+                if b == 0x0A:
+                    self._on_line()
+                else:
+                    if len(self.line) >= MAX_LINE:
+                        raise ProtoError("line exceeds MAX_LINE")
+                    self.line.append(b)
+            elif self.state in (BODY_FIXED, CHUNK_DATA):
+                take = min(self.remaining, len(data) - i)
+                self._consume_body(data[i : i + take])
+                i += take
+                self.remaining -= take
+                if self.remaining == 0:
+                    if self.state == BODY_FIXED:
+                        self._finish(False)
+                    else:
+                        self.state = CHUNK_DATA_END
+            else:  # BODY_UNTIL_EOF
+                self._consume_body(data[i:])
+                i = len(data)
+
+    def pop(self):
+        return self.done.popleft() if self.done else None
+
+    def eof(self):
+        if self.state == BODY_UNTIL_EOF:
+            self._finish(True)
+            return
+        if self.mid_message():
+            raise ProtoError("peer closed the connection mid-response")
+
+    def mid_message(self):
+        return self.state != STATUS_LINE or len(self.line) > 0 or self.interim > 0
+
+    def _consume_body(self, data):
+        self.body_len += len(data)
+        if self.capture:
+            self.body.extend(data)
+
+    def _on_line(self):
+        if self.line and self.line[-1] == 0x0D:
+            del self.line[-1]
+        line = bytes(self.line)
+        self.line = bytearray()
+        if self.state == STATUS_LINE:
+            self._on_status_line(line)
+        elif self.state == HEADERS:
+            self._on_header_line(line)
+        elif self.state == CHUNK_SIZE:
+            self._on_chunk_size(line)
+        elif self.state == CHUNK_DATA_END:
+            if line:
+                raise ProtoError("chunk payload not terminated by CRLF")
+            self.state = CHUNK_SIZE
+        else:  # TRAILERS
+            if not line:
+                self._finish(False)
+            elif b":" not in line:
+                raise ProtoError("malformed trailer line")
+
+    def _on_status_line(self, line):
+        if not line:
+            return  # stray CRLF between messages
+        if len(line) < 12 or not line.startswith(b"HTTP/1."):
+            raise ProtoError("malformed status line")
+        minor = line[7:8]
+        if minor not in (b"0", b"1"):
+            raise ProtoError("unsupported HTTP version")
+        if line[8:9] != b" ":
+            raise ProtoError("malformed status line")
+        d = line[9:12]
+        if not d.isdigit():
+            raise ProtoError("malformed status code")
+        if len(line) > 12 and line[12:13] != b" ":
+            raise ProtoError("malformed status line")
+        self.status = int(d, 10)
+        self.http10 = minor == b"0"
+        self.state = HEADERS
+
+    def _on_header_line(self, line):
+        if not line:
+            return self._on_headers_end()
+        self.headers += 1
+        if self.headers > MAX_HEADERS:
+            raise ProtoError("too many headers")
+        if line[0:1] in (b" ", b"\t"):
+            raise ProtoError("obsolete header line folding is unsupported")
+        colon = line.find(b":")
+        if colon < 0:
+            raise ProtoError("header line without ':'")
+        if colon == 0:
+            raise ProtoError("empty header name")
+        name = line[:colon].lower()
+        value = _trim(line[colon + 1 :])
+        if name == b"content-length":
+            n = _parse_decimal(value)
+            if n is None:
+                raise ProtoError("invalid Content-Length")
+            if self.content_length is not None and self.content_length != n:
+                raise ProtoError("conflicting Content-Length headers")
+            self.content_length = n
+        elif name == b"transfer-encoding":
+            if value.lower() != b"chunked":
+                raise ProtoError("unsupported Transfer-Encoding")
+            self.chunked = True
+        elif name == b"connection":
+            for token in value.split(b","):
+                token = _trim(token).lower()
+                if token == b"close":
+                    self.saw_close = True
+                elif token == b"keep-alive":
+                    self.saw_keepalive = True
+
+    def _on_headers_end(self):
+        if 100 <= self.status < 200:
+            if self.status == 101:
+                raise ProtoError("unexpected 101 Switching Protocols")
+            self.interim += 1
+            self._clear_scratch()
+            self.state = STATUS_LINE
+            return
+        if self.chunked and self.content_length is not None:
+            raise ProtoError("both Content-Length and Transfer-Encoding")
+        if self.chunked:
+            self.state = CHUNK_SIZE
+        elif self.status in (204, 304):
+            self._finish(False)
+        elif self.content_length == 0:
+            self._finish(False)
+        elif self.content_length is not None:
+            self.remaining = self.content_length
+            self.state = BODY_FIXED
+        else:
+            self.state = BODY_UNTIL_EOF
+
+    def _on_chunk_size(self, line):
+        semi = line.find(b";")
+        digits = _trim(line[:semi] if semi >= 0 else line)
+        n = _parse_hex(digits)
+        if n is None:
+            raise ProtoError("invalid chunk size")
+        if n == 0:
+            self.state = TRAILERS
+        else:
+            self.remaining = n
+            self.state = CHUNK_DATA
+
+    def _finish(self, eof_body):
+        close = self.saw_close or (self.http10 and not self.saw_keepalive) or eof_body
+        self.done.append(
+            Response(self.status, close, self.body_len, self.interim, bytes(self.body))
+        )
+        self.interim = 0
+        self._clear_scratch()
+        self.state = STATUS_LINE
+
+
+# ---------------------------------------------------------------------------
+# Request parser (server side)
+# ---------------------------------------------------------------------------
+
+Q_REQUEST_LINE, Q_HEADERS, Q_BODY_FIXED = range(3)
+
+
+class ReqParser:
+    def __init__(self):
+        self.done = deque()
+        self.state = None
+        self.line = bytearray()
+        self.method = ""
+        self.target = ""
+        self.http10 = False
+        self.saw_close = False
+        self.saw_keepalive = False
+        self.content_length = 0
+        self.headers = 0
+        self.remaining = 0
+
+    def feed(self, data):
+        i = 0
+        while i < len(data):
+            state = self.state if self.state is not None else Q_REQUEST_LINE
+            if state in (Q_REQUEST_LINE, Q_HEADERS):
+                b = data[i]
+                i += 1
+                if b == 0x0A:
+                    self._on_line()
+                else:
+                    if len(self.line) >= MAX_LINE:
+                        raise ProtoError("line exceeds MAX_LINE")
+                    self.line.append(b)
+            else:  # Q_BODY_FIXED
+                take = min(self.remaining, len(data) - i)
+                i += take
+                self.remaining -= take
+                if self.remaining == 0:
+                    self._finish()
+
+    def pop(self):
+        return self.done.popleft() if self.done else None
+
+    def mid_message(self):
+        return self.state is not None or len(self.line) > 0
+
+    def _on_line(self):
+        if self.line and self.line[-1] == 0x0D:
+            del self.line[-1]
+        line = bytes(self.line)
+        self.line = bytearray()
+        state = self.state if self.state is not None else Q_REQUEST_LINE
+        if state == Q_REQUEST_LINE:
+            if not line:
+                return  # stray CRLF between requests
+            parts = [p for p in line.split(b" ") if p]
+            if len(parts) != 3:
+                raise ProtoError("malformed request line")
+            m, t, v = parts
+            if len(v) != 8 or not v.startswith(b"HTTP/1."):
+                raise ProtoError("unsupported HTTP version")
+            self.method = m.decode("utf-8", "replace")
+            self.target = t.decode("utf-8", "replace")
+            self.http10 = v[7:8] == b"0"
+            self.state = Q_HEADERS
+        else:
+            self._on_header_line(line)
+
+    def _on_header_line(self, line):
+        if not line:
+            if self.content_length > 0:
+                self.remaining = self.content_length
+                self.state = Q_BODY_FIXED
+            else:
+                self._finish()
+            return
+        self.headers += 1
+        if self.headers > MAX_HEADERS:
+            raise ProtoError("too many headers")
+        colon = line.find(b":")
+        if colon < 0:
+            raise ProtoError("header line without ':'")
+        name = line[:colon].lower()
+        value = _trim(line[colon + 1 :])
+        if name == b"content-length":
+            n = _parse_decimal(value)
+            if n is None:
+                raise ProtoError("invalid Content-Length")
+            self.content_length = n
+        elif name == b"transfer-encoding":
+            raise ProtoError("chunked request bodies are unsupported")
+        elif name == b"connection":
+            for token in value.split(b","):
+                token = _trim(token).lower()
+                if token == b"close":
+                    self.saw_close = True
+                elif token == b"keep-alive":
+                    self.saw_keepalive = True
+
+    def _finish(self):
+        close = self.saw_close or (self.http10 and not self.saw_keepalive)
+        self.done.append((self.method, self.target, close, self.content_length))
+        self.method = ""
+        self.target = ""
+        self.http10 = False
+        self.saw_close = False
+        self.saw_keepalive = False
+        self.content_length = 0
+        self.headers = 0
+        self.remaining = 0
+        self.state = None
+
+
+def from_http_status(status):
+    """metrics::SampleOutcome::from_http_status, as a label."""
+    if 200 <= status <= 299:
+        return "success"
+    if status in (429, 503):
+        return "denied"
+    return "service_error"
+
+
+# ---------------------------------------------------------------------------
+# Replays
+# ---------------------------------------------------------------------------
+
+
+def parse_all(data):
+    p = RespParser(capture=True)
+    p.feed(data)
+    out = []
+    while True:
+        r = p.pop()
+        if r is None:
+            return out
+        out.append(r)
+
+
+def unit_tests():
+    # content_length_response_round_trips
+    raw = write_response(200, b"hello", False)
+    (r,) = parse_all(raw)
+    assert (r.status, r.body, r.close) == (200, b"hello", False)
+    assert write_response(r.status, r.body, r.close) == raw
+
+    # chunked_body_with_trailers_decodes
+    raw = (
+        b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n"
+        b"4\r\nwiki\r\n5;ext=1\r\npedia\r\n0\r\nX-Sum: 9\r\n\r\n"
+    )
+    (r,) = parse_all(raw)
+    assert (r.body, r.body_len, r.close) == (b"wikipedia", 9, False)
+
+    # pipelined_responses_pop_in_order
+    raw = (
+        write_response(200, b"a", False)
+        + write_response(503, b"busy", False)
+        + write_response(500, b"boom", True)
+    )
+    rs = parse_all(raw)
+    assert [r.status for r in rs] == [200, 503, 500]
+    assert sum(1 for r in rs if r.close) == 1
+
+    # interim_1xx_is_consumed_and_counted
+    raw = b"HTTP/1.1 100 Continue\r\n\r\nHTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok"
+    (r,) = parse_all(raw)
+    assert (r.status, r.interim) == (200, 1)
+
+    # read_until_eof_body_completes_on_eof
+    p = RespParser(capture=True)
+    p.feed(b"HTTP/1.0 200 OK\r\n\r\nstreamed")
+    assert p.pop() is None
+    p.eof()
+    r = p.pop()
+    assert (r.body, r.close) == (b"streamed", True)
+
+    # http10_defaults_to_close_unless_keepalive
+    assert parse_all(b"HTTP/1.0 200 OK\r\nContent-Length: 0\r\n\r\n")[0].close
+    assert not parse_all(
+        b"HTTP/1.0 200 OK\r\nConnection: Keep-Alive\r\nContent-Length: 0\r\n\r\n"
+    )[0].close
+    assert parse_all(b"HTTP/1.1 200 OK\r\nConnection: close\r\nContent-Length: 0\r\n\r\n")[0].close
+
+    # no_body_statuses_need_no_content_length
+    r = parse_all(b"HTTP/1.1 204 No Content\r\n\r\n")[0]
+    assert (r.status, r.body_len) == (204, 0)
+    r = parse_all(b"HTTP/1.1 304 Not Modified\r\nContent-Length: 99\r\n\r\n")[0]
+    assert (r.status, r.body_len) == (304, 0)
+
+    # malformed_input_errors_instead_of_panicking
+    for bad in [
+        b"GARBAGE\r\n\r\n",
+        b"HTTP/2 200 OK\r\n\r\n",
+        b"HTTP/1.1 2xx Nope\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\nContent-Length: twelve\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\nNoColonHere\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\n folded: value\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n",
+        b"HTTP/1.1 200 OK\r\nContent-Length: 1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        b"HTTP/1.1 101 Switching Protocols\r\n\r\n",
+    ]:
+        p = RespParser()
+        try:
+            p.feed(bad)
+        except ProtoError:
+            continue
+        raise AssertionError(f"must reject {bad!r}")
+
+    # eof_mid_response_is_an_error
+    p = RespParser()
+    p.feed(b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nhal")
+    try:
+        p.eof()
+        raise AssertionError("EOF mid-body must error")
+    except ProtoError:
+        pass
+    p = RespParser()
+    p.feed(b"HTTP/1.1 200 OK\r\nConte")
+    try:
+        p.eof()
+        raise AssertionError("EOF mid-header must error")
+    except ProtoError:
+        pass
+    RespParser().eof()  # clean between messages
+
+    # request_round_trips_through_the_server_parser
+    q = ReqParser()
+    q.feed(write_request(42, False) + write_request(43, True))
+    assert q.pop() == ("GET", "/diperf?seq=42", False, 0)
+    assert q.pop() == ("GET", "/diperf?seq=43", True, 0)
+    assert q.pop() is None and not q.mid_message()
+
+    # request_with_body_is_consumed
+    q = ReqParser()
+    q.feed(b"POST /x HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdGET / HTTP/1.1\r\n\r\n")
+    r1, r2 = q.pop(), q.pop()
+    assert (r1[0], r1[3]) == ("POST", 4)
+    assert r2[0] == "GET"
+
+    print("  unit tests: ok")
+
+
+# (name, transcript file, needs_eof, [(status, body, close, interim)])
+GOLDEN = [
+    ("simple_200", "simple_200.bin", False, [(200, b"ok\n", False, 0)]),
+    ("chunked_trailers", "chunked_trailers.bin", False, [(200, b"wikipedia", False, 0)]),
+    (
+        "pipelined_three",
+        "pipelined_three.bin",
+        False,
+        [(200, b"ok\n", False, 0), (503, b"denied\n", False, 0), (500, b"error\n", True, 0)],
+    ),
+    ("interim_100", "interim_100.bin", False, [(200, b"done", False, 1)]),
+    ("close_eof", "close_eof.bin", True, [(200, b"streamed until close", True, 0)]),
+]
+
+
+def golden_fixtures():
+    def run(data, pieces, needs_eof):
+        p = RespParser(capture=True)
+        for piece in pieces:
+            p.feed(piece)
+        if needs_eof:
+            p.eof()
+        assert not p.mid_message(), "transcript must end on a message boundary"
+        out = []
+        while True:
+            r = p.pop()
+            if r is None:
+                return out
+            out.append(r)
+
+    for name, fname, needs_eof, want in GOLDEN:
+        data = open(os.path.join(FIXTURES, fname), "rb").read()
+        variants = [("whole", [data])]
+        for split in range(len(data) + 1):
+            variants.append((f"split@{split}", [data[:split], data[split:]]))
+        variants.append(("dribble", [data[i : i + 1] for i in range(len(data))]))
+        for label, pieces in variants:
+            got = run(data, pieces, needs_eof)
+            assert len(got) == len(want), f"{name}/{label}: {len(got)} responses"
+            for g, w in zip(got, want):
+                assert (g.status, g.body, g.close, g.interim) == w, f"{name}/{label}: {g.key()}"
+
+    # Content-Length transcripts re-serialize byte-exactly
+    for fname in ("simple_200.bin", "pipelined_three.bin"):
+        data = open(os.path.join(FIXTURES, fname), "rb").read()
+        reser = b"".join(write_response(r.status, r.body, r.close) for r in parse_all(data))
+        assert reser == data, f"{fname}: re-serialization drifted"
+
+    # golden requests match the serializer and round-trip at every split
+    ka = open(os.path.join(FIXTURES, "request_keepalive.bin"), "rb").read()
+    cl = open(os.path.join(FIXTURES, "request_close.bin"), "rb").read()
+    assert ka == write_request(7, False), "request_keepalive.bin drifted"
+    assert cl == write_request(8, True), "request_close.bin drifted"
+    both = ka + cl
+    for split in range(len(both) + 1):
+        q = ReqParser()
+        q.feed(both[:split])
+        q.feed(both[split:])
+        assert q.pop() == ("GET", "/diperf?seq=7", False, 0)
+        assert q.pop() == ("GET", "/diperf?seq=8", True, 0)
+        assert q.pop() is None and not q.mid_message()
+
+    # status → outcome taxonomy
+    for status, want in [
+        (200, "success"),
+        (204, "success"),
+        (429, "denied"),
+        (503, "denied"),
+        (400, "service_error"),
+        (500, "service_error"),
+    ]:
+        assert from_http_status(status) == want
+
+    print("  golden fixtures (whole + every split + dribble): ok")
+
+
+def property_tests():
+    # arbitrary_bytes_never_panic_either_parser — same draws, same order
+    alphabet = b"HTTP/1.0 2045x\r\n:; -OKContent-LghTransfer\tEncoding"
+
+    def no_panic(rng):
+        def byte(r):
+            if r.chance(0.7):
+                return alphabet[r.next_below(len(alphabet))]
+            return r.next_u64() & 0xFF
+
+        data = bytes(gen_vec(rng, 0, 600, byte))
+        p = RespParser(capture=True)
+        q = ReqParser()
+        fed_ok = True
+        try:
+            p.feed(data)
+        except ProtoError:
+            fed_ok = False
+        try:
+            q.feed(data)
+        except ProtoError:
+            pass
+        while q.pop() is not None:
+            pass
+        if fed_ok:
+            try:
+                p.eof()
+            except ProtoError:
+                pass
+            while p.pop() is not None:
+                pass
+        return None
+
+    forall(400, no_panic)
+
+    # generated_pipelines_survive_arbitrary_tearing_and_reserialize
+    statuses = [200, 400, 404, 418, 500, 503]
+
+    def pipelines(rng):
+        n = 1 + rng.next_below(3)
+        stream = b""
+        want = []
+        for k in range(n):
+            status = statuses[rng.next_below(len(statuses))]
+            body = bytes(gen_vec(rng, 0, 48, lambda r: r.next_u64() & 0xFF))
+            close = k == n - 1 and rng.chance(0.5)
+            stream += write_response(status, body, close)
+            want.append((status, body, close))
+        split = rng.next_below(len(stream) + 1)
+        p = RespParser(capture=True)
+        p.feed(stream[:split])
+        p.feed(stream[split:])
+        got = []
+        while True:
+            r = p.pop()
+            if r is None:
+                break
+            got.append(r)
+        if len(got) != len(want):
+            return "every pipelined response surfaces"
+        reser = b""
+        for g, w in zip(got, want):
+            if (g.status, g.body, g.close) != w:
+                return "response fields preserved across the tear"
+            reser += write_response(g.status, g.body, g.close)
+        if reser != stream:
+            return "byte-exact re-serialization"
+        return None
+
+    forall(250, pipelines)
+    print("  property rings (400 fuzz + 250 pipeline cases): ok")
+
+
+def main():
+    print("http11 mirror:")
+    unit_tests()
+    golden_fixtures()
+    property_tests()
+    print("all mirrored http11 assertions hold")
+
+
+if __name__ == "__main__":
+    main()

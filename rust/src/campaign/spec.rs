@@ -15,6 +15,7 @@ use crate::scenario;
 use crate::services::gram_prews::GramPrewsParams;
 use crate::services::gram_ws::GramWsParams;
 use crate::services::http::HttpParams;
+use crate::services::http11::Http11Params;
 
 /// A target service selected by name on the campaign's service axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,10 +26,13 @@ pub enum ServiceSel {
     GramWs,
     /// Apache + CGI (default calibration).
     Http,
+    /// Apache + CGI behind the HTTP/1.1 protocol model (default
+    /// calibration).
+    Http11,
 }
 
 /// Service names accepted on the campaign `services` axis.
-pub const SERVICE_NAMES: [&str; 3] = ["gram_prews", "gram_ws", "http"];
+pub const SERVICE_NAMES: [&str; 4] = ["gram_prews", "gram_ws", "http", "http11"];
 
 impl ServiceSel {
     /// Parse a service-axis name; errors list the accepted names.
@@ -37,6 +41,7 @@ impl ServiceSel {
             "gram_prews" => ServiceSel::GramPrews,
             "gram_ws" => ServiceSel::GramWs,
             "http" => ServiceSel::Http,
+            "http11" => ServiceSel::Http11,
             other => bail!(
                 "unknown service {other:?}; available services: {}",
                 SERVICE_NAMES.join(", ")
@@ -52,6 +57,7 @@ impl ServiceSel {
             ServiceSel::GramPrews => ServiceKind::GramPrews(GramPrewsParams::default()),
             ServiceSel::GramWs => ServiceKind::GramWs(GramWsParams::default()),
             ServiceSel::Http => ServiceKind::Http(HttpParams::default()),
+            ServiceSel::Http11 => ServiceKind::Http11(Http11Params::default()),
         }
     }
 
@@ -67,6 +73,7 @@ impl ServiceSel {
             ServiceSel::GramPrews => "gram_prews",
             ServiceSel::GramWs => "gram_ws",
             ServiceSel::Http => "http",
+            ServiceSel::Http11 => "http11",
         }
     }
 }
@@ -280,6 +287,7 @@ mod tests {
             assert_eq!(ServiceSel::parse(name).unwrap().name(), name);
         }
         assert_eq!(ServiceSel::Http.label(), "apache-cgi");
+        assert_eq!(ServiceSel::Http11.label(), "apache-cgi-http11");
     }
 
     #[test]

@@ -290,6 +290,13 @@ fn apply_service_overrides(
             set_f64(s, "cgi_demand_s", &mut p.cgi_demand_s)?;
             set_usize(s, "max_concurrent", &mut p.max_concurrent)?;
         }
+        ServiceKind::Http11(p) => {
+            set_f64(s, "cgi_demand_s", &mut p.base.cgi_demand_s)?;
+            set_usize(s, "max_concurrent", &mut p.base.max_concurrent)?;
+            set_f64(s, "parse_overhead_s", &mut p.parse_overhead_s)?;
+            set_f64(s, "connect_overhead_s", &mut p.connect_overhead_s)?;
+            set_f64(s, "keepalive_s", &mut p.keepalive_s)?;
+        }
     }
     Ok(())
 }
@@ -389,6 +396,7 @@ pub fn campaign_from_toml(text: &str) -> Result<crate::campaign::CampaignSpec> {
 /// client_interval_s = 0.1
 /// target = "ps"           # in-process target kind (ps | http)
 /// # target_addr = "svc.example.org:8080"   # external endpoint instead
+/// protocol = "http11"     # target protocol: wire (default) | http11
 /// skew_max_s = 500.0
 /// backend = "reactor"     # agent hosting: thread (default) | reactor
 /// workers = 4             # reactor event-loop threads (0 = per core)
@@ -439,6 +447,10 @@ pub fn live_from_toml(text: &str) -> Result<crate::live::LiveConfig> {
     if let Some(v) = sec.get("target_addr") {
         let addr = v.as_str().context("target_addr must be a string")?;
         cfg.target = TargetSel::External(addr.to_string());
+    }
+    if let Some(v) = sec.get("protocol") {
+        let name = v.as_str().context("protocol must be a string")?;
+        cfg.protocol = live::ProtocolKind::parse(name)?;
     }
     live::validate(&cfg)?;
     Ok(cfg)
@@ -638,6 +650,15 @@ mod tests {
         )
         .unwrap();
         assert!(matches!(cfg.target, TargetSel::External(ref a) if a == "svc:8080"));
+        // protocol key selects http11; omitting it keeps the wire codec
+        let cfg = live_from_toml("[live]\nprotocol = \"http11\"\n").unwrap();
+        assert_eq!(cfg.protocol, crate::live::ProtocolKind::Http11);
+        let cfg = live_from_toml("[live]\n").unwrap();
+        assert_eq!(cfg.protocol, crate::live::ProtocolKind::Wire);
+        let e = live_from_toml("[live]\nprotocol = \"gopher\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("wire") && e.contains("http11"), "{e}");
         // loud failures: missing section, bad preset, bad target name,
         // degenerate values
         assert!(live_from_toml("preset = \"quick_http\"\n").is_err());

@@ -42,6 +42,7 @@ use crate::services::{
     gram_prews::{GramPrews, GramPrewsParams},
     gram_ws::{GramWs, GramWsParams},
     http::{HttpParams, HttpService},
+    http11::{Http11Params, Http11Service},
     Service, ServiceStats, SvcOut,
 };
 use crate::sim::{Engine, QueueKind, SimDuration, SimTime};
@@ -61,6 +62,9 @@ pub enum ServiceKind {
     GramWs(GramWsParams),
     /// Apache + CGI model.
     Http(HttpParams),
+    /// Apache + CGI behind a real HTTP/1.1 front end (connect, parse
+    /// and keep-alive costs modeled) — the `--protocol http11` twin.
+    Http11(Http11Params),
 }
 
 impl ServiceKind {
@@ -81,6 +85,11 @@ impl ServiceKind {
                 p.speed = speed;
                 Box::new(HttpService::new(p))
             }
+            ServiceKind::Http11(p) => {
+                let mut p = p.clone();
+                p.base.speed = speed;
+                Box::new(Http11Service::new(p))
+            }
         }
     }
 
@@ -90,6 +99,7 @@ impl ServiceKind {
             ServiceKind::GramPrews(_) => "gt3.2-prews-gram",
             ServiceKind::GramWs(_) => "gt3.2-ws-gram",
             ServiceKind::Http(_) => "apache-cgi",
+            ServiceKind::Http11(_) => "apache-cgi-http11",
         }
     }
 }

@@ -22,7 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::ids::{NodeId, RequestId, TesterId};
-use crate::live::target::{self, OUT_DENIED, OUT_OK};
+use crate::live::proto::{self, CallVerdict, ProtoClient, ProtocolKind};
 use crate::live::timeserver::{sync_exchange, LiveClock};
 use crate::live::wire::{self, WireUp};
 use crate::metrics::{CallSample, SampleOutcome};
@@ -41,12 +41,27 @@ pub enum CallMode {
     /// The in-process target's 1-byte request/outcome protocol over a
     /// held-open connection ([`crate::live::target`]).
     Framed(SocketAddr),
+    /// HTTP/1.1 keep-alive GETs against the address — the in-process
+    /// target in HTTP mode, or any real web server.  Outcomes come
+    /// from status codes ([`crate::live::proto::http11`]).
+    Http(SocketAddr),
     /// Any real endpoint (`--target-addr`): each client is a TCP
     /// connect probe — success is an accepted connection within the
     /// timeout.  The most generic client that works against arbitrary
     /// services, in the spirit of §3's "clients are full blown
     /// executables".
     ConnectProbe(String),
+}
+
+impl CallMode {
+    /// The protocol engine this mode drives over its connection
+    /// (`ConnectProbe` never exchanges bytes; `Wire` is a placeholder).
+    pub fn protocol(&self) -> ProtocolKind {
+        match self {
+            CallMode::Framed(_) | CallMode::ConnectProbe(_) => ProtocolKind::Wire,
+            CallMode::Http(_) => ProtocolKind::Http11,
+        }
+    }
 }
 
 /// Everything one agent thread needs.
@@ -109,19 +124,64 @@ fn is_timeout(e: &io::Error) -> bool {
     )
 }
 
-/// One client invocation against the target; `conn` caches the framed
-/// connection across calls (dropped to resynchronize after a timeout,
-/// because the stale response byte would otherwise answer the *next*
-/// request).
+/// Drive one request/verdict exchange over a blocking stream through a
+/// protocol engine ([`ProtoClient`]) — the same engine the reactor
+/// drives nonblocking.  The caller owns timeouts (via
+/// `set_read_timeout`) and connection caching.
+fn proto_call(
+    c: &mut TcpStream,
+    proto: &mut dyn ProtoClient,
+    seq: u32,
+) -> io::Result<CallVerdict> {
+    use std::io::{Read, Write};
+    let mut out = Vec::with_capacity(128);
+    proto.emit_request(&mut out, seq);
+    c.write_all(&out)?;
+    c.flush()?;
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = c.read(&mut buf)?;
+        if n == 0 {
+            return match proto.on_eof() {
+                Ok(Some(v)) => Ok(v),
+                Ok(None) => Err(io::ErrorKind::UnexpectedEof.into()),
+                Err(e) => {
+                    Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+                }
+            };
+        }
+        if let Err(e) = proto.on_bytes(&buf[..n]) {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string()));
+        }
+        if let Some(v) = proto.next_verdict() {
+            return Ok(v);
+        }
+    }
+}
+
+/// One client invocation against the target; `conn` caches the
+/// connection across calls (dropped to resynchronize after a timeout
+/// or protocol violation, because a stale response would otherwise
+/// answer the *next* request — and dropped when the protocol demands
+/// it, e.g. HTTP `Connection: close`).
 fn do_call(
     mode: &CallMode,
     probe_addr: Option<SocketAddr>,
     conn: &mut Option<TcpStream>,
     timeout_s: f64,
+    proto: &mut dyn ProtoClient,
+    seq: u32,
 ) -> SampleOutcome {
     let timeout = call_timeout(timeout_s);
     match mode {
-        CallMode::Framed(addr) => {
+        CallMode::Framed(addr) | CallMode::Http(addr) => {
+            if proto.next_verdict().is_some() {
+                // an unsolicited response is queued: the connection is
+                // out of sync (exactly the stale-byte hazard) — resync
+                // by starting over on a fresh transport
+                *conn = None;
+                proto.reset();
+            }
             if conn.is_none() {
                 match TcpStream::connect_timeout(addr, timeout) {
                     Ok(c) => {
@@ -134,12 +194,17 @@ fn do_call(
             }
             let c = conn.as_mut().expect("connection established above");
             let _ = c.set_read_timeout(Some(timeout));
-            match target::call(c) {
-                Ok(OUT_OK) => SampleOutcome::Success,
-                Ok(OUT_DENIED) => SampleOutcome::Denied,
-                Ok(_) => SampleOutcome::ServiceError,
+            match proto_call(c, proto, seq) {
+                Ok(v) => {
+                    if v.close {
+                        *conn = None;
+                        proto.reset();
+                    }
+                    v.outcome
+                }
                 Err(e) => {
                     *conn = None;
+                    proto.reset();
                     if is_timeout(&e) {
                         SampleOutcome::Timeout
                     } else {
@@ -163,13 +228,14 @@ fn do_call(
 }
 
 /// Measure one connect round trip to seed the tester's network-latency
-/// estimate; for the framed mode the connection is kept for calls.
+/// estimate; for the held-connection modes (framed, HTTP keep-alive)
+/// the connection is kept for calls.
 fn probe(
     mode: &CallMode,
     probe_addr: Option<SocketAddr>,
 ) -> (f64, Option<TcpStream>) {
     let addr = match mode {
-        CallMode::Framed(a) => Some(*a),
+        CallMode::Framed(a) | CallMode::Http(a) => Some(*a),
         CallMode::ConnectProbe(_) => probe_addr,
     };
     let Some(addr) = addr else { return (0.0, None) };
@@ -179,7 +245,7 @@ fn probe(
             let _ = c.set_nodelay(true);
             let rtt = t0.elapsed().as_secs_f64();
             match mode {
-                CallMode::Framed(_) => (rtt, Some(c)),
+                CallMode::Framed(_) | CallMode::Http(_) => (rtt, Some(c)),
                 CallMode::ConnectProbe(_) => (rtt, None),
             }
         }
@@ -260,13 +326,14 @@ pub fn run_agent(p: AgentParams) -> AgentReport {
         CallMode::ConnectProbe(s) => {
             s.to_socket_addrs().ok().and_then(|mut it| it.next())
         }
-        CallMode::Framed(a) => Some(*a),
+        CallMode::Framed(a) | CallMode::Http(a) => Some(*a),
     };
 
     let mut t = Tester::new(TesterId(p.id), NodeId(p.id));
     t.start(p.clock.now_s(), desc);
     let (rtt, mut target_conn) = probe(&p.call, probe_addr);
     t.latency_estimate_s = rtt / 2.0;
+    let mut proto = proto::client_for(p.call.protocol());
 
     let mut ts_conn: Option<TcpStream> = TcpStream::connect(p.ts_addr).ok();
     let mut buf: Vec<CallSample> = Vec::new();
@@ -335,8 +402,14 @@ pub fn run_agent(p: AgentParams) -> AgentReport {
         let req = RequestId(t.seq);
         t.launch(launch_local, req);
         rep.calls += 1;
-        let outcome =
-            do_call(&p.call, probe_addr, &mut target_conn, desc.timeout_s);
+        let outcome = do_call(
+            &p.call,
+            probe_addr,
+            &mut target_conn,
+            desc.timeout_s,
+            proto.as_mut(),
+            req.0,
+        );
         let done_local = p.clock.now_s();
         if let Some(s) = t.record_result(done_local, req, outcome, 0.0) {
             buf.push(s);

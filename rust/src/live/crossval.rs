@@ -22,8 +22,9 @@ use crate::experiment::{
     run_experiment_opts, ExperimentConfig, RunOptions, ServiceKind,
 };
 use crate::cluster::TestbedParams;
-use crate::live::{LiveConfig, LiveResult, TargetSel};
+use crate::live::{LiveConfig, LiveResult, ProtocolKind, TargetSel};
 use crate::metrics::{Binned, CollectionMode};
+use crate::services::http11::Http11Params;
 use crate::scenario::Scenario;
 use crate::transport::ClientCode;
 
@@ -67,15 +68,24 @@ pub struct CrossVal {
 /// The simulator configuration that mirrors a live spec: same agent
 /// count, controller policy and test description, the in-process
 /// target's calibration as the service model, and a quiet LAN testbed
-/// (the live run is loopback).  `None` for an external target — there
-/// is no model to validate against.
+/// (the live run is loopback).  An HTTP/1.1 live run maps onto the
+/// [`crate::services::http11`] twin, which additionally accounts the
+/// protocol's parse/connect/keep-alive costs.  `None` for an external
+/// target — there is no model to validate against.
 pub fn sim_twin(cfg: &LiveConfig) -> Option<ExperimentConfig> {
     let TargetSel::InProcess(kind) = &cfg.target else {
         return None;
     };
+    let service = match cfg.protocol {
+        ProtocolKind::Wire => ServiceKind::Http(kind.http_params()),
+        ProtocolKind::Http11 => ServiceKind::Http11(Http11Params {
+            base: kind.http_params(),
+            ..Http11Params::default()
+        }),
+    };
     Some(ExperimentConfig {
         seed: cfg.seed,
-        service: ServiceKind::Http(kind.http_params()),
+        service,
         testbed: TestbedParams::lan(cfg.agents),
         controller: cfg.controller.clone(),
         code: ClientCode::Custom(10_000),
@@ -305,6 +315,19 @@ mod tests {
             cfg.controller.desc.duration_s
         );
         assert!(matches!(twin.service, ServiceKind::Http(_)));
+
+        // the http11 protocol selects the protocol-aware twin, with
+        // the same Apache core calibration underneath
+        let mut h = cfg.clone();
+        h.protocol = ProtocolKind::Http11;
+        let twin = sim_twin(&h).expect("http11 in-process target has a twin");
+        match twin.service {
+            ServiceKind::Http11(p) => {
+                assert_eq!(p.base.max_concurrent, 150);
+                assert!(p.parse_overhead_s > 0.0);
+            }
+            other => panic!("wrong twin service: {other:?}"),
+        }
 
         let mut ext = cfg;
         ext.target = TargetSel::External("127.0.0.1:9".into());

@@ -23,7 +23,12 @@
 //! * an in-process TCP **target** implements the queueing/overhead
 //!   disciplines of the simulated services so CI needs no external
 //!   dependency ([`target`]); `--target-addr` points the agents at any
-//!   real endpoint instead.
+//!   real endpoint instead;
+//! * the bytes agents put on the target socket come from a pluggable
+//!   **protocol** layer ([`proto`]): the compact framed codec the
+//!   harness started with, or a real incremental HTTP/1.1 client
+//!   (`--protocol http11`) whose status codes feed the same
+//!   success/denial/error accounting.
 //!
 //! Live samples flow through the same
 //! [`crate::metrics::StreamAgg`]/[`crate::metrics::AnalysisGrid`]
@@ -37,12 +42,13 @@
 pub mod agent;
 pub mod controller;
 pub mod crossval;
+pub mod proto;
 pub mod reactor;
 pub mod target;
 pub mod timeserver;
 pub mod wire;
 
-use std::net::TcpListener;
+use std::net::{TcpListener, ToSocketAddrs};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -55,6 +61,7 @@ use crate::transport::TestDescription;
 use crate::util::Pcg64;
 
 pub use agent::{AgentParams, AgentReport, CallMode};
+pub use proto::{ProtocolKind, PROTOCOL_NAMES};
 pub use target::{target_by_name, PsTargetParams, Target, TargetKind, TARGET_NAMES};
 pub use timeserver::{LiveClock, TimeServer};
 
@@ -100,8 +107,11 @@ impl AgentBackend {
 pub enum TargetSel {
     /// Spawn the in-process TCP target (CI needs no external service).
     InProcess(TargetKind),
-    /// Call an existing endpoint (`host:port`); clients are connect
-    /// probes, and no sim cross-validation is possible.
+    /// Call an existing endpoint (`host:port`).  Under the wire
+    /// protocol the clients degrade to connect probes (an arbitrary
+    /// server does not speak the framed codec, and no sim
+    /// cross-validation is possible); under HTTP/1.1 they issue real
+    /// `GET`s and account the status codes.
     External(String),
 }
 
@@ -145,6 +155,9 @@ pub struct LiveConfig {
     /// Reactor worker threads (0 = one per available core); ignored by
     /// the thread backend.
     pub workers: usize,
+    /// What the agents speak on the target socket ([`proto`]): the
+    /// framed codec, or incremental HTTP/1.1.
+    pub protocol: ProtocolKind,
 }
 
 /// Everything a finished live run produces.
@@ -167,6 +180,8 @@ pub struct LiveResult {
     pub service_stats: Option<ServiceStats>,
     /// Target label for reports.
     pub target_label: String,
+    /// Protocol label for reports ([`ProtocolKind::label`]).
+    pub protocol_label: &'static str,
 }
 
 impl LiveResult {
@@ -222,6 +237,7 @@ pub fn live_smoke(seed: u64) -> LiveConfig {
         drift_max: 100e-6,
         backend: AgentBackend::Thread,
         workers: 0,
+        protocol: ProtocolKind::Wire,
     }
 }
 
@@ -336,18 +352,38 @@ enum Pool {
 /// back the same streaming state a simulated run produces.
 pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
     validate(cfg)?;
-    let base = LiveClock::ideal();
-    let mut ts = TimeServer::spawn(base).context("spawning time server")?;
     let mut target_handle: Option<Target> = None;
     let call = match &cfg.target {
         TargetSel::InProcess(kind) => {
-            let t = Target::spawn(kind, cfg.seed).context("spawning target")?;
+            let t = Target::spawn_proto(kind, cfg.protocol, cfg.seed)
+                .context("spawning target")?;
             let addr = t.addr;
             target_handle = Some(t);
-            CallMode::Framed(addr)
+            match cfg.protocol {
+                ProtocolKind::Wire => CallMode::Framed(addr),
+                ProtocolKind::Http11 => CallMode::Http(addr),
+            }
         }
-        TargetSel::External(addr) => CallMode::ConnectProbe(addr.clone()),
+        TargetSel::External(addr) => match cfg.protocol {
+            ProtocolKind::Wire => CallMode::ConnectProbe(addr.clone()),
+            ProtocolKind::Http11 => {
+                // resolve eagerly: a bad address should fail the run
+                // loudly, not degrade every call into a start failure
+                let resolved = addr
+                    .to_socket_addrs()
+                    .with_context(|| {
+                        format!("resolving target address {addr:?}")
+                    })?
+                    .next()
+                    .with_context(|| {
+                        format!("target address {addr:?} resolved to nothing")
+                    })?;
+                CallMode::Http(resolved)
+            }
+        },
     };
+    let base = LiveClock::ideal();
+    let mut ts = TimeServer::spawn(base).context("spawning time server")?;
     let listener =
         TcpListener::bind("127.0.0.1:0").context("binding controller")?;
     let ctrl_addr = listener.local_addr()?;
@@ -456,6 +492,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
         agent_reports,
         service_stats,
         target_label: cfg.target.label(),
+        protocol_label: cfg.protocol.label(),
     })
 }
 
@@ -519,6 +556,24 @@ mod tests {
         assert_eq!(effective_workers(16, 3), 3);
         assert!(effective_workers(0, 1000) >= 1);
         assert_eq!(effective_workers(0, 1), 1);
+    }
+
+    #[test]
+    fn presets_default_to_the_wire_protocol() {
+        for name in NAMES {
+            assert_eq!(by_name(name, 1).unwrap().protocol, ProtocolKind::Wire);
+        }
+    }
+
+    #[test]
+    fn external_http11_rejects_an_unresolvable_address() {
+        // "no port" is malformed before any DNS is attempted, so the
+        // eager resolution in run_live must fail loudly
+        let mut cfg = live_smoke(1);
+        cfg.target = TargetSel::External("not-an-addr".into());
+        cfg.protocol = ProtocolKind::Http11;
+        let e = run_live(&cfg).unwrap_err().to_string();
+        assert!(e.contains("not-an-addr"), "unexpected error: {e}");
     }
 
     #[test]

@@ -1,0 +1,924 @@
+//! Incremental, allocation-light HTTP/1.1 codec.
+//!
+//! One parser, two integrations: the blocking thread-per-agent backend
+//! and the reactor's nonblocking state machines both drive the exact
+//! same [`RespParser`] byte stream in, [`Response`]s out.  The parser
+//! is a flat state machine that accepts input **torn at any byte
+//! boundary** — a property the conformance suite
+//! (`rust/tests/http11_conformance.rs`) enforces by replaying golden
+//! transcripts split at every offset.
+//!
+//! Covered: status lines, headers, `Content-Length` and chunked bodies
+//! (with trailers), keep-alive vs `Connection: close` (plus HTTP/1.0
+//! defaults), read-until-EOF bodies, pipelined responses, and 1xx
+//! interim responses interleaved before the final one.  Out of scope,
+//! by design: upgrades (101), obsolete header folding, and chunked
+//! *request* bodies — all rejected loudly rather than misparsed.
+//!
+//! ```
+//! use diperf::live::proto::http11::{write_response, RespParser};
+//!
+//! let mut bytes = Vec::new();
+//! write_response(&mut bytes, 200, b"ok", false);
+//! let mut p = RespParser::new();
+//! p.feed(&bytes).unwrap();
+//! let r = p.pop().unwrap();
+//! assert_eq!((r.status, r.body_len, r.close), (200, 2, false));
+//! ```
+//!
+//! Failure accounting: status codes map onto the paper's §3 taxonomy
+//! via [`SampleOutcome::from_http_status`] (2xx → success, 429/503 →
+//! denied, everything else → service error).
+//!
+//! [`SampleOutcome::from_http_status`]: crate::metrics::SampleOutcome::from_http_status
+
+use std::collections::VecDeque;
+use std::mem;
+
+use super::{CallVerdict, ProtoClient, ProtoError};
+use crate::metrics::SampleOutcome;
+
+/// Longest accepted status/header/chunk-size line, in bytes.  A peer
+/// that exceeds it is talking garbage (or attacking); poison the
+/// connection instead of buffering without bound.
+pub const MAX_LINE: usize = 8 * 1024;
+
+/// Most headers accepted per message.
+pub const MAX_HEADERS: u32 = 100;
+
+fn err(msg: impl Into<String>) -> ProtoError {
+    ProtoError(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Serializers
+// ---------------------------------------------------------------------------
+
+/// Serialize the agent's GET request for invocation `seq` (appended to
+/// `out`; the query string carries the sequence number so transcripts
+/// stay greppable).
+pub fn write_request(out: &mut Vec<u8>, seq: u32, close: bool) {
+    use std::io::Write as _;
+    let conn = if close { "close" } else { "keep-alive" };
+    let _ = write!(
+        out,
+        "GET /diperf?seq={seq} HTTP/1.1\r\nHost: diperf\r\n\
+         User-Agent: diperf-agent\r\nConnection: {conn}\r\n\r\n"
+    );
+}
+
+/// Serialize a `Content-Length` response (the form the in-process
+/// target emits; also the fixture generator for the conformance suite).
+pub fn write_response(out: &mut Vec<u8>, status: u16, body: &[u8], close: bool) {
+    use std::io::Write as _;
+    let conn = if close { "close" } else { "keep-alive" };
+    let _ = write!(
+        out,
+        "HTTP/1.1 {status} {}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        reason_phrase(status),
+        body.len()
+    );
+    out.extend_from_slice(body);
+}
+
+/// Canonical reason phrase for the statuses the live layer emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response parser (client side)
+// ---------------------------------------------------------------------------
+
+/// One complete *final* (non-1xx) HTTP response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    /// Status code from the status line.
+    pub status: u16,
+    /// The connection must be torn down after this response: explicit
+    /// `Connection: close`, an HTTP/1.0 peer without `keep-alive`, or
+    /// a read-until-EOF body.
+    pub close: bool,
+    /// Decoded body length in bytes (after chunked decoding).
+    pub body_len: u64,
+    /// 1xx interim responses consumed before this final one.
+    pub interim: u32,
+    /// Decoded body bytes — captured only under
+    /// [`RespParser::capturing`]; empty in the allocation-light default.
+    pub body: Vec<u8>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RState {
+    /// Accumulating the status line (stray blank lines tolerated).
+    StatusLine,
+    /// Accumulating header lines until the blank separator.
+    Headers,
+    /// Consuming a `Content-Length` body (`remaining` bytes left).
+    BodyFixed,
+    /// Consuming a body delimited only by connection close.
+    BodyUntilEof,
+    /// Accumulating a chunk-size line.
+    ChunkSize,
+    /// Consuming chunk payload (`remaining` bytes left).
+    ChunkData,
+    /// Expecting the bare CRLF that terminates a chunk's payload.
+    ChunkDataEnd,
+    /// Accumulating trailer lines until the blank terminator.
+    Trailers,
+}
+
+/// Streaming HTTP/1.1 response parser.  Feed bytes in any sized
+/// pieces; completed responses queue up and are drained with
+/// [`pop`](Self::pop) (pipelining falls out naturally).  Never panics
+/// on malformed input — protocol violations surface as [`ProtoError`]s
+/// that poison the connection.
+#[derive(Debug)]
+pub struct RespParser {
+    state: RState,
+    line: Vec<u8>,
+    capture: bool,
+    // per-message scratch
+    status: u16,
+    http10: bool,
+    saw_close: bool,
+    saw_keepalive: bool,
+    content_length: Option<u64>,
+    chunked: bool,
+    headers: u32,
+    remaining: u64,
+    body_len: u64,
+    interim: u32,
+    body: Vec<u8>,
+    done: VecDeque<Response>,
+}
+
+impl Default for RespParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RespParser {
+    /// Allocation-light parser: body bytes are counted, not stored.
+    pub fn new() -> RespParser {
+        RespParser {
+            state: RState::StatusLine,
+            line: Vec::new(),
+            capture: false,
+            status: 0,
+            http10: false,
+            saw_close: false,
+            saw_keepalive: false,
+            content_length: None,
+            chunked: false,
+            headers: 0,
+            remaining: 0,
+            body_len: 0,
+            interim: 0,
+            body: Vec::new(),
+            done: VecDeque::new(),
+        }
+    }
+
+    /// Parser that also stores decoded body bytes in
+    /// [`Response::body`] (tests, fixtures, round-trip properties).
+    pub fn capturing() -> RespParser {
+        let mut p = RespParser::new();
+        p.capture = true;
+        p
+    }
+
+    /// Consume received bytes.  All input is always consumed; completed
+    /// responses are queued for [`pop`](Self::pop).
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<(), ProtoError> {
+        let mut i = 0;
+        while i < bytes.len() {
+            match self.state {
+                RState::StatusLine
+                | RState::Headers
+                | RState::ChunkSize
+                | RState::ChunkDataEnd
+                | RState::Trailers => {
+                    let b = bytes[i];
+                    i += 1;
+                    if b == b'\n' {
+                        self.on_line()?;
+                    } else {
+                        if self.line.len() >= MAX_LINE {
+                            return Err(err("line exceeds MAX_LINE"));
+                        }
+                        self.line.push(b);
+                    }
+                }
+                RState::BodyFixed | RState::ChunkData => {
+                    let avail = (bytes.len() - i) as u64;
+                    let take = self.remaining.min(avail) as usize;
+                    self.consume_body(&bytes[i..i + take]);
+                    i += take;
+                    self.remaining -= take as u64;
+                    if self.remaining == 0 {
+                        if self.state == RState::BodyFixed {
+                            self.finish_message(false);
+                        } else {
+                            self.state = RState::ChunkDataEnd;
+                        }
+                    }
+                }
+                RState::BodyUntilEof => {
+                    self.consume_body(&bytes[i..]);
+                    i = bytes.len();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop the next completed response, in arrival order.
+    pub fn pop(&mut self) -> Option<Response> {
+        self.done.pop_front()
+    }
+
+    /// The peer closed the connection.  Legal between messages and at
+    /// the end of a read-until-EOF body (which it completes); an error
+    /// anywhere else.
+    pub fn eof(&mut self) -> Result<(), ProtoError> {
+        if self.state == RState::BodyUntilEof {
+            self.finish_message(true);
+            return Ok(());
+        }
+        if self.mid_message() {
+            return Err(err("peer closed the connection mid-response"));
+        }
+        Ok(())
+    }
+
+    /// Is a response partially parsed right now?
+    pub fn mid_message(&self) -> bool {
+        self.state != RState::StatusLine || !self.line.is_empty() || self.interim > 0
+    }
+
+    /// Forget everything, including queued responses (the transport was
+    /// dropped; anything undelivered is stale).
+    pub fn reset(&mut self) {
+        *self = if self.capture {
+            RespParser::capturing()
+        } else {
+            RespParser::new()
+        };
+    }
+
+    fn consume_body(&mut self, bytes: &[u8]) {
+        self.body_len += bytes.len() as u64;
+        if self.capture {
+            self.body.extend_from_slice(bytes);
+        }
+    }
+
+    /// A full line arrived (terminator stripped below); dispatch on the
+    /// current state.
+    fn on_line(&mut self) -> Result<(), ProtoError> {
+        if self.line.last() == Some(&b'\r') {
+            self.line.pop();
+        }
+        let line = mem::take(&mut self.line);
+        match self.state {
+            RState::StatusLine => self.on_status_line(&line),
+            RState::Headers => self.on_header_line(&line),
+            RState::ChunkSize => self.on_chunk_size(&line),
+            RState::ChunkDataEnd => {
+                if !line.is_empty() {
+                    return Err(err("chunk payload not terminated by CRLF"));
+                }
+                self.state = RState::ChunkSize;
+                Ok(())
+            }
+            RState::Trailers => {
+                if line.is_empty() {
+                    self.finish_message(false);
+                } else if !line.contains(&b':') {
+                    return Err(err("malformed trailer line"));
+                }
+                Ok(())
+            }
+            _ => unreachable!("on_line only fires in line states"),
+        }
+    }
+
+    fn on_status_line(&mut self, line: &[u8]) -> Result<(), ProtoError> {
+        if line.is_empty() {
+            // tolerate a stray CRLF between messages (robustness; some
+            // servers emit one after a final chunk)
+            return Ok(());
+        }
+        // "HTTP/1.x SP 3DIGIT [SP reason]"
+        if line.len() < 12 || !line.starts_with(b"HTTP/1.") {
+            return Err(err("malformed status line"));
+        }
+        let minor = line[7];
+        if minor != b'0' && minor != b'1' {
+            return Err(err("unsupported HTTP version"));
+        }
+        if line[8] != b' ' {
+            return Err(err("malformed status line"));
+        }
+        let d = &line[9..12];
+        if !d.iter().all(|b| b.is_ascii_digit()) {
+            return Err(err("malformed status code"));
+        }
+        if line.len() > 12 && line[12] != b' ' {
+            return Err(err("malformed status line"));
+        }
+        self.status =
+            (d[0] - b'0') as u16 * 100 + (d[1] - b'0') as u16 * 10 + (d[2] - b'0') as u16;
+        self.http10 = minor == b'0';
+        self.state = RState::Headers;
+        Ok(())
+    }
+
+    fn on_header_line(&mut self, line: &[u8]) -> Result<(), ProtoError> {
+        if line.is_empty() {
+            return self.on_headers_end();
+        }
+        self.headers += 1;
+        if self.headers > MAX_HEADERS {
+            return Err(err("too many headers"));
+        }
+        if line[0] == b' ' || line[0] == b'\t' {
+            return Err(err("obsolete header line folding is unsupported"));
+        }
+        let Some(colon) = line.iter().position(|&b| b == b':') else {
+            return Err(err("header line without ':'"));
+        };
+        if colon == 0 {
+            return Err(err("empty header name"));
+        }
+        let name = &line[..colon];
+        let value = trim(&line[colon + 1..]);
+        if name.eq_ignore_ascii_case(b"content-length") {
+            let n = parse_decimal(value).ok_or_else(|| err("invalid Content-Length"))?;
+            if let Some(prev) = self.content_length {
+                if prev != n {
+                    return Err(err("conflicting Content-Length headers"));
+                }
+            }
+            self.content_length = Some(n);
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            if !value.eq_ignore_ascii_case(b"chunked") {
+                return Err(err("unsupported Transfer-Encoding"));
+            }
+            self.chunked = true;
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            for token in value.split(|&b| b == b',') {
+                let token = trim(token);
+                if token.eq_ignore_ascii_case(b"close") {
+                    self.saw_close = true;
+                } else if token.eq_ignore_ascii_case(b"keep-alive") {
+                    self.saw_keepalive = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_headers_end(&mut self) -> Result<(), ProtoError> {
+        if (100..200).contains(&self.status) {
+            if self.status == 101 {
+                // we never request an upgrade, so a 101 is a peer bug
+                return Err(err("unexpected 101 Switching Protocols"));
+            }
+            // interim response: note it, then parse the next status line
+            self.interim += 1;
+            self.clear_message_scratch();
+            self.state = RState::StatusLine;
+            return Ok(());
+        }
+        if self.chunked && self.content_length.is_some() {
+            // request-smuggling shape; refuse rather than pick a winner
+            return Err(err("both Content-Length and Transfer-Encoding"));
+        }
+        if self.chunked {
+            self.state = RState::ChunkSize;
+        } else if self.status == 204 || self.status == 304 {
+            self.finish_message(false);
+        } else {
+            match self.content_length {
+                Some(0) => self.finish_message(false),
+                Some(n) => {
+                    self.remaining = n;
+                    self.state = RState::BodyFixed;
+                }
+                None => self.state = RState::BodyUntilEof,
+            }
+        }
+        Ok(())
+    }
+
+    fn on_chunk_size(&mut self, line: &[u8]) -> Result<(), ProtoError> {
+        // size in hex, optionally followed by ";extensions" (ignored)
+        let digits = match line.iter().position(|&b| b == b';') {
+            Some(p) => &line[..p],
+            None => &line[..],
+        };
+        let digits = trim(digits);
+        let n = parse_hex(digits).ok_or_else(|| err("invalid chunk size"))?;
+        if n == 0 {
+            self.state = RState::Trailers;
+        } else {
+            self.remaining = n;
+            self.state = RState::ChunkData;
+        }
+        Ok(())
+    }
+
+    fn finish_message(&mut self, eof_body: bool) {
+        let close = self.saw_close || (self.http10 && !self.saw_keepalive) || eof_body;
+        let resp = Response {
+            status: self.status,
+            close,
+            body_len: self.body_len,
+            interim: self.interim,
+            body: mem::take(&mut self.body),
+        };
+        self.done.push_back(resp);
+        self.interim = 0;
+        self.clear_message_scratch();
+        self.state = RState::StatusLine;
+    }
+
+    /// Clear per-message fields (keeps `interim`, which spans the 1xx
+    /// prelude of a single call).
+    fn clear_message_scratch(&mut self) {
+        self.status = 0;
+        self.http10 = false;
+        self.saw_close = false;
+        self.saw_keepalive = false;
+        self.content_length = None;
+        self.chunked = false;
+        self.headers = 0;
+        self.remaining = 0;
+        self.body_len = 0;
+        self.body.clear();
+    }
+}
+
+fn trim(mut b: &[u8]) -> &[u8] {
+    while let Some((&f, rest)) = b.split_first() {
+        if f == b' ' || f == b'\t' {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let Some((&l, rest)) = b.split_last() {
+        if l == b' ' || l == b'\t' {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+fn parse_decimal(b: &[u8]) -> Option<u64> {
+    if b.is_empty() || b.len() > 18 {
+        return None;
+    }
+    let mut n: u64 = 0;
+    for &c in b {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        n = n * 10 + (c - b'0') as u64;
+    }
+    Some(n)
+}
+
+fn parse_hex(b: &[u8]) -> Option<u64> {
+    if b.is_empty() || b.len() > 15 {
+        return None;
+    }
+    let mut n: u64 = 0;
+    for &c in b {
+        let d = match c {
+            b'0'..=b'9' => c - b'0',
+            b'a'..=b'f' => c - b'a' + 10,
+            b'A'..=b'F' => c - b'A' + 10,
+            _ => return None,
+        };
+        n = (n << 4) | d as u64;
+    }
+    Some(n)
+}
+
+// ---------------------------------------------------------------------------
+// The client engine (plugs into both agent backends)
+// ---------------------------------------------------------------------------
+
+/// HTTP/1.1 [`ProtoClient`]: serializes keep-alive GETs and folds the
+/// streaming [`RespParser`] into the §3 outcome taxonomy.
+#[derive(Debug, Default)]
+pub struct Http11Client {
+    parser: RespParser,
+}
+
+impl Http11Client {
+    /// Fresh client (allocation-light parser; bodies are counted, not
+    /// stored).
+    pub fn new() -> Http11Client {
+        Http11Client::default()
+    }
+}
+
+impl ProtoClient for Http11Client {
+    fn emit_request(&mut self, out: &mut Vec<u8>, seq: u32) {
+        write_request(out, seq, false);
+    }
+
+    fn on_bytes(&mut self, bytes: &[u8]) -> Result<(), ProtoError> {
+        self.parser.feed(bytes)
+    }
+
+    fn next_verdict(&mut self) -> Option<CallVerdict> {
+        self.parser.pop().map(|r| CallVerdict {
+            outcome: SampleOutcome::from_http_status(r.status),
+            close: r.close,
+        })
+    }
+
+    fn on_eof(&mut self) -> Result<Option<CallVerdict>, ProtoError> {
+        self.parser.eof()?;
+        Ok(self.next_verdict())
+    }
+
+    fn reset(&mut self) {
+        self.parser.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request parser (server side: the in-process HTTP/1.1 target)
+// ---------------------------------------------------------------------------
+
+/// One complete HTTP request as the target sees it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Request method (e.g. `GET`).
+    pub method: String,
+    /// Request target (e.g. `/diperf?seq=42`).
+    pub target: String,
+    /// The client asked to tear the connection down after the response.
+    pub close: bool,
+    /// Request body length consumed (agents send none; external probes
+    /// may).
+    pub body_len: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum QState {
+    RequestLine,
+    Headers,
+    BodyFixed,
+}
+
+/// Streaming HTTP/1.1 *request* parser for the live target.  Accepts
+/// pipelined requests; rejects chunked request bodies (agents never
+/// send them).
+#[derive(Debug, Default)]
+pub struct ReqParser {
+    state: Option<QState>,
+    line: Vec<u8>,
+    method: String,
+    target: String,
+    http10: bool,
+    saw_close: bool,
+    saw_keepalive: bool,
+    content_length: u64,
+    headers: u32,
+    remaining: u64,
+    done: VecDeque<Request>,
+}
+
+impl ReqParser {
+    /// Fresh request parser.
+    pub fn new() -> ReqParser {
+        ReqParser::default()
+    }
+
+    /// Consume received bytes; completed requests queue for
+    /// [`pop`](Self::pop).
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<(), ProtoError> {
+        let mut i = 0;
+        while i < bytes.len() {
+            match self.state.unwrap_or(QState::RequestLine) {
+                QState::RequestLine | QState::Headers => {
+                    let b = bytes[i];
+                    i += 1;
+                    if b == b'\n' {
+                        self.on_line()?;
+                    } else {
+                        if self.line.len() >= MAX_LINE {
+                            return Err(err("line exceeds MAX_LINE"));
+                        }
+                        self.line.push(b);
+                    }
+                }
+                QState::BodyFixed => {
+                    let avail = (bytes.len() - i) as u64;
+                    let take = self.remaining.min(avail) as usize;
+                    i += take;
+                    self.remaining -= take as u64;
+                    if self.remaining == 0 {
+                        self.finish_request();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop the next completed request, in arrival order.
+    pub fn pop(&mut self) -> Option<Request> {
+        self.done.pop_front()
+    }
+
+    /// Is a request partially parsed right now?
+    pub fn mid_message(&self) -> bool {
+        self.state.is_some() || !self.line.is_empty()
+    }
+
+    fn on_line(&mut self) -> Result<(), ProtoError> {
+        if self.line.last() == Some(&b'\r') {
+            self.line.pop();
+        }
+        let line = mem::take(&mut self.line);
+        match self.state.unwrap_or(QState::RequestLine) {
+            QState::RequestLine => {
+                if line.is_empty() {
+                    return Ok(()); // stray CRLF between requests
+                }
+                let mut parts = line.split(|&b| b == b' ').filter(|p| !p.is_empty());
+                let (m, t, v) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                    (Some(m), Some(t), Some(v), None) => (m, t, v),
+                    _ => return Err(err("malformed request line")),
+                };
+                if v.len() != 8 || !v.starts_with(b"HTTP/1.") {
+                    return Err(err("unsupported HTTP version"));
+                }
+                self.method = String::from_utf8_lossy(m).into_owned();
+                self.target = String::from_utf8_lossy(t).into_owned();
+                self.http10 = v[7] == b'0';
+                self.state = Some(QState::Headers);
+                Ok(())
+            }
+            QState::Headers => self.on_header_line(&line),
+            QState::BodyFixed => unreachable!("body bytes never reach on_line"),
+        }
+    }
+
+    fn on_header_line(&mut self, line: &[u8]) -> Result<(), ProtoError> {
+        if line.is_empty() {
+            if self.content_length > 0 {
+                self.remaining = self.content_length;
+                self.state = Some(QState::BodyFixed);
+            } else {
+                self.finish_request();
+            }
+            return Ok(());
+        }
+        self.headers += 1;
+        if self.headers > MAX_HEADERS {
+            return Err(err("too many headers"));
+        }
+        let Some(colon) = line.iter().position(|&b| b == b':') else {
+            return Err(err("header line without ':'"));
+        };
+        let name = &line[..colon];
+        let value = trim(&line[colon + 1..]);
+        if name.eq_ignore_ascii_case(b"content-length") {
+            self.content_length =
+                parse_decimal(value).ok_or_else(|| err("invalid Content-Length"))?;
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            return Err(err("chunked request bodies are unsupported"));
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            for token in value.split(|&b| b == b',') {
+                let token = trim(token);
+                if token.eq_ignore_ascii_case(b"close") {
+                    self.saw_close = true;
+                } else if token.eq_ignore_ascii_case(b"keep-alive") {
+                    self.saw_keepalive = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_request(&mut self) {
+        let close = self.saw_close || (self.http10 && !self.saw_keepalive);
+        self.done.push_back(Request {
+            method: mem::take(&mut self.method),
+            target: mem::take(&mut self.target),
+            close,
+            body_len: self.content_length,
+        });
+        self.http10 = false;
+        self.saw_close = false;
+        self.saw_keepalive = false;
+        self.content_length = 0;
+        self.headers = 0;
+        self.remaining = 0;
+        self.state = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(bytes: &[u8]) -> Vec<Response> {
+        let mut p = RespParser::capturing();
+        p.feed(bytes).expect("well-formed transcript");
+        std::iter::from_fn(move || p.pop()).collect()
+    }
+
+    #[test]
+    fn content_length_response_round_trips() {
+        let mut bytes = Vec::new();
+        write_response(&mut bytes, 200, b"hello", false);
+        let rs = parse_all(&bytes);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].status, 200);
+        assert_eq!(rs[0].body, b"hello");
+        assert!(!rs[0].close);
+        // byte-exact re-serialization from the parsed fields
+        let mut again = Vec::new();
+        write_response(&mut again, rs[0].status, &rs[0].body, rs[0].close);
+        assert_eq!(again, bytes);
+    }
+
+    #[test]
+    fn chunked_body_with_trailers_decodes() {
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nwiki\r\n5;ext=1\r\npedia\r\n0\r\nX-Sum: 9\r\n\r\n";
+        let rs = parse_all(raw);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].body, b"wikipedia");
+        assert_eq!(rs[0].body_len, 9);
+        assert!(!rs[0].close);
+    }
+
+    #[test]
+    fn pipelined_responses_pop_in_order() {
+        let mut bytes = Vec::new();
+        write_response(&mut bytes, 200, b"a", false);
+        write_response(&mut bytes, 503, b"busy", false);
+        write_response(&mut bytes, 500, b"boom", true);
+        let rs = parse_all(&bytes);
+        let statuses: Vec<u16> = rs.iter().map(|r| r.status).collect();
+        assert_eq!(statuses, vec![200, 503, 500]);
+        assert_eq!(rs.iter().filter(|r| r.close).count(), 1);
+    }
+
+    #[test]
+    fn interim_1xx_is_consumed_and_counted() {
+        let raw = b"HTTP/1.1 100 Continue\r\n\r\n\
+                    HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok";
+        let rs = parse_all(raw);
+        assert_eq!(rs.len(), 1);
+        assert_eq!((rs[0].status, rs[0].interim), (200, 1));
+    }
+
+    #[test]
+    fn read_until_eof_body_completes_on_eof() {
+        let mut p = RespParser::capturing();
+        p.feed(b"HTTP/1.0 200 OK\r\n\r\nstreamed").unwrap();
+        assert!(p.pop().is_none(), "body is open until EOF");
+        p.eof().unwrap();
+        let r = p.pop().unwrap();
+        assert_eq!(r.body, b"streamed");
+        assert!(r.close, "EOF-delimited bodies always close");
+    }
+
+    #[test]
+    fn http10_defaults_to_close_unless_keepalive() {
+        let rs = parse_all(b"HTTP/1.0 200 OK\r\nContent-Length: 0\r\n\r\n");
+        assert!(rs[0].close);
+        let rs = parse_all(
+            b"HTTP/1.0 200 OK\r\nConnection: Keep-Alive\r\nContent-Length: 0\r\n\r\n",
+        );
+        assert!(!rs[0].close);
+        let rs = parse_all(
+            b"HTTP/1.1 200 OK\r\nConnection: close\r\nContent-Length: 0\r\n\r\n",
+        );
+        assert!(rs[0].close);
+    }
+
+    #[test]
+    fn no_body_statuses_need_no_content_length() {
+        let rs = parse_all(b"HTTP/1.1 204 No Content\r\n\r\n");
+        assert_eq!((rs[0].status, rs[0].body_len), (204, 0));
+        let rs = parse_all(b"HTTP/1.1 304 Not Modified\r\nContent-Length: 99\r\n\r\n");
+        assert_eq!((rs[0].status, rs[0].body_len), (304, 0), "304 has no body");
+    }
+
+    #[test]
+    fn malformed_input_errors_instead_of_panicking() {
+        for bad in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"HTTP/2 200 OK\r\n\r\n",
+            b"HTTP/1.1 2xx Nope\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\nContent-Length: twelve\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\nNoColonHere\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\n folded: value\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n",
+            b"HTTP/1.1 200 OK\r\nContent-Length: 1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"HTTP/1.1 101 Switching Protocols\r\n\r\n",
+        ] {
+            let mut p = RespParser::new();
+            assert!(p.feed(bad).is_err(), "must reject {:?}", bad);
+        }
+    }
+
+    #[test]
+    fn eof_mid_response_is_an_error() {
+        let mut p = RespParser::new();
+        p.feed(b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nhal").unwrap();
+        assert!(p.eof().is_err());
+        let mut p = RespParser::new();
+        p.feed(b"HTTP/1.1 200 OK\r\nConte").unwrap();
+        assert!(p.eof().is_err());
+        let mut p = RespParser::new();
+        assert!(p.eof().is_ok(), "EOF between messages is clean");
+    }
+
+    #[test]
+    fn byte_at_a_time_equals_one_shot() {
+        let mut bytes = Vec::new();
+        write_response(&mut bytes, 200, b"torn across reads", false);
+        let whole = parse_all(&bytes);
+        let mut p = RespParser::capturing();
+        for b in &bytes {
+            p.feed(std::slice::from_ref(b)).unwrap();
+        }
+        let dribbled: Vec<Response> = std::iter::from_fn(move || p.pop()).collect();
+        assert_eq!(whole, dribbled);
+    }
+
+    #[test]
+    fn request_round_trips_through_the_server_parser() {
+        let mut bytes = Vec::new();
+        write_request(&mut bytes, 42, false);
+        write_request(&mut bytes, 43, true);
+        let mut p = ReqParser::new();
+        p.feed(&bytes).unwrap();
+        let r1 = p.pop().unwrap();
+        let r2 = p.pop().unwrap();
+        assert!(p.pop().is_none());
+        assert_eq!((r1.method.as_str(), r1.close), ("GET", false));
+        assert_eq!(r1.target, "/diperf?seq=42");
+        assert_eq!((r2.target.as_str(), r2.close), ("/diperf?seq=43", true));
+        assert!(!p.mid_message());
+    }
+
+    #[test]
+    fn request_with_body_is_consumed() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdGET / HTTP/1.1\r\n\r\n";
+        let mut p = ReqParser::new();
+        p.feed(raw).unwrap();
+        let r1 = p.pop().unwrap();
+        assert_eq!((r1.method.as_str(), r1.body_len), ("POST", 4));
+        let r2 = p.pop().unwrap();
+        assert_eq!(r2.method, "GET");
+    }
+
+    #[test]
+    fn http11_client_maps_statuses_onto_the_taxonomy() {
+        let mut c = Http11Client::new();
+        let mut req = Vec::new();
+        c.emit_request(&mut req, 7);
+        assert!(req.starts_with(b"GET /diperf?seq=7 HTTP/1.1\r\n"));
+
+        let mut bytes = Vec::new();
+        write_response(&mut bytes, 200, b"ok", false);
+        write_response(&mut bytes, 503, b"busy", false);
+        write_response(&mut bytes, 500, b"boom", true);
+        c.on_bytes(&bytes).unwrap();
+        let v1 = c.next_verdict().unwrap();
+        let v2 = c.next_verdict().unwrap();
+        let v3 = c.next_verdict().unwrap();
+        assert_eq!((v1.outcome, v1.close), (SampleOutcome::Success, false));
+        assert_eq!((v2.outcome, v2.close), (SampleOutcome::Denied, false));
+        assert_eq!((v3.outcome, v3.close), (SampleOutcome::ServiceError, true));
+        assert!(c.next_verdict().is_none());
+    }
+}

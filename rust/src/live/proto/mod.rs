@@ -1,0 +1,251 @@
+//! Pluggable protocol clients for the live layer.
+//!
+//! The live agent originally spoke exactly one dialect to its target:
+//! the repo's own length-free byte codec (one request byte, one outcome
+//! byte, on a held-open connection).  This module generalizes that into
+//! a *protocol-client abstraction* so new client protocols — starting
+//! with HTTP/1.1 ([`http11`]) — plug into **both** agent backends
+//! without touching their transport code:
+//!
+//! * the thread-per-agent backend drives a [`ProtoClient`] with
+//!   blocking reads (`live::agent::do_call`);
+//! * the reactor drives the *same* client from its nonblocking
+//!   readiness loop (`live::reactor`), which means the identical parser
+//!   state machine runs under real epoll and under
+//!   `live::reactor::testing::MockNet` in the deterministic tests.
+//!
+//! The key design rule: a [`ProtoClient`] is **pure state, no I/O**.
+//! Integrations own the sockets, the timeouts and the reconnects; the
+//! client only serializes requests and consumes received bytes,
+//! reporting completed calls as [`CallVerdict`]s.  That is what makes
+//! the conformance suite (`rust/tests/http11_conformance.rs`) able to
+//! replay golden transcripts torn at every byte boundary with zero
+//! sockets and zero sleeps.
+//!
+//! ## Canonical protocol table
+//!
+//! [`PROTOCOLS`] is the single source of truth for protocol names.
+//! CLI (`--protocol`), TOML (`[live] protocol = ...`), preset listings
+//! and unknown-name error messages all derive from it, so the listings
+//! can never go stale when a protocol is added (parity-tested below).
+
+pub mod http11;
+
+use crate::metrics::SampleOutcome;
+
+/// Protocol spoken between a live agent and its target service.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum ProtocolKind {
+    /// The legacy framed byte codec: 1 request byte, 1 outcome byte,
+    /// connection held open across calls.
+    Wire,
+    /// HTTP/1.1 with keep-alive, chunked bodies, pipelined responses
+    /// and status-code-aware failure accounting.
+    Http11,
+}
+
+/// The canonical protocol table: every `(name, kind)` pair, in the
+/// order they are listed to users.  **Add new protocols here and only
+/// here** — [`PROTOCOL_NAMES`], [`ProtocolKind::parse`] and
+/// [`ProtocolKind::label`] all derive from this table.
+pub const PROTOCOLS: [(&str, ProtocolKind); 2] =
+    [("wire", ProtocolKind::Wire), ("http11", ProtocolKind::Http11)];
+
+/// Protocol names, derived from [`PROTOCOLS`] (never hand-maintained).
+pub const PROTOCOL_NAMES: [&str; PROTOCOLS.len()] = protocol_names();
+
+const fn protocol_names() -> [&'static str; PROTOCOLS.len()] {
+    let mut out = [""; PROTOCOLS.len()];
+    let mut i = 0;
+    while i < PROTOCOLS.len() {
+        out[i] = PROTOCOLS[i].0;
+        i += 1;
+    }
+    out
+}
+
+impl ProtocolKind {
+    /// Stable name (the same string [`parse`](Self::parse) accepts).
+    pub fn label(self) -> &'static str {
+        PROTOCOLS
+            .iter()
+            .find(|(_, k)| *k == self)
+            .map(|(n, _)| *n)
+            .expect("every ProtocolKind variant appears in PROTOCOLS")
+    }
+
+    /// Resolve a protocol by name; the error lists every valid choice
+    /// (driven by the canonical table, so it cannot go stale).
+    pub fn parse(name: &str) -> anyhow::Result<ProtocolKind> {
+        for (n, k) in PROTOCOLS {
+            if n == name {
+                return Ok(k);
+            }
+        }
+        anyhow::bail!(
+            "unknown protocol '{name}' (expected one of: {})",
+            PROTOCOL_NAMES.join(", ")
+        )
+    }
+}
+
+/// A protocol violation that poisons the connection.  Integrations must
+/// drop the transport and [`ProtoClient::reset`] the client.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// The terminal result of one client invocation as seen on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CallVerdict {
+    /// §3 taxonomy outcome (for HTTP: derived from the status code via
+    /// [`SampleOutcome::from_http_status`]).
+    pub outcome: SampleOutcome,
+    /// The protocol requires tearing the connection down after this
+    /// call (e.g. HTTP `Connection: close`); the next call must open a
+    /// fresh transport.
+    pub close: bool,
+}
+
+/// A client-side protocol engine: pure state, no I/O, no clocks.
+///
+/// Contract (both backends rely on it):
+///
+/// * callers issue **one call at a time** — `emit_request`, write the
+///   bytes, then feed received bytes until [`next_verdict`] yields the
+///   owed verdict (`next_verdict` during feeding, since a single read
+///   may complete a response *and* buffer the start of the next);
+/// * a verdict popped when no call is outstanding is *unsolicited* —
+///   the integration must resync by dropping the connection (the same
+///   discipline the framed codec always had for stray bytes);
+/// * any [`ProtoError`] poisons the connection: drop it and
+///   [`reset`](Self::reset) the client before reconnecting.
+///
+/// [`next_verdict`]: Self::next_verdict
+pub trait ProtoClient: Send {
+    /// Serialize the request for invocation `seq` into `out` (appended;
+    /// the caller owns buffering and flushing).
+    fn emit_request(&mut self, out: &mut Vec<u8>, seq: u32);
+
+    /// Consume bytes received from the target.  Completed responses
+    /// queue internally; drain them with [`next_verdict`](Self::next_verdict).
+    fn on_bytes(&mut self, bytes: &[u8]) -> Result<(), ProtoError>;
+
+    /// Pop the next completed call verdict, if any.
+    fn next_verdict(&mut self) -> Option<CallVerdict>;
+
+    /// The peer closed the connection.  Returns a final verdict when
+    /// EOF legally completes the in-progress response (HTTP
+    /// read-until-close bodies); `Err` when it tore a response apart.
+    fn on_eof(&mut self) -> Result<Option<CallVerdict>, ProtoError>;
+
+    /// Forget all in-progress state (the transport was dropped).
+    fn reset(&mut self);
+}
+
+/// Build the client engine for a protocol.
+pub fn client_for(kind: ProtocolKind) -> Box<dyn ProtoClient> {
+    match kind {
+        ProtocolKind::Wire => Box::new(WireClient::default()),
+        ProtocolKind::Http11 => Box::new(http11::Http11Client::new()),
+    }
+}
+
+/// The legacy framed codec as a [`ProtoClient`]: request = the byte
+/// `1`, reply = one outcome byte (`live::target::OUT_*`).
+#[derive(Debug, Default)]
+pub struct WireClient {
+    verdicts: std::collections::VecDeque<CallVerdict>,
+}
+
+impl ProtoClient for WireClient {
+    fn emit_request(&mut self, out: &mut Vec<u8>, _seq: u32) {
+        out.push(1u8);
+    }
+
+    fn on_bytes(&mut self, bytes: &[u8]) -> Result<(), ProtoError> {
+        use crate::live::target::{OUT_DENIED, OUT_OK};
+        for &b in bytes {
+            let outcome = match b {
+                OUT_OK => SampleOutcome::Success,
+                OUT_DENIED => SampleOutcome::Denied,
+                _ => SampleOutcome::ServiceError,
+            };
+            self.verdicts.push_back(CallVerdict {
+                outcome,
+                close: false,
+            });
+        }
+        Ok(())
+    }
+
+    fn next_verdict(&mut self) -> Option<CallVerdict> {
+        self.verdicts.pop_front()
+    }
+
+    fn on_eof(&mut self) -> Result<Option<CallVerdict>, ProtoError> {
+        Ok(None)
+    }
+
+    fn reset(&mut self) {
+        self.verdicts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::live::target::{OUT_DENIED, OUT_ERROR, OUT_OK};
+
+    #[test]
+    fn canonical_table_names_parse_and_round_trip() {
+        // Parity: every listed name parses, and the parsed kind's label
+        // is the listed name — the listing can never go stale.
+        assert_eq!(PROTOCOL_NAMES.len(), PROTOCOLS.len());
+        for (name, kind) in PROTOCOLS {
+            let parsed = ProtocolKind::parse(name).expect("listed name parses");
+            assert_eq!(parsed, kind);
+            assert_eq!(parsed.label(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_protocol_error_lists_every_choice() {
+        let err = ProtocolKind::parse("gopher").unwrap_err().to_string();
+        for name in PROTOCOL_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn wire_client_round_trips_the_framed_codec() {
+        let mut c = WireClient::default();
+        let mut out = Vec::new();
+        c.emit_request(&mut out, 7);
+        assert_eq!(out, vec![1u8], "request is the single byte 1");
+
+        c.on_bytes(&[OUT_OK, OUT_DENIED, OUT_ERROR]).unwrap();
+        let outcomes: Vec<SampleOutcome> = std::iter::from_fn(|| c.next_verdict())
+            .map(|v| v.outcome)
+            .collect();
+        assert_eq!(
+            outcomes,
+            vec![
+                SampleOutcome::Success,
+                SampleOutcome::Denied,
+                SampleOutcome::ServiceError
+            ]
+        );
+        assert_eq!(c.on_eof().unwrap(), None, "wire EOF completes nothing");
+        c.on_bytes(&[OUT_OK]).unwrap();
+        c.reset();
+        assert!(c.next_verdict().is_none(), "reset drops queued verdicts");
+    }
+}

@@ -53,7 +53,7 @@ use std::net::SocketAddr;
 
 use crate::ids::{NodeId, RequestId, TesterId};
 use crate::live::agent::AgentReport;
-use crate::live::target::{OUT_DENIED, OUT_OK};
+use crate::live::proto::{self, ProtoClient, ProtocolKind};
 use crate::live::wire::{self, FrameBuf, WireUp};
 use crate::metrics::{CallSample, SampleOutcome};
 use crate::sim::engine::Scheduled;
@@ -195,6 +195,22 @@ pub enum TargetMode {
     Framed,
     /// Each call is a fresh TCP connect probe.
     Probe,
+    /// Held-open connection speaking HTTP/1.1 keep-alive GETs
+    /// ([`crate::live::proto::http11`]); outcomes come from status
+    /// codes, and `Connection: close` forces a reconnect.
+    Http11,
+}
+
+impl TargetMode {
+    /// The protocol engine an agent in this mode drives over its
+    /// target connection (Probe never exchanges bytes; `Wire` is the
+    /// placeholder engine there).
+    fn protocol(self) -> ProtocolKind {
+        match self {
+            TargetMode::Framed | TargetMode::Probe => ProtocolKind::Wire,
+            TargetMode::Http11 => ProtocolKind::Http11,
+        }
+    }
 }
 
 /// Per-agent identity and clock distortion, fixed at spawn.
@@ -268,6 +284,10 @@ struct Agent {
     tgt_tok: Option<Token>,
     tgt_connected: bool,
     tgt_out: Vec<u8>,
+    /// Protocol engine for the target connection — the same
+    /// [`ProtoClient`] the thread backend drives blocking; reset
+    /// whenever the connection is dropped.
+    proto: Box<dyn ProtoClient>,
     await_reply: bool,
     probe_started: f64,
     paused: bool,
@@ -279,7 +299,7 @@ struct Agent {
 }
 
 impl Agent {
-    fn new(spec: &AgentSpec, ctrl_tok: Token) -> Agent {
+    fn new(spec: &AgentSpec, ctrl_tok: Token, mode: TargetMode) -> Agent {
         Agent {
             t: Tester::new(TesterId(spec.id), NodeId(spec.id)),
             skew_s: spec.skew_s,
@@ -294,6 +314,7 @@ impl Agent {
             tgt_tok: None,
             tgt_connected: false,
             tgt_out: Vec::new(),
+            proto: proto::client_for(mode.protocol()),
             await_reply: false,
             probe_started: 0.0,
             paused: false,
@@ -405,7 +426,7 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         for spec in specs {
             let i = w.agents.len();
             let tok = w.alloc_token();
-            let mut a = Agent::new(spec, tok);
+            let mut a = Agent::new(spec, tok, mode);
             queue_frame(&mut a.ctrl_out, &WireUp::Hello { agent: spec.id });
             queue_frame(&mut a.ctrl_out, &WireUp::DeployDone);
             w.agents.push(a);
@@ -904,16 +925,20 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         self.agents[i].tgt_connected = false;
         self.agents[i].await_reply = false;
         self.agents[i].tgt_out.clear();
+        // in-progress parses died with the transport
+        self.agents[i].proto.reset();
     }
 
     fn issue_call(&mut self, i: usize, now: f64) {
         match self.mode {
-            TargetMode::Framed => {
+            TargetMode::Framed | TargetMode::Http11 => {
                 if self.agents[i].tgt_tok.is_none() && self.open_target(i).is_err() {
                     self.complete_call(i, now, SampleOutcome::ServiceError);
                     return;
                 }
-                self.agents[i].tgt_out.push(1u8);
+                let a = &mut self.agents[i];
+                let seq = a.t.outstanding.map_or(a.t.seq, |inv| inv.req.0);
+                a.proto.emit_request(&mut a.tgt_out, seq);
                 self.pump_target(i, now);
             }
             TargetMode::Probe => {
@@ -1029,11 +1054,21 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         self.src.set_interest(tok, true, want_w);
     }
 
+    /// Drain the target socket through the agent's protocol engine.
+    /// Identical logic for the framed codec and HTTP/1.1 — only the
+    /// [`ProtoClient`] behind `agents[i].proto` differs:
+    ///
+    /// * a verdict while a call is owed completes it (closing first
+    ///   when the protocol demands it, e.g. `Connection: close`);
+    /// * a verdict with *no* call owed is unsolicited — resynchronize
+    ///   by dropping the connection (the stale-reply discipline);
+    /// * a protocol violation poisons the connection the same way,
+    ///   failing the in-flight call if any.
     fn target_read(&mut self, i: usize, now: f64) {
-        if self.mode != TargetMode::Framed {
+        if self.mode == TargetMode::Probe {
             return;
         }
-        let mut byte = [0u8; 1];
+        let mut chunk = [0u8; READ_CHUNK];
         loop {
             let a = &self.agents[i];
             let Some(tok) = a.tgt_tok else { return };
@@ -1041,30 +1076,48 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                 return;
             }
             let inflight = a.await_reply;
-            match self.src.read(tok, &mut byte) {
+            match self.src.read(tok, &mut chunk) {
                 Ok(0) => {
-                    // target closed: fail the in-flight call, or just
-                    // drop an idle connection (reconnect lazily)
+                    // EOF may legally complete a read-until-close HTTP
+                    // body; take the engine's verdict before the close
+                    // resets it
+                    let fin = self.agents[i].proto.on_eof();
                     self.close_target(i);
-                    if inflight {
-                        self.complete_call(i, now, SampleOutcome::ServiceError);
+                    match fin {
+                        Ok(Some(v)) if inflight => {
+                            self.complete_call(i, now, v.outcome);
+                        }
+                        _ if inflight => {
+                            self.complete_call(i, now, SampleOutcome::ServiceError);
+                        }
+                        _ => {} // idle connection dropped; reconnect lazily
                     }
                     return;
                 }
-                Ok(_) => {
-                    if !inflight {
-                        // unsolicited byte: resynchronize by dropping
+                Ok(n) => {
+                    if self.agents[i].proto.on_bytes(&chunk[..n]).is_err() {
                         self.close_target(i);
+                        if inflight {
+                            self.complete_call(i, now, SampleOutcome::ServiceError);
+                        }
                         return;
                     }
-                    self.agents[i].await_reply = false;
-                    let outcome = match byte[0] {
-                        OUT_OK => SampleOutcome::Success,
-                        OUT_DENIED => SampleOutcome::Denied,
-                        _ => SampleOutcome::ServiceError,
-                    };
-                    self.complete_call(i, now, outcome);
-                    return; // at most one reply is owed
+                    while let Some(v) = self.agents[i].proto.next_verdict() {
+                        if !self.agents[i].await_reply {
+                            // unsolicited response: resynchronize
+                            self.close_target(i);
+                            return;
+                        }
+                        self.agents[i].await_reply = false;
+                        if v.close {
+                            self.close_target(i);
+                        }
+                        self.complete_call(i, now, v.outcome);
+                        if self.agents[i].tgt_tok.is_none() {
+                            return;
+                        }
+                    }
+                    // keep draining: level-triggered readiness
                 }
                 Err(e) if would_block(&e) => return,
                 Err(e) if interrupted(&e) => {}
@@ -1327,7 +1380,7 @@ mod sock {
         /// like the thread agent.
         pub fn new(ctrl: SocketAddr, ts: SocketAddr, call: &CallMode) -> io::Result<Self> {
             let target = match call {
-                CallMode::Framed(a) => Some(*a),
+                CallMode::Framed(a) | CallMode::Http(a) => Some(*a),
                 CallMode::ConnectProbe(s) => {
                     s.to_socket_addrs().ok().and_then(|mut it| it.next())
                 }
@@ -1454,6 +1507,7 @@ fn run_worker(
 ) -> Vec<(u32, AgentReport)> {
     let mode = match call {
         CallMode::Framed(_) => TargetMode::Framed,
+        CallMode::Http(_) => TargetMode::Http11,
         CallMode::ConnectProbe(_) => TargetMode::Probe,
     };
     let src = match sock::SocketSource::new(ctrl, ts, &call) {

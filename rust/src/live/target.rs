@@ -14,10 +14,16 @@
 //!   overhead, lognormal CGI demand on the shared PS core, and a worker
 //!   cap that denies admission beyond `max_concurrent`.
 //!
-//! Protocol: an agent holds one connection and writes a 1-byte request;
-//! the target answers with a 1-byte outcome ([`OUT_OK`] /
-//! [`OUT_DENIED`] / [`OUT_ERROR`]) once the request leaves the queue.
-//! Real services live elsewhere: `diperf live --target-addr host:port`
+//! Protocols: under the default `wire` protocol an agent holds one
+//! connection and writes a 1-byte request; the target answers with a
+//! 1-byte outcome ([`OUT_OK`] / [`OUT_DENIED`] / [`OUT_ERROR`]) once
+//! the request leaves the queue.  Under `--protocol http11`
+//! ([`crate::live::proto`]) the same disciplines answer real HTTP/1.1
+//! keep-alive GETs instead — 200/503/500 status codes carry the same
+//! three outcomes.  The discipline is orthogonal to the protocol:
+//! [`Target::spawn_proto`] picks the connection handler, and both
+//! handlers funnel into the one `serve_one` queueing path.  Real
+//! services live elsewhere: `diperf live --target-addr host:port`
 //! skips this module entirely (see [`crate::live::agent`]).
 
 use std::collections::HashMap;
@@ -31,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::ids::RequestId;
+use crate::live::proto::{http11, ProtocolKind};
 use crate::services::http::HttpParams;
 use crate::services::ps::PsQueue;
 use crate::services::ServiceStats;
@@ -38,9 +45,29 @@ use crate::sim::SimTime;
 use crate::util::dist::lognormal_median;
 use crate::util::Pcg64;
 
-/// Canonical list of in-process target kinds — the single source for
-/// help output and unknown-name errors ([`target_by_name`]).
-pub const TARGET_NAMES: [&str; 2] = ["ps", "http"];
+/// The canonical target table: every `(name, default-calibrated
+/// constructor)` pair, in listing order.  **Add new targets here and
+/// only here** — [`TARGET_NAMES`], [`target_by_name`] and its
+/// unknown-name error all derive from this table (parity-tested
+/// below), mirroring [`crate::live::proto::PROTOCOLS`].
+pub const TARGETS: [(&str, fn() -> TargetKind); 2] = [
+    ("ps", || TargetKind::Ps(PsTargetParams::default())),
+    ("http", || TargetKind::Http(HttpParams::default())),
+];
+
+/// Target names, derived from [`TARGETS`] (never hand-maintained);
+/// the single source for help output and unknown-name errors.
+pub const TARGET_NAMES: [&str; TARGETS.len()] = target_names();
+
+const fn target_names() -> [&'static str; TARGETS.len()] {
+    let mut out = [""; TARGETS.len()];
+    let mut i = 0;
+    while i < TARGETS.len() {
+        out[i] = TARGETS[i].0;
+        i += 1;
+    }
+    out
+}
 
 /// Outcome byte: request served.
 pub const OUT_OK: u8 = 0;
@@ -107,15 +134,18 @@ impl TargetKind {
 
 /// Resolve a target kind by name; unknown names error listing the
 /// alternatives (the [`crate::experiment::presets::NAMES`] pattern).
+/// Both the lookup and the listing walk the canonical [`TARGETS`]
+/// table, so they cannot drift apart.
 pub fn target_by_name(name: &str) -> Result<TargetKind> {
-    Ok(match name {
-        "ps" => TargetKind::Ps(PsTargetParams::default()),
-        "http" => TargetKind::Http(HttpParams::default()),
-        other => bail!(
-            "unknown target {other:?}; available targets: {}",
-            TARGET_NAMES.join(", ")
-        ),
-    })
+    for (n, ctor) in TARGETS {
+        if n == name {
+            return Ok(ctor());
+        }
+    }
+    bail!(
+        "unknown target {name:?}; available targets: {}",
+        TARGET_NAMES.join(", ")
+    )
 }
 
 /// The discipline constants shared by every connection handler.
@@ -269,6 +299,48 @@ fn serve_conn(mut stream: TcpStream, sh: Arc<Shared>, mut rng: Pcg64) {
     }
 }
 
+/// The HTTP/1.1 connection handler: same queueing discipline as
+/// [`serve_conn`], different dialect.  Requests stream through the
+/// incremental [`http11::ReqParser`] (pipelining falls out naturally);
+/// outcomes leave as status codes — 200 served, 503 denied, 500
+/// errored — and `Connection: close` is honored per request.
+fn serve_conn_http11(mut stream: TcpStream, sh: Arc<Shared>, mut rng: Pcg64) {
+    let _ = stream.set_nodelay(true);
+    let mut parser = http11::ReqParser::new();
+    let mut buf = [0u8; 4096];
+    let mut out = Vec::with_capacity(256);
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) | Err(_) => return, // peer closed (or died)
+            Ok(n) => n,
+        };
+        if parser.feed(&buf[..n]).is_err() {
+            // protocol garbage: answer 400 once, then hang up
+            out.clear();
+            http11::write_response(&mut out, 400, b"bad request\n", true);
+            let _ = stream.write_all(&out);
+            return;
+        }
+        while let Some(req) = parser.pop() {
+            sh.submitted.fetch_add(1, Ordering::Relaxed);
+            let outcome = sh.serve_one(&mut rng);
+            let (status, body): (u16, &[u8]) = match outcome {
+                OUT_OK => (200, b"ok\n"),
+                OUT_DENIED => (503, b"denied\n"),
+                _ => (500, b"error\n"),
+            };
+            out.clear();
+            http11::write_response(&mut out, status, body, req.close);
+            if stream.write_all(&out).is_err() {
+                return;
+            }
+            if req.close {
+                return;
+            }
+        }
+    }
+}
+
 /// A running in-process target.  Dropping it shuts everything down.
 pub struct Target {
     /// The bound address agents should call.
@@ -279,9 +351,21 @@ pub struct Target {
 }
 
 impl Target {
-    /// Bind `127.0.0.1:0` and serve the given discipline.  `seed`
-    /// derives the per-connection demand streams.
+    /// Bind `127.0.0.1:0` and serve the given discipline under the
+    /// legacy `wire` protocol.  `seed` derives the per-connection
+    /// demand streams.
     pub fn spawn(kind: &TargetKind, seed: u64) -> std::io::Result<Target> {
+        Target::spawn_proto(kind, ProtocolKind::Wire, seed)
+    }
+
+    /// As [`Target::spawn`], but speaking the given protocol on every
+    /// accepted connection.  The discipline (queueing, overhead, worker
+    /// cap) is identical across protocols; only the dialect differs.
+    pub fn spawn_proto(
+        kind: &TargetKind,
+        proto: ProtocolKind,
+        seed: u64,
+    ) -> std::io::Result<Target> {
         let disc = match kind {
             TargetKind::Ps(p) => Discipline {
                 overhead_s: 0.0,
@@ -325,6 +409,10 @@ impl Target {
         let accept = {
             let sh = Arc::clone(&sh);
             let mut master = Pcg64::seed_from(seed ^ 0x7a72_6765_74);
+            let serve: fn(TcpStream, Arc<Shared>, Pcg64) = match proto {
+                ProtocolKind::Wire => serve_conn,
+                ProtocolKind::Http11 => serve_conn_http11,
+            };
             std::thread::spawn(move || {
                 let mut conn_idx = 0u64;
                 for conn in listener.incoming() {
@@ -335,7 +423,7 @@ impl Target {
                     let rng = master.split(conn_idx);
                     conn_idx += 1;
                     let sh = Arc::clone(&sh);
-                    std::thread::spawn(move || serve_conn(stream, sh, rng));
+                    std::thread::spawn(move || serve(stream, sh, rng));
                 }
             })
         };
@@ -402,6 +490,19 @@ mod tests {
     }
 
     #[test]
+    fn canonical_table_is_in_parity_everywhere() {
+        // One table drives names, lookup and labels: every listed name
+        // resolves, its label round-trips, and the derived TARGET_NAMES
+        // matches the table order exactly.
+        assert_eq!(TARGET_NAMES.len(), TARGETS.len());
+        for (i, (name, ctor)) in TARGETS.iter().enumerate() {
+            assert_eq!(TARGET_NAMES[i], *name);
+            assert_eq!(ctor().label(), *name, "label drifted from table");
+            assert_eq!(target_by_name(name).unwrap().label(), *name);
+        }
+    }
+
+    #[test]
     fn ps_target_serves_one_call_in_about_demand_seconds() {
         let kind = TargetKind::Ps(PsTargetParams {
             demand_s: 0.030,
@@ -446,6 +547,70 @@ mod tests {
         let st = target.stats();
         assert_eq!(st.denied, 1);
         assert_eq!(st.completed, 1);
+        target.shutdown();
+    }
+
+    #[test]
+    fn http11_target_answers_pipelined_gets_and_honors_close() {
+        let kind = TargetKind::Ps(PsTargetParams {
+            demand_s: 0.005,
+            spread: 1.0 + 1e-9,
+            speed: 1.0,
+        });
+        let mut target =
+            Target::spawn_proto(&kind, ProtocolKind::Http11, 4).unwrap();
+        let mut conn = TcpStream::connect(target.addr).unwrap();
+
+        // two pipelined keep-alive GETs, then one Connection: close
+        let mut req = Vec::new();
+        http11::write_request(&mut req, 0, false);
+        http11::write_request(&mut req, 1, false);
+        http11::write_request(&mut req, 2, true);
+        conn.write_all(&req).unwrap();
+
+        let mut parser = http11::RespParser::capturing();
+        let mut buf = [0u8; 4096];
+        loop {
+            match conn.read(&mut buf) {
+                Ok(0) => break, // target honored Connection: close
+                Ok(n) => parser.feed(&buf[..n]).unwrap(),
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+        parser.eof().unwrap();
+        let mut seen = Vec::new();
+        while let Some(r) = parser.pop() {
+            seen.push((r.status, r.close));
+        }
+        assert_eq!(
+            seen,
+            vec![(200, false), (200, false), (200, true)],
+            "three served responses, close only on the last"
+        );
+        let st = target.stats();
+        assert_eq!((st.submitted, st.completed), (3, 3));
+        target.shutdown();
+    }
+
+    #[test]
+    fn http11_target_rejects_garbage_with_400() {
+        let kind = TargetKind::Ps(PsTargetParams::default());
+        let mut target =
+            Target::spawn_proto(&kind, ProtocolKind::Http11, 5).unwrap();
+        let mut conn = TcpStream::connect(target.addr).unwrap();
+        conn.write_all(b"NOT HTTP AT ALL\r\n\r\n").unwrap();
+        let mut parser = http11::RespParser::new();
+        let mut buf = [0u8; 4096];
+        loop {
+            match conn.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => parser.feed(&buf[..n]).unwrap(),
+            }
+        }
+        let r = parser.pop().expect("a 400 answer before hangup");
+        assert_eq!((r.status, r.close), (400, true));
+        let st = target.stats();
+        assert_eq!(st.submitted, 0, "garbage never reaches the discipline");
         target.shutdown();
     }
 

@@ -71,6 +71,28 @@ impl SampleOutcome {
     pub fn ok(self) -> bool {
         matches!(self, SampleOutcome::Success)
     }
+
+    /// Map an HTTP status code onto the §3 taxonomy (the live HTTP/1.1
+    /// protocol layer's failure accounting):
+    ///
+    /// * 2xx — the service completed the request ([`Success`]);
+    /// * 429/503 — the service *refused* it (admission control /
+    ///   overload shedding), the paper's "denied" class ([`Denied`]);
+    /// * anything else — accepted and then failed ([`ServiceError`]).
+    ///
+    /// Timeouts never appear here: they are tester-enforced and mapped
+    /// by the agent before a status code exists.
+    ///
+    /// [`Success`]: SampleOutcome::Success
+    /// [`Denied`]: SampleOutcome::Denied
+    /// [`ServiceError`]: SampleOutcome::ServiceError
+    pub fn from_http_status(status: u16) -> SampleOutcome {
+        match status {
+            200..=299 => SampleOutcome::Success,
+            429 | 503 => SampleOutcome::Denied,
+            _ => SampleOutcome::ServiceError,
+        }
+    }
 }
 
 /// One timed client invocation, in tester-local seconds.

@@ -1,0 +1,279 @@
+//! Apache HTTP + CGI model behind a real HTTP/1.1 front end — the sim
+//! twin of `diperf live --protocol http11`.
+//!
+//! The queueing core is exactly the [`http`](super::http) model (PS
+//! CPU, lognormal CGI demand, worker cap), but the protocol layer is
+//! no longer free: every request pays a small fixed parse cost, and a
+//! client whose keep-alive connection has lapsed (first request ever,
+//! or an idle gap longer than `keepalive_s`) additionally pays a
+//! connect/handshake cost before its bytes reach the server.  That is
+//! what separates this model from [`HttpService`](super::http): the
+//! live HTTP/1.1 target really does accept connections and parse
+//! request lines, so its twin must account the same per-call overheads
+//! or cross-validation would read the gap as harness drift.
+
+use super::http::{HttpParams, HttpService};
+use super::{Service, ServiceStats, SvcOut};
+use crate::ids::RequestId;
+use crate::sim::{SimDuration, SimTime};
+use crate::util::{FxHashMap, Pcg64};
+
+/// Calibration knobs: the base Apache model plus the HTTP/1.1 costs.
+#[derive(Clone, Debug)]
+pub struct Http11Params {
+    /// The underlying Apache + CGI calibration.
+    pub base: HttpParams,
+    /// Fixed request-parse cost paid by every call (seconds).
+    pub parse_overhead_s: f64,
+    /// TCP connect + first-byte cost paid when a client has no live
+    /// keep-alive connection (seconds).
+    pub connect_overhead_s: f64,
+    /// Idle keep-alive horizon: a client silent for longer than this
+    /// reconnects on its next call (Apache's `KeepAliveTimeout` shape).
+    pub keepalive_s: f64,
+}
+
+impl Default for Http11Params {
+    fn default() -> Http11Params {
+        Http11Params {
+            base: HttpParams::default(),
+            parse_overhead_s: 0.000_2,
+            connect_overhead_s: 0.000_5,
+            keepalive_s: 15.0,
+        }
+    }
+}
+
+/// The HTTP/1.1-fronted Apache model.
+pub struct Http11Service {
+    params: Http11Params,
+    inner: HttpService,
+    /// Per-client last-activity time; drives keep-alive accounting.
+    last_seen: FxHashMap<u32, SimTime>,
+}
+
+impl Http11Service {
+    /// Build the service with the given calibration.
+    pub fn new(params: Http11Params) -> Http11Service {
+        let inner = HttpService::new(params.base.clone());
+        Http11Service {
+            params,
+            inner,
+            last_seen: FxHashMap::default(),
+        }
+    }
+
+    /// CPU busy-seconds so far.
+    pub fn busy_seconds(&self) -> f64 {
+        self.inner.busy_seconds()
+    }
+
+    /// The protocol surcharge `client` pays for a call at `now`, and
+    /// the bookkeeping that goes with it.
+    fn proto_overhead(&mut self, now: SimTime, client: u32) -> f64 {
+        let horizon = SimDuration::from_secs_f64(self.params.keepalive_s);
+        let fresh = match self.last_seen.get(&client) {
+            Some(&seen) => now > seen + horizon,
+            None => true,
+        };
+        self.last_seen.insert(client, now);
+        let mut cost = self.params.parse_overhead_s;
+        if fresh {
+            cost += self.params.connect_overhead_s;
+        }
+        cost
+    }
+}
+
+impl Service for Http11Service {
+    fn name(&self) -> &'static str {
+        "apache-cgi-http11"
+    }
+
+    fn submit(
+        &mut self,
+        now: SimTime,
+        req: RequestId,
+        client: u32,
+        rng: &mut Pcg64,
+    ) -> Vec<SvcOut> {
+        // the surcharge delays when the request reaches the Apache
+        // core: model it as a later arrival, which both shifts the
+        // response time and (correctly) delays worker-cap pressure
+        let delay = self.proto_overhead(now, client);
+        let at = now + SimDuration::from_secs_f64(delay);
+        let mut out = self.inner.submit(at, req, client, rng);
+        // translate any synchronous denial back onto the real timeline
+        for o in &mut out {
+            if let SvcOut::Done { at: done_at, .. } = o {
+                if *done_at < at {
+                    *done_at = at;
+                }
+            }
+        }
+        out
+    }
+
+    fn on_wake(&mut self, now: SimTime, rng: &mut Pcg64) -> Vec<SvcOut> {
+        self.inner.on_wake(now, rng)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    fn stats(&self) -> ServiceStats {
+        self.inner.stats()
+    }
+
+    fn set_speed_factor(&mut self, now: SimTime, factor: f64) -> Vec<SvcOut> {
+        self.inner.set_speed_factor(now, factor)
+    }
+
+    fn restart(&mut self, now: SimTime) -> Vec<SvcOut> {
+        // a restart drops every keep-alive connection along with the
+        // in-flight work: the next call per client reconnects
+        self.last_seen.clear();
+        self.inner.restart(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::services::{stats_conserved, Outcome};
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    fn params() -> Http11Params {
+        Http11Params {
+            base: HttpParams {
+                demand_spread: 1.0 + 1e-9,
+                ..HttpParams::default()
+            },
+            parse_overhead_s: 0.001,
+            connect_overhead_s: 0.010,
+            keepalive_s: 5.0,
+        }
+    }
+
+    fn drain(svc: &mut Http11Service, rng: &mut Pcg64) -> Vec<(RequestId, Outcome, f64)> {
+        let mut wakes = std::collections::BinaryHeap::new();
+        let mut done = Vec::new();
+        for o in svc.on_wake(t(0.0), rng) {
+            if let SvcOut::Wake { at } = o {
+                wakes.push(std::cmp::Reverse(at.as_micros()));
+            }
+        }
+        while let Some(std::cmp::Reverse(us)) = wakes.pop() {
+            for o in svc.on_wake(SimTime(us), rng) {
+                match o {
+                    SvcOut::Wake { at } => {
+                        wakes.push(std::cmp::Reverse(at.as_micros()))
+                    }
+                    SvcOut::Done { req, outcome, at } => {
+                        done.push((req, outcome, at.as_secs_f64()))
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    fn submit_and_drain(
+        svc: &mut Http11Service,
+        rng: &mut Pcg64,
+        at: f64,
+        req: u32,
+        client: u32,
+    ) -> f64 {
+        let mut wakes = std::collections::BinaryHeap::new();
+        for o in svc.submit(t(at), RequestId(req), client, rng) {
+            if let SvcOut::Wake { at } = o {
+                wakes.push(std::cmp::Reverse(at.as_micros()));
+            }
+        }
+        let mut done_at = None;
+        while let Some(std::cmp::Reverse(us)) = wakes.pop() {
+            for o in svc.on_wake(SimTime(us), rng) {
+                match o {
+                    SvcOut::Wake { at } => {
+                        wakes.push(std::cmp::Reverse(at.as_micros()))
+                    }
+                    SvcOut::Done { at, .. } => {
+                        done_at = Some(at.as_secs_f64())
+                    }
+                }
+            }
+        }
+        done_at.expect("request completed") - at
+    }
+
+    #[test]
+    fn first_call_pays_connect_and_keepalive_does_not() {
+        let mut svc = Http11Service::new(params());
+        let mut rng = Pcg64::seed_from(1);
+        // base: 3 ms overhead + 20 ms CGI; first call adds 1 ms parse
+        // + 10 ms connect, second (inside keep-alive) only the parse
+        let cold = submit_and_drain(&mut svc, &mut rng, 0.0, 0, 7);
+        let warm = submit_and_drain(&mut svc, &mut rng, 1.0, 1, 7);
+        assert!((cold - 0.034).abs() < 0.002, "cold rt {cold}");
+        assert!((warm - 0.024).abs() < 0.002, "warm rt {warm}");
+        // a different client pays the connect again
+        let other = submit_and_drain(&mut svc, &mut rng, 1.0, 2, 8);
+        assert!((other - 0.034).abs() < 0.002, "other-client rt {other}");
+    }
+
+    #[test]
+    fn idle_past_the_keepalive_horizon_reconnects() {
+        let mut svc = Http11Service::new(params());
+        let mut rng = Pcg64::seed_from(2);
+        let cold = submit_and_drain(&mut svc, &mut rng, 0.0, 0, 3);
+        // 6 s idle > 5 s keepalive: connect cost returns
+        let lapsed = submit_and_drain(&mut svc, &mut rng, 6.0, 1, 3);
+        assert!((lapsed - cold).abs() < 0.002, "lapsed rt {lapsed} vs {cold}");
+    }
+
+    #[test]
+    fn worker_cap_and_accounting_survive_the_wrapper() {
+        let mut svc = Http11Service::new(Http11Params {
+            base: HttpParams {
+                max_concurrent: 4,
+                demand_spread: 1.0 + 1e-9,
+                ..HttpParams::default()
+            },
+            ..params()
+        });
+        let mut rng = Pcg64::seed_from(3);
+        let mut denied = 0;
+        for i in 0..10u32 {
+            for o in svc.submit(t(0.0), RequestId(i), i, &mut rng) {
+                if let SvcOut::Done { outcome, at, .. } = o {
+                    assert_eq!(outcome, Outcome::Denied);
+                    // denials must not be reported before they arrived
+                    assert!(at >= t(0.0));
+                    denied += 1;
+                }
+            }
+        }
+        assert_eq!(denied, 6);
+        assert!(stats_conserved(&svc.stats(), svc.in_flight()));
+        let done = drain(&mut svc, &mut rng);
+        assert_eq!(done.len(), 4);
+        assert!(stats_conserved(&svc.stats(), 0));
+    }
+
+    #[test]
+    fn restart_drops_keepalive_state() {
+        let mut svc = Http11Service::new(params());
+        let mut rng = Pcg64::seed_from(4);
+        let cold = submit_and_drain(&mut svc, &mut rng, 0.0, 0, 1);
+        svc.restart(t(1.0));
+        // well inside the keep-alive horizon, but the restart killed
+        // the connection: the client pays the connect cost again
+        let after = submit_and_drain(&mut svc, &mut rng, 1.5, 1, 1);
+        assert!((after - cold).abs() < 0.002, "post-restart rt {after}");
+    }
+}

@@ -18,6 +18,7 @@
 pub mod gram_prews;
 pub mod gram_ws;
 pub mod http;
+pub mod http11;
 pub mod ps;
 
 use crate::ids::RequestId;

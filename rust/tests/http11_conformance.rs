@@ -1,0 +1,556 @@
+//! HTTP/1.1 conformance + property suite for the live protocol layer
+//! (`live::proto::http11`).
+//!
+//! Three rings, all with **zero sockets and zero sleeps**:
+//!
+//! 1. **Golden transcripts** — byte-exact request/response fixtures in
+//!    `rust/tests/fixtures/http11/` replayed whole, torn at *every*
+//!    byte boundary, and dribbled one byte at a time; the parse result
+//!    must be identical under every tearing.
+//! 2. **Properties** — seeded random trials ([`diperf::util::proptest`]):
+//!    arbitrary bytes never panic either parser, and generated response
+//!    pipelines survive arbitrary split points and re-serialize
+//!    byte-exactly.
+//! 3. **The reactor, for real** — the identical parser state machine
+//!    driven through the readiness loop under
+//!    [`diperf::live::reactor::testing::MockNet`], covering keep-alive
+//!    reuse, torn responses, `Connection: close`, status-code
+//!    accounting, garbage poisoning and unsolicited-response resync.
+
+use diperf::live::proto::http11::{
+    write_request, write_response, ReqParser, RespParser, Response,
+};
+use diperf::live::proto::{client_for, ProtocolKind};
+use diperf::live::reactor::testing::{MockClock, MockNet};
+use diperf::live::reactor::{AgentSpec, Endpoint, TargetMode, Worker};
+use diperf::live::wire::{self, FrameBuf, WireUp};
+use diperf::metrics::SampleOutcome;
+use diperf::transport::{CtrlMsg, TestDescription};
+use diperf::util::proptest::{forall, gen_vec, prop};
+
+// ---------------------------------------------------------------------------
+// Golden fixtures
+// ---------------------------------------------------------------------------
+
+const REQUEST_KEEPALIVE: &[u8] =
+    include_bytes!("fixtures/http11/request_keepalive.bin");
+const REQUEST_CLOSE: &[u8] = include_bytes!("fixtures/http11/request_close.bin");
+const SIMPLE_200: &[u8] = include_bytes!("fixtures/http11/simple_200.bin");
+const CHUNKED_TRAILERS: &[u8] =
+    include_bytes!("fixtures/http11/chunked_trailers.bin");
+const PIPELINED_THREE: &[u8] =
+    include_bytes!("fixtures/http11/pipelined_three.bin");
+const INTERIM_100: &[u8] = include_bytes!("fixtures/http11/interim_100.bin");
+const CLOSE_EOF: &[u8] = include_bytes!("fixtures/http11/close_eof.bin");
+
+/// Expected response: `(status, body, close, interim)`.
+type ExpResp = (u16, &'static [u8], bool, u32);
+
+/// Every response-transcript fixture with its expected parse:
+/// `(name, bytes, needs_eof, responses)`.
+fn transcripts() -> Vec<(&'static str, &'static [u8], bool, Vec<ExpResp>)> {
+    vec![
+        ("simple_200", SIMPLE_200, false, vec![(200, b"ok\n", false, 0)]),
+        (
+            "chunked_trailers",
+            CHUNKED_TRAILERS,
+            false,
+            vec![(200, b"wikipedia", false, 0)],
+        ),
+        (
+            "pipelined_three",
+            PIPELINED_THREE,
+            false,
+            vec![
+                (200, b"ok\n", false, 0),
+                (503, b"denied\n", false, 0),
+                (500, b"error\n", true, 0),
+            ],
+        ),
+        ("interim_100", INTERIM_100, false, vec![(200, b"done", false, 1)]),
+        (
+            "close_eof",
+            CLOSE_EOF,
+            true,
+            vec![(200, b"streamed until close", true, 0)],
+        ),
+    ]
+}
+
+/// Feed a transcript in the given pieces and collect every completed
+/// response (capturing bodies).
+fn parse_transcript(pieces: &[&[u8]], needs_eof: bool) -> Vec<Response> {
+    let mut p = RespParser::capturing();
+    for piece in pieces {
+        p.feed(piece).expect("fixture bytes parse");
+    }
+    if needs_eof {
+        p.eof().expect("EOF is legal at the end of this transcript");
+    }
+    assert!(!p.mid_message(), "transcript must end on a message boundary");
+    std::iter::from_fn(move || p.pop()).collect()
+}
+
+fn assert_responses(name: &str, tearing: &str, got: &[Response], want: &[ExpResp]) {
+    assert_eq!(got.len(), want.len(), "{name} ({tearing}): response count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.status, w.0, "{name}[{i}] ({tearing}): status");
+        assert_eq!(g.body, w.1, "{name}[{i}] ({tearing}): body");
+        assert_eq!(
+            g.body_len,
+            w.1.len() as u64,
+            "{name}[{i}] ({tearing}): body_len"
+        );
+        assert_eq!(g.close, w.2, "{name}[{i}] ({tearing}): close");
+        assert_eq!(g.interim, w.3, "{name}[{i}] ({tearing}): interim count");
+    }
+}
+
+#[test]
+fn golden_transcripts_parse_to_the_expected_responses() {
+    for (name, bytes, needs_eof, want) in transcripts() {
+        let got = parse_transcript(&[bytes], needs_eof);
+        assert_responses(name, "whole", &got, &want);
+    }
+}
+
+#[test]
+fn transcripts_parse_identically_at_every_tear_point() {
+    for (name, bytes, needs_eof, want) in transcripts() {
+        // torn into two pieces at every byte boundary
+        for split in 0..=bytes.len() {
+            let got =
+                parse_transcript(&[&bytes[..split], &bytes[split..]], needs_eof);
+            assert_responses(name, &format!("split at {split}"), &got, &want);
+        }
+        // the worst case: one byte per read
+        let singles: Vec<&[u8]> = bytes.chunks(1).collect();
+        let got = parse_transcript(&singles, needs_eof);
+        assert_responses(name, "1-byte dribble", &got, &want);
+    }
+}
+
+#[test]
+fn content_length_transcripts_reserialize_byte_exact() {
+    // fixtures in the serializer's own form must round-trip through
+    // parse → write_response with zero byte drift
+    for (name, bytes) in [
+        ("simple_200", SIMPLE_200),
+        ("pipelined_three", PIPELINED_THREE),
+    ] {
+        let got = parse_transcript(&[bytes], false);
+        let mut reser = Vec::new();
+        for r in &got {
+            write_response(&mut reser, r.status, &r.body, r.close);
+        }
+        assert_eq!(reser, bytes, "{name}: byte-exact re-serialization");
+    }
+}
+
+#[test]
+fn golden_request_bytes_match_the_serializer() {
+    let mut req = Vec::new();
+    write_request(&mut req, 7, false);
+    assert_eq!(req, REQUEST_KEEPALIVE, "keep-alive request drifted");
+    req.clear();
+    write_request(&mut req, 8, true);
+    assert_eq!(req, REQUEST_CLOSE, "close request drifted");
+}
+
+#[test]
+fn requests_round_trip_through_the_target_side_parser() {
+    let mut stream = REQUEST_KEEPALIVE.to_vec();
+    stream.extend_from_slice(REQUEST_CLOSE);
+    for split in 0..=stream.len() {
+        let mut q = ReqParser::new();
+        q.feed(&stream[..split]).expect("request bytes parse");
+        q.feed(&stream[split..]).expect("request bytes parse");
+        let a = q.pop().expect("first request");
+        let b = q.pop().expect("second request");
+        assert!(q.pop().is_none());
+        assert!(!q.mid_message());
+        assert_eq!(
+            (a.method.as_str(), a.target.as_str(), a.close, a.body_len),
+            ("GET", "/diperf?seq=7", false, 0),
+            "split at {split}"
+        );
+        assert_eq!(
+            (b.method.as_str(), b.target.as_str(), b.close, b.body_len),
+            ("GET", "/diperf?seq=8", true, 0),
+            "split at {split}"
+        );
+    }
+}
+
+#[test]
+fn http11_client_maps_status_codes_onto_the_outcome_taxonomy() {
+    let mut c = client_for(ProtocolKind::Http11);
+    let mut req = Vec::new();
+    c.emit_request(&mut req, 7);
+    assert_eq!(
+        req, REQUEST_KEEPALIVE,
+        "the client engine always requests keep-alive"
+    );
+
+    let cases: [(u16, SampleOutcome); 6] = [
+        (200, SampleOutcome::Success),
+        (204, SampleOutcome::Success),
+        (429, SampleOutcome::Denied),
+        (503, SampleOutcome::Denied),
+        (400, SampleOutcome::ServiceError),
+        (500, SampleOutcome::ServiceError),
+    ];
+    for (status, outcome) in cases {
+        let body: &[u8] = if status == 204 { b"" } else { b"x" };
+        let mut bytes = Vec::new();
+        write_response(&mut bytes, status, body, false);
+        c.on_bytes(&bytes).expect("well-formed response");
+        let v = c.next_verdict().expect("one verdict per response");
+        assert_eq!(v.outcome, outcome, "status {status}");
+        assert!(!v.close, "status {status}: keep-alive response");
+    }
+    assert!(c.next_verdict().is_none(), "no verdict owed");
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arbitrary_bytes_never_panic_either_parser() {
+    // half HTTP-flavoured bytes (to reach the deep parser states), half
+    // raw noise; the parsers must either accept or return ProtoError —
+    // never panic, never loop
+    let alphabet: &[u8] = b"HTTP/1.0 2045x\r\n:; -OKContent-LghTransfer\tEncoding";
+    forall(400, |rng| {
+        let bytes = gen_vec(rng, 0..600, |r| {
+            if r.chance(0.7) {
+                alphabet[r.next_below(alphabet.len() as u64) as usize]
+            } else {
+                r.next_u64() as u8
+            }
+        });
+        let mut p = RespParser::capturing();
+        let mut q = ReqParser::new();
+        let fed = p.feed(&bytes);
+        let _ = q.feed(&bytes);
+        while q.pop().is_some() {}
+        if fed.is_ok() {
+            let _ = p.eof();
+            while p.pop().is_some() {}
+        }
+        prop(true, "parsers never panic")
+    });
+}
+
+#[test]
+fn generated_pipelines_survive_arbitrary_tearing_and_reserialize() {
+    const STATUSES: [u16; 6] = [200, 400, 404, 418, 500, 503];
+    forall(250, |rng| {
+        // a pipeline of 1..=3 responses with arbitrary binary bodies;
+        // only the last may carry Connection: close (a real stream ends
+        // there)
+        let n = 1 + rng.next_below(3) as usize;
+        let mut stream = Vec::new();
+        let mut want: Vec<(u16, Vec<u8>, bool)> = Vec::new();
+        for k in 0..n {
+            let status = STATUSES[rng.next_below(STATUSES.len() as u64) as usize];
+            let body = gen_vec(rng, 0..48, |r| r.next_u64() as u8);
+            let close = k == n - 1 && rng.chance(0.5);
+            write_response(&mut stream, status, &body, close);
+            want.push((status, body, close));
+        }
+
+        let split = rng.next_below(stream.len() as u64 + 1) as usize;
+        let mut p = RespParser::capturing();
+        p.feed(&stream[..split]).map_err(|e| e.to_string())?;
+        p.feed(&stream[split..]).map_err(|e| e.to_string())?;
+        let got: Vec<Response> = std::iter::from_fn(|| p.pop()).collect();
+
+        prop(got.len() == want.len(), "every pipelined response surfaces")?;
+        let mut reser = Vec::new();
+        for (g, w) in got.iter().zip(&want) {
+            prop(g.status == w.0, "status preserved")?;
+            prop(g.body == w.1, "body preserved across the tear")?;
+            prop(g.close == w.2, "close flag preserved")?;
+            write_response(&mut reser, g.status, &g.body, g.close);
+        }
+        prop(reser == stream, "byte-exact re-serialization")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// The reactor under MockNet: the same parser behind the readiness loop
+// ---------------------------------------------------------------------------
+
+/// One worker over the mock fabric plus the handles to script it
+/// (the `live_reactor.rs` rig, at `TargetMode::Http11`).
+struct Rig {
+    net: MockNet,
+    clock: MockClock,
+    w: Worker<MockNet, MockClock>,
+}
+
+impl Rig {
+    fn new() -> Rig {
+        let specs = [AgentSpec {
+            id: 0,
+            skew_s: 0.0,
+            drift: 0.0,
+        }];
+        let net = MockNet::new();
+        let clock = MockClock::new();
+        let w = Worker::new(net.clone(), clock.clone(), &specs, TargetMode::Http11);
+        Rig { net, clock, w }
+    }
+
+    /// Advance time and run one event-loop turn.
+    fn step(&mut self, dt: f64) {
+        self.clock.advance(dt);
+        self.w.tick(None).expect("mock wait never fails");
+    }
+
+    /// Step until the worker is done (bounded: a livelock fails, not
+    /// hangs).
+    fn settle(&mut self) {
+        for _ in 0..1000 {
+            if self.w.all_done() {
+                return;
+            }
+            self.step(0.001);
+        }
+        panic!("worker did not finish within 1000 steps");
+    }
+
+    fn ctrl(&self) -> u64 {
+        self.net.tokens(Endpoint::Ctrl)[0]
+    }
+
+    fn ts(&self) -> u64 {
+        let toks = self.net.tokens(Endpoint::TimeServer);
+        *toks.last().expect("ts link exists")
+    }
+}
+
+/// A controller frame as it appears on the wire.
+fn ctrl_frame(msg: &CtrlMsg) -> Vec<u8> {
+    let p = wire::encode_ctrl(msg);
+    let mut out = (p.len() as u32).to_be_bytes().to_vec();
+    out.extend_from_slice(&p);
+    out
+}
+
+/// A time-server stamp as it appears on the wire.
+fn stamp(server_s: f64) -> [u8; 8] {
+    server_s.to_bits().to_be_bytes()
+}
+
+fn decode_frames(bytes: &[u8]) -> Vec<WireUp> {
+    let mut fb = FrameBuf::new();
+    fb.push(bytes);
+    let mut out = Vec::new();
+    while let Some(p) = fb.pop().expect("well-formed frames") {
+        out.push(wire::decode_up(&p).expect("decodable frame"));
+    }
+    assert_eq!(fb.pending(), 0, "trailing partial frame");
+    out
+}
+
+fn desc(duration_s: f64, give_up: u32) -> TestDescription {
+    TestDescription {
+        duration_s,
+        client_interval_s: 0.0,
+        sync_interval_s: 1.0,
+        rate_cap_per_s: f64::INFINITY,
+        timeout_s: 5.0,
+        give_up_failures: give_up,
+    }
+}
+
+/// Drive the rig through handshake → Start → probe → first sync,
+/// leaving it Running with a launch armed.  Returns `(ctrl, target)`
+/// tokens.
+fn to_running(rig: &mut Rig, d: TestDescription) -> (u64, u64) {
+    rig.step(0.001); // connects resolve, Hello + DeployDone drain
+    let ctrl = rig.ctrl();
+    let hs = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(matches!(hs[0], WireUp::Hello { agent: 0 }), "{hs:?}");
+    assert!(matches!(hs[1], WireUp::DeployDone), "{hs:?}");
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Start(d)));
+    rig.step(0.001); // Start read; latency probe begins
+    let tgt = *rig.net.tokens(Endpoint::Target).last().unwrap();
+    rig.step(0.001); // probe connect resolves; sync requested
+    assert_eq!(rig.net.take_outbound(rig.ts()), vec![1u8]);
+    rig.net.deliver(rig.ts(), &stamp(1000.0));
+    rig.step(0.001); // sync completes; first launch armed
+    let frames = decode_frames(&rig.net.take_outbound(ctrl));
+    assert!(
+        frames.iter().any(|f| matches!(f, WireUp::Sync(_))),
+        "expected a Sync frame, got {frames:?}"
+    );
+    (ctrl, tgt)
+}
+
+/// Collect every sample across all Samples frames.
+fn all_samples(frames: &[WireUp]) -> Vec<diperf::metrics::CallSample> {
+    frames
+        .iter()
+        .filter_map(|f| match f {
+            WireUp::Samples(v) => Some(v.clone()),
+            _ => None,
+        })
+        .flatten()
+        .collect()
+}
+
+/// The bytes must be exactly one serialized agent GET (any seq).
+fn assert_get(bytes: &[u8]) {
+    let text = String::from_utf8_lossy(bytes);
+    assert!(
+        bytes.starts_with(b"GET /diperf?seq="),
+        "not an agent GET: {text:?}"
+    );
+    assert!(
+        bytes.ends_with(b"Connection: keep-alive\r\n\r\n"),
+        "agent calls are keep-alive: {text:?}"
+    );
+}
+
+fn resp(status: u16, body: &[u8], close: bool) -> Vec<u8> {
+    let mut v = Vec::new();
+    write_response(&mut v, status, body, close);
+    v
+}
+
+#[test]
+fn reactor_http11_accounts_statuses_end_to_end() {
+    let mut rig = Rig::new();
+    let (ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001); // launch #1 writes a real GET
+    assert_get(&rig.net.take_outbound(tgt));
+    let replies: [(u16, &[u8]); 3] =
+        [(200, b"ok\n"), (503, b"denied\n"), (500, b"error\n")];
+    for (status, body) in replies {
+        rig.net.deliver(tgt, &resp(status, body, false));
+        rig.step(0.001); // response → status-coded sample; relaunch armed
+        rig.step(0.001); // next launch fires on the kept-alive connection
+        assert_get(&rig.net.take_outbound(tgt));
+    }
+    assert_eq!(
+        rig.net.tokens(Endpoint::Target).len(),
+        1,
+        "keep-alive must reuse one connection across calls"
+    );
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Stop));
+    rig.step(0.001);
+    rig.settle();
+    let samples = all_samples(&decode_frames(&rig.net.take_outbound(ctrl)));
+    let outcomes: Vec<SampleOutcome> = samples.iter().map(|s| s.outcome).collect();
+    assert_eq!(
+        outcomes,
+        vec![
+            SampleOutcome::Success,
+            SampleOutcome::Denied,
+            SampleOutcome::ServiceError
+        ],
+        "2xx → Success, 503 → Denied, 500 → ServiceError"
+    );
+}
+
+#[test]
+fn reactor_http11_torn_response_completes_only_on_the_last_byte() {
+    let mut rig = Rig::new();
+    let (_ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001);
+    assert_get(&rig.net.take_outbound(tgt));
+    let bytes = resp(200, b"torn across many reads", false);
+    for b in &bytes[..bytes.len() - 1] {
+        rig.net.deliver(tgt, &[*b]);
+        rig.step(0.001);
+        assert!(
+            rig.net.take_outbound(tgt).is_empty(),
+            "no relaunch before the response completes"
+        );
+    }
+    rig.net.deliver(tgt, &bytes[bytes.len() - 1..]);
+    rig.step(0.001); // final byte → verdict → sample; relaunch armed
+    rig.step(0.001); // launch #2
+    assert_get(&rig.net.take_outbound(tgt));
+}
+
+#[test]
+fn reactor_http11_connection_close_opens_a_fresh_target() {
+    let mut rig = Rig::new();
+    let (_ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001);
+    assert_get(&rig.net.take_outbound(tgt));
+    rig.net.deliver(tgt, &resp(200, b"bye", true));
+    rig.step(0.001); // Success sample; Connection: close honored
+    assert!(
+        !rig.net.is_open(tgt),
+        "Connection: close tears the transport down"
+    );
+    rig.step(0.001); // launch #2 opens a fresh connection
+    let tgt2 = *rig.net.tokens(Endpoint::Target).last().unwrap();
+    assert_ne!(tgt, tgt2, "the next call needs a new transport");
+    rig.step(0.001); // connect resolves; request written
+    assert_get(&rig.net.take_outbound(tgt2));
+}
+
+#[test]
+fn reactor_http11_garbage_poisons_the_connection() {
+    let mut rig = Rig::new();
+    let (ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001);
+    assert_get(&rig.net.take_outbound(tgt));
+    rig.net.deliver(tgt, b"ICMP/9 haha\r\n\r\n");
+    rig.step(0.001); // ProtoError → drop the connection, ServiceError
+    assert!(
+        !rig.net.is_open(tgt),
+        "a protocol violation poisons the connection"
+    );
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Stop));
+    rig.step(0.001);
+    rig.settle();
+    let samples = all_samples(&decode_frames(&rig.net.take_outbound(ctrl)));
+    assert_eq!(samples.len(), 1, "{samples:?}");
+    assert_eq!(samples[0].outcome, SampleOutcome::ServiceError);
+}
+
+#[test]
+fn reactor_http11_unsolicited_response_resyncs_by_dropping() {
+    let mut rig = Rig::new();
+    let (ctrl, tgt) = to_running(&mut rig, desc(30.0, 0));
+
+    rig.step(0.001); // launch #1
+    assert_get(&rig.net.take_outbound(tgt));
+    // the target answers the single outstanding GET *twice*: the second
+    // response is unsolicited, and the agent must resync by dropping
+    // the connection rather than inventing a sample
+    let mut two = resp(200, b"yours", false);
+    two.extend_from_slice(&resp(200, b"nobody's", false));
+    rig.net.deliver(tgt, &two);
+    rig.step(0.001);
+    assert!(
+        !rig.net.is_open(tgt),
+        "an unsolicited response must drop the connection"
+    );
+
+    rig.net.deliver(ctrl, &ctrl_frame(&CtrlMsg::Stop));
+    rig.step(0.001);
+    rig.settle();
+    let samples = all_samples(&decode_frames(&rig.net.take_outbound(ctrl)));
+    assert_eq!(
+        samples.len(),
+        1,
+        "only the owed verdict becomes a sample: {samples:?}"
+    );
+    assert_eq!(samples[0].outcome, SampleOutcome::Success);
+}

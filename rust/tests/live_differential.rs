@@ -1,0 +1,134 @@
+//! Differential test: the thread-per-agent backend and the reactor
+//! backend must be *interchangeable* — same seed, same load spec, same
+//! protocol ⇒ statistically equivalent figure series.
+//!
+//! The comparison reuses the sim-vs-live crossval machinery
+//! ([`diperf::live::crossval::build`]) on the two runs' binned
+//! throughput series — the exact data behind `fig_timeline.csv` — and
+//! holds the divergence under the same generous bound CI applies to
+//! sim-vs-live smoke runs.  Both protocols are exercised: the framed
+//! wire codec and real HTTP/1.1.
+//!
+//! De-flaking policy (see `live_harness.rs`): these tests' subject
+//! matter *is* wall-clock behaviour over real loopback sockets, so they
+//! are `#[ignore]`d by default and CI runs them explicitly with
+//! `cargo test --test live_differential -- --ignored`.  Timing-derived
+//! bounds re-run on violation; correctness properties fail fast.
+
+// the reactor backend is epoll/poll-based
+#![cfg(unix)]
+
+use std::time::{Duration, Instant};
+
+use diperf::live::{self, crossval, AgentBackend, LiveConfig, ProtocolKind};
+
+/// Divergence ceiling between the two backends — the same generous
+/// bound CI's live-smoke applies to sim-vs-live (`--crossval-bound`).
+const DIFF_BOUND: f64 = 0.6;
+
+/// Re-run a timing-sensitive scenario until it passes or `deadline` of
+/// wall-clock time is spent; correctness violations panic inside the
+/// closure and fail on the first attempt.
+fn retry_with_deadline<F>(deadline: Duration, mut attempt: F)
+where
+    F: FnMut() -> Result<(), String>,
+{
+    let t0 = Instant::now();
+    let mut tries = 0u32;
+    loop {
+        tries += 1;
+        let err = match attempt() {
+            Ok(()) => return,
+            Err(e) => e,
+        };
+        if t0.elapsed() >= deadline {
+            panic!("still failing after {tries} attempts over {deadline:?}: {err}");
+        }
+        eprintln!("[retry] attempt {tries} failed ({err}); retrying");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+}
+
+/// The shared load spec: 64 agents over loopback, identical for both
+/// backends down to the seed (skews and drifts derive identically, so
+/// the runs are directly comparable).
+fn spec(seed: u64, protocol: ProtocolKind, backend: AgentBackend) -> LiveConfig {
+    let mut cfg = live::live_smoke(seed);
+    cfg.agents = 64;
+    cfg.backend = backend;
+    cfg.workers = 2;
+    cfg.protocol = protocol;
+    cfg.controller.stagger_s = 0.01;
+    cfg.controller.desc.duration_s = 2.0;
+    cfg.controller.desc.client_interval_s = 0.05;
+    cfg.controller.desc.sync_interval_s = 0.5;
+    cfg.grace_s = 1.0;
+    cfg
+}
+
+fn backends_agree(protocol: ProtocolKind) {
+    retry_with_deadline(Duration::from_secs(240), || {
+        let t = live::run_live(&spec(29, protocol, AgentBackend::Thread))
+            .map_err(|e| format!("thread run: {e:#}"))?;
+        let r = live::run_live(&spec(29, protocol, AgentBackend::Reactor))
+            .map_err(|e| format!("reactor run: {e:#}"))?;
+
+        // timing-derived gates first: a stalled runner re-runs
+        if t.connected != 64 {
+            return Err(format!("thread: {}/64 agents connected", t.connected));
+        }
+        if r.connected != 64 {
+            return Err(format!("reactor: {}/64 agents connected", r.connected));
+        }
+        if t.samples() < 200 || r.samples() < 200 {
+            return Err(format!(
+                "thin runs: thread {} / reactor {} samples",
+                t.samples(),
+                r.samples()
+            ));
+        }
+        if t.stream.binned.total_ok <= 0.0 || r.stream.binned.total_ok <= 0.0 {
+            return Err("a backend saw no successful calls".into());
+        }
+
+        // the differential core: the two backends' figure series
+        // through the crossval comparator
+        let cv = crossval::build(&t.stream.binned, &r.stream.binned);
+        if cv.divergence >= DIFF_BOUND {
+            return Err(format!(
+                "thread-vs-reactor divergence {:.3} >= {DIFF_BOUND} ({})",
+                cv.divergence,
+                protocol.label()
+            ));
+        }
+
+        // exact correctness properties: fail fast, never retried
+        assert_eq!(t.protocol_label, protocol.label());
+        assert_eq!(r.protocol_label, protocol.label());
+        assert_eq!(t.data.testers.len(), r.data.testers.len());
+        let t_sent: u64 = t.agent_reports.iter().map(|a| a.samples_sent).sum();
+        let r_sent: u64 = r.agent_reports.iter().map(|a| a.samples_sent).sum();
+        assert_eq!(t_sent, t.samples(), "thread-backend sample conservation");
+        assert_eq!(r_sent, r.samples(), "reactor-backend sample conservation");
+        // both figure CSV surfaces carry the full schema
+        let csv = crossval::csv(&cv);
+        assert!(csv.starts_with("metric,sim,live,rel_diff\n"), "{csv}");
+        assert_eq!(
+            crossval::curve_csv(&cv).trim().lines().count(),
+            1 + crossval::CURVE_POINTS
+        );
+        Ok(())
+    });
+}
+
+#[test]
+#[ignore = "wall-clock subject: 2×64 agents over real loopback sockets; CI runs it via -- --ignored"]
+fn thread_and_reactor_backends_agree_under_the_wire_protocol() {
+    backends_agree(ProtocolKind::Wire);
+}
+
+#[test]
+#[ignore = "wall-clock subject: 2×64 agents over real loopback sockets; CI runs it via -- --ignored"]
+fn thread_and_reactor_backends_agree_under_http11() {
+    backends_agree(ProtocolKind::Http11);
+}
