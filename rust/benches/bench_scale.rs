@@ -5,27 +5,45 @@
 //! perf trajectory to regress against — the MongoDB lesson (Ingo &
 //! Daly 2020): performance work without a tracked artifact melts away.
 //!
-//! Size control: `DIPERF_BENCH_SIZES=1000,10000` (CI smoke uses
-//! `1000`); default sweeps 1k/10k/100k.
+//! Controls:
+//! - `DIPERF_BENCH_SIZES=1000,10000` — tester pools (CI smoke uses
+//!   `1000`); default sweeps 1k/10k/100k.
+//! - `DIPERF_BENCH_DURATION=60` — virtual seconds per run (default
+//!   300; the million-tester CI row shortens it to stay affordable).
+//! - `DIPERF_BENCH_SHARDS=1,4` — switch to *sharded-world* mode: one
+//!   `churn-{n}-shard{S}-stream` row per pool size and shard count,
+//!   **appended** to an existing `BENCH_scale.json` (the single-engine
+//!   sweep, retain probe and queue microbenchmark are skipped), plus a
+//!   `testers_per_core` summary field (largest pool / its largest
+//!   shard count).  See `docs/BENCH_scale.md`.
+//!
+//! Memory metric: every row's `peak_rss_kb` is the phase's own peak
+//! resident set, measured by [`RssProbe`] (a sampler over `VmRSS` with
+//! a `/proc/self/statm` fallback).  The process-lifetime `VmHWM`
+//! watermark is *not* used per row: resetting it requires a writable
+//! `/proc/self/clear_refs`, which CI containers deny, and without the
+//! reset every phase after the biggest one inherits its peak.
 
 use diperf::bench_util::{
-    md_header, peak_rss_kb, reset_peak_rss, scale_json, Bench, ScaleRow,
+    md_header, scale_json, upsert_scale_field, Bench, RssProbe, ScaleRow,
 };
 use diperf::experiment::{presets, run_experiment_opts, RunOptions};
 use diperf::metrics::CollectionMode;
 use diperf::sim::{Engine, QueueKind, SimTime};
 use diperf::util::Pcg64;
 
-const DURATION_S: f64 = 300.0;
-
-fn sizes() -> Vec<usize> {
-    let parsed: Vec<usize> = std::env::var("DIPERF_BENCH_SIZES")
+fn env_list(name: &str) -> Vec<usize> {
+    std::env::var(name)
         .map(|s| {
             s.split(',')
                 .filter_map(|x| x.trim().parse().ok())
                 .collect()
         })
-        .unwrap_or_default();
+        .unwrap_or_default()
+}
+
+fn sizes() -> Vec<usize> {
+    let parsed = env_list("DIPERF_BENCH_SIZES");
     if parsed.is_empty() {
         vec![1_000, 10_000, 100_000]
     } else {
@@ -33,32 +51,47 @@ fn sizes() -> Vec<usize> {
     }
 }
 
+fn duration_s() -> f64 {
+    std::env::var("DIPERF_BENCH_DURATION")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|d: &f64| *d > 0.0)
+        .unwrap_or(300.0)
+}
+
 /// One measured experiment run (single iteration: the big runs are tens
 /// of seconds of wall time and perfectly deterministic).
-fn run_once(n: usize, queue: QueueKind, collect: CollectionMode) -> ScaleRow {
-    let cfg = presets::bench_scale(n, DURATION_S, 42);
-    let rss_reset = reset_peak_rss();
+fn run_once(
+    n: usize,
+    duration: f64,
+    queue: QueueKind,
+    collect: CollectionMode,
+    shards: Option<usize>,
+) -> ScaleRow {
+    let cfg = presets::bench_scale(n, duration, 42);
+    let probe = RssProbe::start();
     let t = std::time::Instant::now();
     let r = run_experiment_opts(
         &cfg,
         RunOptions {
             queue,
             collect,
+            shards,
             ..RunOptions::default()
         },
     );
     let wall_s = t.elapsed().as_secs_f64().max(1e-9);
+    let peak_rss_kb = probe.stop();
     let samples = match r.stream.as_ref() {
         Some(agg) => agg.samples_seen,
         None => r.data.samples.len() as u64,
     };
+    let label = match shards {
+        Some(s) => format!("churn-{n}-shard{s}-{}", collect.label()),
+        None => format!("churn-{n}-{}-{}", queue.label(), collect.label()),
+    };
     ScaleRow {
-        label: format!(
-            "churn-{n}-{}-{}{}",
-            queue.label(),
-            collect.label(),
-            if rss_reset { "" } else { "-norss" }
-        ),
+        label,
         testers: n,
         queue: queue.label(),
         collection: collect.label(),
@@ -67,7 +100,7 @@ fn run_once(n: usize, queue: QueueKind, collect: CollectionMode) -> ScaleRow {
         events: r.events,
         events_per_sec: r.events as f64 / wall_s,
         peak_pending: r.peak_pending,
-        peak_rss_kb: peak_rss_kb(),
+        peak_rss_kb,
         samples,
     }
 }
@@ -103,19 +136,66 @@ fn queue_rate(kind: QueueKind, resident: usize) -> f64 {
     b.rate().unwrap_or(0.0)
 }
 
+/// Sharded-world mode: measure `sizes x shard counts`, append the rows
+/// to the existing trajectory and record `testers_per_core`.
+fn run_sharded(sizes: &[usize], shard_counts: &[usize], duration: f64) -> anyhow::Result<()> {
+    let mut rows: Vec<ScaleRow> = Vec::new();
+    for &n in sizes {
+        for &s in shard_counts {
+            let row = run_once(n, duration, QueueKind::Wheel, CollectionMode::Stream, Some(s));
+            println!(
+                "n={n} S={s}: {:.2}s wall, {:.2} M ev/s, {} samples, \
+                 peak rss {} kB",
+                row.wall_s,
+                row.events_per_sec / 1e6,
+                row.samples,
+                row.peak_rss_kb,
+            );
+            anyhow::ensure!(row.samples > 0, "sharded run produced no samples");
+            rows.push(row);
+        }
+    }
+    let path = "BENCH_scale.json";
+    diperf::bench_util::append_or_init(path, &rows)?;
+    // headline scaling figure: how many simulated testers each core
+    // carried in the largest sharded configuration
+    let max_n = sizes.iter().copied().max().unwrap_or(1);
+    let max_s = shard_counts.iter().copied().max().unwrap_or(1).max(1);
+    let doc = std::fs::read_to_string(path)?;
+    if let Some(doc) = upsert_scale_field(&doc, "testers_per_core", &format!("{}", max_n / max_s)) {
+        std::fs::write(path, doc)?;
+    }
+    println!("\nappended {} sharded rows to {path}", rows.len());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    println!("# scale-out benchmark (churn, {DURATION_S:.0} virtual s)\n");
+    let duration = duration_s();
+    let sizes = sizes();
+    let shard_counts = env_list("DIPERF_BENCH_SHARDS");
+    if !shard_counts.is_empty() {
+        println!(
+            "# sharded scale-out benchmark (churn, {duration:.0} virtual s)\n"
+        );
+        return run_sharded(&sizes, &shard_counts, duration);
+    }
+    println!("# scale-out benchmark (churn, {duration:.0} virtual s)\n");
     println!("{}", md_header());
 
     let mut rows: Vec<ScaleRow> = Vec::new();
-    let sizes = sizes();
     let max_n = sizes.iter().copied().max().unwrap_or(1_000);
 
-    // retain-vs-stream memory probe at an affordable size: do it first
-    // so the retained run's RSS cannot be masked by later, larger runs
-    // on kernels where the high-water mark is not resettable
+    // retain-vs-stream memory probe at an affordable size (each phase
+    // measures its own peak via the RSS sampler, but allocator reuse
+    // still makes first-position the fairest slot for the retained run)
     let probe_n = max_n.min(10_000);
-    let retain_row = run_once(probe_n, QueueKind::Wheel, CollectionMode::Retain);
+    let retain_row = run_once(
+        probe_n,
+        duration,
+        QueueKind::Wheel,
+        CollectionMode::Retain,
+        None,
+    );
     println!(
         "retain {probe_n}: {:.2}s, {} samples, peak rss {} kB",
         retain_row.wall_s, retain_row.samples, retain_row.peak_rss_kb
@@ -125,8 +205,10 @@ fn main() -> anyhow::Result<()> {
     // the main sweep: streaming collection under both queues
     let mut wheel_vs_heap_at_max = 0.0;
     for &n in &sizes {
-        let wheel = run_once(n, QueueKind::Wheel, CollectionMode::Stream);
-        let heap = run_once(n, QueueKind::Heap, CollectionMode::Stream);
+        let wheel =
+            run_once(n, duration, QueueKind::Wheel, CollectionMode::Stream, None);
+        let heap =
+            run_once(n, duration, QueueKind::Heap, CollectionMode::Stream, None);
         let ratio = wheel.events_per_sec / heap.events_per_sec.max(1.0);
         println!(
             "n={n}: wheel {:.2} M ev/s vs heap {:.2} M ev/s ({ratio:.2}x), \
@@ -159,7 +241,7 @@ fn main() -> anyhow::Result<()> {
     let doc = scale_json(
         &rows,
         &[
-            ("virtual_s", format!("{DURATION_S:.1}")),
+            ("virtual_s", format!("{duration:.1}")),
             ("seed", "42".into()),
             ("wheel_vs_heap_experiment", format!("{wheel_vs_heap_at_max:.3}")),
             ("wheel_vs_heap_queue_only", format!("{queue_ratio:.3}")),

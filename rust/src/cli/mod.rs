@@ -68,6 +68,7 @@ fn spec() -> Vec<Spec> {
         Spec { name: "quiet", takes_value: false, help: "suppress charts" },
         Spec { name: "retain-samples", takes_value: false, help: "keep every sample in memory (writes samples.csv, enables XLA)" },
         Spec { name: "queue", takes_value: true, help: "event queue: wheel (default) | heap" },
+        Spec { name: "shards", takes_value: true, help: "shard the world across N per-core engines (reports are shard-count invariant)" },
         Spec { name: "bench-json", takes_value: true, help: "write run perf counters as JSON to this path (campaign: append)" },
         Spec { name: "jobs", takes_value: true, help: "campaign worker threads (default: all cores)" },
         Spec { name: "agents", takes_value: true, help: "live agent count override" },
@@ -99,6 +100,10 @@ fn run_opts(a: &Args) -> Result<RunOptions> {
     };
     if let Some(q) = a.get("queue") {
         opts.queue = QueueKind::parse(q).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if let Some(s) = a.get_parsed::<usize>("shards")? {
+        anyhow::ensure!(s >= 1, "--shards must be >= 1");
+        opts.shards = Some(s);
     }
     if a.has("xla") && opts.collect == CollectionMode::Stream {
         anyhow::bail!(
@@ -297,12 +302,21 @@ fn write_run_dir(
 
 /// Write the run's performance counters in the `BENCH_scale.json` row
 /// format (for `--bench-json`).
-fn write_bench_json(path: &str, name: &str, r: &ExperimentResult) -> Result<()> {
+fn write_bench_json(
+    path: &str,
+    name: &str,
+    shards: Option<usize>,
+    r: &ExperimentResult,
+) -> Result<()> {
     use crate::bench_util::{peak_rss_kb, scale_json, ScaleRow};
     let testers = r.data.testers.len();
     let wall_s = (r.wall_ms / 1e3).max(1e-9);
+    let label = match shards {
+        Some(s) => format!("{name}-{testers}-shard{s}-{}", r.queue.label()),
+        None => format!("{name}-{testers}-{}", r.queue.label()),
+    };
     let row = ScaleRow {
-        label: format!("{name}-{testers}-{}", r.queue.label()),
+        label,
         testers,
         queue: r.queue.label(),
         collection: r.collection.label(),
@@ -326,14 +340,19 @@ fn write_bench_json(path: &str, name: &str, r: &ExperimentResult) -> Result<()> 
 fn cmd_run(a: &Args) -> Result<i32> {
     let (cfg, name) = build_config(a)?;
     let opts = run_opts(a)?;
+    let shards = opts.shards;
     eprintln!(
         "[diperf] running preset {name:?}: {} testers x {:.0}s \
-         (seed {}, {} queue, {} collection)",
+         (seed {}, {} queue, {} collection{})",
         cfg.testbed.num_testers,
         cfg.controller.desc.duration_s,
         cfg.seed,
         opts.queue.label(),
         opts.collect.label(),
+        match shards {
+            Some(s) => format!(", {s} shards"),
+            None => String::new(),
+        },
     );
     let r = run_experiment_opts(&cfg, opts);
     let (out, path_label, churn) = match r.stream.as_ref() {
@@ -352,7 +371,7 @@ fn cmd_run(a: &Args) -> Result<i32> {
     };
     let dir = write_run_dir(a, &name, &cfg, &r, &out, &churn)?;
     if let Some(path) = a.get("bench-json") {
-        write_bench_json(path, &name, &r)?;
+        write_bench_json(path, &name, shards, &r)?;
     }
     print!("{}", summarize(&r, &churn));
     println!("analysis path     {path_label}");
@@ -1109,6 +1128,14 @@ mod tests {
         assert_eq!(o.queue, QueueKind::Heap);
 
         let a = Args::parse(&sv(&["run", "--queue", "zzz"]), &spec()).unwrap();
+        assert!(run_opts(&a).is_err());
+
+        // --shards selects the sharded world; zero is nonsense
+        let a = Args::parse(&sv(&["run", "--shards", "4"]), &spec()).unwrap();
+        assert_eq!(run_opts(&a).unwrap().shards, Some(4));
+        let a = Args::parse(&sv(&["run"]), &spec()).unwrap();
+        assert_eq!(run_opts(&a).unwrap().shards, None);
+        let a = Args::parse(&sv(&["run", "--shards", "0"]), &spec()).unwrap();
         assert!(run_opts(&a).is_err());
 
         // --xla without retained samples cannot work: the AOT artifacts

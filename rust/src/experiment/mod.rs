@@ -21,15 +21,26 @@
 //! inputs.
 //!
 //! Scale-out mechanics: [`RunOptions`] selects the engine's event queue
-//! (timer wheel vs reference heap, [`crate::sim::QueueKind`]) and the
+//! (timer wheel vs reference heap, [`crate::sim::QueueKind`]), the
 //! sample-collection mode (retain vs streaming,
-//! [`crate::metrics::CollectionMode`]).  Neither knob perturbs the
-//! simulation — all four combinations replay the same seed to the same
-//! event sequence — they only change how fast it runs and how much
-//! memory collection takes, which is what makes 100 000-tester churn
-//! sweeps practical (see `rust/benches/bench_scale.rs`).
+//! [`crate::metrics::CollectionMode`]), and the world-map layout
+//! (dense ID-indexed vectors vs the classic `FxHashMap`s,
+//! [`MapKind`]).  None of these knobs perturbs the simulation — every
+//! combination replays the same seed to the same event sequence — they
+//! only change how fast it runs and how much memory collection takes,
+//! which is what makes 100 000-tester churn sweeps practical (see
+//! `rust/benches/bench_scale.rs`).
+//!
+//! Beyond one core: [`RunOptions::shards`] routes the run through the
+//! sharded world in [`shard`] — per-shard engines exchanging
+//! timestamped cross-shard messages under a conservative lookahead
+//! derived from [`crate::net::NetModel::min_latency_bound`].  The
+//! sharded world is its own deterministic simulation (bit-identical at
+//! *any* shard count, including 1), distinct from the single-engine
+//! world above.
 
 pub mod presets;
+pub mod shard;
 
 use crate::client;
 use crate::cluster::{Testbed, TestbedParams};
@@ -125,10 +136,40 @@ pub struct ExperimentConfig {
     pub scenario: Scenario,
 }
 
+/// World-map layout of the single-engine runner's hot path.
+///
+/// Request ids and truth keys are dense and monotone, so hash maps buy
+/// nothing over ID-indexed vectors — [`MapKind::Dense`] replaces them
+/// with a ring-buffer request table and per-tester truth columns.  The
+/// classic layout stays selectable so the dense path is pinned by a
+/// differential test (`rust/tests/shard_differential.rs`): both layouts
+/// must replay a seed to bit-identical reports.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum MapKind {
+    /// Dense ID-indexed vectors (default; the flattened hot path).
+    Dense,
+    /// The original `FxHashMap` world maps (differential reference).
+    Hash,
+}
+
+impl MapKind {
+    /// Stable label for reports and CLI flags.
+    pub fn label(self) -> &'static str {
+        match self {
+            MapKind::Dense => "dense",
+            MapKind::Hash => "hash",
+        }
+    }
+}
+
 /// Run-mechanics knobs orthogonal to the experiment specification: how
-/// samples are collected and which event queue the engine runs on.
-/// Neither changes the simulated world — a given seed dispatches the
-/// identical event sequence under every combination.
+/// samples are collected, which event queue the engine runs on, and how
+/// the world maps are laid out.  None of them changes the simulated
+/// world — a given seed dispatches the identical event sequence under
+/// every combination.  [`RunOptions::shards`] is the exception by
+/// design: it selects the sharded runner, a *different* deterministic
+/// world (own RNG stream layout) that is itself invariant across shard
+/// counts.
 #[derive(Clone, Copy, Debug)]
 pub struct RunOptions {
     /// Sample collection strategy (default: retain, the classic path).
@@ -141,6 +182,12 @@ pub struct RunOptions {
     /// Moving-average window in seconds (default 160, the paper's
     /// Figure 3 window).
     pub window_s: f64,
+    /// World-map layout of the single-engine hot path (default: dense).
+    pub map: MapKind,
+    /// Run the sharded world on this many per-core engines (`None` =
+    /// the single-engine runner).  Reports are bit-identical at every
+    /// shard count, including `Some(1)`; see [`shard`].
+    pub shards: Option<usize>,
 }
 
 impl Default for RunOptions {
@@ -150,6 +197,8 @@ impl Default for RunOptions {
             queue: QueueKind::Wheel,
             num_quanta: 512,
             window_s: 160.0,
+            map: MapKind::Dense,
+            shards: None,
         }
     }
 }
@@ -232,14 +281,138 @@ enum Ev {
     CtrlTick,
 }
 
-struct ReqInfo {
-    tester: usize,
+/// Dense in-flight request table.
+///
+/// Request ids are allocated monotonically, so the live ids always fall
+/// in a contiguous window `[base, base + ring.len())` — a ring buffer of
+/// `Option<tester>` indexed by `id - base` replaces the hash map.  The
+/// window is kept short by eagerly removing entries on completion /
+/// timeout and by [`World::abandon_outstanding`] at every stop/kill
+/// site, so a request orphaned by a dying tester cannot pin `base`.
+#[derive(Default)]
+struct ReqTable {
+    base: u32,
+    ring: std::collections::VecDeque<Option<u32>>,
+}
+
+impl ReqTable {
+    fn insert(&mut self, id: u32, tester: u32) {
+        debug_assert_eq!(
+            id,
+            self.base.wrapping_add(self.ring.len() as u32),
+            "request ids must be allocated monotonically"
+        );
+        self.ring.push_back(Some(tester));
+    }
+
+    fn get(&self, id: u32) -> Option<u32> {
+        let idx = id.checked_sub(self.base)? as usize;
+        self.ring.get(idx).copied().flatten()
+    }
+
+    fn remove(&mut self, id: u32) -> Option<u32> {
+        let idx = id.checked_sub(self.base)? as usize;
+        let t = self.ring.get_mut(idx)?.take();
+        while let Some(None) = self.ring.front() {
+            self.ring.pop_front();
+            self.base = self.base.wrapping_add(1);
+        }
+        t
+    }
+}
+
+/// The in-flight request map under either [`MapKind`] layout.  The two
+/// arms are operation-for-operation equivalent, so the simulation is
+/// identical under both (enforced by the shard-differential suite).
+enum ReqMap {
+    Hash(FxHashMap<u32, u32>),
+    Dense(ReqTable),
+}
+
+impl ReqMap {
+    fn new(kind: MapKind) -> ReqMap {
+        match kind {
+            MapKind::Hash => ReqMap::Hash(FxHashMap::default()),
+            MapKind::Dense => ReqMap::Dense(ReqTable::default()),
+        }
+    }
+
+    fn insert(&mut self, id: u32, tester: u32) {
+        match self {
+            ReqMap::Hash(m) => {
+                m.insert(id, tester);
+            }
+            ReqMap::Dense(t) => t.insert(id, tester),
+        }
+    }
+
+    fn get(&self, id: u32) -> Option<u32> {
+        match self {
+            ReqMap::Hash(m) => m.get(&id).copied(),
+            ReqMap::Dense(t) => t.get(id),
+        }
+    }
+
+    fn remove(&mut self, id: u32) -> Option<u32> {
+        match self {
+            ReqMap::Hash(m) => m.remove(&id),
+            ReqMap::Dense(t) => t.remove(id),
+        }
+    }
+}
+
+/// Simulation-truth store (`(tester, seq) -> true end time`) under
+/// either layout: sequence numbers are per-tester monotone from zero,
+/// so the dense arm is a per-tester column vector indexed by `seq`.
+enum TruthStore {
+    Hash(FxHashMap<(u32, u32), f64>),
+    Dense(Vec<Vec<f64>>),
+}
+
+impl TruthStore {
+    fn new(kind: MapKind, n: usize) -> TruthStore {
+        match kind {
+            MapKind::Hash => TruthStore::Hash(FxHashMap::default()),
+            MapKind::Dense => TruthStore::Dense(vec![Vec::new(); n]),
+        }
+    }
+
+    fn insert(&mut self, tester: u32, seq: u32, t: f64) {
+        match self {
+            TruthStore::Hash(m) => {
+                m.insert((tester, seq), t);
+            }
+            TruthStore::Dense(v) => {
+                let col = &mut v[tester as usize];
+                let idx = seq as usize;
+                if idx >= col.len() {
+                    col.resize(idx + 1, f64::NAN);
+                }
+                col[idx] = t;
+            }
+        }
+    }
+
+    fn get(&self, tester: u32, seq: u32) -> f64 {
+        match self {
+            TruthStore::Hash(m) => {
+                m.get(&(tester, seq)).copied().unwrap_or(f64::NAN)
+            }
+            TruthStore::Dense(v) => v
+                .get(tester as usize)
+                .and_then(|col| col.get(seq as usize))
+                .copied()
+                .unwrap_or(f64::NAN),
+        }
+    }
 }
 
 /// The combined effect of overlapping weather spells on one node: the
 /// worst latency factor, summed loss (clamped), partitioned if any
 /// spell partitions.  Empty input means clear skies.
-fn combine_weather(spells: &[(u64, crate::scenario::WeatherPatch)]) -> crate::scenario::WeatherPatch {
+pub(crate) fn combine_weather(
+    spells: &[(u64, crate::scenario::WeatherPatch)],
+) -> crate::scenario::WeatherPatch {
     let mut p = crate::scenario::WeatherPatch::clear();
     for &(_, s) in spells {
         p.latency_factor = p.latency_factor.max(s.latency_factor);
@@ -261,12 +434,19 @@ struct World {
     rng_net: Pcg64,
     rng_svc: Pcg64,
     rng_testers: Vec<Pcg64>,
-    reqs: FxHashMap<u32, ReqInfo>,
+    reqs: ReqMap,
     next_req: u32,
     /// Simulation truth for validation: (tester, seq) -> true end time.
     /// Populated only in retain mode — it is O(calls) by nature and the
     /// sync-validation tests that consume it need the samples anyway.
-    truth: FxHashMap<(u32, u32), f64>,
+    truth: TruthStore,
+    /// SoA timeout prefilter: per-tester global-time lower bound on when
+    /// the outstanding invocation *could* time out (`INFINITY` when the
+    /// tester has nothing that can expire).  The sweep skips testers
+    /// whose bound is in the future without touching their `Tester`
+    /// struct; the exact local-clock check in the sweep body remains the
+    /// sole decision-maker, so the prefilter cannot change behavior.
+    deadline: Vec<f64>,
     sync: SyncAccuracy,
     deploys_pending: usize,
     ramp_begun: bool,
@@ -337,6 +517,7 @@ impl World {
             // write that just got through is answered with a reset, and
             // the tester stops issuing clients immediately — §3's
             // "an unmonitored client never loads the service".
+            self.abandon_outstanding(i);
             self.testers[i].session_lost();
             return;
         }
@@ -369,12 +550,12 @@ impl World {
                     }
                 }
                 SvcOut::Done { req, outcome, .. } => {
-                    if let Some(info) = self.reqs.get(&req.0) {
-                        let node = self.testers[info.tester].node;
+                    if let Some(tester) = self.reqs.get(req.0) {
+                        let node = self.testers[tester as usize].node;
                         if self.net.lost(self.bed.service, node, &mut self.rng_net) {
                             // the response is gone for good: drop the
                             // request record; the tester's timeout fires
-                            self.reqs.remove(&req.0);
+                            self.reqs.remove(req.0);
                             continue;
                         }
                         let lat =
@@ -395,12 +576,27 @@ impl World {
         self.eng.schedule(at, Ev::ClientLaunch(i));
     }
 
+    /// Drop the request-table entry for tester `i`'s in-flight
+    /// invocation, if any.  Called wherever a tester stops or dies with
+    /// a request still outstanding — the entry would otherwise never be
+    /// removed (the tester's timeout sweep no longer sees the
+    /// invocation), which under the dense layout would pin the ring
+    /// buffer's `base` for the rest of the run.  Applied under *both*
+    /// map layouts so they stay differential-identical.
+    fn abandon_outstanding(&mut self, i: usize) {
+        if let Some(inv) = self.testers[i].outstanding {
+            self.reqs.remove(inv.req.0);
+        }
+        self.deadline[i] = f64::INFINITY;
+    }
+
     /// Tester produced a sample: forward it, apply the give-up policy,
     /// and keep the loop going.
     fn after_sample(&mut self, i: usize, sample: crate::metrics::CallSample) {
         if self.opts.collect == CollectionMode::Retain {
             self.truth.insert(
-                (sample.tester.0, sample.seq),
+                sample.tester.0,
+                sample.seq,
                 self.eng.now().as_secs_f64(),
             );
         }
@@ -447,6 +643,7 @@ impl World {
         match f.kind {
             FaultKind::Crash { tester, token } => {
                 if self.testers[tester].phase != Phase::Dead {
+                    self.abandon_outstanding(tester);
                     self.testers[tester].kill();
                     self.bed.set_down(self.testers[tester].node);
                     self.crash_token[tester] = Some(token);
@@ -616,6 +813,7 @@ impl World {
                             .schedule_in(SimDuration(0), Ev::SyncBegin(i, gen));
                     }
                     CtrlMsg::Stop => {
+                        self.abandon_outstanding(i);
                         self.testers[i].stop();
                     }
                 }
@@ -716,7 +914,15 @@ impl World {
                 let req = RequestId(self.next_req);
                 self.next_req += 1;
                 let inv = self.testers[i].launch(now_local, req);
-                self.reqs.insert(req.0, ReqInfo { tester: i });
+                self.reqs.insert(req.0, i as u32);
+                // timeout prefilter bound: the invocation cannot expire
+                // before its local deadline maps back to global time (a
+                // hair early for float safety; the sweep re-checks
+                // exactly)
+                self.deadline[i] = node
+                    .clock
+                    .global_secs(inv.launched_local + self.testers[i].desc.timeout_s)
+                    - 1e-6;
                 // client exec overhead before the RPC leaves the node
                 let pre =
                     client::exec_overhead_s(node.cpu_speed, &mut self.rng_testers[i]);
@@ -741,9 +947,8 @@ impl World {
                 let _ = inv; // timeout handled by the periodic sweep
             }
             Ev::RequestArrive(req) => {
-                let client_id = match self.reqs.get(&req.0) {
-                    Some(info) => info.tester as u32,
-                    None => return,
+                let Some(client_id) = self.reqs.get(req.0) else {
+                    return;
                 };
                 let outs = self.service.submit(
                     self.eng.now(),
@@ -762,10 +967,10 @@ impl World {
                 self.handle_svc_outs(outs);
             }
             Ev::ResponseDeliver(req, outcome) => {
-                let Some(info) = self.reqs.remove(&req.0) else {
+                let Some(tester) = self.reqs.remove(req.0) else {
                     return;
                 };
-                let i = info.tester;
+                let i = tester as usize;
                 if self.testers[i].phase == Phase::Dead {
                     return;
                 }
@@ -779,15 +984,24 @@ impl World {
                     client::classify(outcome),
                     post,
                 ) {
+                    self.deadline[i] = f64::INFINITY;
                     self.after_sample(i, s);
                 }
             }
             Ev::TimeoutSweep => {
+                let now_g = self.eng.now().as_secs_f64();
                 for i in 0..self.testers.len() {
+                    // SoA fast path: nothing of tester `i` can have
+                    // expired yet — skip without touching its struct
+                    if now_g < self.deadline[i] {
+                        continue;
+                    }
                     if self.testers[i].phase == Phase::Dead {
+                        self.deadline[i] = f64::INFINITY;
                         continue;
                     }
                     let Some(inv) = self.testers[i].outstanding else {
+                        self.deadline[i] = f64::INFINITY;
                         continue;
                     };
                     let now_local = self.local(i);
@@ -800,7 +1014,8 @@ impl World {
                         .record_timeout(now_local, inv.timeout_token)
                     {
                         // the request's eventual response must be ignored
-                        self.reqs.remove(&inv.req.0);
+                        self.reqs.remove(inv.req.0);
+                        self.deadline[i] = f64::INFINITY;
                         self.after_sample(i, s);
                     }
                 }
@@ -821,6 +1036,7 @@ impl World {
                 }
             }
             Ev::NodeFail(i) => {
+                self.abandon_outstanding(i);
                 self.testers[i].kill();
                 self.bed.set_down(self.testers[i].node);
                 // permanent: no scenario restart may revive this node
@@ -881,6 +1097,9 @@ pub fn run_experiment_opts(
     cfg: &ExperimentConfig,
     opts: RunOptions,
 ) -> ExperimentResult {
+    if let Some(shards) = opts.shards {
+        return shard::run_experiment_sharded(cfg, opts, shards.max(1));
+    }
     let wall = std::time::Instant::now();
     let mut root = Pcg64::seed_from(cfg.seed);
     let mut rng_bed = root.split(1);
@@ -909,9 +1128,10 @@ pub fn run_experiment_opts(
         rng_net: root.split(2),
         rng_svc: root.split(3),
         rng_testers,
-        reqs: FxHashMap::default(),
+        reqs: ReqMap::new(opts.map),
         next_req: 0,
-        truth: FxHashMap::default(),
+        truth: TruthStore::new(opts.map, n),
+        deadline: vec![f64::INFINITY; n],
         sync: SyncAccuracy::new(),
         deploys_pending: n,
         ramp_begun: false,
@@ -985,11 +1205,7 @@ pub fn run_experiment_opts(
     let mut data = w.controller.finalize(duration_s);
     // backfill simulation truth for sync-pipeline validation
     for s in data.samples.iter_mut() {
-        s.t_end_true = w
-            .truth
-            .get(&(s.tester.0, s.seq))
-            .copied()
-            .unwrap_or(f64::NAN);
+        s.t_end_true = w.truth.get(s.tester.0, s.seq);
     }
     let stream = w.controller.take_stream();
     // A run that never reached the ramp (nothing deployed) falls back to
@@ -1075,6 +1291,74 @@ mod tests {
             assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
             assert_eq!(x.outcome, y.outcome);
         }
+    }
+
+    #[test]
+    fn map_layout_does_not_perturb_the_run() {
+        let mut cfg = presets::quick_http(4, 60.0, 23);
+        // hostile enough to exercise abandon paths (crash with an
+        // in-flight request) under both layouts
+        cfg.controller.silence_timeout_s = 30.0;
+        cfg.scenario.timeline = vec![crate::scenario::ScenarioEvent {
+            at_s: 20.0,
+            action: crate::scenario::Action::CrashTesters {
+                frac: 0.5,
+                restart_after_s: Some(15.0),
+            },
+        }];
+        let dense = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                map: MapKind::Dense,
+                ..RunOptions::default()
+            },
+        );
+        let hash = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                map: MapKind::Hash,
+                ..RunOptions::default()
+            },
+        );
+        assert_eq!(dense.events, hash.events);
+        assert_eq!(dense.data.samples.len(), hash.data.samples.len());
+        for (x, y) in dense.data.samples.iter().zip(&hash.data.samples) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+            assert_eq!(x.rt.to_bits(), y.rt.to_bits());
+            assert_eq!(x.outcome, y.outcome);
+            assert_eq!(
+                x.t_end_true.to_bits(),
+                y.t_end_true.to_bits(),
+                "truth stores disagree"
+            );
+        }
+    }
+
+    #[test]
+    fn req_table_ring_semantics() {
+        let mut t = ReqTable::default();
+        for id in 0..6u32 {
+            t.insert(id, id * 10);
+        }
+        assert_eq!(t.get(3), Some(30));
+        assert_eq!(t.remove(0), Some(0));
+        assert_eq!(t.remove(0), None, "double remove");
+        // interior removal leaves base pinned at the oldest live id
+        assert_eq!(t.remove(2), Some(20));
+        assert_eq!(t.get(2), None);
+        assert_eq!(t.get(1), Some(10));
+        // removing the pin advances base past the tombstones
+        assert_eq!(t.remove(1), Some(10));
+        assert_eq!(t.base, 3);
+        assert_eq!(t.get(7), None, "beyond the ring");
+        assert_eq!(t.remove(2), None, "below base");
+        for id in [3u32, 4, 5] {
+            assert_eq!(t.remove(id), Some(id * 10));
+        }
+        assert!(t.ring.is_empty());
+        assert_eq!(t.base, 6);
+        t.insert(6, 60);
+        assert_eq!(t.get(6), Some(60));
     }
 
     #[test]

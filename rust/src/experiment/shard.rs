@@ -1,0 +1,1330 @@
+//! The sharded experiment world: one `sim::Engine` per shard plus a
+//! hub engine for the shared infrastructure, advanced in lockstep
+//! windows under a conservative lookahead.
+//!
+//! # Ownership
+//!
+//! The tester pool is partitioned round-robin: shard `s` of `S` owns
+//! every tester `i` with `i % S == s` (local slot `i / S`).  The hub —
+//! which owns the controller, the target service and the time-stamp
+//! server — is *always* a separate owner, even at `--shards 1`.  That
+//! asymmetry is the key to shard-count invariance: every
+//! tester-to-infrastructure leg crosses the same outbox/barrier path at
+//! every shard count, so moving a tester between shards never changes
+//! which messages cross an ownership boundary.
+//!
+//! # Conservative lookahead
+//!
+//! All cross-owner legs ride the WAN, whose per-draw latency is bounded
+//! below by [`crate::net::NetModel::min_latency_bound`] — and to make
+//! the bound load-bearing rather than statistical, every cross-owner
+//! latency sample is clamped to at least that bound `L`.  The world
+//! then advances in windows `[t_min, t_min + L)` where `t_min` is the
+//! minimum pending event time across all engines ([`WindowPlan`]): any
+//! message emitted inside a window arrives at or after its end, so each
+//! engine can run its window to completion without ever hearing from a
+//! peer mid-window.  Progress is guaranteed (each window strictly
+//! advances `t_min`) and an idle shard can never stall the merge — the
+//! window is computed from the union of pending times, so an engine
+//! with nothing to do simply contributes nothing.
+//!
+//! # Merge determinism
+//!
+//! Cross-owner messages are timestamped `(arrive, tester, emit)` where
+//! `emit` is a per-tester emission counter; at every window boundary
+//! the coordinator sorts the union of outboxes by that key
+//! ([`sort_cross_messages`]) before scheduling, so insertion order —
+//! and therefore equal-timestamp event order — is a pure function of
+//! the seed.  Window boundaries themselves depend only on the union of
+//! pending event times, which is shard-count invariant, so the whole
+//! event sequence replays bit-identically at any `--shards` value
+//! (pinned by `rust/tests/shard_differential.rs`).
+//!
+//! # Relation to the single-engine world
+//!
+//! This is a *separate* deterministic world, not a re-execution of
+//! [`super::run_experiment_opts`]'s event sequence: RNG streams are
+//! derived in a different (fixed) order, request ids encode the tester
+//! index, and three session mechanics become message-passing where the
+//! single-engine world could peek across the world struct:
+//!
+//! * a tester discovers a torn-down session via an explicit
+//!   `SessionReset` reply to its next delivered report (one extra
+//!   round trip) instead of synchronously at the send site;
+//! * the controller's periodic Hello re-offer for running-but-evicted
+//!   testers is replaced by a bounded tester-side `HelloRetry` chain
+//!   after a revive;
+//! * the hub forwards a Hello to the controller only when it actually
+//!   reopens something (closed session or eviction), so rejoin counts
+//!   are defined slightly differently.
+//!
+//! All three are invariant across shard counts, which is the contract
+//! that matters here.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::client;
+use crate::cluster::Testbed;
+use crate::controller::{Controller, CtrlAction};
+use crate::ids::{NodeId, RequestId, TesterId};
+use crate::metrics::{AnalysisGrid, CallSample, CollectionMode, StreamAgg};
+use crate::scenario::{Fault, FaultKind, WeatherPatch};
+use crate::services::{Outcome, Service, SvcOut};
+use crate::sim::{Engine, SimDuration, SimTime};
+use crate::tester::{Phase, Tester};
+use crate::timesync::{SyncAccuracy, SyncPoint};
+use crate::transport::{CtrlMsg, GoodbyeReason, TesterMsg};
+use crate::util::Pcg64;
+
+use super::{combine_weather, ExperimentConfig, ExperimentResult, RunOptions};
+
+/// Bits of the request id reserved for the tester index (low bits).
+const TESTER_BITS: u32 = 20;
+/// Bits of the request id carrying the per-tester generation (high bits).
+const GEN_BITS: u32 = 12;
+
+/// Encode a sharded request id: per-tester generation in the high bits,
+/// tester index in the low bits.  Generations wrap at 2^12, which is
+/// harmless because at most one request per tester is in flight and
+/// stale responses are rejected against the tester's live invocation.
+fn encode_req(gen: u32, tester: u32) -> RequestId {
+    debug_assert!(tester < (1 << TESTER_BITS));
+    RequestId(((gen & ((1 << GEN_BITS) - 1)) << TESTER_BITS) | tester)
+}
+
+/// The windowed-execution schedule of the conservative merge.
+///
+/// Public (with [`sort_cross_messages`]) so the lookahead property
+/// suite can drive the exact coordinator logic against arbitrary
+/// message schedules.
+pub struct WindowPlan {
+    lookahead: SimDuration,
+}
+
+impl WindowPlan {
+    /// A plan with the given lookahead, clamped to at least one
+    /// microsecond so a degenerate bound still makes progress.
+    pub fn new(lookahead: SimDuration) -> WindowPlan {
+        WindowPlan {
+            lookahead: SimDuration(lookahead.0.max(1)),
+        }
+    }
+
+    /// The (clamped) lookahead bound `L`.
+    pub fn lookahead(&self) -> SimDuration {
+        self.lookahead
+    }
+
+    /// The next execution window `[t_min, t_min + L)` given every
+    /// engine's earliest pending time (`None` = idle), or `None` when
+    /// the whole world is idle.
+    pub fn next_window(&self, peeks: &[Option<SimTime>]) -> Option<(SimTime, SimTime)> {
+        let t_min = peeks.iter().flatten().copied().min()?;
+        Some((t_min, t_min + self.lookahead))
+    }
+}
+
+/// Canonically order cross-owner messages by `(arrive, tester, emit)`.
+///
+/// Applied to the union of all outboxes at every window boundary; the
+/// per-tester `emit` counter makes the key total for any one tester,
+/// and cross-tester ties are broken by index (harmless: testers share
+/// no mutable state).  This is what makes equal-timestamp insertion
+/// order — and thus the replay — independent of shard count.
+pub fn sort_cross_messages<T>(msgs: &mut [(SimTime, usize, u64, T)]) {
+    msgs.sort_by_key(|&(at, tester, emit, _)| (at, tester, emit));
+}
+
+fn min_time(a: Option<SimTime>, b: Option<SimTime>) -> Option<SimTime> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+/// Messages crossing hub -> shard (payload; the envelope carries the
+/// global tester index).
+enum ToShard {
+    /// Controller frame (Start / Stop).
+    Ctrl(CtrlMsg),
+    /// Service response for the tester's generation-tagged request.
+    Response(u32, Outcome),
+    /// Time-server reply: `(l1, server_reading)`.
+    SyncReply(f64, f64),
+    /// The tester's last report hit a torn-down session (TCP RST): it
+    /// must stop issuing clients on the spot.
+    SessionReset,
+}
+
+/// Messages crossing shard -> hub.
+enum ToHub {
+    /// Tester report frame for the controller.
+    Msg(TesterMsg),
+    /// A client request (generation tag) reaching the service.
+    Request(u32),
+    /// A sync request (tester-local send stamp) reaching the server.
+    SyncReq(f64),
+}
+
+/// One coordinator -> worker command.
+enum Cmd {
+    /// Run the window ending at `wend` after scheduling `deliveries`.
+    Step {
+        wend: SimTime,
+        deliveries: Vec<(SimTime, usize, ToShard)>,
+    },
+    /// Finish up and return the shard's final state.
+    Quit,
+}
+
+/// One worker step result: drained outbox + next pending time.
+struct StepOut {
+    outbox: Vec<(SimTime, usize, u64, ToHub)>,
+    peek: Option<SimTime>,
+}
+
+/// A shard's final state, merged by the coordinator.
+struct ShardFinal {
+    truth: Vec<Vec<f64>>,
+    sync: Vec<(f64, u32, f64, f64)>,
+    processed: u64,
+    peak_pending: u64,
+    now: SimTime,
+}
+
+enum WorkerOut {
+    Step(StepOut),
+    Final(ShardFinal),
+}
+
+/// Hub-engine events (controller + service + time server).
+enum HEv {
+    /// Client-code transfer to tester `i` completed.
+    DeployDone(usize),
+    /// The ramp schedule says tester `i` starts now.
+    StartTester(usize),
+    /// Bounded Start retransmit while tester `i` has never been heard.
+    StartRetry(usize, u32),
+    /// A cross-shard message from tester `i` arrives.
+    Recv(usize, ToHub),
+    /// Service wake (tag-deduplicated like the single-engine world).
+    ServiceWake(u64),
+    /// Scenario fault `k` (hub-owned kinds only).
+    Fault(usize),
+    /// Controller liveness sweep.
+    CtrlTick,
+}
+
+/// Shard-engine events (`l` is the shard-local tester slot).
+enum SEv {
+    /// Cross-shard message for global tester `i` arrives.
+    Deliver(usize, ToShard),
+    /// Tester launches its next client.
+    ClientLaunch(usize),
+    /// Tester begins its next sync exchange (generation-gated chain).
+    SyncBegin(usize, u32),
+    /// Bounded post-revive Hello retransmit (generation-gated).
+    HelloRetry(usize, u32, u32),
+    /// Permanent node failure (testbed reliability).
+    NodeFail(usize),
+    /// Scenario fault `k` (shard-owned kinds only).
+    Fault(usize),
+    /// Periodic timeout sweep over the shard's testers.
+    Sweep,
+}
+
+/// The hub: shared infrastructure plus the coordinator-facing outbox.
+struct Hub {
+    eng: Engine<HEv>,
+    bed: Arc<Testbed>,
+    lookahead: SimDuration,
+    controller: Controller,
+    service: Box<dyn Service>,
+    rng_svc: Pcg64,
+    /// Per-tester hub-side stream: every infrastructure -> tester draw.
+    rng_down: Vec<Pcg64>,
+    /// In-flight request generation per tester (`None` = no record).
+    reqs: Vec<Option<u32>>,
+    /// Set on any message from the tester; gates Start retransmits.
+    started_ok: Vec<bool>,
+    session_closed: Vec<bool>,
+    /// Per-tester emission counters for the canonical outbox order.
+    emit: Vec<u64>,
+    weather_spells: Vec<Vec<(u64, WeatherPatch)>>,
+    /// Combined weather per tester node (mirrors the owning shard).
+    patch: Vec<WeatherPatch>,
+    degrade_spells: Vec<(u64, f64)>,
+    svc_wake: Option<u64>,
+    faults: Vec<Fault>,
+    deploys_pending: usize,
+    ramp_begun: bool,
+    horizon: SimTime,
+    grid: Option<AnalysisGrid>,
+    grace_s: f64,
+    opts: RunOptions,
+    outbox: Vec<(SimTime, usize, u64, ToShard)>,
+}
+
+impl Hub {
+    /// Send a hub -> tester message: loss (unless guaranteed) and a
+    /// lookahead-clamped latency draw from the tester's hub stream.
+    fn send_down(&mut self, from: NodeId, i: usize, lossy: bool, msg: ToShard) {
+        let node = self.bed.testers[i];
+        let clear = WeatherPatch::clear();
+        if lossy
+            && self.bed.net.lost_between(
+                from,
+                node,
+                &clear,
+                &self.patch[i],
+                &mut self.rng_down[i],
+            )
+        {
+            return;
+        }
+        let lat = self
+            .bed
+            .net
+            .latency_between(from, node, &clear, &self.patch[i], &mut self.rng_down[i])
+            .max(self.lookahead);
+        let at = self.eng.now() + lat;
+        self.emit[i] += 1;
+        self.outbox.push((at, i, self.emit[i], msg));
+    }
+
+    fn handle_svc_outs(&mut self, outs: Vec<SvcOut>) {
+        for o in outs {
+            match o {
+                SvcOut::Wake { at } => {
+                    let tag = at.as_micros().max(self.eng.now().as_micros());
+                    if self.svc_wake.is_none_or(|w| tag < w) {
+                        self.svc_wake = Some(tag);
+                        self.eng.schedule(SimTime(tag), HEv::ServiceWake(tag));
+                    }
+                }
+                SvcOut::Done { req, outcome, .. } => {
+                    let i = (req.0 & ((1 << TESTER_BITS) - 1)) as usize;
+                    let gen_low = req.0 >> TESTER_BITS;
+                    if self.reqs[i].map(|g| g & ((1 << GEN_BITS) - 1)) != Some(gen_low) {
+                        continue; // stale: the tester moved on
+                    }
+                    let gen = self.reqs[i].take().expect("matched above");
+                    let service = self.bed.service;
+                    self.send_down(service, i, true, ToShard::Response(gen, outcome));
+                }
+            }
+        }
+    }
+
+    /// Re-apply the combined service degradation (worst factor wins).
+    fn apply_degrade(&mut self) {
+        let factor = self
+            .degrade_spells
+            .iter()
+            .map(|&(_, f)| f)
+            .fold(1.0, f64::min);
+        let outs = self.service.set_speed_factor(self.eng.now(), factor);
+        self.handle_svc_outs(outs);
+    }
+
+    /// Hub-owned scenario fault kinds; tester-owned kinds are routed to
+    /// the owning shard at setup and never scheduled here.  Weather is
+    /// dual-routed: the hub mirrors the patch for its down-leg draws.
+    fn apply_fault(&mut self, k: usize) {
+        let f = self.faults[k];
+        match f.kind {
+            FaultKind::Weather { tester, patch, token } => {
+                self.weather_spells[tester].push((token, patch));
+                self.patch[tester] = combine_weather(&self.weather_spells[tester]);
+            }
+            FaultKind::WeatherClear { tester, token } => {
+                self.weather_spells[tester].retain(|&(t, _)| t != token);
+                self.patch[tester] = combine_weather(&self.weather_spells[tester]);
+            }
+            FaultKind::Degrade { factor, token } => {
+                self.degrade_spells.push((token, factor));
+                self.apply_degrade();
+            }
+            FaultKind::DegradeRestore { token } => {
+                self.degrade_spells.retain(|&(t, _)| t != token);
+                self.apply_degrade();
+            }
+            FaultKind::RestartService => {
+                let outs = self.service.restart(self.eng.now());
+                self.handle_svc_outs(outs);
+            }
+            FaultKind::Crash { .. } | FaultKind::Restart { .. } => {}
+        }
+    }
+
+    fn handle(&mut self, ev: HEv) {
+        match ev {
+            HEv::DeployDone(i) => {
+                self.controller.deploy_finished(
+                    TesterId(i as u32),
+                    true,
+                    self.eng.now().as_secs_f64(),
+                );
+                self.deploys_pending -= 1;
+                if self.deploys_pending == 0 && !self.ramp_begun {
+                    self.ramp_begun = true;
+                    let n = self.started_ok.len();
+                    let ramp0 = self.eng.now().as_secs_f64();
+                    for j in 0..n {
+                        let at = SimTime::from_secs_f64(self.controller.start_time(j, ramp0));
+                        self.eng.schedule(at, HEv::StartTester(j));
+                    }
+                    let last = self.controller.start_time(n - 1, ramp0);
+                    let duration_s = self.controller.description().duration_s;
+                    self.horizon = SimTime::from_secs_f64(last + duration_s + 120.0);
+                    let planned = self.horizon.as_secs_f64() + self.grace_s.max(0.0);
+                    let (w0, w1) = if ramp0 + duration_s > last {
+                        (last, ramp0 + duration_s)
+                    } else {
+                        (0.25 * planned, 0.75 * planned)
+                    };
+                    let grid = AnalysisGrid::planned(
+                        self.opts.num_quanta,
+                        n,
+                        self.opts.window_s,
+                        w0,
+                        w1,
+                        planned,
+                    );
+                    if self.opts.collect == CollectionMode::Stream {
+                        self.controller.set_streaming(StreamAgg::new(grid));
+                    }
+                    self.grid = Some(grid);
+                }
+            }
+            HEv::StartTester(i) => {
+                self.controller
+                    .mark_started(TesterId(i as u32), self.eng.now().as_secs_f64());
+                let desc = self.controller.description();
+                let ctrl = self.bed.controller;
+                self.send_down(ctrl, i, true, ToShard::Ctrl(CtrlMsg::Start(desc)));
+                self.eng
+                    .schedule_in(SimDuration::from_secs(15), HEv::StartRetry(i, 1));
+            }
+            HEv::StartRetry(i, attempt) => {
+                // Nothing heard from the tester yet: the Start (or the
+                // tester's whole node) may be gone — retransmit with a
+                // bounded chain, exactly like ssh would.
+                if self.started_ok[i] || attempt > 120 {
+                    return;
+                }
+                let desc = self.controller.description();
+                let ctrl = self.bed.controller;
+                self.send_down(ctrl, i, true, ToShard::Ctrl(CtrlMsg::Start(desc)));
+                self.eng.schedule_in(
+                    SimDuration::from_secs(15),
+                    HEv::StartRetry(i, attempt + 1),
+                );
+            }
+            HEv::Recv(i, m) => {
+                self.started_ok[i] = true;
+                match m {
+                    ToHub::Msg(msg) => {
+                        if matches!(msg, TesterMsg::Hello) {
+                            // Forward only when the Hello actually
+                            // reopens something; retransmitted Hellos
+                            // against a healthy session are no-ops.
+                            let reopen = self.session_closed[i]
+                                || self.controller.is_evicted(TesterId(i as u32));
+                            self.session_closed[i] = false;
+                            if !reopen {
+                                return;
+                            }
+                        } else if self.session_closed[i] {
+                            // The session was torn down (eviction): the
+                            // delivered write is answered with a reset
+                            // and never reaches the controller.
+                            let ctrl = self.bed.controller;
+                            self.send_down(ctrl, i, false, ToShard::SessionReset);
+                            return;
+                        }
+                        let action = self.controller.on_msg(
+                            self.eng.now().as_secs_f64(),
+                            TesterId(i as u32),
+                            msg,
+                        );
+                        if let Some(CtrlAction::Evict(t)) = action {
+                            self.session_closed[t.index()] = true;
+                            let ctrl = self.bed.controller;
+                            self.send_down(ctrl, t.index(), true, ToShard::Ctrl(CtrlMsg::Stop));
+                        }
+                    }
+                    ToHub::Request(gen) => {
+                        self.reqs[i] = Some(gen);
+                        let outs = self.service.submit(
+                            self.eng.now(),
+                            encode_req(gen, i as u32),
+                            i as u32,
+                            &mut self.rng_svc,
+                        );
+                        self.handle_svc_outs(outs);
+                    }
+                    ToHub::SyncReq(l1) => {
+                        let server = self
+                            .bed
+                            .node(self.bed.time_server)
+                            .clock
+                            .local_secs(self.eng.now());
+                        let ts = self.bed.time_server;
+                        self.send_down(ts, i, true, ToShard::SyncReply(l1, server));
+                    }
+                }
+            }
+            HEv::ServiceWake(tag) => {
+                if self.svc_wake != Some(tag) {
+                    return; // superseded by an earlier wake
+                }
+                self.svc_wake = None;
+                let outs = self.service.on_wake(self.eng.now(), &mut self.rng_svc);
+                self.handle_svc_outs(outs);
+            }
+            HEv::Fault(k) => self.apply_fault(k),
+            HEv::CtrlTick => {
+                let now = self.eng.now().as_secs_f64();
+                for a in self.controller.check_liveness(now) {
+                    let CtrlAction::Evict(t) = a;
+                    self.session_closed[t.index()] = true;
+                    let ctrl = self.bed.controller;
+                    self.send_down(ctrl, t.index(), true, ToShard::Ctrl(CtrlMsg::Stop));
+                }
+                self.eng
+                    .schedule_in(SimDuration::from_secs(30), HEv::CtrlTick);
+            }
+        }
+    }
+}
+
+/// One shard: its engine, its slice of the tester pool, and the
+/// per-tester RNG streams for everything that happens tester-side.
+struct ShardWorld {
+    s: usize,
+    nshards: usize,
+    eng: Engine<SEv>,
+    bed: Arc<Testbed>,
+    lookahead: SimDuration,
+    retain: bool,
+    testers: Vec<Tester>,
+    /// Tester-local draws (client start failure, exec overhead).
+    rng: Vec<Pcg64>,
+    /// Tester -> infrastructure network draws (loss + latency).
+    rng_up: Vec<Pcg64>,
+    /// Per-tester request generation (the id's high bits).
+    req_gen: Vec<u32>,
+    /// SoA timeout prefilter (see the single-engine world).
+    deadline: Vec<f64>,
+    emit: Vec<u64>,
+    crash_token: Vec<Option<u64>>,
+    weather_spells: Vec<Vec<(u64, WeatherPatch)>>,
+    patch: Vec<WeatherPatch>,
+    /// Simulation truth (retain mode): local slot -> seq -> true end.
+    truth: Vec<Vec<f64>>,
+    /// Sync-accuracy observations `(t, tester, signed error, rtt)`.
+    sync: Vec<(f64, u32, f64, f64)>,
+    faults: Vec<Fault>,
+    outbox: Vec<(SimTime, usize, u64, ToHub)>,
+}
+
+impl ShardWorld {
+    /// Global tester index of local slot `l`.
+    fn gi(&self, l: usize) -> usize {
+        l * self.nshards + self.s
+    }
+
+    fn local(&self, l: usize) -> f64 {
+        self.bed
+            .node(self.testers[l].node)
+            .clock
+            .local_secs(self.eng.now())
+    }
+
+    fn local_to_global(&self, l: usize, local: f64) -> SimTime {
+        let g = self.bed.node(self.testers[l].node).clock.global_secs(local);
+        SimTime::from_secs_f64(g.max(self.eng.now().as_secs_f64()))
+    }
+
+    fn push_out(&mut self, l: usize, at: SimTime, msg: ToHub) {
+        self.emit[l] += 1;
+        let gi = self.gi(l);
+        self.outbox.push((at, gi, self.emit[l], msg));
+    }
+
+    /// Send a tester -> controller frame: dead testers stay silent,
+    /// loss applies, latency is clamped to the lookahead.  Session
+    /// teardown is discovered hub-side (see [`ToShard::SessionReset`]).
+    fn send_ctrl(&mut self, l: usize, msg: TesterMsg) {
+        if self.testers[l].phase == Phase::Dead {
+            return;
+        }
+        let node = self.testers[l].node;
+        let ctrl = self.bed.controller;
+        let clear = WeatherPatch::clear();
+        if self
+            .bed
+            .net
+            .lost_between(node, ctrl, &self.patch[l], &clear, &mut self.rng_up[l])
+        {
+            return;
+        }
+        let lat = self
+            .bed
+            .net
+            .latency_between(node, ctrl, &self.patch[l], &clear, &mut self.rng_up[l])
+            .max(self.lookahead);
+        let at = self.eng.now() + lat;
+        self.push_out(l, at, ToHub::Msg(msg));
+    }
+
+    /// Forget the in-flight invocation's timeout bound.  There is no
+    /// shard-side request table to clean: the hub drops a stale
+    /// response by generation mismatch, and the tester itself rejects
+    /// one by invocation mismatch.
+    fn abandon(&mut self, l: usize) {
+        self.deadline[l] = f64::INFINITY;
+    }
+
+    fn schedule_next_launch(&mut self, l: usize) {
+        let now_local = self.local(l);
+        let t = self.testers[l].next_launch_local(now_local);
+        let at = self.local_to_global(l, t);
+        self.eng.schedule(at, SEv::ClientLaunch(l));
+    }
+
+    fn after_sample(&mut self, l: usize, sample: CallSample) {
+        if self.retain {
+            let col = &mut self.truth[l];
+            let idx = sample.seq as usize;
+            if idx >= col.len() {
+                col.resize(idx + 1, f64::NAN);
+            }
+            col[idx] = self.eng.now().as_secs_f64();
+        }
+        self.send_ctrl(l, TesterMsg::Sample(sample));
+        let give_up = self.testers[l].desc.give_up_failures;
+        if self.testers[l].should_give_up(give_up) {
+            self.testers[l].stop();
+            self.send_ctrl(l, TesterMsg::Goodbye(GoodbyeReason::TooManyFailures));
+            return;
+        }
+        if self.testers[l].phase == Phase::Running {
+            if self.testers[l].duration_elapsed(self.local(l)) {
+                self.testers[l].stop();
+                self.send_ctrl(l, TesterMsg::Goodbye(GoodbyeReason::Finished));
+            } else {
+                self.schedule_next_launch(l);
+            }
+        }
+    }
+
+    /// Shard-owned scenario fault kinds (tester churn + weather's
+    /// up-leg half); hub-owned kinds are never scheduled here.
+    fn apply_fault(&mut self, k: usize) {
+        let f = self.faults[k];
+        match f.kind {
+            FaultKind::Crash { tester, token } => {
+                let l = tester / self.nshards;
+                if self.testers[l].phase != Phase::Dead {
+                    self.abandon(l);
+                    self.testers[l].kill();
+                    self.crash_token[l] = Some(token);
+                }
+            }
+            FaultKind::Restart { tester, token } => {
+                let l = tester / self.nshards;
+                if self.crash_token[l] != Some(token) {
+                    return; // superseded or permanently failed
+                }
+                self.crash_token[l] = None;
+                if self.testers[l].revive() == Phase::Running {
+                    // late rejoin: re-register (with a bounded retry
+                    // chain in case the Hello is lost), restart the
+                    // sync chain, resume launching if the pre-crash
+                    // clock map still holds
+                    self.send_ctrl(l, TesterMsg::Hello);
+                    let gen = self.testers[l].sync_gen;
+                    self.eng.schedule_in(
+                        SimDuration::from_secs(30),
+                        SEv::HelloRetry(l, gen, 1),
+                    );
+                    self.eng.schedule_in(SimDuration(0), SEv::SyncBegin(l, gen));
+                    if !self.testers[l].clock.is_empty() {
+                        self.schedule_next_launch(l);
+                    }
+                }
+            }
+            FaultKind::Weather { tester, patch, token } => {
+                let l = tester / self.nshards;
+                self.weather_spells[l].push((token, patch));
+                self.patch[l] = combine_weather(&self.weather_spells[l]);
+            }
+            FaultKind::WeatherClear { tester, token } => {
+                let l = tester / self.nshards;
+                self.weather_spells[l].retain(|&(t, _)| t != token);
+                self.patch[l] = combine_weather(&self.weather_spells[l]);
+            }
+            FaultKind::Degrade { .. }
+            | FaultKind::DegradeRestore { .. }
+            | FaultKind::RestartService => {}
+        }
+    }
+
+    fn deliver(&mut self, i: usize, msg: ToShard) {
+        let l = i / self.nshards;
+        if self.testers[l].phase == Phase::Dead {
+            return; // delivered to a crashed node: lost
+        }
+        match msg {
+            ToShard::Ctrl(CtrlMsg::Start(desc)) => {
+                if self.testers[l].phase != Phase::Idle {
+                    return;
+                }
+                let now_local = self.local(l);
+                self.testers[l].start(now_local, desc);
+                // latency estimate: one ping round trip to the service
+                // (estimate-only draws, deliberately unclamped)
+                let node = self.testers[l].node;
+                let service = self.bed.service;
+                let clear = WeatherPatch::clear();
+                let rtt = self
+                    .bed
+                    .net
+                    .latency_between(node, service, &self.patch[l], &clear, &mut self.rng_up[l])
+                    .as_secs_f64()
+                    + self
+                        .bed
+                        .net
+                        .latency_between(
+                            service,
+                            node,
+                            &clear,
+                            &self.patch[l],
+                            &mut self.rng_up[l],
+                        )
+                        .as_secs_f64();
+                self.testers[l].latency_estimate_s = rtt / 2.0;
+                let gen = self.testers[l].sync_gen;
+                self.eng.schedule_in(SimDuration(0), SEv::SyncBegin(l, gen));
+            }
+            ToShard::Ctrl(CtrlMsg::Stop) => {
+                self.abandon(l);
+                self.testers[l].stop();
+            }
+            ToShard::Response(gen, outcome) => {
+                let req = encode_req(gen, i as u32);
+                if self.testers[l].outstanding.map(|inv| inv.req) != Some(req) {
+                    return; // stale: a newer invocation owns the tester
+                }
+                let now_local = self.local(l);
+                let speed = self.bed.node(self.testers[l].node).cpu_speed;
+                let post = client::exec_overhead_s(speed, &mut self.rng[l]);
+                if let Some(s) = self.testers[l].record_result(
+                    now_local,
+                    req,
+                    client::classify(outcome),
+                    post,
+                ) {
+                    self.deadline[l] = f64::INFINITY;
+                    self.after_sample(l, s);
+                }
+            }
+            ToShard::SyncReply(l1, server) => {
+                let l2 = self.local(l);
+                let p = SyncPoint { l1, server, l2 };
+                let first = self.testers[l].clock.is_empty();
+                self.testers[l].record_sync(p);
+                if let Some(est) = self.testers[l].clock.to_global(l2) {
+                    let truth = self.eng.now().as_secs_f64();
+                    self.sync.push((truth, i as u32, est - truth, p.rtt()));
+                }
+                self.send_ctrl(l, TesterMsg::Sync(p));
+                if self.testers[l].phase == Phase::Running && first {
+                    self.schedule_next_launch(l);
+                }
+            }
+            ToShard::SessionReset => {
+                // §3: a write against a torn-down session stops the
+                // tester the moment the reset is observed.
+                self.abandon(l);
+                self.testers[l].session_lost();
+            }
+        }
+    }
+
+    fn handle(&mut self, ev: SEv) {
+        match ev {
+            SEv::Deliver(i, msg) => self.deliver(i, msg),
+            SEv::ClientLaunch(l) => {
+                if !self.testers[l].can_launch(self.local(l)) {
+                    if self.testers[l].phase == Phase::Running
+                        && self.testers[l].outstanding.is_none()
+                        && self.testers[l].duration_elapsed(self.local(l))
+                    {
+                        self.testers[l].stop();
+                        self.send_ctrl(l, TesterMsg::Goodbye(GoodbyeReason::Finished));
+                    }
+                    return;
+                }
+                let now_local = self.local(l);
+                let earliest = self.testers[l].next_launch_local(now_local);
+                if earliest - now_local > 1e-3 {
+                    // stale pre-crash launch chain: re-anchor to pacing
+                    let at = self.local_to_global(l, earliest);
+                    self.eng.schedule(at, SEv::ClientLaunch(l));
+                    return;
+                }
+                let node = self.bed.node(self.testers[l].node).clone();
+                if !client::try_start(node.client_start_failure, &mut self.rng[l]) {
+                    let s = self.testers[l].record_start_failure(now_local);
+                    self.after_sample(l, s);
+                    return;
+                }
+                let gen = self.req_gen[l].wrapping_add(1);
+                self.req_gen[l] = gen;
+                let req = encode_req(gen, self.gi(l) as u32);
+                let inv = self.testers[l].launch(now_local, req);
+                self.deadline[l] = node
+                    .clock
+                    .global_secs(inv.launched_local + self.testers[l].desc.timeout_s)
+                    - 1e-6;
+                let pre = client::exec_overhead_s(node.cpu_speed, &mut self.rng[l]);
+                let nid = self.testers[l].node;
+                let service = self.bed.service;
+                let clear = WeatherPatch::clear();
+                if self
+                    .bed
+                    .net
+                    .lost_between(nid, service, &self.patch[l], &clear, &mut self.rng_up[l])
+                {
+                    return; // vanished in the WAN; the sweep classifies it
+                }
+                let lat = self
+                    .bed
+                    .net
+                    .latency_between(nid, service, &self.patch[l], &clear, &mut self.rng_up[l])
+                    .max(self.lookahead);
+                let at = self.eng.now() + SimDuration::from_secs_f64(pre) + lat;
+                self.push_out(l, at, ToHub::Request(gen));
+            }
+            SEv::SyncBegin(l, gen) => {
+                if !matches!(self.testers[l].phase, Phase::Running)
+                    || gen != self.testers[l].sync_gen
+                {
+                    return;
+                }
+                let l1 = self.local(l);
+                let next_local = l1 + self.testers[l].desc.sync_interval_s;
+                let at = self.local_to_global(l, next_local);
+                self.eng.schedule(at, SEv::SyncBegin(l, gen));
+                let node = self.testers[l].node;
+                let ts = self.bed.time_server;
+                let clear = WeatherPatch::clear();
+                if self
+                    .bed
+                    .net
+                    .lost_between(node, ts, &self.patch[l], &clear, &mut self.rng_up[l])
+                {
+                    return;
+                }
+                let lat = self
+                    .bed
+                    .net
+                    .latency_between(node, ts, &self.patch[l], &clear, &mut self.rng_up[l])
+                    .max(self.lookahead);
+                let arrive = self.eng.now() + lat;
+                self.push_out(l, arrive, ToHub::SyncReq(l1));
+            }
+            SEv::HelloRetry(l, gen, attempt) => {
+                if attempt > 4
+                    || self.testers[l].phase != Phase::Running
+                    || self.testers[l].sync_gen != gen
+                {
+                    return;
+                }
+                self.send_ctrl(l, TesterMsg::Hello);
+                self.eng.schedule_in(
+                    SimDuration::from_secs(30),
+                    SEv::HelloRetry(l, gen, attempt + 1),
+                );
+            }
+            SEv::NodeFail(l) => {
+                self.abandon(l);
+                self.testers[l].kill();
+                // permanent: no scenario restart may revive this node
+                self.crash_token[l] = None;
+            }
+            SEv::Fault(k) => self.apply_fault(k),
+            SEv::Sweep => {
+                let now_g = self.eng.now().as_secs_f64();
+                for l in 0..self.testers.len() {
+                    if now_g < self.deadline[l] {
+                        continue;
+                    }
+                    if self.testers[l].phase == Phase::Dead {
+                        self.deadline[l] = f64::INFINITY;
+                        continue;
+                    }
+                    let Some(inv) = self.testers[l].outstanding else {
+                        self.deadline[l] = f64::INFINITY;
+                        continue;
+                    };
+                    let now_local = self.local(l);
+                    if now_local - inv.launched_local < self.testers[l].desc.timeout_s {
+                        continue;
+                    }
+                    if let Some(s) =
+                        self.testers[l].record_timeout(now_local, inv.timeout_token)
+                    {
+                        self.deadline[l] = f64::INFINITY;
+                        self.after_sample(l, s);
+                    }
+                }
+                self.eng.schedule_in(SimDuration::from_secs(5), SEv::Sweep);
+            }
+        }
+    }
+
+    fn final_state(&mut self) -> ShardFinal {
+        ShardFinal {
+            truth: std::mem::take(&mut self.truth),
+            sync: std::mem::take(&mut self.sync),
+            processed: self.eng.processed(),
+            peak_pending: self.eng.peak_pending() as u64,
+            now: self.eng.now(),
+        }
+    }
+}
+
+/// Run a complete DiPerF experiment on the sharded world.
+///
+/// The report is bit-identical for every `shards` value (including 1):
+/// the partition changes which thread executes a tester's events, never
+/// which events occur.  `shards` is clamped to `1..=n`.
+pub fn run_experiment_sharded(
+    cfg: &ExperimentConfig,
+    opts: RunOptions,
+    shards: usize,
+) -> ExperimentResult {
+    let wall = std::time::Instant::now();
+    let mut root = Pcg64::seed_from(cfg.seed);
+    let mut rng_bed = root.split(1);
+    let bed = Arc::new(Testbed::generate(&cfg.testbed, &mut rng_bed));
+    let n = bed.testers.len();
+    assert!(
+        n < (1 << TESTER_BITS),
+        "sharded request ids hold {} testers at most",
+        1u32 << TESTER_BITS
+    );
+    let nshards = shards.clamp(1, n.max(1));
+    let lookahead = bed.net.min_latency_bound();
+
+    // Canonical RNG derivation order for the sharded world (split
+    // mutates the parent, so this order is part of the replay contract):
+    // bed, service, then per-tester {local, up-leg, down-leg} streams,
+    // then deploy, node failures, scenario.
+    let rng_svc = root.split(3);
+    let mut rng_t: Vec<Pcg64> = Vec::with_capacity(n);
+    let mut rng_up: Vec<Pcg64> = Vec::with_capacity(n);
+    let mut rng_down: Vec<Pcg64> = Vec::with_capacity(n);
+    for i in 0..n {
+        rng_t.push(root.split(100 + i as u64));
+        rng_up.push(root.split(2_000_000 + i as u64));
+        rng_down.push(root.split(4_000_000 + i as u64));
+    }
+    let mut rng_deploy = root.split(4);
+    let mut rng_fail = root.split(5);
+    let mut rng_scn = root.split(6);
+
+    let service = cfg.service.build(bed.node(bed.service).cpu_speed);
+    let controller = Controller::new(cfg.controller.clone(), &bed.testers);
+
+    let mut hub = Hub {
+        eng: Engine::with_queue(opts.queue),
+        bed: Arc::clone(&bed),
+        lookahead,
+        controller,
+        service,
+        rng_svc,
+        rng_down,
+        reqs: vec![None; n],
+        started_ok: vec![false; n],
+        session_closed: vec![false; n],
+        emit: vec![0; n],
+        weather_spells: vec![Vec::new(); n],
+        patch: vec![WeatherPatch::clear(); n],
+        degrade_spells: Vec::new(),
+        svc_wake: None,
+        faults: Vec::new(),
+        deploys_pending: n,
+        ramp_begun: false,
+        horizon: SimTime::MAX,
+        grid: None,
+        grace_s: cfg.grace_s,
+        opts,
+        outbox: Vec::new(),
+    };
+
+    // Partition the pool round-robin and hand each shard its streams.
+    let mut worlds: Vec<ShardWorld> = (0..nshards)
+        .map(|s| ShardWorld {
+            s,
+            nshards,
+            eng: Engine::with_queue(opts.queue),
+            bed: Arc::clone(&bed),
+            lookahead,
+            retain: opts.collect == CollectionMode::Retain,
+            testers: Vec::new(),
+            rng: Vec::new(),
+            rng_up: Vec::new(),
+            req_gen: Vec::new(),
+            deadline: Vec::new(),
+            emit: Vec::new(),
+            crash_token: Vec::new(),
+            weather_spells: Vec::new(),
+            patch: Vec::new(),
+            truth: Vec::new(),
+            sync: Vec::new(),
+            faults: Vec::new(),
+            outbox: Vec::new(),
+        })
+        .collect();
+    {
+        let mut rng_up = rng_up.into_iter();
+        let mut rng_t = rng_t.into_iter();
+        for (i, &node) in bed.testers.iter().enumerate() {
+            let w = &mut worlds[i % nshards];
+            w.testers.push(Tester::new(TesterId(i as u32), node));
+            w.rng.push(rng_t.next().expect("stream per tester"));
+            w.rng_up.push(rng_up.next().expect("stream per tester"));
+            w.req_gen.push(0);
+            w.deadline.push(f64::INFINITY);
+            w.emit.push(0);
+            w.crash_token.push(None);
+            w.weather_spells.push(Vec::new());
+            w.patch.push(WeatherPatch::clear());
+            w.truth.push(Vec::new());
+        }
+    }
+
+    // Deploy phase: scp the client code to every tester node.
+    for i in 0..n {
+        let dt = bed.net.transfer_time(
+            bed.controller,
+            bed.testers[i],
+            cfg.code.bytes(),
+            &mut rng_deploy,
+        );
+        hub.eng.schedule(SimTime(0) + dt, HEv::DeployDone(i));
+    }
+    // Node-failure injection (drawn in global tester order).
+    let fail_horizon = SimDuration::from_secs_f64(cfg.controller.desc.duration_s * 2.0);
+    for i in 0..n {
+        if let Some(at) = bed.sample_failure_time(bed.testers[i], fail_horizon, &mut rng_fail)
+        {
+            worlds[i % nshards].eng.schedule(at, SEv::NodeFail(i / nshards));
+        }
+    }
+    // Scenario faults: compile once, route each to its owner(s).
+    // Tester churn lands on the owning shard; service-side faults land
+    // on the hub; weather lands on BOTH (each side draws its own legs).
+    debug_assert!(cfg.scenario.validate().is_ok(), "invalid scenario");
+    let scn_horizon_s =
+        n as f64 * cfg.controller.stagger_s + cfg.controller.desc.duration_s * 2.0;
+    let schedule = cfg.scenario.compile(n, scn_horizon_s, &mut rng_scn);
+    for (k, f) in schedule.iter().enumerate() {
+        let at = SimTime::from_secs_f64(f.at_s);
+        match f.kind {
+            FaultKind::Crash { tester, .. } | FaultKind::Restart { tester, .. } => {
+                worlds[tester % nshards].eng.schedule(at, SEv::Fault(k));
+            }
+            FaultKind::Weather { tester, .. } | FaultKind::WeatherClear { tester, .. } => {
+                worlds[tester % nshards].eng.schedule(at, SEv::Fault(k));
+                hub.eng.schedule(at, HEv::Fault(k));
+            }
+            FaultKind::Degrade { .. }
+            | FaultKind::DegradeRestore { .. }
+            | FaultKind::RestartService => {
+                hub.eng.schedule(at, HEv::Fault(k));
+            }
+        }
+    }
+    hub.faults = schedule.clone();
+    for w in worlds.iter_mut() {
+        w.faults = schedule.clone();
+        w.eng.schedule(SimTime(0), SEv::Sweep);
+    }
+    hub.eng.schedule(SimTime(0), HEv::CtrlTick);
+
+    let plan = WindowPlan::new(lookahead);
+    let grace = SimDuration::from_secs_f64(cfg.grace_s.max(0.0));
+
+    // The hub steps on this thread (the service is not Send); shards
+    // step in persistent workers, one Step command per window.
+    let finals: Vec<ShardFinal> = std::thread::scope(|scope| {
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(nshards);
+        let mut out_rxs: Vec<Receiver<WorkerOut>> = Vec::with_capacity(nshards);
+        for mut world in worlds {
+            let (ctx, crx) = channel::<Cmd>();
+            let (otx, orx) = channel::<WorkerOut>();
+            scope.spawn(move || {
+                // prime the coordinator with the initial peek
+                let _ = otx.send(WorkerOut::Step(StepOut {
+                    outbox: Vec::new(),
+                    peek: world.eng.peek_time(),
+                }));
+                while let Ok(cmd) = crx.recv() {
+                    match cmd {
+                        Cmd::Step { wend, deliveries } => {
+                            for (at, tester, msg) in deliveries {
+                                world.eng.schedule(at, SEv::Deliver(tester, msg));
+                            }
+                            while let Some(t) = world.eng.peek_time() {
+                                if t >= wend {
+                                    break;
+                                }
+                                let Some((_, ev)) = world.eng.next() else {
+                                    break;
+                                };
+                                world.handle(ev);
+                            }
+                            let _ = otx.send(WorkerOut::Step(StepOut {
+                                outbox: std::mem::take(&mut world.outbox),
+                                peek: world.eng.peek_time(),
+                            }));
+                        }
+                        Cmd::Quit => {
+                            let _ = otx.send(WorkerOut::Final(world.final_state()));
+                            return;
+                        }
+                    }
+                }
+            });
+            cmd_txs.push(ctx);
+            out_rxs.push(orx);
+        }
+
+        let mut peeks: Vec<Option<SimTime>> = Vec::with_capacity(nshards);
+        for rx in &out_rxs {
+            match rx.recv().expect("shard worker alive") {
+                WorkerOut::Step(o) => peeks.push(o.peek),
+                WorkerOut::Final(_) => unreachable!("worker finalized before any step"),
+            }
+        }
+        // Undelivered hub -> shard messages, held until the window that
+        // contains their arrival time.
+        let mut held: Vec<Vec<(SimTime, usize, u64, ToShard)>> =
+            (0..nshards).map(|_| Vec::new()).collect();
+        let mut eff: Vec<Option<SimTime>> = Vec::with_capacity(nshards + 1);
+        loop {
+            eff.clear();
+            eff.push(hub.eng.peek_time());
+            for s in 0..nshards {
+                let held_min = held[s].iter().map(|&(t, ..)| t).min();
+                eff.push(min_time(peeks[s], held_min));
+            }
+            let Some((t_min, wend)) = plan.next_window(&eff) else {
+                break; // the whole world is idle
+            };
+            if t_min > hub.horizon + grace {
+                break; // past the horizon: cut the run off
+            }
+            for s in 0..nshards {
+                let mut batch: Vec<(SimTime, usize, u64, ToShard)> = Vec::new();
+                let mut keep: Vec<(SimTime, usize, u64, ToShard)> = Vec::new();
+                for m in held[s].drain(..) {
+                    if m.0 < wend {
+                        batch.push(m);
+                    } else {
+                        keep.push(m);
+                    }
+                }
+                held[s] = keep;
+                sort_cross_messages(&mut batch);
+                let deliveries = batch.into_iter().map(|(t, i, _, m)| (t, i, m)).collect();
+                cmd_txs[s]
+                    .send(Cmd::Step { wend, deliveries })
+                    .expect("shard worker alive");
+            }
+            // hub runs its own window while the shards run theirs
+            while let Some(t) = hub.eng.peek_time() {
+                if t >= wend {
+                    break;
+                }
+                let Some((_, ev)) = hub.eng.next() else {
+                    break;
+                };
+                hub.handle(ev);
+            }
+            let mut down = std::mem::take(&mut hub.outbox);
+            sort_cross_messages(&mut down);
+            for m in down {
+                debug_assert!(m.0 >= wend, "cross-owner message inside its window");
+                held[m.1 % nshards].push(m);
+            }
+            let mut inbound: Vec<(SimTime, usize, u64, ToHub)> = Vec::new();
+            for s in 0..nshards {
+                match out_rxs[s].recv().expect("shard worker alive") {
+                    WorkerOut::Step(o) => {
+                        peeks[s] = o.peek;
+                        inbound.extend(o.outbox);
+                    }
+                    WorkerOut::Final(_) => unreachable!("worker finalized mid-run"),
+                }
+            }
+            sort_cross_messages(&mut inbound);
+            for (t, i, _, m) in inbound {
+                debug_assert!(t >= wend, "cross-owner message inside its window");
+                hub.eng.schedule(t, HEv::Recv(i, m));
+            }
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Quit);
+        }
+        let mut finals = Vec::with_capacity(nshards);
+        for rx in &out_rxs {
+            loop {
+                match rx.recv().expect("shard worker alive") {
+                    WorkerOut::Final(f) => {
+                        finals.push(f);
+                        break;
+                    }
+                    WorkerOut::Step(_) => {}
+                }
+            }
+        }
+        finals
+    });
+
+    let duration_s = finals
+        .iter()
+        .map(|f| f.now)
+        .fold(hub.eng.now(), SimTime::max)
+        .as_secs_f64();
+    let mut data = hub.controller.finalize(duration_s);
+    // backfill simulation truth for sync-pipeline validation
+    if opts.collect == CollectionMode::Retain {
+        for smp in data.samples.iter_mut() {
+            let i = smp.tester.0 as usize;
+            let col = &finals[i % nshards].truth[i / nshards];
+            smp.t_end_true = col.get(smp.seq as usize).copied().unwrap_or(f64::NAN);
+        }
+    }
+    // merge sync-accuracy observations in canonical (time, tester) order
+    let mut sync_all: Vec<(f64, u32, f64, f64)> = finals
+        .iter()
+        .flat_map(|f| f.sync.iter().copied())
+        .collect();
+    sync_all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut sync = SyncAccuracy::new();
+    for &(_, _, err, rtt) in &sync_all {
+        sync.push(err, rtt);
+    }
+    let stream = hub.controller.take_stream();
+    let grid = hub.grid.unwrap_or_else(|| {
+        AnalysisGrid::planned(opts.num_quanta, n, opts.window_s, 0.0, duration_s, duration_s)
+    });
+
+    ExperimentResult {
+        data,
+        service_stats: hub.service.stats(),
+        service_name: hub.service.name(),
+        stalls: hub.service.stalls(),
+        sync,
+        events: hub.eng.processed() + finals.iter().map(|f| f.processed).sum::<u64>(),
+        wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        faults: hub.faults.len() as u64,
+        grid,
+        stream,
+        peak_pending: hub.eng.peak_pending() as u64
+            + finals.iter().map(|f| f.peak_pending).sum::<u64>(),
+        queue: opts.queue,
+        collection: opts.collect,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{presets, run_experiment_opts};
+    use super::*;
+
+    #[test]
+    fn window_plan_advances_and_skips_idle_engines() {
+        let plan = WindowPlan::new(SimDuration(250));
+        assert_eq!(plan.lookahead(), SimDuration(250));
+        // idle engines contribute nothing; the window starts at the min
+        let w = plan
+            .next_window(&[None, Some(SimTime(1_000)), Some(SimTime(700)), None])
+            .unwrap();
+        assert_eq!(w, (SimTime(700), SimTime(950)));
+        // a fully idle world yields no window (termination, not deadlock)
+        assert!(plan.next_window(&[None, None]).is_none());
+        // zero lookahead still makes progress
+        let tight = WindowPlan::new(SimDuration(0));
+        assert_eq!(tight.lookahead(), SimDuration(1));
+    }
+
+    #[test]
+    fn cross_message_order_is_canonical() {
+        let mut msgs = vec![
+            (SimTime(5), 2usize, 1u64, "b"),
+            (SimTime(5), 1, 2, "a"),
+            (SimTime(4), 9, 9, "first"),
+            (SimTime(5), 1, 1, "before-a"),
+        ];
+        sort_cross_messages(&mut msgs);
+        let order: Vec<&str> = msgs.iter().map(|m| m.3).collect();
+        assert_eq!(order, ["first", "before-a", "a", "b"]);
+    }
+
+    #[test]
+    fn request_id_encoding_roundtrip() {
+        let req = encode_req(0xABC, (1 << TESTER_BITS) - 1);
+        assert_eq!(req.0 & ((1 << TESTER_BITS) - 1), (1 << TESTER_BITS) - 1);
+        assert_eq!(req.0 >> TESTER_BITS, 0xABC);
+        // generations wrap into the tag without touching the tester bits
+        let wrapped = encode_req(0x1ABC, 7);
+        assert_eq!(wrapped.0 >> TESTER_BITS, 0xABC);
+        assert_eq!(wrapped.0 & ((1 << TESTER_BITS) - 1), 7);
+    }
+
+    #[test]
+    fn sharded_run_completes_and_is_shard_invariant() {
+        let cfg = presets::quick_http(4, 60.0, 42);
+        let one = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                shards: Some(1),
+                ..RunOptions::default()
+            },
+        );
+        assert!(one.data.completed() > 50, "completed {}", one.data.completed());
+        let three = run_experiment_opts(
+            &cfg,
+            RunOptions {
+                shards: Some(3),
+                ..RunOptions::default()
+            },
+        );
+        assert_eq!(one.data.samples.len(), three.data.samples.len());
+        for (x, y) in one.data.samples.iter().zip(&three.data.samples) {
+            assert_eq!(x.tester, y.tester);
+            assert_eq!(x.seq, y.seq);
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+            assert_eq!(x.rt.to_bits(), y.rt.to_bits());
+            assert_eq!(x.outcome, y.outcome);
+            assert_eq!(x.t_end_true.to_bits(), y.t_end_true.to_bits());
+        }
+        assert_eq!(one.data.testers.len(), three.data.testers.len());
+        for (x, y) in one.data.testers.iter().zip(&three.data.testers) {
+            assert_eq!(x.started_at.to_bits(), y.started_at.to_bits());
+            assert_eq!(x.stopped_at.to_bits(), y.stopped_at.to_bits());
+            assert_eq!(x.evicted, y.evicted);
+            assert_eq!(x.samples, y.samples);
+        }
+    }
+}

@@ -420,6 +420,41 @@ impl Binned {
             self.amax[client] = self.amax[client].max(te);
         }
     }
+
+    /// Fold another `Binned` (accumulated on the *same* grid) into this
+    /// one.  Every field is either a count/sum (element-wise addition)
+    /// or an extremum (element-wise min/max), so the merge is exact:
+    /// merging per-shard statistics produces the same values as pushing
+    /// every sample into one accumulator, up to floating-sum ordering —
+    /// which is why the sharded runner routes all samples through a
+    /// single hub-side [`StreamAgg`] when byte-identity is required, and
+    /// uses this merge only for order-insensitive counting series.
+    pub fn merge(&mut self, other: &Binned) {
+        debug_assert_eq!(self.grid.num_quanta, other.grid.num_quanta);
+        debug_assert_eq!(self.grid.num_clients, other.grid.num_clients);
+        for (a, b) in self.load.iter_mut().zip(&other.load) {
+            *a += b;
+        }
+        for (a, b) in self.tput.iter_mut().zip(&other.tput) {
+            *a += b;
+        }
+        for (a, b) in self.rt_sum.iter_mut().zip(&other.rt_sum) {
+            *a += b;
+        }
+        for (a, b) in self.completed.iter_mut().zip(&other.completed) {
+            *a += b;
+        }
+        for (a, b) in self.amin.iter_mut().zip(&other.amin) {
+            *a = a.min(*b);
+        }
+        for (a, b) in self.amax.iter_mut().zip(&other.amax) {
+            *a = a.max(*b);
+        }
+        self.total_ok += other.total_ok;
+        self.total_valid += other.total_valid;
+        self.rt_total += other.rt_total;
+        self.rt_max = self.rt_max.max(other.rt_max);
+    }
 }
 
 /// Online quantile estimation with the P² algorithm (Jain & Chlamtac,
@@ -878,6 +913,42 @@ mod tests {
         assert!((load - 4.0).abs() < 1e-9, "busy seconds {load}");
         assert_eq!(b.amin[1], 30.0);
         assert_eq!(b.amax[0], 31.0);
+    }
+
+    #[test]
+    fn binned_merge_matches_single_accumulator() {
+        use crate::util::Pcg64;
+        let grid = AnalysisGrid::planned(16, 8, 20.0, 10.0, 90.0, 100.0);
+        let mut whole = Binned::new(grid);
+        let mut parts = [Binned::new(grid), Binned::new(grid), Binned::new(grid)];
+        let mut rng = Pcg64::seed_from(77);
+        for k in 0..600 {
+            let ts = rng.uniform(0.0, 95.0) as f32;
+            let te = ts + rng.uniform(0.1, 5.0) as f32;
+            let rt = rng.uniform(0.01, 2.0) as f32;
+            let ok = rng.chance(0.8);
+            let client = rng.next_below(8) as usize;
+            whole.push(ts, te, rt, ok, client);
+            parts[k % 3].push(ts, te, rt, ok, client);
+        }
+        let mut merged = Binned::new(grid);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.total_ok, whole.total_ok);
+        assert_eq!(merged.total_valid, whole.total_valid);
+        assert_eq!(merged.rt_max, whole.rt_max);
+        assert_eq!(merged.tput, whole.tput);
+        assert_eq!(merged.completed, whole.completed);
+        assert_eq!(merged.amin, whole.amin);
+        assert_eq!(merged.amax, whole.amax);
+        for (a, b) in merged.load.iter().zip(&whole.load) {
+            assert!((a - b).abs() < 1e-9, "load {a} vs {b}");
+        }
+        for (a, b) in merged.rt_sum.iter().zip(&whole.rt_sum) {
+            assert!((a - b).abs() < 1e-9, "rt_sum {a} vs {b}");
+        }
+        assert!((merged.rt_total - whole.rt_total).abs() < 1e-9);
     }
 
     #[test]

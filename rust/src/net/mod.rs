@@ -18,6 +18,18 @@ use crate::sim::SimDuration;
 use crate::util::dist::{lognormal_median, weighted_index};
 use crate::util::Pcg64;
 
+/// Deterministic lower bound on the multiplicative jitter factor.
+///
+/// Sampled jitter is lognormal and therefore unbounded below, so a sound
+/// conservative lookahead cannot come from tail analysis.  Instead the
+/// sharded runner clamps every cross-owner latency *sample* to
+/// [`NetModel::min_latency_bound`], which is derived from this floor —
+/// the clamp, not the distribution, is the invariant.  0.25 sits far
+/// below any plausible lognormal draw at the shipped jitter spreads
+/// (`sigma = ln(jitter) <= ln(1.3)`), so the clamp is a no-op in
+/// practice and only exists to make the bound exact.
+pub const JITTER_FLOOR: f64 = 0.25;
+
 /// Per-node connectivity profile.
 #[derive(Clone, Debug)]
 pub struct NetProfile {
@@ -96,13 +108,32 @@ impl NetModel {
     /// Sample the one-way latency for a message `from -> to`.  Weather
     /// overlays multiply each endpoint's own leg.
     pub fn latency(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> SimDuration {
+        self.latency_between(
+            from,
+            to,
+            &self.weather[from.index()],
+            &self.weather[to.index()],
+            rng,
+        )
+    }
+
+    /// [`NetModel::latency`] with *explicit* weather patches for both
+    /// endpoints.  The sharded runner keeps each shard's weather state
+    /// outside the shared (read-only) model, so the overlay must be
+    /// supplied by the caller instead of read from `self.weather`.
+    pub fn latency_between(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        wa: &WeatherPatch,
+        wb: &WeatherPatch,
+        rng: &mut Pcg64,
+    ) -> SimDuration {
         if from == to {
             return SimDuration(50); // loopback
         }
         let a = &self.profiles[from.index()];
         let b = &self.profiles[to.index()];
-        let wa = &self.weather[from.index()];
-        let wb = &self.weather[to.index()];
         let base = a.up.scale(wa.latency_factor) + b.down.scale(wb.latency_factor);
         let jitter = (a.jitter.max(b.jitter)).max(1.0);
         if jitter <= 1.0 {
@@ -115,11 +146,28 @@ impl NetModel {
     /// Sample whether a message `from -> to` is lost.  A partitioned
     /// endpoint loses everything; weather loss adds to profile loss.
     pub fn lost(&self, from: NodeId, to: NodeId, rng: &mut Pcg64) -> bool {
+        self.lost_between(
+            from,
+            to,
+            &self.weather[from.index()],
+            &self.weather[to.index()],
+            rng,
+        )
+    }
+
+    /// [`NetModel::lost`] with explicit weather patches for both
+    /// endpoints (see [`NetModel::latency_between`]).
+    pub fn lost_between(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        wa: &WeatherPatch,
+        wb: &WeatherPatch,
+        rng: &mut Pcg64,
+    ) -> bool {
         if from == to {
             return false;
         }
-        let wa = &self.weather[from.index()];
-        let wb = &self.weather[to.index()];
         if wa.partitioned || wb.partitioned {
             return true;
         }
@@ -128,6 +176,24 @@ impl NetModel {
             + wa.extra_loss
             + wb.extra_loss;
         p > 0.0 && rng.chance(p)
+    }
+
+    /// Deterministic lower bound on any *cross-node* one-way latency the
+    /// model can produce: the smallest up-leg plus the smallest down-leg
+    /// over all profiles, scaled by [`JITTER_FLOOR`], clamped to at
+    /// least one microsecond.  Weather only *increases* latency
+    /// (`WeatherPatch::latency_factor >= 1.0`, enforced by
+    /// [`crate::scenario::Scenario::validate`]), so overlays never
+    /// undercut the bound.  This is the conservative lookahead used by
+    /// the sharded experiment runner: every cross-shard latency sample
+    /// is clamped up to this bound, which makes the bound exact by
+    /// construction rather than probabilistic.
+    pub fn min_latency_bound(&self) -> SimDuration {
+        let min_up = self.profiles.iter().map(|p| p.up.0).min().unwrap_or(0);
+        let min_down = self.profiles.iter().map(|p| p.down.0).min().unwrap_or(0);
+        SimDuration(
+            (((min_up + min_down) as f64 * JITTER_FLOOR).floor() as u64).max(1),
+        )
     }
 
     /// Bulk-transfer time for `bytes` from `from` to `to` (scp model:
@@ -348,6 +414,44 @@ mod tests {
             .filter(|_| net.lost(NodeId(0), NodeId(1), &mut rng))
             .count();
         assert!((1700..=2300).contains(&lost), "lost {lost}/4000 at p=0.5");
+    }
+
+    #[test]
+    fn min_latency_bound_is_a_true_lower_bound() {
+        let net = two_node_net(10, 1, 2, 20);
+        // min up = 2 ms, min down = 1 ms -> floor(3 ms * 0.25) = 750 µs
+        let bound = net.min_latency_bound();
+        assert_eq!(bound, SimDuration(750));
+        let mut rng = Pcg64::seed_from(21);
+        for _ in 0..2000 {
+            for (f, t) in [(0u32, 1u32), (1, 0)] {
+                let l = net.latency(NodeId(f), NodeId(t), &mut rng);
+                assert!(l >= bound, "sample {l} under bound {bound}");
+            }
+        }
+        // degenerate: zero-latency profiles still yield a nonzero bound
+        let z = two_node_net(0, 0, 0, 0);
+        assert_eq!(z.min_latency_bound(), SimDuration(1));
+    }
+
+    #[test]
+    fn explicit_weather_matches_overlay() {
+        let mut net = two_node_net(10, 10, 10, 10);
+        net.set_weather(NodeId(0), WeatherPatch::spike(5.0));
+        let spike = WeatherPatch::spike(5.0);
+        let clear = WeatherPatch::clear();
+        let mut r1 = Pcg64::seed_from(31);
+        let mut r2 = Pcg64::seed_from(31);
+        for _ in 0..200 {
+            assert_eq!(
+                net.latency(NodeId(0), NodeId(1), &mut r1),
+                net.latency_between(NodeId(0), NodeId(1), &spike, &clear, &mut r2)
+            );
+            assert_eq!(
+                net.lost(NodeId(0), NodeId(1), &mut r1),
+                net.lost_between(NodeId(0), NodeId(1), &spike, &clear, &mut r2)
+            );
+        }
     }
 
     #[test]

@@ -83,10 +83,12 @@ impl<E> Level<E> {
         self.occupied[idx >> 6] |= 1u64 << (idx & 63);
     }
 
-    /// Remove and return the whole slot.
-    fn take(&mut self, idx: usize) -> Vec<Scheduled<E>> {
+    /// Drain the whole slot into `out`, retaining the slot's allocation
+    /// (a `std::mem::take` here would discard each slot `Vec`'s capacity
+    /// every frame, making the refill path allocate at steady state).
+    fn drain_slot(&mut self, idx: usize, out: &mut Vec<Scheduled<E>>) {
         self.occupied[idx >> 6] &= !(1u64 << (idx & 63));
-        std::mem::take(&mut self.slots[idx])
+        out.append(&mut self.slots[idx]);
     }
 
     /// Is slot `idx` occupied?
@@ -123,6 +125,9 @@ pub struct TimerWheel<E> {
     levels: Vec<Level<E>>,
     /// Far-future events beyond the level-2 frame, earliest first.
     overflow: BinaryHeap<Scheduled<E>>,
+    /// Reusable drain buffer for slot redistribution (merge-down and
+    /// cascade), so the refill path is allocation-free at steady state.
+    scratch: Vec<Scheduled<E>>,
     len: usize,
 }
 
@@ -134,6 +139,7 @@ impl<E> TimerWheel<E> {
             released: 0,
             levels: (0..LEVELS).map(|_| Level::new()).collect(),
             overflow: BinaryHeap::new(),
+            scratch: Vec::new(),
             len: 0,
         }
     }
@@ -226,9 +232,12 @@ impl<E> TimerWheel<E> {
                 let idx = ((self.released >> slot_shift(lvl))
                     & (SLOTS as u64 - 1)) as usize;
                 if self.levels[lvl].is_occupied(idx) {
-                    for s in self.levels[lvl].take(idx) {
+                    let mut scratch = std::mem::take(&mut self.scratch);
+                    self.levels[lvl].drain_slot(idx, &mut scratch);
+                    for s in scratch.drain(..) {
                         self.insert_wheel(s);
                     }
+                    self.scratch = scratch;
                 }
             }
             // 2. Level 0: drain the next occupied slot into `cur`.
@@ -237,9 +246,8 @@ impl<E> TimerWheel<E> {
                 let frame = (self.released >> frame_shift(0)) << frame_shift(0);
                 let slot_end = frame.saturating_add((idx as u64 + 1) << G_BITS);
                 self.released = self.released.max(slot_end);
-                for s in self.levels[0].take(idx) {
-                    self.cur.push(s);
-                }
+                self.levels[0].drain_slot(idx, &mut self.scratch);
+                self.cur.extend(self.scratch.drain(..));
                 return true;
             }
             // 3. Cascade the next occupied slot of the lowest non-empty
@@ -253,9 +261,12 @@ impl<E> TimerWheel<E> {
                         (self.released >> frame_shift(lvl)) << frame_shift(lvl);
                     let slot_start = frame.saturating_add((idx as u64) << shift);
                     self.released = self.released.max(slot_start);
-                    for s in self.levels[lvl].take(idx) {
+                    let mut scratch = std::mem::take(&mut self.scratch);
+                    self.levels[lvl].drain_slot(idx, &mut scratch);
+                    for s in scratch.drain(..) {
                         self.insert_wheel(s);
                     }
+                    self.scratch = scratch;
                     cascaded = true;
                     break;
                 }

@@ -1,0 +1,142 @@
+//! The replay regression corpus: golden FNV-1a 64 digests of the full
+//! rendered report set (timeline, per-client, availability, churn
+//! summary) for a fixed family of seeded experiments, on both the
+//! single-engine and the sharded runner.
+//!
+//! The digests live in `tests/fixtures/replay_corpus/digests.txt`.
+//! Three modes, driven by environment variables:
+//!
+//! - default: entries with a recorded digest must reproduce it bit for
+//!   bit; entries without one fall back to an in-process determinism
+//!   self-check (run twice, digests must agree) so a fresh checkout
+//!   still passes before anyone has blessed a corpus;
+//! - `DIPERF_BLESS=1`: recompute every digest and (re)write the fixture
+//!   file — the update workflow after an *intentional* behavior change;
+//! - `DIPERF_REQUIRE_CORPUS=1`: a missing digest is a failure — CI sets
+//!   this after blessing to prove the file round-trips.
+//!
+//! See `tests/fixtures/replay_corpus/README.md` for the workflow.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use diperf::analysis;
+use diperf::experiment::{
+    presets, run_experiment_opts, ExperimentConfig, RunOptions,
+};
+use diperf::metrics::CollectionMode;
+use diperf::report;
+
+/// FNV-1a 64 — tiny, dependency-free, and stable across platforms.
+fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for &b in s.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The corpus: name, experiment, shard count (`None` = single engine).
+/// Names are part of the fixture format — renaming one orphans its
+/// recorded digest.
+fn corpus() -> Vec<(&'static str, ExperimentConfig, Option<usize>)> {
+    vec![
+        ("churn-10x80-seed404", presets::churn_study(10, 80.0, 404), None),
+        ("spike-10x80-seed405", presets::spike_study(10, 80.0, 405), None),
+        ("soak-8x80-seed406", presets::soak(8, 80.0, 406), None),
+        (
+            "churn-10x80-seed404-shard4",
+            presets::churn_study(10, 80.0, 404),
+            Some(4),
+        ),
+    ]
+}
+
+/// Run one corpus entry and digest its rendered report set.
+fn run_digest(cfg: &ExperimentConfig, shards: Option<usize>) -> String {
+    let r = run_experiment_opts(
+        cfg,
+        RunOptions {
+            shards,
+            collect: CollectionMode::Stream,
+            ..RunOptions::default()
+        },
+    );
+    let agg = r.stream.as_ref().expect("streaming aggregator");
+    let out = analysis::output_from_binned(&agg.binned);
+    let churn = analysis::churn_from_stream(agg, &r.data.testers);
+    let blob = format!(
+        "timeline\n{}per_client\n{}churn\n{}summary\n{}",
+        report::timeline_csv(&out, r.grid.t0, r.grid.quantum),
+        report::per_client_csv(&out, &r.data),
+        report::churn_csv(&churn, r.grid.t0, r.grid.quantum),
+        report::churn_summary(&churn),
+    );
+    format!("{:016x}", fnv1a64(&blob))
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/replay_corpus/digests.txt")
+}
+
+fn read_digests(path: &PathBuf) -> BTreeMap<String, String> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return BTreeMap::new();
+    };
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.split_whitespace();
+            Some((it.next()?.to_string(), it.next()?.to_string()))
+        })
+        .collect()
+}
+
+#[test]
+fn replay_corpus_digests_are_stable() {
+    let bless = std::env::var("DIPERF_BLESS").as_deref() == Ok("1");
+    let require = std::env::var("DIPERF_REQUIRE_CORPUS").as_deref() == Ok("1");
+    let path = fixture_path();
+    let recorded = read_digests(&path);
+    let mut fresh: Vec<(String, String)> = Vec::new();
+    for (name, cfg, shards) in corpus() {
+        let got = run_digest(&cfg, shards);
+        match recorded.get(name) {
+            Some(want) if !bless => {
+                assert_eq!(
+                    &got, want,
+                    "{name}: replay digest drifted from the recorded corpus. \
+                     If this change is intentional, re-bless with \
+                     `DIPERF_BLESS=1 cargo test --test replay_corpus` \
+                     (see tests/fixtures/replay_corpus/README.md)."
+                );
+            }
+            _ => {
+                assert!(
+                    bless || !require,
+                    "{name}: no recorded digest but DIPERF_REQUIRE_CORPUS=1"
+                );
+                // no golden value yet: the entry still must replay
+                // deterministically within this process
+                let again = run_digest(&cfg, shards);
+                assert_eq!(got, again, "{name}: nondeterministic replay");
+            }
+        }
+        fresh.push((name.to_string(), got));
+    }
+    if bless {
+        let mut text = String::from(
+            "# Golden replay digests (FNV-1a 64 of the rendered report set).\n\
+             # Regenerate with: DIPERF_BLESS=1 cargo test --test replay_corpus\n",
+        );
+        for (name, d) in &fresh {
+            text.push_str(&format!("{name} {d}\n"));
+        }
+        std::fs::create_dir_all(path.parent().expect("fixture dir"))
+            .expect("creating fixture dir");
+        std::fs::write(&path, text).expect("writing blessed digests");
+        eprintln!("[replay_corpus] blessed {} digests -> {}", fresh.len(), path.display());
+    }
+}

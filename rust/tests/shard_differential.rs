@@ -1,0 +1,194 @@
+//! The shard-count-invariance contract: for a fixed seed, the sharded
+//! world must replay to **byte-identical** reports at every shard
+//! count — `--shards 1` and `--shards 8` are the same experiment on a
+//! different number of cores.  The hub is always a separate owner, the
+//! conservative window boundaries depend only on the union of pending
+//! event times, and cross-owner deliveries are merged in canonical
+//! `(arrive, tester, emit)` order, so nothing observable may move.
+//!
+//! What is *not* invariant (and deliberately unasserted): raw engine
+//! event counts and peak pending-queue depth, which are summed across
+//! per-shard engines and shift with the partitioning.
+//!
+//! The same file pins the flattened single-engine hot path: the dense
+//! ID-indexed world maps and the classic `FxHashMap` layout must replay
+//! a seed to bit-identical samples and figures (the
+//! `engine_queues.rs`-style differential, one layer up).
+
+use diperf::analysis::{self, AnalysisInput};
+use diperf::experiment::{
+    presets, run_experiment_opts, ExperimentConfig, ExperimentResult, MapKind,
+    RunOptions,
+};
+use diperf::metrics::CollectionMode;
+use diperf::report;
+
+fn run(
+    cfg: &ExperimentConfig,
+    shards: Option<usize>,
+    collect: CollectionMode,
+) -> ExperimentResult {
+    run_experiment_opts(
+        cfg,
+        RunOptions {
+            shards,
+            collect,
+            ..RunOptions::default()
+        },
+    )
+}
+
+/// Render the full figure set for a finished run: timeline CSV,
+/// per-client CSV, availability CSV and the availability/fairness
+/// summary block — on whichever collection path the run used.
+fn figures(r: &ExperimentResult) -> (String, String, String, String) {
+    let (out, churn) = match r.stream.as_ref() {
+        Some(agg) => (
+            analysis::output_from_binned(&agg.binned),
+            analysis::churn_from_stream(agg, &r.data.testers),
+        ),
+        None => {
+            let inp = AnalysisInput::from_grid(&r.data, &r.grid);
+            let out =
+                analysis::analyze(&inp, r.grid.num_quanta, r.grid.num_clients);
+            (out, analysis::churn_report_grid(&r.data, &r.grid))
+        }
+    };
+    (
+        report::timeline_csv(&out, r.grid.t0, r.grid.quantum),
+        report::per_client_csv(&out, &r.data),
+        report::churn_csv(&churn, r.grid.t0, r.grid.quantum),
+        report::churn_summary(&churn),
+    )
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn assert_series_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(close(*x, *y, tol), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn figures_are_byte_identical_at_every_shard_count() {
+    // the acceptance matrix: churn (crashes + rejoins + evictions),
+    // spike (mass crash) and soak (WAN, no scenario), each replayed at
+    // 1/2/4/8 shards against the 1-shard baseline
+    let cases: [(&str, ExperimentConfig); 3] = [
+        ("churn", presets::churn_study(12, 90.0, 2024)),
+        ("spike", presets::spike_study(12, 90.0, 2025)),
+        ("soak", presets::soak(12, 90.0, 2026)),
+    ];
+    for (name, cfg) in &cases {
+        let base = run(cfg, Some(1), CollectionMode::Stream);
+        let want = figures(&base);
+        assert!(
+            base.stream.as_ref().unwrap().samples_seen > 50,
+            "{name}: too little work to make the comparison meaningful"
+        );
+        for s in [2usize, 4, 8] {
+            let r = run(cfg, Some(s), CollectionMode::Stream);
+            // the experiment itself is invariant down to the bit level
+            assert_eq!(
+                r.data.duration_s.to_bits(),
+                base.data.duration_s.to_bits(),
+                "{name} S={s}: span"
+            );
+            assert_eq!(r.faults, base.faults, "{name} S={s}: faults");
+            assert_eq!(
+                r.data.dropped_unsynced, base.data.dropped_unsynced,
+                "{name} S={s}: drops"
+            );
+            for (a, b) in r.data.testers.iter().zip(&base.data.testers) {
+                assert_eq!(a.samples, b.samples, "{name} S={s}: samples");
+                assert_eq!(a.evicted, b.evicted, "{name} S={s}: evicted");
+                assert_eq!(a.rejoins, b.rejoins, "{name} S={s}: rejoins");
+            }
+            // and so are all four rendered reports, byte for byte
+            let got = figures(&r);
+            assert_eq!(got.0, want.0, "{name} S={s}: timeline csv");
+            assert_eq!(got.1, want.1, "{name} S={s}: per-client csv");
+            assert_eq!(got.2, want.2, "{name} S={s}: availability csv");
+            assert_eq!(got.3, want.3, "{name} S={s}: churn summary");
+        }
+    }
+}
+
+#[test]
+fn retained_samples_are_byte_identical_across_shard_counts() {
+    // retain mode exposes every individual sample; the full samples.csv
+    // must not move by a byte, including when the shard count exceeds
+    // the tester count (it clamps to one tester per shard)
+    let cfg = presets::churn_study(10, 80.0, 77);
+    let base = run(&cfg, Some(1), CollectionMode::Retain);
+    let want = report::samples_csv(&base.data);
+    assert!(base.data.samples.len() > 50, "too few samples");
+    for s in [3usize, 8, 64] {
+        let r = run(&cfg, Some(s), CollectionMode::Retain);
+        assert_eq!(report::samples_csv(&r.data), want, "S={s}: samples.csv");
+        assert_eq!(figures(&r), figures(&base), "S={s}: figures");
+    }
+}
+
+#[test]
+fn sharded_streaming_matches_sharded_retained() {
+    // collection is an observer in the sharded world too: a streaming
+    // run and a retained run at the same shard count agree exactly on
+    // every counting series and to rounding on the floating sums
+    let cfg = presets::spike_study(10, 80.0, 5);
+    let retain = run(&cfg, Some(4), CollectionMode::Retain);
+    let stream = run(&cfg, Some(4), CollectionMode::Stream);
+    let inp = AnalysisInput::from_grid(&retain.data, &retain.grid);
+    let posthoc =
+        analysis::analyze(&inp, retain.grid.num_quanta, retain.grid.num_clients);
+    let agg = stream.stream.as_ref().expect("streaming aggregator");
+    let streamed = analysis::output_from_binned(&agg.binned);
+    assert_eq!(posthoc.tput, streamed.tput, "tput");
+    assert_eq!(posthoc.completed, streamed.completed, "completed");
+    assert_eq!(posthoc.util, streamed.util, "util");
+    assert_eq!(posthoc.fairness, streamed.fairness, "fairness");
+    assert_series_close(&posthoc.load, &streamed.load, 1e-9, "load");
+    assert_series_close(&posthoc.rt_mean, &streamed.rt_mean, 1e-9, "rt_mean");
+    let cr = analysis::churn_report_grid(&retain.data, &retain.grid);
+    let cs = analysis::churn_from_stream(agg, &stream.data.testers);
+    assert_eq!(cr.active, cs.active, "active");
+    assert_eq!(cr.evicted, cs.evicted);
+    assert_eq!(cr.rejoins, cs.rejoins);
+    assert!(close(cr.jain_fairness, cs.jain_fairness, 1e-12));
+    assert!(close(cr.mean_availability, cs.mean_availability, 1e-12));
+}
+
+#[test]
+fn dense_and_hash_layouts_replay_bit_identically() {
+    // the flattened hot path, pinned: dense ID-indexed vectors and the
+    // classic FxHashMap world maps drive the *same* single-engine
+    // simulation, so samples, figures and even the event count must
+    // match bit for bit under a churn scenario
+    let cfg = presets::churn_study(12, 90.0, 31);
+    let dense = run_experiment_opts(
+        &cfg,
+        RunOptions {
+            map: MapKind::Dense,
+            ..RunOptions::default()
+        },
+    );
+    let hash = run_experiment_opts(
+        &cfg,
+        RunOptions {
+            map: MapKind::Hash,
+            ..RunOptions::default()
+        },
+    );
+    assert_eq!(dense.events, hash.events, "event count");
+    assert_eq!(dense.peak_pending, hash.peak_pending, "peak pending");
+    assert_eq!(
+        report::samples_csv(&dense.data),
+        report::samples_csv(&hash.data),
+        "samples.csv"
+    );
+    assert_eq!(figures(&dense), figures(&hash), "figures");
+}

@@ -1,0 +1,158 @@
+//! Property tests for the sharded world's conservative merge: a
+//! miniature K-owner harness drives [`WindowPlan`] and
+//! [`sort_cross_messages`] with seeded, arbitrary cross-shard message
+//! schedules — including zero-slack messages whose latency is *exactly*
+//! the lookahead bound, zero-lookahead plans (which clamp to one tick),
+//! idle owners and shard-local fault events — and re-states the
+//! invariants the coordinator in `experiment::shard` relies on:
+//!
+//! - every cross-owner message arrives at or after the end of the
+//!   window in which it was sent (the conservative bound);
+//! - per owner, cross deliveries happen in `(time, tester, emit)`
+//!   order, exactly the canonical merge order;
+//! - the window loop strictly advances and reaches quiescence — it
+//!   never deadlocks, livelocks or drops messages, even when some
+//!   owners have nothing to do from the first window to the last.
+
+use diperf::experiment::shard::{sort_cross_messages, WindowPlan};
+use diperf::sim::{Engine, QueueKind, SimDuration, SimTime};
+use diperf::util::proptest::{forall, prop};
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Owner-local work (the stand-in for tester launches and sweeps).
+    Local,
+    /// A shard-local fault event (scenario Crash/Restart analogue).
+    Fault,
+    /// A cross-owner delivery carrying its canonical merge key.
+    Cross { tester: usize, emit: u64 },
+}
+
+#[test]
+fn arbitrary_schedules_merge_in_order_without_deadlock() {
+    forall(30, |rng| {
+        let k = 2 + rng.next_below(5) as usize;
+        // lookahead 0 is the degenerate edge: the plan clamps it to one
+        // tick so windows still advance
+        let plan = WindowPlan::new(SimDuration(rng.next_below(500)));
+        let lookahead = plan.lookahead();
+        let mut engines: Vec<Engine<Ev>> = (0..k)
+            .map(|_| Engine::with_queue(QueueKind::Wheel))
+            .collect();
+        let mut scheduled = 0u64;
+        for (s, eng) in engines.iter_mut().enumerate() {
+            if s >= 2 && s % 3 == 2 {
+                continue; // permanently idle owner
+            }
+            for _ in 0..(1 + rng.next_below(20)) {
+                let at = SimTime(rng.next_below(10_000));
+                let ev = if rng.chance(0.2) { Ev::Fault } else { Ev::Local };
+                eng.schedule(at, ev);
+                scheduled += 1;
+            }
+        }
+        let mut held: Vec<Vec<(SimTime, usize, u64, Ev)>> = vec![Vec::new(); k];
+        let mut delivered: Vec<Vec<(SimTime, usize, u64)>> = vec![Vec::new(); k];
+        let mut emit_seq = 0u64;
+        let mut budget = 200u32;
+        let mut processed = 0u64;
+        let mut windows = 0u32;
+        let mut last_tmin: Option<SimTime> = None;
+        loop {
+            let peeks: Vec<Option<SimTime>> = engines
+                .iter_mut()
+                .zip(&held)
+                .map(|(e, h)| {
+                    let held_min = h.iter().map(|m| m.0).min();
+                    match (e.peek_time(), held_min) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, b) => a.or(b),
+                    }
+                })
+                .collect();
+            let Some((t_min, wend)) = plan.next_window(&peeks) else {
+                break;
+            };
+            prop(
+                last_tmin.is_none_or(|p| t_min > p),
+                "window failed to advance strictly",
+            )?;
+            last_tmin = Some(t_min);
+            windows += 1;
+            prop(windows < 100_000, "merge loop ran away (livelock)")?;
+            for s in 0..k {
+                let (mut batch, rest): (Vec<_>, Vec<_>) =
+                    held[s].drain(..).partition(|m| m.0 < wend);
+                held[s] = rest;
+                sort_cross_messages(&mut batch);
+                for (at, _, _, ev) in batch {
+                    engines[s].schedule(at, ev);
+                }
+                while engines[s].peek_time().is_some_and(|t| t < wend) {
+                    let (t, ev) = engines[s].next().expect("peeked");
+                    processed += 1;
+                    if let Ev::Cross { tester, emit } = ev {
+                        delivered[s].push((t, tester, emit));
+                    }
+                    if budget > 0 && rng.chance(0.5) {
+                        budget -= 1;
+                        // a third of the traffic is zero-slack: latency
+                        // exactly the lookahead bound
+                        let extra = if rng.chance(0.3) {
+                            0
+                        } else {
+                            rng.next_below(2_000)
+                        };
+                        let arrive = t + lookahead + SimDuration(extra);
+                        prop(arrive >= wend, "conservative bound violated")?;
+                        let tester = rng.next_below(64) as usize;
+                        let dest = rng.next_below(k as u64) as usize;
+                        held[dest].push((
+                            arrive,
+                            tester,
+                            emit_seq,
+                            Ev::Cross { tester, emit: emit_seq },
+                        ));
+                        emit_seq += 1;
+                        scheduled += 1;
+                    }
+                }
+            }
+        }
+        for d in &delivered {
+            prop(
+                d.windows(2).all(|w| w[0] <= w[1]),
+                "cross delivery out of (time, tester, emit) order",
+            )?;
+        }
+        prop(processed == scheduled, "events lost or duplicated")?;
+        prop(
+            held.iter().all(Vec::is_empty),
+            "undelivered messages at quiescence",
+        )
+    });
+}
+
+#[test]
+fn idle_owners_never_stall_the_window_loop() {
+    // three owners, only the middle one has work: the plan must skip
+    // the idle peeks, walk the loaded engine to quiescence and then
+    // report no further window at all
+    let plan = WindowPlan::new(SimDuration(100));
+    let mut eng: Engine<u32> = Engine::with_queue(QueueKind::Wheel);
+    for i in 0..5u32 {
+        eng.schedule(SimTime(u64::from(i) * 250), i);
+    }
+    let mut got = Vec::new();
+    loop {
+        let peeks = [None, eng.peek_time(), None];
+        let Some((_, wend)) = plan.next_window(&peeks) else {
+            break;
+        };
+        while eng.peek_time().is_some_and(|t| t < wend) {
+            got.push(eng.next().expect("peeked").1);
+        }
+    }
+    assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    assert_eq!(plan.next_window(&[None, None, None]), None);
+}
