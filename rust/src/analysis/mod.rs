@@ -19,9 +19,12 @@
 //! The crate's *own* performance is analyzed here too: [`changepoint`]
 //! runs E-Divisive mean-shift detection over the accumulated
 //! `BENCH_scale.json` trajectory, replacing fixed CI perf bounds with a
-//! statistical gate (`diperf analyze changepoints`).
+//! statistical gate (`diperf analyze changepoints`), and [`trace`]
+//! summarizes flight-recorder dumps (`diperf analyze trace`) into
+//! per-thread utilization, top spans and merge-stall histograms.
 
 pub mod changepoint;
+pub mod trace;
 
 use crate::metrics::{AnalysisGrid, Binned, RunData, StreamAgg, TesterRecord};
 use crate::util::linalg;

@@ -1,0 +1,599 @@
+//! `diperf analyze trace`: summarize a flight-recorder Chrome
+//! trace_event dump into per-thread utilization, top spans by
+//! total/self time, and merge-stall histograms.
+//!
+//! The input is the JSON Object Format written by
+//! [`crate::obsv::chrome`] (and accepted by Perfetto): a top-level
+//! object whose `traceEvents` array holds `"X"` complete events with
+//! `ts`/`dur` in microseconds, `"M"` `thread_name` metadata, and `"C"`
+//! counters.  The repo vendors no JSON crate, so a ~100-line recursive
+//! descent parser lives here; it accepts any standard JSON document
+//! (numbers, strings with escapes, nesting) rather than just our own
+//! emission, so traces post-processed by other tools still load.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value parser
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (just enough for trace documents).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number, as `f64`.
+    Num(f64),
+    /// A string with escapes decoded.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, in source order (duplicate keys are kept).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Look a key up in an object (first occurrence).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a number, if it is one.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "expected {:?} at byte {} (found {:?})",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            )
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self
+                .peek()
+                .context("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().context("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            anyhow::ensure!(
+                                self.i + 4 <= self.b.len(),
+                                "truncated \\u escape"
+                            );
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                    .context("non-utf8 \\u escape")?;
+                            let n = u32::from_str_radix(hex, 16)
+                                .context("bad \\u escape")?;
+                            self.i += 4;
+                            // Surrogate pairs are not re-joined: the
+                            // recorder never emits them and a lone
+                            // surrogate maps to the replacement char.
+                            out.push(char::from_u32(n).unwrap_or('\u{fffd}'));
+                        }
+                        other => anyhow::bail!("bad escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    // Copy the raw UTF-8 byte run through unchanged.
+                    let start = self.i - 1;
+                    while self
+                        .peek()
+                        .map(|c| c != b'"' && c != b'\\')
+                        .unwrap_or(false)
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .context("non-utf8 string content")?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| {
+                c.is_ascii_digit()
+                    || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+            })
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii");
+        Ok(Json::Num(s.parse::<f64>().with_context(|| {
+            format!("bad number {s:?} at byte {start}")
+        })?))
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek().context("unexpected end of document")? {
+            b'{' => {
+                self.i += 1;
+                let mut kvs = Vec::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    let v = self.value()?;
+                    kvs.push((k, v));
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(kvs));
+                        }
+                        _ => anyhow::bail!("expected , or }} at byte {}", self.i),
+                    }
+                }
+            }
+            b'[' => {
+                self.i += 1;
+                let mut items = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => anyhow::bail!("expected , or ] at byte {}", self.i),
+                    }
+                }
+            }
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Trace model
+// ---------------------------------------------------------------------------
+
+/// One `"X"` (complete) span event from a trace dump.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    /// Event name (e.g. `shard.merge_stall`).
+    pub name: String,
+    /// Thread id the span ran on.
+    pub tid: u64,
+    /// Start timestamp in microseconds.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+}
+
+/// A loaded trace: spans, counter finals, and thread labels.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Every complete span, document order.
+    pub spans: Vec<SpanRec>,
+    /// Final counter values (`"C"` events; last value per name wins).
+    pub counters: Vec<(String, f64)>,
+    /// `tid` → thread label from `thread_name` metadata.
+    pub labels: HashMap<u64, String>,
+}
+
+/// Load and index a Chrome trace_event JSON document.
+pub fn summarize(text: &str) -> Result<TraceSummary> {
+    let doc = parse_json(text)?;
+    let events = doc
+        .get("traceEvents")
+        .context("document has no traceEvents array")?;
+    let Json::Arr(events) = events else {
+        anyhow::bail!("traceEvents is not an array");
+    };
+    let mut out = TraceSummary::default();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+        let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        match ph {
+            "M" if name == "thread_name" => {
+                if let Some(label) =
+                    ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                {
+                    out.labels.insert(tid, label.to_string());
+                }
+            }
+            "X" => {
+                out.spans.push(SpanRec {
+                    name: name.to_string(),
+                    tid,
+                    ts_us: ev.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+                    dur_us: ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0),
+                });
+            }
+            "C" => {
+                let v = ev
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                match out.counters.iter_mut().find(|(n, _)| n == name) {
+                    Some(slot) => slot.1 = v,
+                    None => out.counters.push((name.to_string(), v)),
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// Union length of a set of `[start, end)` intervals, in µs.
+fn union_us(mut iv: Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (s, e) in iv {
+        match cur {
+            Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                cur = Some((s, e));
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Per-thread utilization CSV: one row per tid with its label, span
+/// count, busy seconds (union of its span intervals — nesting and
+/// overlap safe), observed wall seconds, and busy/wall utilization.
+pub fn utilization_csv(t: &TraceSummary) -> String {
+    let mut tids: Vec<u64> = t.spans.iter().map(|s| s.tid).collect();
+    for &tid in t.labels.keys() {
+        tids.push(tid);
+    }
+    tids.sort_unstable();
+    tids.dedup();
+    let mut out = String::from("tid,label,spans,busy_s,wall_s,util\n");
+    for tid in tids {
+        let mine: Vec<&SpanRec> =
+            t.spans.iter().filter(|s| s.tid == tid).collect();
+        let label = t
+            .labels
+            .get(&tid)
+            .cloned()
+            .unwrap_or_else(|| format!("tid-{tid}"));
+        if mine.is_empty() {
+            out.push_str(&format!("{tid},{label},0,0.000000,0.000000,0.0000\n"));
+            continue;
+        }
+        let busy_us = union_us(
+            mine.iter().map(|s| (s.ts_us, s.ts_us + s.dur_us)).collect(),
+        );
+        let t0 = mine.iter().map(|s| s.ts_us).fold(f64::INFINITY, f64::min);
+        let t1 = mine
+            .iter()
+            .map(|s| s.ts_us + s.dur_us)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let wall_us = (t1 - t0).max(0.0);
+        let util = if wall_us > 0.0 { busy_us / wall_us } else { 0.0 };
+        out.push_str(&format!(
+            "{tid},{label},{},{:.6},{:.6},{:.4}\n",
+            mine.len(),
+            busy_us / 1e6,
+            wall_us / 1e6,
+            util
+        ));
+    }
+    out
+}
+
+/// Top spans CSV: per event name, the span count, total time, self
+/// time (total minus time inside directly nested spans on the same
+/// thread), and mean duration, sorted by total time descending.
+pub fn top_spans_csv(t: &TraceSummary) -> String {
+    // Per-thread nesting pass: events sorted by (start, -dur) make a
+    // parent sort before its children; a stack of open spans attributes
+    // each child's duration against its direct parent's self time.
+    let mut tids: Vec<u64> = t.spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut totals: HashMap<&str, (u64, f64, f64)> = HashMap::new(); // name -> (count, total, self)
+    for tid in tids {
+        let mut mine: Vec<&SpanRec> =
+            t.spans.iter().filter(|s| s.tid == tid).collect();
+        mine.sort_by(|a, b| {
+            a.ts_us.total_cmp(&b.ts_us).then(b.dur_us.total_cmp(&a.dur_us))
+        });
+        // (end_us, index into self_us)
+        let mut stack: Vec<(f64, usize)> = Vec::new();
+        let mut self_us: Vec<f64> = mine.iter().map(|s| s.dur_us).collect();
+        for (i, s) in mine.iter().enumerate() {
+            while let Some(&(end, _)) = stack.last() {
+                if end <= s.ts_us {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, parent)) = stack.last() {
+                self_us[parent] -= s.dur_us;
+            }
+            stack.push((s.ts_us + s.dur_us, i));
+        }
+        for (i, s) in mine.iter().enumerate() {
+            let e = totals.entry(s.name.as_str()).or_insert((0, 0.0, 0.0));
+            e.0 += 1;
+            e.1 += s.dur_us;
+            e.2 += self_us[i];
+        }
+    }
+    let mut rows: Vec<(&str, u64, f64, f64)> = totals
+        .into_iter()
+        .map(|(name, (n, tot, slf))| (name, n, tot, slf))
+        .collect();
+    rows.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(b.0)));
+    let mut out = String::from("name,count,total_s,self_s,mean_ms\n");
+    for (name, n, tot, slf) in rows {
+        out.push_str(&format!(
+            "{name},{n},{:.6},{:.6},{:.4}\n",
+            tot / 1e6,
+            slf / 1e6,
+            tot / 1e3 / n.max(1) as f64
+        ));
+    }
+    out
+}
+
+/// Merge-stall histogram CSV: log2 µs buckets over every
+/// `shard.merge_stall` span (how long the coordinator blocked waiting
+/// on each shard's window result).
+pub fn merge_stall_hist_csv(t: &TraceSummary) -> String {
+    let mut buckets: Vec<u64> = vec![0; 33];
+    let mut n = 0u64;
+    for s in t.spans.iter().filter(|s| s.name == "shard.merge_stall") {
+        let us = s.dur_us.max(0.0) as u64;
+        // bucket k holds durations in [2^(k-1), 2^k) µs; bucket 0 is < 1 µs
+        let k = (64 - us.leading_zeros()).min(32) as usize;
+        buckets[k] += 1;
+        n += 1;
+    }
+    let mut out = String::from("bucket_us_lo,bucket_us_hi,count\n");
+    if n == 0 {
+        return out;
+    }
+    let hi_bucket = buckets
+        .iter()
+        .rposition(|&c| c > 0)
+        .unwrap_or(0);
+    for (k, &c) in buckets.iter().enumerate().take(hi_bucket + 1) {
+        let lo = if k == 0 { 0 } else { 1u64 << (k - 1) };
+        let hi = 1u64 << k;
+        out.push_str(&format!("{lo},{hi},{c}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"displayTimeUnit":"ms","traceEvents":[
+{"name":"process_name","ph":"M","pid":1,"tid":0,"args":{"name":"diperf"}},
+{"name":"thread_name","ph":"M","pid":1,"tid":1,"args":{"name":"shard-0"}},
+{"name":"thread_name","ph":"M","pid":1,"tid":2,"args":{"name":"hub"}},
+{"name":"shard.window","cat":"shard","ph":"X","pid":1,"tid":1,"ts":0.0,"dur":100.0,"args":{"arg":0}},
+{"name":"shard.merge_stall","cat":"shard","ph":"X","pid":1,"tid":2,"ts":10.0,"dur":40.0,"args":{"arg":0}},
+{"name":"shard.window","cat":"shard","ph":"X","pid":1,"tid":2,"ts":0.0,"dur":10.0,"args":{"arg":18446744073709551615}},
+{"name":"shard.merge_stall","cat":"shard","ph":"X","pid":1,"tid":2,"ts":50.0,"dur":3.0,"args":{"arg":1}},
+{"name":"sim.events","ph":"C","pid":1,"tid":0,"ts":0,"args":{"value":4096}}
+]}"#;
+
+    #[test]
+    fn json_parser_handles_the_basics() {
+        let v = parse_json(r#"{"a":[1,2.5,-3e2],"b":"x\n\"yA","c":null,"d":true}"#)
+            .unwrap();
+        assert_eq!(v.get("a").unwrap(), &Json::Arr(vec![
+            Json::Num(1.0),
+            Json::Num(2.5),
+            Json::Num(-300.0)
+        ]));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\n\"yA"));
+        assert_eq!(v.get("c").unwrap(), &Json::Null);
+        assert_eq!(v.get("d").unwrap(), &Json::Bool(true));
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("{} extra").is_err());
+        assert!(parse_json(r#"{"a":}"#).is_err());
+    }
+
+    #[test]
+    fn summarize_indexes_spans_labels_and_counters() {
+        let t = summarize(SAMPLE).unwrap();
+        assert_eq!(t.spans.len(), 4);
+        assert_eq!(t.labels.get(&1).map(String::as_str), Some("shard-0"));
+        assert_eq!(t.labels.get(&2).map(String::as_str), Some("hub"));
+        assert_eq!(t.counters, vec![("sim.events".to_string(), 4096.0)]);
+    }
+
+    #[test]
+    fn utilization_accounts_busy_and_wall() {
+        let t = summarize(SAMPLE).unwrap();
+        let csv = utilization_csv(&t);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "tid,label,spans,busy_s,wall_s,util");
+        // tid 1: one span [0,100) -> busy 100 µs over wall 100 µs
+        assert!(lines.iter().any(|l| l.starts_with("1,shard-0,1,0.000100,0.000100,1.0000")),
+            "csv was:\n{csv}");
+        // tid 2: [0,10) + [10,50) + [50,53) union = 53 µs over 53 µs wall
+        assert!(lines.iter().any(|l| l.starts_with("2,hub,3,0.000053,0.000053,")),
+            "csv was:\n{csv}");
+    }
+
+    #[test]
+    fn top_spans_self_time_subtracts_nested_children() {
+        // parent [0,100) with child [20,50) on the same thread
+        let text = r#"{"traceEvents":[
+{"name":"sim.run","ph":"X","tid":1,"ts":0,"dur":100},
+{"name":"shard.window","ph":"X","tid":1,"ts":20,"dur":30}
+]}"#;
+        let t = summarize(text).unwrap();
+        let csv = top_spans_csv(&t);
+        let run = csv.lines().find(|l| l.starts_with("sim.run,")).unwrap();
+        // total 100 µs, self 70 µs
+        assert!(run.contains(",1,0.000100,0.000070,"), "row: {run}");
+        let win = csv.lines().find(|l| l.starts_with("shard.window,")).unwrap();
+        assert!(win.contains(",1,0.000030,0.000030,"), "row: {win}");
+        // sorted by total time: sim.run first
+        assert!(csv.find("sim.run").unwrap() < csv.find("shard.window").unwrap());
+    }
+
+    #[test]
+    fn merge_stall_histogram_buckets_by_log2() {
+        let t = summarize(SAMPLE).unwrap();
+        let csv = merge_stall_hist_csv(&t);
+        // 40 µs -> bucket [32,64); 3 µs -> bucket [2,4)
+        assert!(csv.contains("32,64,1\n"), "csv was:\n{csv}");
+        assert!(csv.contains("2,4,1\n"), "csv was:\n{csv}");
+        // no stalls at all -> header only
+        let empty = summarize(r#"{"traceEvents":[]}"#).unwrap();
+        assert_eq!(
+            merge_stall_hist_csv(&empty),
+            "bucket_us_lo,bucket_us_hi,count\n"
+        );
+    }
+
+    #[test]
+    fn roundtrips_the_chrome_exporter() {
+        use crate::obsv::ring::SpanEv;
+        let snap = crate::obsv::Snapshot {
+            counters: {
+                let mut c = [0u64; crate::obsv::NKINDS];
+                c[crate::obsv::Kind::SimEvents as u16 as usize] = 99;
+                c
+            },
+            total_ns: [0u64; crate::obsv::NKINDS],
+            threads: vec![crate::obsv::ThreadSnap {
+                tid: 7,
+                label: "worker-3".to_string(),
+                spans: vec![SpanEv {
+                    kind: crate::obsv::Kind::ReactorDispatch as u16,
+                    start_ns: 5_000,
+                    dur_ns: 2_000,
+                    arg: 4,
+                }],
+            }],
+            dropped: 0,
+        };
+        let json = crate::obsv::chrome::chrome_trace_json(&snap);
+        let t = summarize(&json).unwrap();
+        assert_eq!(t.labels.get(&7).map(String::as_str), Some("worker-3"));
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].name, "reactor.dispatch");
+        assert!((t.spans[0].ts_us - 5.0).abs() < 1e-9);
+        assert!((t.spans[0].dur_us - 2.0).abs() < 1e-9);
+        assert!(t.counters.iter().any(|(n, v)| n == "sim.events" && *v == 99.0));
+        let util = utilization_csv(&t);
+        assert!(util.lines().count() >= 2, "non-empty utilization:\n{util}");
+    }
+}

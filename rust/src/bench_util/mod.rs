@@ -188,9 +188,12 @@ impl RssProbe {
         let peak = Arc::new(AtomicU64::new(current_rss_kb()));
         let (s, p) = (Arc::clone(&stop), Arc::clone(&peak));
         let handle = std::thread::spawn(move || {
+            // park_timeout instead of sleep so stop() can interrupt a
+            // pending wait immediately via unpark — the sampler never
+            // outlives the phase it measures by a poll period
             while !s.load(Ordering::Relaxed) {
                 p.fetch_max(current_rss_kb(), Ordering::Relaxed);
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::park_timeout(std::time::Duration::from_millis(5));
             }
             p.fetch_max(current_rss_kb(), Ordering::Relaxed);
         });
@@ -212,6 +215,7 @@ impl RssProbe {
         self.stop
             .store(true, std::sync::atomic::Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
+            h.thread().unpark();
             let _ = h.join();
         }
     }
@@ -370,11 +374,35 @@ pub fn set_scale_field(doc: &str, key: &str, value: &str) -> Option<String> {
     Some(format!("{}{}{}", &doc[..start], value, &doc[end..]))
 }
 
+/// Current rendered value of a top-level summary field, if present.
+fn scale_field_value<'a>(doc: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": ");
+    let start = doc.find(&pat)? + pat.len();
+    let end = start
+        + doc[start..]
+            .find(|c: char| c == ',' || c == '\n')
+            .unwrap_or(doc.len() - start);
+    Some(doc[start..end].trim())
+}
+
 /// As [`set_scale_field`], but *inserts* the field (right after the
 /// `"schema"` line) when the document does not contain the key yet —
 /// the fresh per-run documents CI accumulates for the perf gate start
 /// from [`append_or_init`] and carry no summary fields.
+///
+/// A measurement never regresses to `null`: when `value` is `null` and
+/// the document already holds a non-null value for `key`, the document
+/// is returned unchanged.  Bench phases write `null` for fields they
+/// did not measure this run (CI-only fields like `harness_overhead`),
+/// and a local re-run must not erase a number CI recorded earlier.
 pub fn upsert_scale_field(doc: &str, key: &str, value: &str) -> Option<String> {
+    if value == "null" {
+        if let Some(existing) = scale_field_value(doc, key) {
+            if existing != "null" {
+                return Some(doc.to_string());
+            }
+        }
+    }
     if let Some(out) = set_scale_field(doc, key, value) {
         return Some(out);
     }
@@ -530,6 +558,26 @@ mod tests {
     }
 
     #[test]
+    fn upsert_never_regresses_a_measurement_to_null() {
+        let doc = "{\n  \"schema\": \"diperf-bench-scale-v1\",\n  \"harness_overhead\": 1.02,\n  \"rows\": []\n}\n";
+        // null over a measured value: document unchanged
+        let kept = upsert_scale_field(doc, "harness_overhead", "null").unwrap();
+        assert_eq!(kept, doc);
+        // null over null is still fine (idempotent placeholder)
+        let nulls = "{\n  \"schema\": \"diperf-bench-scale-v1\",\n  \"harness_overhead\": null,\n  \"rows\": []\n}\n";
+        let still = upsert_scale_field(nulls, "harness_overhead", "null").unwrap();
+        assert!(still.contains("\"harness_overhead\": null"), "{still}");
+        // inserting a brand-new null placeholder also works
+        let fresh = "{\n  \"schema\": \"diperf-bench-scale-v1\",\n  \"rows\": []\n}\n";
+        let ins = upsert_scale_field(fresh, "harness_overhead", "null").unwrap();
+        assert!(ins.contains("\"harness_overhead\": null,"), "{ins}");
+        // and a real number still overwrites a measurement
+        let upd = upsert_scale_field(doc, "harness_overhead", "1.01").unwrap();
+        assert!(upd.contains("\"harness_overhead\": 1.01,"), "{upd}");
+        assert!(!upd.contains("1.02"), "{upd}");
+    }
+
+    #[test]
     fn append_extends_fresh_and_empty_docs() {
         let row = ScaleRow {
             label: "campaign-smoke-jobs4".into(),
@@ -648,6 +696,32 @@ mod tests {
         if phase > 0 {
             assert!(phase <= peak_rss_kb(), "phase {phase} > VmHWM");
         }
+    }
+
+    #[test]
+    fn rss_probe_joins_its_sampler_on_drop() {
+        // regression: the sampler thread must be signaled and joined on
+        // drop, not detached — once the probe is gone, nothing may still
+        // hold the shared peak cell
+        let probe = RssProbe::start();
+        let peak = std::sync::Arc::clone(&probe.peak);
+        assert_eq!(std::sync::Arc::strong_count(&peak), 3, "probe + sampler + test");
+        drop(probe);
+        assert_eq!(
+            std::sync::Arc::strong_count(&peak),
+            1,
+            "sampler thread still alive after drop"
+        );
+        // stop() after heavy use returns promptly too (unpark interrupts
+        // the pending park_timeout rather than waiting it out)
+        let t = Instant::now();
+        let probe = RssProbe::start();
+        let _ = probe.stop();
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(2),
+            "stop took {:?}",
+            t.elapsed()
+        );
     }
 
     #[test]

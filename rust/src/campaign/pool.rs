@@ -62,6 +62,7 @@ pub fn run_cell(spec: &CampaignSpec, cell: &Cell) -> Result<CellOutcome> {
         queue: QueueKind::Wheel,
         num_quanta: spec.num_quanta,
         window_s: spec.window_s,
+        ..RunOptions::default()
     };
     let r = run_experiment_opts(&cfg, opts);
     let agg = r
@@ -98,19 +99,56 @@ pub fn run_cells(
     cells: &[Cell],
     jobs: usize,
 ) -> Result<Vec<CellOutcome>> {
+    run_cells_with(cells, jobs, |i| run_cell(spec, &cells[i]))
+}
+
+/// Pool core behind [`run_cells`], parameterized over the per-cell job
+/// so tests can inject failures.  A panicking job is caught and
+/// reported as an error naming the grid label (service × scenario ×
+/// load × seed) that failed, which the CLI turns into a nonzero exit —
+/// a crash in one cell must never surface as a bare thread-join error.
+pub fn run_cells_with(
+    cells: &[Cell],
+    jobs: usize,
+    job: impl Fn(usize) -> Result<CellOutcome> + Sync,
+) -> Result<Vec<CellOutcome>> {
     let jobs = jobs.clamp(1, cells.len().max(1));
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<CellOutcome>>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
+    let pool_start = std::time::Instant::now();
     std::thread::scope(|s| {
-        for _ in 0..jobs {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
+        for w in 0..jobs {
+            let job = &job;
+            let next = &next;
+            let slots = &slots;
+            s.spawn(move || {
+                crate::obsv::set_thread_label(&format!("job-{w}"));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    // Queue wait: how long this cell sat behind earlier
+                    // cells before any worker picked it up.
+                    crate::obsv::count!(
+                        crate::obsv::Kind::CampaignQueueWaitUs,
+                        pool_start.elapsed().as_micros() as u64
+                    );
+                    let _cell_span =
+                        crate::obsv::span!(crate::obsv::Kind::CampaignCell, i as u64);
+                    let r = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| job(i)),
+                    )
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow::anyhow!(
+                            "cell {} panicked: {}",
+                            cells[i].label(),
+                            panic_message(&payload)
+                        ))
+                    });
+                    *slots[i].lock().expect("slot poisoned") = Some(r);
                 }
-                let r = run_cell(spec, &cells[i]);
-                *slots[i].lock().expect("slot poisoned") = Some(r);
             });
         }
     });
@@ -123,6 +161,17 @@ pub fn run_cells(
                 .with_context(|| format!("cell {} never ran", cells[i].label()))?
         })
         .collect()
+}
+
+/// Best-effort human-readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +199,29 @@ mod tests {
         assert!(o.events > 100);
         assert_eq!(o.out.load.len(), s.num_quanta);
         assert!(o.out.totals[0] > 0.0, "no completions");
+    }
+
+    #[test]
+    fn injected_panic_reports_the_failing_cell_label() {
+        let s = tiny_spec();
+        let cells = grid::expand(&s);
+        assert!(cells.len() >= 2, "need two cells to mix panic and success");
+        let err = run_cells_with(&cells, 2, |i| {
+            if i == 1 {
+                panic!("injected failure in cell {i}");
+            }
+            run_cell(&s, &cells[i])
+        })
+        .expect_err("a panicking cell must fail the run");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&cells[1].label()),
+            "error must name the grid label, got: {msg}"
+        );
+        assert!(
+            msg.contains("injected failure"),
+            "error must carry the panic message, got: {msg}"
+        );
     }
 
     #[test]

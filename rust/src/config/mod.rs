@@ -456,6 +456,58 @@ pub fn live_from_toml(text: &str) -> Result<crate::live::LiveConfig> {
     Ok(cfg)
 }
 
+/// Flight-recorder settings from a config file's optional `[obsv]`
+/// section (see `docs/OBSERVABILITY.md`).  CLI flags (`--trace-out`,
+/// `--stats-every`) win over these when both are given.
+///
+/// ```toml
+/// [obsv]
+/// trace_out = "out/trace.json"   # Chrome trace_event dump path
+/// stats_every = 5.0              # stderr stats-line period, seconds
+/// ring_capacity = 65536          # per-thread span ring slots
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsvConfig {
+    /// Where to write the Chrome trace_event JSON dump, if anywhere.
+    pub trace_out: Option<String>,
+    /// Period in seconds for the periodic stderr stats line, if any.
+    pub stats_every: Option<f64>,
+    /// Per-thread span ring capacity override, if any.
+    pub ring_capacity: Option<usize>,
+}
+
+/// Parse the `[obsv]` section of a config file.  Absent section or
+/// absent keys mean "recorder stays off" — the default config never
+/// enables observability.
+pub fn obsv_from_toml(text: &str) -> Result<ObsvConfig> {
+    let doc = parse(text)?;
+    let mut out = ObsvConfig::default();
+    let Some(sec) = doc.get("obsv") else {
+        return Ok(out);
+    };
+    if let Some(v) = sec.get("trace_out") {
+        out.trace_out = Some(
+            v.as_str()
+                .context("trace_out must be a string path")?
+                .to_string(),
+        );
+    }
+    if let Some(v) = sec.get("stats_every") {
+        let s = v.as_f64().context("stats_every must be numeric")?;
+        if s.is_nan() || s <= 0.0 {
+            bail!("stats_every must be positive, got {s}");
+        }
+        out.stats_every = Some(s);
+    }
+    if let Some(v) = sec.get("ring_capacity") {
+        out.ring_capacity = Some(
+            v.as_usize()
+                .context("ring_capacity must be a non-negative int")?,
+        );
+    }
+    Ok(out)
+}
+
 /// Split a comma-separated list, trimming items and rejecting empties.
 fn csv_items(s: &str) -> Result<Vec<String>> {
     let items: Vec<String> = s
@@ -670,6 +722,29 @@ mod tests {
         assert!(live_from_toml("[live]\nagents = 0\n").is_err());
         assert!(live_from_toml("[live]\nbackend = \"fibers\"\n").is_err());
         assert!(live_from_toml("[live]\nbackend = 3\n").is_err());
+    }
+
+    #[test]
+    fn obsv_section_parses_and_defaults_off() {
+        let o = obsv_from_toml(
+            "[obsv]\ntrace_out = \"out/t.json\"\nstats_every = 2.5\n\
+             ring_capacity = 1024\n",
+        )
+        .unwrap();
+        assert_eq!(o.trace_out.as_deref(), Some("out/t.json"));
+        assert_eq!(o.stats_every, Some(2.5));
+        assert_eq!(o.ring_capacity, Some(1024));
+        // absent section (or file with other sections) leaves it all off
+        assert_eq!(obsv_from_toml("").unwrap(), ObsvConfig::default());
+        assert_eq!(
+            obsv_from_toml("preset = \"quick_http\"\n[test]\nduration_s = 9.0\n")
+                .unwrap(),
+            ObsvConfig::default()
+        );
+        // bad values are loud
+        assert!(obsv_from_toml("[obsv]\nstats_every = 0\n").is_err());
+        assert!(obsv_from_toml("[obsv]\nstats_every = \"x\"\n").is_err());
+        assert!(obsv_from_toml("[obsv]\ntrace_out = 3\n").is_err());
     }
 
     #[test]

@@ -1186,6 +1186,7 @@ pub fn run_experiment_opts(
     w.eng.schedule(SimTime(0), Ev::TimeoutSweep);
 
     // main loop (horizon is set once the ramp schedule is known)
+    let run_span = crate::obsv::span!(crate::obsv::Kind::SimRun, n as u64);
     loop {
         let horizon = w.horizon
             + SimDuration::from_secs_f64(cfg.grace_s.max(0.0));
@@ -1200,6 +1201,8 @@ pub fn run_experiment_opts(
         };
         w.handle(ev);
     }
+    w.eng.flush_obsv();
+    drop(run_span);
 
     let duration_s = w.eng.now().as_secs_f64();
     let mut data = w.controller.finalize(duration_s);

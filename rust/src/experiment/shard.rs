@@ -1065,13 +1065,15 @@ pub fn run_experiment_sharded(
 
     // The hub steps on this thread (the service is not Send); shards
     // step in persistent workers, one Step command per window.
+    crate::obsv::set_thread_label("hub");
     let finals: Vec<ShardFinal> = std::thread::scope(|scope| {
         let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(nshards);
         let mut out_rxs: Vec<Receiver<WorkerOut>> = Vec::with_capacity(nshards);
-        for mut world in worlds {
+        for (shard_idx, mut world) in worlds.into_iter().enumerate() {
             let (ctx, crx) = channel::<Cmd>();
             let (otx, orx) = channel::<WorkerOut>();
             scope.spawn(move || {
+                crate::obsv::set_thread_label(&format!("shard-{shard_idx}"));
                 // prime the coordinator with the initial peek
                 let _ = otx.send(WorkerOut::Step(StepOut {
                     outbox: Vec::new(),
@@ -1080,6 +1082,10 @@ pub fn run_experiment_sharded(
                 while let Ok(cmd) = crx.recv() {
                     match cmd {
                         Cmd::Step { wend, deliveries } => {
+                            let _win = crate::obsv::span!(
+                                crate::obsv::Kind::ShardWindow,
+                                shard_idx as u64
+                            );
                             for (at, tester, msg) in deliveries {
                                 world.eng.schedule(at, SEv::Deliver(tester, msg));
                             }
@@ -1098,6 +1104,7 @@ pub fn run_experiment_sharded(
                             }));
                         }
                         Cmd::Quit => {
+                            world.eng.flush_obsv();
                             let _ = otx.send(WorkerOut::Final(world.final_state()));
                             return;
                         }
@@ -1151,6 +1158,8 @@ pub fn run_experiment_sharded(
                     .expect("shard worker alive");
             }
             // hub runs its own window while the shards run theirs
+            let hub_span =
+                crate::obsv::span!(crate::obsv::Kind::ShardWindow, u64::MAX);
             while let Some(t) = hub.eng.peek_time() {
                 if t >= wend {
                     break;
@@ -1160,22 +1169,40 @@ pub fn run_experiment_sharded(
                 };
                 hub.handle(ev);
             }
+            drop(hub_span);
             let mut down = std::mem::take(&mut hub.outbox);
             sort_cross_messages(&mut down);
+            let mut cross_msgs = down.len() as u64;
             for m in down {
                 debug_assert!(m.0 >= wend, "cross-owner message inside its window");
                 held[m.1 % nshards].push(m);
             }
             let mut inbound: Vec<(SimTime, usize, u64, ToHub)> = Vec::new();
+            let mut slack_us = 0u64;
             for s in 0..nshards {
-                match out_rxs[s].recv().expect("shard worker alive") {
+                let stall = crate::obsv::span!(
+                    crate::obsv::Kind::MergeStall,
+                    s as u64
+                );
+                let out = out_rxs[s].recv().expect("shard worker alive");
+                drop(stall);
+                match out {
                     WorkerOut::Step(o) => {
+                        // Lookahead slack: how far past the window end
+                        // this shard's next event sits (idle margin the
+                        // window planner left on the table).
+                        if let Some(p) = o.peek {
+                            slack_us += p.0.saturating_sub(wend.0);
+                        }
                         peeks[s] = o.peek;
                         inbound.extend(o.outbox);
                     }
                     WorkerOut::Final(_) => unreachable!("worker finalized mid-run"),
                 }
             }
+            cross_msgs += inbound.len() as u64;
+            crate::obsv::count!(crate::obsv::Kind::LookaheadSlackUs, slack_us);
+            crate::obsv::count!(crate::obsv::Kind::CrossMsgs, cross_msgs);
             sort_cross_messages(&mut inbound);
             for (t, i, _, m) in inbound {
                 debug_assert!(t >= wend, "cross-owner message inside its window");
@@ -1199,6 +1226,7 @@ pub fn run_experiment_sharded(
         }
         finals
     });
+    hub.eng.flush_obsv();
 
     let duration_s = finals
         .iter()

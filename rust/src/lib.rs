@@ -88,6 +88,19 @@
 //! and [`live::crossval`] quantifies sim-vs-live divergence on the
 //! same load spec.  See `docs/LIVE.md` and `diperf live --preset
 //! live_smoke`.
+//!
+//! ## Observability
+//!
+//! The [`obsv`] flight recorder instruments the harness itself —
+//! lock-free per-thread span rings plus global counters over the sim
+//! engine, sharded coordinator, live reactor, campaign pool, and
+//! HTTP/1.1 parser — exported as Chrome `trace_event` JSON
+//! (`--trace-out`), periodic stderr stats (`--stats-every`), and the
+//! `harness_overhead` self-metric in `BENCH_scale.json`.  `diperf
+//! analyze trace` summarizes a dump into utilization and span-time
+//! CSVs.  The recorder is a pure observer: report bytes are identical
+//! with it on or off, and a disabled call site costs one relaxed
+//! atomic load.  See `docs/OBSERVABILITY.md`.
 
 #![warn(missing_docs)]
 
@@ -106,6 +119,7 @@ pub mod ids;
 pub mod live;
 pub mod metrics;
 pub mod net;
+pub mod obsv;
 pub mod predict;
 pub mod report;
 pub mod runtime;

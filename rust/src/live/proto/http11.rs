@@ -545,13 +545,17 @@ impl ProtoClient for Http11Client {
     }
 
     fn on_bytes(&mut self, bytes: &[u8]) -> Result<(), ProtoError> {
+        crate::obsv::count!(crate::obsv::Kind::Http11Bytes, bytes.len());
         self.parser.feed(bytes)
     }
 
     fn next_verdict(&mut self) -> Option<CallVerdict> {
-        self.parser.pop().map(|r| CallVerdict {
-            outcome: SampleOutcome::from_http_status(r.status),
-            close: r.close,
+        self.parser.pop().map(|r| {
+            crate::obsv::count!(crate::obsv::Kind::Http11Verdicts, 1);
+            CallVerdict {
+                outcome: SampleOutcome::from_http_status(r.status),
+                close: r.close,
+            }
         })
     }
 

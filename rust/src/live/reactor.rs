@@ -468,6 +468,12 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         }
         let mut events = std::mem::take(&mut self.events);
         let waited = self.src.wait(timeout, &mut events);
+        crate::obsv::count!(crate::obsv::Kind::ReactorWakeups, 1);
+        crate::obsv::count!(crate::obsv::Kind::ReactorIoEvents, events.len());
+        let _disp = crate::obsv::span!(
+            crate::obsv::Kind::ReactorDispatch,
+            events.len() as u64
+        );
         let now = self.clock.mono_s();
         self.now_us = self.now_us.max((now * 1e6).round() as u64);
         for ev in &events {
@@ -639,7 +645,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                         }
                     }
                 }
-                Err(e) if would_block(&e) => return,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    return;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     self.ctrl_dead(i);
@@ -694,7 +703,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                 Ok(n) => {
                     a.ctrl_out.drain(..n);
                 }
-                Err(e) if would_block(&e) => break,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    break;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     died = true;
@@ -718,6 +730,7 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         let unpaused = a.paused && a.ctrl_out.len() <= LOW_WATER;
         if unpaused {
             a.paused = false;
+            crate::obsv::count!(crate::obsv::Kind::BackpressureResumes, 1);
         }
         if a.phase == Phase::Draining && a.ctrl_connected && a.ctrl_out.is_empty() {
             self.agents[i].rep.finished = self.agents[i].goodbye == Some(GoodbyeReason::Finished);
@@ -732,8 +745,9 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
     fn queue_up(&mut self, i: usize, msg: &WireUp) {
         let a = &mut self.agents[i];
         queue_frame(&mut a.ctrl_out, msg);
-        if a.ctrl_out.len() > HIGH_WATER {
+        if a.ctrl_out.len() > HIGH_WATER && !a.paused {
             a.paused = true;
+            crate::obsv::count!(crate::obsv::Kind::BackpressurePauses, 1);
         }
     }
 
@@ -818,6 +832,8 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
         }
         let batch = std::mem::take(&mut self.agents[i].buf);
         self.agents[i].rep.samples_sent += batch.len() as u64;
+        crate::obsv::count!(crate::obsv::Kind::ReactorFlushes, 1);
+        crate::obsv::count!(crate::obsv::Kind::ReactorFlushSamples, batch.len());
         self.queue_up(i, &WireUp::Samples(batch));
         self.pump_ctrl(i, now);
         self.agents[i].phase != Phase::Done
@@ -1032,7 +1048,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                 Ok(n) => {
                     a.tgt_out.drain(..n);
                 }
-                Err(e) if would_block(&e) => break,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    break;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     failed = true;
@@ -1119,7 +1138,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                     }
                     // keep draining: level-triggered readiness
                 }
-                Err(e) if would_block(&e) => return,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    return;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     self.close_target(i);
@@ -1249,7 +1271,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                 Ok(n) => {
                     self.ts.out.drain(..n);
                 }
-                Err(e) if would_block(&e) => break,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    break;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     dead = true;
@@ -1291,7 +1316,10 @@ impl<S: EventSource, C: Clock> Worker<S, C> {
                         self.complete_sync(now);
                     }
                 }
-                Err(e) if would_block(&e) => return,
+                Err(e) if would_block(&e) => {
+                    crate::obsv::count!(crate::obsv::Kind::ReactorEagain, 1);
+                    return;
+                }
                 Err(e) if interrupted(&e) => {}
                 Err(_) => {
                     self.ts_dead();
@@ -1490,21 +1518,24 @@ pub fn run_pool(
     let chunk = n.div_ceil(workers);
     specs
         .chunks(chunk)
-        .map(|slice| {
+        .enumerate()
+        .map(|(wi, slice)| {
             let slice = slice.to_vec();
             let call = call.clone();
-            std::thread::spawn(move || run_worker(slice, ctrl, ts, call))
+            std::thread::spawn(move || run_worker(wi, slice, ctrl, ts, call))
         })
         .collect()
 }
 
 #[cfg(unix)]
 fn run_worker(
+    worker_idx: usize,
     specs: Vec<AgentSpec>,
     ctrl: SocketAddr,
     ts: SocketAddr,
     call: CallMode,
 ) -> Vec<(u32, AgentReport)> {
+    crate::obsv::set_thread_label(&format!("worker-{worker_idx}"));
     let mode = match call {
         CallMode::Framed(_) => TargetMode::Framed,
         CallMode::Http(_) => TargetMode::Http11,

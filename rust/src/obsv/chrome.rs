@@ -1,0 +1,157 @@
+//! Chrome `trace_event` JSON export for flight-recorder snapshots.
+//!
+//! Emits the JSON Object Format of the Trace Event spec: a top-level
+//! object with a `traceEvents` array, loadable in Perfetto or
+//! `chrome://tracing`.  Per thread we emit one `"M"` (metadata)
+//! `thread_name` event carrying the recorder label, then one `"X"`
+//! (complete) event per surviving span with `ts`/`dur` in microseconds.
+//! Kind totals are appended as `"C"` (counter) events so the viewer
+//! shows final counts alongside the timeline.
+
+use std::io::Write;
+
+use super::{Kind, Snapshot, KINDS, NKINDS};
+
+/// Escape a label for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a Chrome trace_event JSON document.
+pub fn chrome_trace_json(snap: &Snapshot) -> String {
+    let mut evs: Vec<String> = Vec::new();
+    // Process + thread naming metadata.
+    evs.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"diperf\"}}"
+            .to_string(),
+    );
+    for t in &snap.threads {
+        evs.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            t.tid,
+            esc(&t.label)
+        ));
+    }
+    // Complete ("X") events for every surviving span.
+    for t in &snap.threads {
+        for s in &t.spans {
+            let def = match Kind::from_u16(s.kind) {
+                Some(k) => k.def(),
+                None => continue, // torn/corrupt record: skip, never emit garbage
+            };
+            evs.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"arg\":{}}}}}",
+                def.name,
+                def.cat,
+                t.tid,
+                s.start_ns as f64 / 1e3,
+                s.dur_ns as f64 / 1e3,
+                s.arg
+            ));
+        }
+    }
+    // Final counter values as "C" events at ts 0 (the viewer renders a
+    // counter track; for post-run totals a single point is enough).
+    for i in 0..NKINDS {
+        if KINDS[i].is_span || snap.counters[i] == 0 {
+            continue;
+        }
+        evs.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":1,\"tid\":0,\"ts\":0,\
+             \"args\":{{\"value\":{}}}}}",
+            KINDS[i].name, snap.counters[i]
+        ));
+    }
+    let mut out = String::new();
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    for (i, e) in evs.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < evs.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Snapshot the recorder and write a Chrome trace JSON file at `path`
+/// (parent directories are created).  Call after the instrumented
+/// threads have quiesced.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    let snap = super::snapshot();
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_trace_json(&snap).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ring::SpanEv;
+    use super::super::{Snapshot, ThreadSnap, NKINDS};
+    use super::*;
+
+    fn snap_with(spans: Vec<SpanEv>) -> Snapshot {
+        let mut counters = [0u64; NKINDS];
+        counters[Kind::SimEvents as u16 as usize] = 7;
+        Snapshot {
+            counters,
+            total_ns: [0u64; NKINDS],
+            threads: vec![ThreadSnap { tid: 3, label: "shard-1".to_string(), spans }],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn emits_metadata_spans_and_counters() {
+        let s = snap_with(vec![SpanEv {
+            kind: Kind::ShardWindow as u16,
+            start_ns: 2_000,
+            dur_ns: 1_500,
+            arg: 1,
+        }]);
+        let json = chrome_trace_json(&s);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("\"shard-1\""));
+        assert!(json.contains("\"shard.window\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ts\":2.000"));
+        assert!(json.contains("\"dur\":1.500"));
+        assert!(json.contains("\"sim.events\""));
+        assert!(json.contains("\"value\":7"));
+    }
+
+    #[test]
+    fn corrupt_kind_ids_are_skipped() {
+        let s = snap_with(vec![SpanEv { kind: 60_000, start_ns: 0, dur_ns: 1, arg: 0 }]);
+        let json = chrome_trace_json(&s);
+        assert!(!json.contains("60000"));
+        assert!(json.contains("\"traceEvents\""));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let mut s = snap_with(vec![]);
+        s.threads[0].label = "we\"ird\\lab\nel".to_string();
+        let json = chrome_trace_json(&s);
+        assert!(json.contains("we\\\"ird\\\\lab\\u000ael"));
+    }
+}

@@ -1,0 +1,613 @@
+//! Flight recorder: structured tracing and self-metrics for the
+//! measurement engine itself.
+//!
+//! DiPerF's credibility rests on the harness's own overhead being both
+//! negligible and *known* (§3 of the paper budgets client overhead and
+//! time-sync error explicitly).  This module is how we know: an
+//! always-compiled observability layer that records what the sim
+//! engine, sharded coordinator, live reactor, campaign pool, and
+//! HTTP/1.1 parser are doing — and that costs one relaxed atomic load
+//! per call site when disabled.
+//!
+//! # Shape
+//!
+//! * A static registry of event [`Kind`]s (see [`KINDS`]); every kind
+//!   is either a **counter** (monotonic `u64`, e.g. reactor EAGAIN
+//!   retries) or a **span** (a timed region, e.g. one shard merge
+//!   window).
+//! * Counters live in one global array of atomics — [`count!`] is a
+//!   branch on [`enabled`] plus one relaxed `fetch_add`.
+//! * Spans go to a per-thread lock-free [`ring::Ring`] (the flight
+//!   recorder proper): [`span!`] returns a guard that records a single
+//!   [`ring::SpanEv`] on drop.  Rings keep the most recent
+//!   [`ring_capacity`] spans per thread; older ones are overwritten
+//!   and counted in [`Kind::Dropped`].
+//! * Exporters: [`chrome::write_chrome_trace`] dumps everything as
+//!   Chrome `trace_event` JSON (open in Perfetto or `chrome://tracing`),
+//!   [`stats_line`]/[`StatsTicker`] print a one-line summary to stderr,
+//!   and the bench harness derives the `harness_overhead` self-metric
+//!   from a recorder-on vs recorder-off run pair.
+//!
+//! # Determinism
+//!
+//! The recorder is a pure observer: nothing in the sim, shard, live, or
+//! campaign layers reads it back.  Replay-corpus digests are
+//! bit-identical with the recorder on and off (enforced by
+//! `tests/obsv.rs`), and the disabled path performs zero heap
+//! allocations per event (enforced by `tests/obsv_alloc.rs` with a
+//! counting allocator).
+//!
+//! # Usage
+//!
+//! ```
+//! use diperf::obsv::{self, Kind};
+//!
+//! obsv::enable();
+//! obsv::set_thread_label("example");
+//! {
+//!     let _span = obsv::span!(Kind::ShardWindow, 3);
+//!     obsv::count!(Kind::SimEvents, 128);
+//! }
+//! let snap = obsv::snapshot();
+//! assert_eq!(snap.counter(Kind::SimEvents), 128);
+//! obsv::reset();
+//! obsv::disable();
+//! ```
+
+pub mod chrome;
+pub mod ring;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use ring::{Ring, SpanEv};
+
+/// Every kind of event the recorder knows about.  The discriminant is
+/// the index into the static [`KINDS`] registry and the counter table.
+#[repr(u16)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Sim-engine events dispatched (flushed in batches from `Engine`).
+    SimEvents = 0,
+    /// Timer-wheel cascade operations (higher-level slots folded down).
+    WheelCascades,
+    /// One whole single-engine simulation run (span).
+    SimRun,
+    /// One merge window on a shard or the hub (span; arg = shard index,
+    /// `u64::MAX` for the hub).
+    ShardWindow,
+    /// Coordinator blocked waiting for a shard's window result (span;
+    /// arg = shard index).
+    MergeStall,
+    /// Sum of lookahead slack in µs: how far beyond the window end each
+    /// shard's next event sat when its window finished.
+    LookaheadSlackUs,
+    /// Cross-shard messages routed through the coordinator.
+    CrossMsgs,
+    /// Reactor worker wakeups (one per `tick`).
+    ReactorWakeups,
+    /// Readiness events delivered to reactor workers.
+    ReactorIoEvents,
+    /// Reads/writes that returned `EAGAIN`/`EWOULDBLOCK` and were
+    /// retried via readiness.
+    ReactorEagain,
+    /// Agents paused because their control-channel buffer crossed the
+    /// high-water mark.
+    BackpressurePauses,
+    /// Agents resumed after draining below the low-water mark.
+    BackpressureResumes,
+    /// Sample-batch flushes from reactor agents to the controller.
+    ReactorFlushes,
+    /// Samples carried by those flushes (flush size = this / flushes).
+    ReactorFlushSamples,
+    /// One reactor dispatch phase: deliver readiness + expire timers
+    /// (span; arg = readiness events handled).
+    ReactorDispatch,
+    /// One campaign grid cell from pickup to completion (span; arg =
+    /// cell index).
+    CampaignCell,
+    /// Sum of µs each campaign job spent queued before a worker picked
+    /// it up.
+    CampaignQueueWaitUs,
+    /// Bytes fed to the HTTP/1.1 response parser.
+    Http11Bytes,
+    /// Request verdicts produced by the HTTP/1.1 client.
+    Http11Verdicts,
+    /// Span records overwritten in full rings (flight-recorder drops).
+    Dropped,
+}
+
+/// Static description of one event kind.
+#[derive(Clone, Copy, Debug)]
+pub struct KindDef {
+    /// Stable dotted name, e.g. `shard.merge_stall` (used in trace
+    /// dumps, stats lines, and `analyze trace` reports).
+    pub name: &'static str,
+    /// Category (trace-viewer lane grouping): `sim`, `shard`,
+    /// `reactor`, `campaign`, `http11`, or `obsv`.
+    pub cat: &'static str,
+    /// True for timed spans, false for monotonic counters.
+    pub is_span: bool,
+}
+
+/// Number of registered kinds.
+pub const NKINDS: usize = 20;
+
+/// The static event-kind registry, indexed by `Kind as u16`.
+pub const KINDS: [KindDef; NKINDS] = [
+    KindDef { name: "sim.events", cat: "sim", is_span: false },
+    KindDef { name: "sim.wheel_cascades", cat: "sim", is_span: false },
+    KindDef { name: "sim.run", cat: "sim", is_span: true },
+    KindDef { name: "shard.window", cat: "shard", is_span: true },
+    KindDef { name: "shard.merge_stall", cat: "shard", is_span: true },
+    KindDef { name: "shard.lookahead_slack_us", cat: "shard", is_span: false },
+    KindDef { name: "shard.cross_msgs", cat: "shard", is_span: false },
+    KindDef { name: "reactor.wakeups", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.io_events", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.eagain", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.backpressure_pauses", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.backpressure_resumes", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.flushes", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.flush_samples", cat: "reactor", is_span: false },
+    KindDef { name: "reactor.dispatch", cat: "reactor", is_span: true },
+    KindDef { name: "campaign.cell", cat: "campaign", is_span: true },
+    KindDef { name: "campaign.queue_wait_us", cat: "campaign", is_span: false },
+    KindDef { name: "http11.bytes", cat: "http11", is_span: false },
+    KindDef { name: "http11.verdicts", cat: "http11", is_span: false },
+    KindDef { name: "obsv.dropped", cat: "obsv", is_span: false },
+];
+
+impl Kind {
+    /// The registry entry for this kind.
+    pub fn def(self) -> &'static KindDef {
+        &KINDS[self as u16 as usize]
+    }
+
+    /// The stable dotted name for this kind.
+    pub fn name(self) -> &'static str {
+        self.def().name
+    }
+
+    /// Decode a ring-buffer kind id; `None` for out-of-range values
+    /// (a torn or corrupt record).
+    pub fn from_u16(v: u16) -> Option<Kind> {
+        if (v as usize) < NKINDS {
+            // SAFETY: repr(u16) with contiguous discriminants 0..NKINDS,
+            // and v is in range.
+            Some(unsafe { std::mem::transmute::<u16, Kind>(v) })
+        } else {
+            None
+        }
+    }
+}
+
+/// Master switch.  All macros check this first; when false they cost
+/// one relaxed load and touch nothing else.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Bumped on every [`reset`]; thread-local ring handles carry the epoch
+/// they were registered under and re-register when it goes stale, so a
+/// reset between runs in one process cannot leak spans into orphaned
+/// rings.
+static EPOCH: AtomicU64 = AtomicU64::new(0);
+
+/// Per-thread ring capacity for rings created after the next
+/// registration (see [`set_ring_capacity`]).
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+
+/// Default per-thread ring capacity (span records, not bytes).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+// `const` item so the array initializer below is allowed to repeat a
+// non-Copy value.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic totals per kind: event count for counters, completed-span
+/// count for spans.
+static COUNTERS: [AtomicU64; NKINDS] = [ZERO; NKINDS];
+
+/// Total recorded span duration per kind in ns (zero for counters).
+static TOTAL_NS: [AtomicU64; NKINDS] = [ZERO; NKINDS];
+
+/// One registered thread: a stable small id, a human label, and the
+/// thread's span ring.
+pub struct ThreadRing {
+    /// Small dense id used as the `tid` in trace dumps.
+    pub tid: u32,
+    label: Mutex<String>,
+    ring: Ring,
+}
+
+impl ThreadRing {
+    /// The thread's human-readable label (e.g. `shard-3`, `worker-0`,
+    /// `hub`).
+    pub fn label(&self) -> String {
+        self.label.lock().map(|g| g.clone()).unwrap_or_default()
+    }
+}
+
+/// Registry of every thread that has recorded at least one span since
+/// the last [`reset`].
+fn registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// This thread's ring handle plus the epoch it was registered
+    /// under, and an optional label to apply on (re)registration.
+    static TLS: std::cell::RefCell<TlsSlot> = const {
+        std::cell::RefCell::new(TlsSlot { epoch: u64::MAX, ring: None, label: None })
+    };
+}
+
+struct TlsSlot {
+    epoch: u64,
+    ring: Option<Arc<ThreadRing>>,
+    label: Option<String>,
+}
+
+/// Process-wide monotonic clock anchor for trace timestamps.
+fn anchor() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the first call in this process.  Monotonic and
+/// comparable across threads.
+#[inline]
+pub fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+/// Is the recorder on?  One relaxed atomic load — this is the whole
+/// cost of every macro call site while disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on with the current ring capacity.
+pub fn enable() {
+    anchor();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the recorder off.  Existing rings and counters are kept for
+/// export; use [`reset`] to clear them.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Set the per-thread ring capacity (span records) for rings created
+/// after this call.  Existing rings keep their size.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(16), Ordering::SeqCst);
+}
+
+/// Current per-thread ring capacity for new rings.
+pub fn ring_capacity() -> usize {
+    RING_CAP.load(Ordering::SeqCst)
+}
+
+/// Zero every counter and forget every registered ring.  Call between
+/// runs in one process, after the instrumented threads have quiesced —
+/// a thread that keeps recording re-registers itself on its next span
+/// (its pre-reset records are gone, as intended).
+pub fn reset() {
+    EPOCH.fetch_add(1, Ordering::SeqCst);
+    if let Ok(mut reg) = registry().lock() {
+        reg.clear();
+    }
+    for c in COUNTERS.iter().chain(TOTAL_NS.iter()) {
+        c.store(0, Ordering::SeqCst);
+    }
+}
+
+/// Add `n` to a counter kind.  Prefer the [`count!`] macro, which
+/// checks [`enabled`] first.
+#[inline]
+pub fn add(kind: Kind, n: u64) {
+    COUNTERS[kind as u16 as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Read a kind's monotonic total (event count for counters, completed
+/// spans for span kinds).
+pub fn counter(kind: Kind) -> u64 {
+    COUNTERS[kind as u16 as usize].load(Ordering::Relaxed)
+}
+
+/// Total recorded duration for a span kind, in nanoseconds.
+pub fn total_ns(kind: Kind) -> u64 {
+    TOTAL_NS[kind as u16 as usize].load(Ordering::Relaxed)
+}
+
+/// Label the calling thread in trace dumps (`shard-3`, `worker-0`,
+/// `hub`, ...).  Effective for spans recorded after this call; sticky
+/// across [`reset`] re-registration.  Safe to call with the recorder
+/// off (the label is remembered for when it turns on).
+pub fn set_thread_label(label: &str) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        t.label = Some(label.to_string());
+        if let Some(ring) = &t.ring {
+            if let Ok(mut g) = ring.label.lock() {
+                *g = label.to_string();
+            }
+        }
+    });
+}
+
+/// Get (or lazily create and register) the calling thread's ring.
+fn with_ring(f: impl FnOnce(&Ring)) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let epoch = EPOCH.load(Ordering::SeqCst);
+        if t.ring.is_none() || t.epoch != epoch {
+            static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+            let tid = NEXT_TID.fetch_add(1, Ordering::SeqCst) as u32;
+            let label = t
+                .label
+                .clone()
+                .or_else(|| std::thread::current().name().map(|s| s.to_string()))
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let tr = Arc::new(ThreadRing {
+                tid,
+                label: Mutex::new(label),
+                ring: Ring::new(ring_capacity()),
+            });
+            if let Ok(mut reg) = registry().lock() {
+                reg.push(Arc::clone(&tr));
+            }
+            t.ring = Some(tr);
+            t.epoch = epoch;
+        }
+        f(&t.ring.as_ref().expect("ring just initialized").ring);
+    });
+}
+
+/// Record one completed span into the calling thread's ring and bump
+/// the kind's count/duration totals.  Called by [`SpanGuard::drop`];
+/// exposed for instrumentation that measures a region it cannot wrap
+/// in a guard.
+pub fn record_span(kind: Kind, start_ns: u64, end_ns: u64, arg: u64) {
+    let dur = end_ns.saturating_sub(start_ns);
+    COUNTERS[kind as u16 as usize].fetch_add(1, Ordering::Relaxed);
+    TOTAL_NS[kind as u16 as usize].fetch_add(dur, Ordering::Relaxed);
+    with_ring(|r| r.push(SpanEv { kind: kind as u16, start_ns, dur_ns: dur, arg }));
+}
+
+/// RAII guard from [`span!`]: records one [`ring::SpanEv`] on drop.
+/// When the recorder is disabled the guard is unarmed and drop does
+/// nothing — no clock read, no allocation.
+pub struct SpanGuard {
+    kind: Kind,
+    start_ns: u64,
+    arg: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// Update the span argument after creation (e.g. record how many
+    /// events a dispatch phase ended up handling).
+    #[inline]
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            record_span(self.kind, self.start_ns, now_ns(), self.arg);
+        }
+    }
+}
+
+/// Open a span (prefer the [`span!`] macro).  Reads the clock only
+/// when the recorder is enabled.
+#[inline]
+pub fn span_start(kind: Kind, arg: u64) -> SpanGuard {
+    if enabled() {
+        SpanGuard { kind, start_ns: now_ns(), arg, armed: true }
+    } else {
+        SpanGuard { kind, start_ns: 0, arg, armed: false }
+    }
+}
+
+/// Bump a counter kind by `n`.  Compiles to one relaxed atomic load
+/// (branch-not-taken) when the recorder is disabled.
+///
+/// ```
+/// diperf::obsv::count!(diperf::obsv::Kind::SimEvents, 42);
+/// ```
+#[macro_export]
+macro_rules! obsv_count {
+    ($kind:expr, $n:expr) => {
+        if $crate::obsv::enabled() {
+            $crate::obsv::add($kind, $n as u64);
+        }
+    };
+}
+
+/// Open a timed span ending when the returned guard drops.  Costs one
+/// relaxed atomic load when the recorder is disabled (no clock read).
+///
+/// ```
+/// let _g = diperf::obsv::span!(diperf::obsv::Kind::ShardWindow, 3);
+/// ```
+#[macro_export]
+macro_rules! obsv_span {
+    ($kind:expr) => {
+        $crate::obsv::span_start($kind, 0)
+    };
+    ($kind:expr, $arg:expr) => {
+        $crate::obsv::span_start($kind, $arg as u64)
+    };
+}
+
+pub use crate::obsv_count as count;
+pub use crate::obsv_span as span;
+
+/// A post-quiesce copy of everything the recorder holds: per-kind
+/// totals plus every registered thread's surviving span records.
+pub struct Snapshot {
+    /// Per-kind monotonic totals, indexed like [`KINDS`].
+    pub counters: [u64; NKINDS],
+    /// Per-kind total span duration in ns, indexed like [`KINDS`].
+    pub total_ns: [u64; NKINDS],
+    /// One entry per registered thread, in registration order.
+    pub threads: Vec<ThreadSnap>,
+    /// Span records lost to ring overwrites, summed over threads.
+    pub dropped: u64,
+}
+
+/// One thread's slice of a [`Snapshot`].
+pub struct ThreadSnap {
+    /// Dense thread id (the `tid` in trace dumps).
+    pub tid: u32,
+    /// Human label at snapshot time.
+    pub label: String,
+    /// Surviving span records, oldest first.
+    pub spans: Vec<SpanEv>,
+}
+
+impl Snapshot {
+    /// A kind's monotonic total in this snapshot.
+    pub fn counter(&self, kind: Kind) -> u64 {
+        self.counters[kind as u16 as usize]
+    }
+}
+
+/// Drain every registered ring into a [`Snapshot`].  Call after the
+/// instrumented threads have quiesced (run finished / workers joined);
+/// see [`ring`] for why.  Folds ring-overwrite drops into
+/// [`Kind::Dropped`].
+pub fn snapshot() -> Snapshot {
+    let mut counters = [0u64; NKINDS];
+    let mut totals = [0u64; NKINDS];
+    for (i, c) in COUNTERS.iter().enumerate() {
+        counters[i] = c.load(Ordering::SeqCst);
+    }
+    for (i, c) in TOTAL_NS.iter().enumerate() {
+        totals[i] = c.load(Ordering::SeqCst);
+    }
+    let mut threads = Vec::new();
+    let mut dropped = 0u64;
+    if let Ok(reg) = registry().lock() {
+        for tr in reg.iter() {
+            let (total, spans) = tr.ring.drain();
+            dropped += total - spans.len() as u64;
+            threads.push(ThreadSnap { tid: tr.tid, label: tr.label(), spans });
+        }
+    }
+    counters[Kind::Dropped as u16 as usize] += dropped;
+    Snapshot { counters, total_ns: totals, threads, dropped }
+}
+
+/// One human-readable line summarizing every nonzero kind: counters as
+/// `name=value`, spans as `name=count/total_ms`.
+pub fn stats_line() -> String {
+    let mut parts = Vec::new();
+    for (i, def) in KINDS.iter().enumerate() {
+        let n = COUNTERS[i].load(Ordering::Relaxed);
+        if n == 0 {
+            continue;
+        }
+        if def.is_span {
+            let ms = TOTAL_NS[i].load(Ordering::Relaxed) as f64 / 1e6;
+            parts.push(format!("{}={}/{:.1}ms", def.name, n, ms));
+        } else {
+            parts.push(format!("{}={}", def.name, n));
+        }
+    }
+    if parts.is_empty() {
+        "[obsv] (no events)".to_string()
+    } else {
+        format!("[obsv] {}", parts.join(" "))
+    }
+}
+
+/// Background thread printing [`stats_line`] to stderr every interval;
+/// signaled and joined on drop (same park/unpark discipline as
+/// `bench_util::RssProbe`).
+pub struct StatsTicker {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsTicker {
+    /// Start a ticker printing every `every_s` seconds (floored at
+    /// 100 ms).
+    pub fn start(every_s: f64) -> StatsTicker {
+        let period = Duration::from_millis(((every_s.max(0.1)) * 1000.0) as u64);
+        let stop = Arc::new(AtomicBool::new(false));
+        let s = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !s.load(Ordering::SeqCst) {
+                std::thread::park_timeout(period);
+                if s.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("{}", stats_line());
+            }
+        });
+        StatsTicker { stop, handle: Some(handle) }
+    }
+
+    fn join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.thread().unpark();
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatsTicker {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_dotted() {
+        let mut seen = std::collections::HashSet::new();
+        for def in KINDS.iter() {
+            assert!(seen.insert(def.name), "duplicate kind name {}", def.name);
+            assert!(def.name.contains('.'), "kind {} not dotted", def.name);
+            assert!(!def.cat.is_empty());
+        }
+    }
+
+    #[test]
+    fn kind_roundtrips_through_u16() {
+        for i in 0..NKINDS as u16 {
+            let k = Kind::from_u16(i).expect("in-range kind");
+            assert_eq!(k as u16, i);
+        }
+        assert!(Kind::from_u16(NKINDS as u16).is_none());
+        assert!(Kind::from_u16(u16::MAX).is_none());
+    }
+
+    #[test]
+    fn disabled_span_guard_is_unarmed() {
+        // The global switch defaults to off and no test in this binary
+        // enables it; the guard must not arm.
+        let g = span_start(Kind::SimRun, 0);
+        assert!(!g.armed);
+    }
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

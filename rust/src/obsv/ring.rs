@@ -1,0 +1,153 @@
+//! The flight-recorder ring: a fixed-capacity, single-producer buffer
+//! of completed-span records, one per instrumented thread.
+//!
+//! # Concurrency contract
+//!
+//! Each ring has exactly one writer — the thread that owns it via the
+//! recorder's thread-local handle — and is drained by at most one
+//! reader *after the writer has quiesced* (the run finished, the worker
+//! joined, or recording was disabled and the thread observed that).
+//! Under that contract the implementation is lock-free and wait-free on
+//! the write path: a slot store plus one release store of the head
+//! counter.  [`Ring::drain`] pairs that with an acquire load, so a
+//! reader that is ordered after the writer (thread join, channel recv,
+//! mutex on the registry) sees every completed record.  Draining a ring
+//! whose writer is still recording is memory-safe ([`SpanEv`] is `Copy`
+//! with no invalid bit patterns — a torn read yields a bogus record,
+//! not UB) but may return garbage for in-flight slots; exporters only
+//! run post-quiesce, where the question does not arise.
+//!
+//! When the ring is full the oldest records are overwritten — a flight
+//! recorder keeps the *last* N events, which is what you want when a
+//! run misbehaves at the end.  [`Ring::drain`] reports how many records
+//! were written in total so exporters can surface the drop count.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One completed span: kind id, wall-anchored start, duration, and a
+/// free-form argument (shard index, worker index, batch size...).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanEv {
+    /// Event-kind id ([`super::Kind`] as `u16`).
+    pub kind: u16,
+    /// Start time in nanoseconds since [`super::now_ns`]'s epoch.
+    pub start_ns: u64,
+    /// Span duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Kind-specific argument (0 when unused).
+    pub arg: u64,
+}
+
+/// A single-producer ring of [`SpanEv`] records (see the module docs
+/// for the concurrency contract).
+pub struct Ring {
+    slots: Box<[UnsafeCell<SpanEv>]>,
+    /// Total records ever written (not wrapped); the write cursor is
+    /// `head % capacity`.
+    head: AtomicU64,
+}
+
+// SAFETY: `slots` is only written through `push`, which the recorder
+// restricts to the owning thread, and only read through `drain`, which
+// callers order after the writer quiesces via the `head`
+// acquire/release pair (and, in practice, a thread join or channel
+// handoff).  See the module docs.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+impl Ring {
+    /// A ring holding the most recent `cap` records (`cap` is rounded
+    /// up to at least 16).
+    pub fn new(cap: usize) -> Ring {
+        let cap = cap.max(16);
+        Ring {
+            slots: (0..cap).map(|_| UnsafeCell::new(SpanEv::default())).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Record capacity (how many most-recent records survive).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Append one record.  Owner thread only (see the module docs).
+    #[inline]
+    pub fn push(&self, ev: SpanEv) {
+        let h = self.head.load(Ordering::Relaxed);
+        let idx = (h % self.slots.len() as u64) as usize;
+        // SAFETY: single producer; readers are ordered after us via the
+        // release store below (module-level contract).
+        unsafe { *self.slots[idx].get() = ev };
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out the surviving records in write order and return
+    /// `(total_written, records)`.  `total_written - records.len()` is
+    /// the overwrite (drop) count.  Call only after the owning thread
+    /// has quiesced.
+    pub fn drain(&self) -> (u64, Vec<SpanEv>) {
+        let h = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let kept = h.min(cap);
+        let mut out = Vec::with_capacity(kept as usize);
+        for i in (h - kept)..h {
+            let idx = (i % cap) as usize;
+            // SAFETY: the writer has quiesced (caller contract), so no
+            // concurrent write overlaps this read.
+            out.push(unsafe { *self.slots[idx].get() });
+        }
+        (h, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(k: u16, t: u64) -> SpanEv {
+        SpanEv { kind: k, start_ns: t, dur_ns: 1, arg: 0 }
+    }
+
+    #[test]
+    fn keeps_everything_below_capacity() {
+        let r = Ring::new(16);
+        for i in 0..10 {
+            r.push(ev(i as u16, i));
+        }
+        let (total, evs) = r.drain();
+        assert_eq!(total, 10);
+        assert_eq!(evs.len(), 10);
+        assert_eq!(evs[0], ev(0, 0));
+        assert_eq!(evs[9], ev(9, 9));
+    }
+
+    #[test]
+    fn wraps_keeping_the_most_recent() {
+        let r = Ring::new(16);
+        for i in 0..40u64 {
+            r.push(ev(i as u16, i));
+        }
+        let (total, evs) = r.drain();
+        assert_eq!(total, 40);
+        assert_eq!(evs.len(), 16, "capacity bounds the survivors");
+        // the last 16 records, oldest first
+        assert_eq!(evs[0], ev(24, 24));
+        assert_eq!(evs[15], ev(39, 39));
+    }
+
+    #[test]
+    fn tiny_capacity_is_rounded_up() {
+        let r = Ring::new(1);
+        assert!(r.capacity() >= 16);
+    }
+
+    #[test]
+    fn drain_on_empty_ring() {
+        let r = Ring::new(64);
+        let (total, evs) = r.drain();
+        assert_eq!(total, 0);
+        assert!(evs.is_empty());
+    }
+}

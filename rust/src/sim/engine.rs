@@ -128,6 +128,13 @@ impl<E> Queue<E> {
             Queue::Wheel(w) => w.len(),
         }
     }
+
+    fn cascades(&self) -> u64 {
+        match self {
+            Queue::Heap(_) => 0,
+            Queue::Wheel(w) => w.cascades(),
+        }
+    }
 }
 
 /// The event queue + virtual clock.
@@ -138,6 +145,11 @@ pub struct Engine<E> {
     kind: QueueKind,
     processed: u64,
     peak_pending: usize,
+    /// `processed` high-water mark already folded into the `obsv`
+    /// recorder (see [`Engine::flush_obsv`]).
+    obsv_events: u64,
+    /// Wheel-cascade count already folded into the recorder.
+    obsv_cascades: u64,
 }
 
 impl<E> Engine<E> {
@@ -158,6 +170,8 @@ impl<E> Engine<E> {
             kind,
             processed: 0,
             peak_pending: 0,
+            obsv_events: 0,
+            obsv_cascades: 0,
         }
     }
 
@@ -225,7 +239,32 @@ impl<E> Engine<E> {
         debug_assert!(s.at >= self.now, "time went backwards");
         self.now = s.at;
         self.processed += 1;
+        // Fold dispatch counters into the flight recorder in batches so
+        // the per-event cost is one AND + branch (and nothing at all
+        // reaches the atomics while the recorder is off).
+        if self.processed & 0x3FFF == 0 && crate::obsv::enabled() {
+            self.flush_obsv();
+        }
         Some((s.at, s.event))
+    }
+
+    /// Fold not-yet-reported dispatch and wheel-cascade counts into the
+    /// `obsv` recorder.  `next` calls this every 16 384 events; run
+    /// loops call it once more at the end so the totals are exact.
+    pub fn flush_obsv(&mut self) {
+        if !crate::obsv::enabled() {
+            return;
+        }
+        let events = self.processed - self.obsv_events;
+        if events > 0 {
+            crate::obsv::add(crate::obsv::Kind::SimEvents, events);
+            self.obsv_events = self.processed;
+        }
+        let casc = self.queue.cascades();
+        if casc > self.obsv_cascades {
+            crate::obsv::add(crate::obsv::Kind::WheelCascades, casc - self.obsv_cascades);
+            self.obsv_cascades = casc;
+        }
     }
 
     /// Expiry time of the earliest pending event without dispatching it.

@@ -129,6 +129,9 @@ pub struct TimerWheel<E> {
     /// cascade), so the refill path is allocation-free at steady state.
     scratch: Vec<Scheduled<E>>,
     len: usize,
+    /// Cascade operations performed (refill step 3); plain counter
+    /// flushed to the `obsv` recorder by the engine.
+    cascades: u64,
 }
 
 impl<E> TimerWheel<E> {
@@ -141,6 +144,7 @@ impl<E> TimerWheel<E> {
             overflow: BinaryHeap::new(),
             scratch: Vec::new(),
             len: 0,
+            cascades: 0,
         }
     }
 
@@ -148,6 +152,13 @@ impl<E> TimerWheel<E> {
     #[inline]
     pub fn len(&self) -> usize {
         self.len
+    }
+
+    /// Cascade operations performed so far (higher-level slots folded
+    /// down one level during refill).
+    #[inline]
+    pub fn cascades(&self) -> u64 {
+        self.cascades
     }
 
     /// True when nothing is pending.
@@ -267,6 +278,7 @@ impl<E> TimerWheel<E> {
                         self.insert_wheel(s);
                     }
                     self.scratch = scratch;
+                    self.cascades += 1;
                     cascaded = true;
                     break;
                 }

@@ -1,0 +1,144 @@
+//! End-to-end flight-recorder contract:
+//!
+//! 1. **Pure observer** — replay digests of the rendered report set are
+//!    bit-identical with the recorder off and on, single-engine and
+//!    sharded.  Tracing must never perturb a measurement.
+//! 2. **It records** — the instrumented layers actually produce events
+//!    and spans while enabled, the Chrome dump round-trips through
+//!    `analyze trace`'s summarizer, and the utilization report names
+//!    the hub and shard threads.
+//!
+//! Everything lives in ONE test function: the recorder is process-global
+//! state, and the default parallel test runner would otherwise interleave
+//! an enabled phase with a test that assumes the recorder is off.
+
+use diperf::analysis;
+use diperf::experiment::{presets, run_experiment_opts, RunOptions};
+use diperf::metrics::CollectionMode;
+use diperf::report;
+
+/// FNV-1a 64 — same digest the replay corpus uses.
+fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for &b in s.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run the corpus churn experiment and digest its rendered reports.
+fn run_digest(shards: Option<usize>) -> String {
+    let cfg = presets::churn_study(10, 80.0, 404);
+    let r = run_experiment_opts(
+        &cfg,
+        RunOptions {
+            shards,
+            collect: CollectionMode::Stream,
+            ..RunOptions::default()
+        },
+    );
+    let agg = r.stream.as_ref().expect("streaming aggregator");
+    let out = analysis::output_from_binned(&agg.binned);
+    let churn = analysis::churn_from_stream(agg, &r.data.testers);
+    let blob = format!(
+        "timeline\n{}per_client\n{}churn\n{}summary\n{}",
+        report::timeline_csv(&out, r.grid.t0, r.grid.quantum),
+        report::per_client_csv(&out, &r.data),
+        report::churn_csv(&churn, r.grid.t0, r.grid.quantum),
+        report::churn_summary(&churn),
+    );
+    format!("{:016x}", fnv1a64(&blob))
+}
+
+#[test]
+fn recorder_is_a_pure_observer_and_actually_records() {
+    use diperf::obsv::{self, Kind};
+
+    // -- baseline digests, recorder off ------------------------------
+    assert!(!obsv::enabled(), "recorder must start disabled");
+    let single_off = run_digest(None);
+    let sharded_off = run_digest(Some(4));
+
+    // -- same runs, recorder on --------------------------------------
+    obsv::enable();
+    let single_on = run_digest(None);
+    let sharded_on = run_digest(Some(4));
+    assert_eq!(
+        single_off, single_on,
+        "tracing perturbed the single-engine replay digest"
+    );
+    assert_eq!(
+        sharded_off, sharded_on,
+        "tracing perturbed the sharded replay digest"
+    );
+
+    // -- it recorded something meaningful ----------------------------
+    assert!(
+        obsv::counter(Kind::SimEvents) > 1_000,
+        "sim.events = {}",
+        obsv::counter(Kind::SimEvents)
+    );
+    assert!(
+        obsv::counter(Kind::ShardWindow) > 0,
+        "no shard windows recorded"
+    );
+    assert!(
+        obsv::counter(Kind::MergeStall) > 0,
+        "no merge stalls recorded"
+    );
+    let line = obsv::stats_line();
+    assert!(line.contains("sim.events="), "stats line: {line}");
+    assert!(line.contains("shard.window="), "stats line: {line}");
+
+    // -- the dump round-trips through the analyzer --------------------
+    let dir = std::env::temp_dir().join(format!(
+        "diperf_obsv_e2e_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+    obsv::chrome::write_chrome_trace(trace_path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let t = analysis::trace::summarize(&text).expect("dump parses");
+    assert!(!t.spans.is_empty(), "dump has no spans");
+    let labels: Vec<&str> =
+        t.labels.values().map(String::as_str).collect();
+    assert!(
+        labels.iter().any(|l| l.starts_with("shard-")),
+        "no shard thread labels in {labels:?}"
+    );
+    assert!(
+        labels.iter().any(|l| *l == "hub"),
+        "no hub thread label in {labels:?}"
+    );
+    let util = analysis::trace::utilization_csv(&t);
+    assert!(
+        util.lines().any(|l| l.contains(",shard-")),
+        "utilization csv has no shard rows:\n{util}"
+    );
+    let spans = analysis::trace::top_spans_csv(&t);
+    assert!(
+        spans.lines().any(|l| l.starts_with("shard.window,")),
+        "top spans csv misses shard.window:\n{spans}"
+    );
+    let stalls = analysis::trace::merge_stall_hist_csv(&t);
+    assert!(
+        stalls.lines().count() >= 2,
+        "merge-stall histogram is empty:\n{stalls}"
+    );
+
+    // -- a second enabled run after reset() starts clean --------------
+    obsv::reset();
+    assert_eq!(obsv::counter(Kind::SimEvents), 0, "reset left counters");
+    let _ = run_digest(None);
+    assert!(
+        obsv::counter(Kind::SimEvents) > 0,
+        "threads did not re-register after reset"
+    );
+
+    // -- teardown: leave the process as we found it -------------------
+    obsv::disable();
+    obsv::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,75 @@
+//! The disabled flight recorder's zero-allocation contract, proven with
+//! a counting global allocator: a hundred thousand `count!`/`span!`
+//! call sites with the recorder off must not allocate a single time.
+//! This is its own test binary because `#[global_allocator]` is
+//! process-wide — counting every allocation in the main suite would be
+//! noise, and nothing here may enable the recorder.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates every operation to `System`, only adding a relaxed
+// counter bump on the allocating paths.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_recorder_allocates_nothing() {
+    assert!(
+        !diperf::obsv::enabled(),
+        "recorder must start disabled in this binary"
+    );
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    let mut acc = 0u64;
+    for i in 0..100_000u64 {
+        let i = std::hint::black_box(i);
+        diperf::obsv::count!(diperf::obsv::Kind::SimEvents, i);
+        diperf::obsv::count!(diperf::obsv::Kind::ReactorEagain, 1);
+        let g = diperf::obsv::span!(diperf::obsv::Kind::SimRun, i);
+        acc = acc.wrapping_add(i);
+        drop(g);
+        let g2 = diperf::obsv::span!(diperf::obsv::Kind::ShardWindow);
+        std::hint::black_box(&g2);
+    }
+    std::hint::black_box(acc);
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled recorder allocated {} times across 100k call sites",
+        after - before
+    );
+    // and it recorded nothing either — the counters never moved
+    assert_eq!(diperf::obsv::counter(diperf::obsv::Kind::SimEvents), 0);
+    assert_eq!(diperf::obsv::counter(diperf::obsv::Kind::ReactorEagain), 0);
+}
